@@ -1,0 +1,94 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Quantize a tensor with the *native* Rust MS-EDEN mirror.
+//! 2. Run the same quantizer through the AOT **Pallas kernel** artifact
+//!    (L1 lowered into L2 HLO, executed from L3 via PJRT) and compare.
+//! 3. Run a few training steps of the tiny Llama-like model under the
+//!    Quartet II scheme.
+//!
+//! Build artifacts first: `make artifacts`. Then:
+//!     cargo run --release --example quickstart
+
+use std::path::Path;
+
+use anyhow::Result;
+use quartet2::coordinator::{Trainer, TrainerOptions};
+use quartet2::data::Batcher;
+use quartet2::formats::{quantize_ms_eden_posthoc, quantize_rtn, quantize_sr};
+use quartet2::runtime::executor::{Engine, HostTensor};
+use quartet2::util::rng::Rng;
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+fn main() -> Result<()> {
+    println!("== Quartet II quickstart ==\n");
+
+    // ---- 1. native quantizers (Table 1 in miniature) ----
+    let (rows, cols) = (256, 512);
+    let x = Rng::seed_from(0).normal_vec(rows * cols);
+    let rtn = quantize_rtn(&x, rows, cols, false, false)?;
+    let rtn46 = quantize_rtn(&x, rows, cols, true, false)?;
+    let mut r = Rng::seed_from(1);
+    let sr = quantize_sr(&x, rows, cols, &mut r)?;
+    let mut r = Rng::seed_from(2);
+    let eden = quantize_ms_eden_posthoc(&x, rows, cols, &mut r)?;
+    println!("native NVFP4 quantizers on N(0,1), MSE x1e-3:");
+    println!("  RTN        {:.2}   (biased — forward pass)", rtn.mse(&x) * 1e3);
+    println!("  RTN + 4/6  {:.2}   (biased — Quartet II forward)", rtn46.mse(&x) * 1e3);
+    println!("  SR         {:.2}   (unbiased — prior backward)", sr.mse(&x) * 1e3);
+    println!(
+        "  MS-EDEN    {:.2}   (unbiased — Quartet II backward)",
+        mse(&eden.dequant_unrotated(), &x) * 1e3
+    );
+
+    // ---- 2. the same through the Pallas artifact ----
+    let artifacts = Path::new("artifacts");
+    let engine = Engine::cpu()?;
+    if Engine::artifact_exists(artifacts, "quantize_ms_eden_demo") {
+        let art = engine.load(artifacts, "quantize_ms_eden_demo")?;
+        let (dr, dc) = (art.meta.inputs[0].shape[0], art.meta.inputs[0].shape[1]);
+        let xd = Rng::seed_from(0).normal_vec(dr * dc);
+        let out = art.run(&[HostTensor::F32(xd.clone()), HostTensor::U32(vec![7])])?;
+        println!(
+            "\nPallas MS-EDEN artifact ({}x{} via PJRT): MSE {:.2}e-3  ✓ L1→L2→L3 composed",
+            dr,
+            dc,
+            mse(out[0].as_f32()?, &xd) * 1e3
+        );
+    } else {
+        println!("\n(skip Pallas artifact demo: run `make artifacts` first)");
+    }
+
+    // ---- 3. a few Quartet II training steps ----
+    if Engine::artifact_exists(artifacts, "train_tiny_quartet2") {
+        println!("\ntraining tiny Llama-like model under Quartet II (10 steps):");
+        let opts = TrainerOptions {
+            preset: "tiny".into(),
+            scheme: "quartet2".into(),
+            steps: 10,
+            seed: 42,
+            eval_every: 0,
+            verbose: false,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&engine, artifacts, opts)?;
+        let (batch, seq) = t.batch_shape();
+        let mut feed = Batcher::train(42, batch, seq);
+        for s in 0..10 {
+            let b = feed.next();
+            let loss = t.step(s, b.tokens, b.targets)?;
+            println!("  step {s}: loss {loss:.4}");
+        }
+    } else {
+        println!("\n(skip training demo: run `make artifacts` first)");
+    }
+
+    println!("\nNext: `quartet2 experiment fig4` or `cargo run --release --example train_llm`");
+    Ok(())
+}

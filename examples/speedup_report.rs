@@ -1,0 +1,76 @@
+//! Full performance report from the analytical Blackwell model:
+//! Figure 6, Figure 10, Table 2, Table 7, and the end-to-end §D.2
+//! projection — everything the paper reports about speed, regenerated.
+
+use anyhow::Result;
+use quartet2::perfmodel::{breakdown, linear, Precision, B200, RTX5090};
+
+fn main() -> Result<()> {
+    let results = std::path::Path::new("results");
+    quartet2::experiments::perf::table2()?;
+    quartet2::experiments::perf::fig6(results)?;
+    quartet2::experiments::perf::fig10(results)?;
+    quartet2::experiments::perf::table7()?;
+
+    // §D.2-style end-to-end projection: whole-model speedup from the
+    // Table 7 breakdown (Amdahl over the FP4-accelerated fraction).
+    println!("\n=== end-to-end projection (paper §D.2) ===");
+    let rows = breakdown::breakdown(&breakdown::NANOCHAT_1B, &RTX5090);
+    let non_fp4 = breakdown::non_fp4_fraction(&rows);
+    // BF16 equivalent: FP4 GEMM time scales back up by the fp4:bf16
+    // ratio; quantization kernels disappear.
+    let total: f64 = rows.iter().map(|r| r.fwd_us + r.bwd_us).sum();
+    let gemm: f64 = rows
+        .iter()
+        .filter(|r| r.op == "FP4 GEMM")
+        .map(|r| r.fwd_us + r.bwd_us)
+        .sum();
+    let quant: f64 = rows
+        .iter()
+        .filter(|r| matches!(r.op, "Quantization" | "Requant" | "Scale Fixup" | "Abs-Max"))
+        .map(|r| r.fwd_us + r.bwd_us)
+        .sum();
+    let m = 4096;
+    let ratio = RTX5090.gemm_time(m, m, m, Precision::Bf16)
+        / RTX5090.gemm_time(m, m, m, Precision::Nvfp4);
+    let bf16_total = total - quant - gemm + gemm * ratio;
+    println!(
+        "1.1B nanochat on RTX 5090: modeled end-to-end speedup {:.2}x \
+         (paper measures 1.85x; ~{:.0}% of time is outside the FP4 recipe)",
+        bf16_total / total,
+        non_fp4 * 100.0
+    );
+
+    println!("\n=== B200 OLMO2-style scaling (paper: 1.48x..1.68x for 3.3B..11B) ===");
+    for (name, dim) in [("3.3B", 4096usize), ("5.6B", 5120), ("7.1B", 5632), ("8.8B", 6144), ("11B", 6656)] {
+        let cfg = breakdown::NanochatConfig {
+            depth: 32,
+            dim,
+            ffn: 4 * dim,
+            vocab: 100_000,
+            tokens: 8192,
+            seq: 2048,
+        };
+        let rows = breakdown::breakdown(&cfg, &B200);
+        let total: f64 = rows.iter().map(|r| r.fwd_us + r.bwd_us).sum();
+        let gemm: f64 = rows
+            .iter()
+            .filter(|r| r.op == "FP4 GEMM")
+            .map(|r| r.fwd_us + r.bwd_us)
+            .sum();
+        let quant: f64 = rows
+            .iter()
+            .filter(|r| matches!(r.op, "Quantization" | "Requant" | "Scale Fixup" | "Abs-Max"))
+            .map(|r| r.fwd_us + r.bwd_us)
+            .sum();
+        let ratio = B200.gemm_time(dim, dim, dim, Precision::Bf16)
+            / B200.gemm_time(dim, dim, dim, Precision::Nvfp4);
+        let bf16_total = total - quant - gemm + gemm * ratio;
+        println!("  {name:>5}: modeled end-to-end speedup {:.2}x", bf16_total / total);
+    }
+
+    // Paper Fig 6 reference shapes as a sanity echo.
+    println!("\n(Table 6 layer shapes used for Fig 6/10: {:?})",
+        linear::TABLE6.iter().map(|m| m.name).collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! End-to-end flagship run: train the `base` preset (~8M-param
+//! Llama-like transformer, the CPU-scale stand-in for the paper's
+//! ablation models) for several hundred steps under Quartet II,
+//! logging the loss curve — the repo's E2E validation (EXPERIMENTS.md).
+//!
+//! Artifacts: `python -m compile.aot --preset base --scheme quartet2
+//! --steps 400` (done by `make experiment-artifacts`). Then:
+//!
+//!     cargo run --release --example train_llm -- [steps] [scheme]
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use quartet2::coordinator::{Trainer, TrainerOptions};
+use quartet2::metrics::bpb;
+use quartet2::runtime::Engine;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(400);
+    let scheme = args.get(1).cloned().unwrap_or_else(|| "quartet2".into());
+
+    let artifacts = Path::new("artifacts");
+    let engine = Engine::cpu()?;
+    println!("== flagship end-to-end training: base preset / {scheme} / {steps} steps ==");
+
+    let opts = TrainerOptions {
+        preset: "base".into(),
+        scheme: scheme.clone(),
+        steps,
+        seed: 42,
+        eval_every: 50,
+        eval_batches: 8,
+        log_every: 10,
+        verbose: true,
+    };
+    let mut trainer = Trainer::new(&engine, artifacts, opts).context(
+        "base-preset artifacts missing — run `make experiment-artifacts` \
+         (or python -m compile.aot --preset base --scheme quartet2 --steps 400)",
+    )?;
+    let outcome = trainer.run()?;
+
+    println!("\n=== run summary ===");
+    println!("scheme                : {scheme}");
+    println!("steps                 : {steps}");
+    println!(
+        "final train loss      : {:.4}",
+        outcome.curve.points.last().unwrap().train_loss
+    );
+    println!("final val loss        : {:.4}", outcome.final_val_loss);
+    println!(
+        "final val BPB         : {:.4}  (corpus unigram entropy ~3.6 BPB)",
+        bpb(outcome.final_val_loss, 1.0)
+    );
+    println!("throughput            : {:.0} tokens/s", outcome.tokens_per_sec);
+    let path = outcome.curve.save(Path::new("results"))?;
+    println!("loss curve saved to   : {path:?}");
+    println!("\nloss curve (val points):");
+    for p in outcome.curve.points.iter().filter(|p| p.val_loss.is_some()) {
+        println!(
+            "  step {:>4}  tokens {:>8}  val {:.4}",
+            p.step,
+            p.tokens,
+            p.val_loss.unwrap()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,358 @@
+"""AOT pipeline: lower the L2 train/eval/init functions to HLO text.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+For every (preset, scheme, batch) combination this emits a bundle:
+
+* ``init_<preset>``                  (seed u32)            -> params...
+* ``train_<preset>_<scheme>``        (params..., m..., v..., step i32,
+                                      tokens i32[B,S], targets)
+                                     -> params'..., m'..., v'..., loss
+* ``eval_<preset>_<scheme>``         (params..., tokens, targets) -> loss
+* ``fig9_<preset>_<scheme>``         (params..., tokens, targets, seed)
+                                     -> grad(wq[0]) flattened
+
+plus a scheme-independent Pallas quantizer demo
+(``quantize_<quantizer>``) used by examples/quickstart.rs to prove the
+L1 -> L2 -> L3 composition, and a ``<name>.meta.json`` sidecar per
+artifact describing the exact input/output contract for the Rust
+runtime (rust/src/runtime/artifact.rs).
+
+Python runs only here, at build time; the Rust coordinator never
+imports it.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --preset tiny \
+        --scheme quartet2 [--batch 4] [--pallas]
+    python -m compile.aot --out-dir ../artifacts --bundle default
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .schemes import SCHEMES
+
+_DT = {"float32": "f32", "int32": "i32", "uint32": "u32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned).
+
+    ``print_large_constants=True`` is load-bearing: without it the HLO
+    printer elides big literals as ``{...}`` and the runtime's HLO text
+    parser (xla_extension 0.5.1) silently materializes garbage in their
+    place — any artifact carrying a Hadamard matrix or RoPE table would
+    corrupt. A sanity check below refuses to emit elided text.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError(
+            "HLO text still contains elided constants — the runtime "
+            "parser would corrupt them"
+        )
+    return text
+
+
+def _spec_of(x: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(x.shape), "dtype": _DT[str(x.dtype)]}
+
+
+def _param_specs(cfg: M.ModelConfig) -> Tuple[List[str], List[jax.ShapeDtypeStruct]]:
+    """Flat (path, spec) list for the model's parameter pytree in
+    canonical jax flatten order — the artifact boundary contract."""
+    params = jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    paths = [
+        jax.tree_util.keystr(kp).replace("'", "").strip("[]").replace("][", ".")
+        for kp, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+    ]
+    return paths, [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+
+
+def _unflatten_like(cfg: M.ModelConfig, leaves: Sequence[jnp.ndarray]):
+    params = jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, list(leaves))
+
+
+def write_artifact(
+    out_dir: str,
+    name: str,
+    fn: Callable,
+    in_specs: List[jax.ShapeDtypeStruct],
+    in_names: List[str],
+    out_names: List[str],
+    extra_meta: dict,
+) -> None:
+    """Lower ``fn`` (flat-arg, flat-tuple-returning) and write
+    ``<name>.hlo.txt`` + ``<name>.meta.json``."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    out_specs = jax.eval_shape(fn, *in_specs)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta = {
+        "name": name,
+        "inputs": [
+            dict(name=n, **_spec_of(s)) for n, s in zip(in_names, in_specs)
+        ],
+        "outputs": [
+            dict(name=n, **_spec_of(s)) for n, s in zip(out_names, out_specs)
+        ],
+        **extra_meta,
+    }
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {hlo_path} ({len(text)} chars, "
+          f"{len(in_specs)} inputs -> {len(out_specs)} outputs)")
+
+
+# --------------------------------------------------------------------------
+# Model bundles
+# --------------------------------------------------------------------------
+
+
+def emit_init(out_dir: str, preset: str, batch: int) -> None:
+    cfg = M.preset(preset)
+    paths, pspecs = _param_specs(cfg)
+
+    def fn(seed):
+        params = M.init_params(jax.random.PRNGKey(seed), cfg)
+        return tuple(jax.tree_util.tree_leaves(params))
+
+    write_artifact(
+        out_dir,
+        f"init_{preset}",
+        fn,
+        [jax.ShapeDtypeStruct((), jnp.uint32)],
+        ["seed"],
+        [f"params.{p}" for p in paths],
+        {
+            "kind": "init",
+            "preset": preset,
+            "param_paths": paths,
+            "model": cfg._asdict(),
+            "batch": batch,
+        },
+    )
+
+
+def emit_train(
+    out_dir: str, preset: str, scheme: str, batch: int, hp: T.TrainHParams
+) -> None:
+    cfg = M.preset(preset, scheme)
+    paths, pspecs = _param_specs(cfg)
+    n = len(pspecs)
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    step_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(*flat):
+        params = _unflatten_like(cfg, flat[:n])
+        m = _unflatten_like(cfg, flat[n : 2 * n])
+        v = _unflatten_like(cfg, flat[2 * n : 3 * n])
+        step, tokens, targets = flat[3 * n], flat[3 * n + 1], flat[3 * n + 2]
+        p2, m2, v2, loss = T.train_step(cfg, hp, params, m, v, step, tokens, targets)
+        return tuple(
+            jax.tree_util.tree_leaves(p2)
+            + jax.tree_util.tree_leaves(m2)
+            + jax.tree_util.tree_leaves(v2)
+            + [loss]
+        )
+
+    in_specs = pspecs * 3 + [step_s, tok, tok]
+    in_names = (
+        [f"params.{p}" for p in paths]
+        + [f"m.{p}" for p in paths]
+        + [f"v.{p}" for p in paths]
+        + ["step", "tokens", "targets"]
+    )
+    out_names = in_names[: 3 * n] + ["loss"]
+    write_artifact(
+        out_dir,
+        f"train_{preset}_{scheme}",
+        fn,
+        in_specs,
+        in_names,
+        out_names,
+        {
+            "kind": "train",
+            "preset": preset,
+            "scheme": scheme,
+            "param_paths": paths,
+            "model": cfg._asdict(),
+            "batch": batch,
+            "hparams": hp._asdict(),
+        },
+    )
+
+
+def emit_eval(out_dir: str, preset: str, scheme: str, batch: int) -> None:
+    cfg = M.preset(preset, scheme)
+    paths, pspecs = _param_specs(cfg)
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+
+    def fn(*flat):
+        params = _unflatten_like(cfg, flat[: len(pspecs)])
+        tokens, targets = flat[-2], flat[-1]
+        return (T.eval_step(cfg, params, tokens, targets),)
+
+    write_artifact(
+        out_dir,
+        f"eval_{preset}_{scheme}",
+        fn,
+        pspecs + [tok, tok],
+        [f"params.{p}" for p in paths] + ["tokens", "targets"],
+        ["loss"],
+        {
+            "kind": "eval",
+            "preset": preset,
+            "scheme": scheme,
+            "param_paths": paths,
+            "model": cfg._asdict(),
+            "batch": batch,
+        },
+    )
+
+
+def emit_fig9(out_dir: str, preset: str, scheme: str, batch: int) -> None:
+    cfg = M.preset(preset, scheme)
+    paths, pspecs = _param_specs(cfg)
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    seed_s = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    def fn(*flat):
+        params = _unflatten_like(cfg, flat[: len(pspecs)])
+        tokens, targets, seed = flat[-3], flat[-2], flat[-1]
+        g = T.fig9_grad(cfg, params, tokens, targets, seed)
+        # keep `seed` live even for schemes with no quantizer randomness
+        # (bf16 reference): the old XLA pipeline DCEs unused parameters,
+        # which would break the artifact's input-arity contract.
+        return (g + 0.0 * seed.astype(jnp.float32),)
+
+    write_artifact(
+        out_dir,
+        f"fig9_{preset}_{scheme}",
+        fn,
+        pspecs + [tok, tok, seed_s],
+        [f"params.{p}" for p in paths] + ["tokens", "targets", "seed"],
+        ["grad_wq0"],
+        {
+            "kind": "fig9",
+            "preset": preset,
+            "scheme": scheme,
+            "param_paths": paths,
+            "model": cfg._asdict(),
+            "batch": batch,
+        },
+    )
+
+
+# --------------------------------------------------------------------------
+# Pallas quantizer demo artifact (L1 -> L2 -> L3 composition proof)
+# --------------------------------------------------------------------------
+
+
+def emit_quantizer_demo(out_dir: str, rows: int = 128, cols: int = 256) -> None:
+    """Standalone artifact running the *Pallas* MS-EDEN post hoc kernel:
+    (x, seed) -> (fake-quantized x, dequantized-unrotated estimate).
+    Loaded by examples/quickstart.rs."""
+    from .kernels import ms_eden as ME
+    from .kernels import ref as R
+
+    def fn(x, seed):
+        key = jax.random.PRNGKey(seed)
+        q = ME.quantize_ms_eden_posthoc(x, key)
+        est = R.dequant_unrotated(q)
+        return (est,)
+
+    write_artifact(
+        out_dir,
+        "quantize_ms_eden_demo",
+        fn,
+        [
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.uint32),
+        ],
+        ["x", "seed"],
+        ["x_hat"],
+        {"kind": "quantizer_demo", "quantizer": "ms_eden_posthoc"},
+    )
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+#: Artifacts `make artifacts` builds by default: enough for the test
+#: suite, quickstart, and the flagship training example.
+DEFAULT_BUNDLE = [
+    ("tiny", "bf16"),
+    ("tiny", "quartet2"),
+]
+
+
+def emit_bundle(out_dir: str, preset: str, scheme: str, batch: int, steps: int, lr: float, fig9: bool = True) -> None:
+    hp = T.TrainHParams(total_steps=steps, lr=lr)
+    init_path = os.path.join(out_dir, f"init_{preset}.hlo.txt")
+    if not os.path.exists(init_path):
+        emit_init(out_dir, preset, batch)
+    emit_train(out_dir, preset, scheme, batch, hp)
+    emit_eval(out_dir, preset, scheme, batch)
+    if fig9:
+        emit_fig9(out_dir, preset, scheme, batch)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", choices=sorted(M.PRESETS), default=None)
+    ap.add_argument("--scheme", choices=sorted(SCHEMES), default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=300,
+                    help="total_steps baked into the LR schedule")
+    ap.add_argument("--lr", type=float, default=1.2e-3)
+    ap.add_argument("--bundle", choices=["default"], default=None)
+    ap.add_argument("--skip-fig9", action="store_true",
+                    help="skip the fig9 gradient artifact (faster lowering)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="use Pallas kernels for forward-pass quantization")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if args.pallas:
+        from . import qlinear
+
+        qlinear.set_use_pallas(True)
+
+    if args.bundle == "default":
+        emit_quantizer_demo(args.out_dir)
+        for preset, scheme in DEFAULT_BUNDLE:
+            emit_bundle(args.out_dir, preset, scheme, args.batch, args.steps, args.lr)
+    elif args.preset and args.scheme:
+        emit_bundle(args.out_dir, args.preset, args.scheme, args.batch,
+                    args.steps, args.lr, fig9=not args.skip_fig9)
+    else:
+        ap.error("need --bundle default or both --preset and --scheme")
+
+
+if __name__ == "__main__":
+    main()

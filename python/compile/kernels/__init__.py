@@ -1,0 +1,7 @@
+"""L1 — Pallas kernels for the Quartet II quantization hot-spots.
+
+``ref.py`` holds the pure-jnp oracles (the normative numerics);
+``formats.py`` the shared numeric-format codecs; the remaining modules
+are the Pallas kernels (always ``interpret=True`` — CPU PJRT cannot run
+Mosaic custom-calls; see DESIGN.md §Hardware adaptation).
+"""

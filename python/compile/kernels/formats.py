@@ -1,0 +1,201 @@
+"""Numeric-format codecs shared by every quantizer in the repo.
+
+Pure-jnp implementations of the three floating-point grids the paper
+builds on (normative definitions in DESIGN.md §Quantizer math):
+
+* **FP4 E2M1** — the NVFP4 element format. Grid ±{0, .5, 1, 1.5, 2, 3, 4, 6}.
+* **FP8 E4M3** — the NVFP4 per-16-element group-scale format (OCP E4M3,
+  max 448, 3 mantissa bits, subnormal step 2^-9).
+* **"E8M3"** — the paper's extended-range pseudo-scale proxy (§7, post hoc
+  range alignment): an 8-bit-exponent, 3-bit-mantissa value representable
+  in BF16, used between the two kernel passes of ER-NVFP4.
+
+Every codec comes in `rtn_*` (round-to-nearest-even) and `sr_*`
+(stochastic-rounding, unbiased given `u ~ U[0,1)`) flavours. These are
+the single source of truth: the Pallas kernels call these functions on
+VMEM-resident blocks, the reference quantizers in `ref.py` call them on
+whole arrays, and the Rust mirror (`rust/src/formats/`) re-implements the
+same bit-exact arithmetic (cross-checked by parity test vectors, see
+`python/tests/test_parity_vectors.py` and `rust/tests/parity.rs`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# FP4 E2M1
+# --------------------------------------------------------------------------
+
+#: The positive half of the E2M1 grid, in ascending order.
+FP4_GRID = jnp.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], jnp.float32)
+
+#: Midpoints between adjacent grid values (decision thresholds for RTN).
+FP4_MIDS = jnp.asarray([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0], jnp.float32)
+
+#: Largest magnitude representable in E2M1.
+FP4_MAX = 6.0
+
+#: Largest magnitude representable in E4M3.
+FP8_MAX = 448.0
+
+#: The paper's guard factor: the largest *relative* increase RTN_FP8 can
+#: apply to its argument is 17/16, so pre-dividing by 17/16 (i.e. scaling
+#: the FP4 budget from 6.0 down to 6.0 * 16/17) guarantees SR_FP4 never
+#: needs to clip (§3.1).
+FP8_RTN_GUARD = 16.0 / 17.0
+
+
+def rtn_fp4(v: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest-even onto the E2M1 grid, saturating at ±6.
+
+    Ties land on the grid point with an even mantissa bit (0.25 -> 0,
+    0.75 -> 1, 2.5 -> 2, 3.5 -> 4, 5.0 -> 4), matching IEEE-style
+    round-half-to-even on the 4-bit encoding.
+
+    Implemented arithmetically (the E2M1 grid is piecewise uniform with
+    steps 0.5 / 1 / 2 on [0,2] / [2,4] / [4,6]) rather than via table
+    lookups, so the same code runs inside Pallas kernels, which reject
+    closed-over constant arrays. ``jnp.round`` is half-to-even, which
+    gives the correct tie behaviour in each uniform region.
+    """
+    v = v.astype(jnp.float32)
+    a = jnp.minimum(jnp.abs(v), FP4_MAX)
+    q = jnp.where(
+        a <= 2.0,
+        jnp.round(a * 2.0) * 0.5,
+        jnp.where(a <= 4.0, jnp.round(a), jnp.round(a * 0.5) * 2.0),
+    )
+    return jnp.where(v < 0, -q, q)
+
+
+def sr_fp4(v: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Stochastic rounding onto the E2M1 grid.
+
+    ``u`` must be i.i.d. U[0,1) of the same shape as ``v``. For inputs
+    within ±6 the result is exactly unbiased:
+    E[sr_fp4(v, U)] = v. Inputs outside ±6 saturate (the NVFP4 SR recipe
+    of §3.1 arranges, via the 16/17 guard factor, that this never occurs).
+    """
+    v = v.astype(jnp.float32)
+    a = jnp.minimum(jnp.abs(v), FP4_MAX)
+    # Piecewise-uniform grid: floor to the lattice of the region, then
+    # round up with probability (a - lo) / gap.
+    lo = jnp.where(
+        a < 2.0,
+        jnp.floor(a * 2.0) * 0.5,
+        jnp.where(a < 4.0, jnp.floor(a), jnp.floor(a * 0.5) * 2.0),
+    )
+    gap = jnp.where(a < 2.0, 0.5, jnp.where(a < 4.0, 1.0, 2.0))
+    p_up = jnp.minimum((a - lo) / gap, 1.0)
+    q = jnp.minimum(jnp.where(u < p_up, lo + gap, lo), FP4_MAX)
+    return jnp.where(v < 0, -q, q)
+
+
+def fp4_encode(v: jnp.ndarray) -> jnp.ndarray:
+    """Map on-grid E2M1 values to their 4-bit codes (sign<<3 | index)."""
+    a = jnp.abs(v)
+    idx = jnp.searchsorted(FP4_GRID, a)
+    sign = (v < 0).astype(jnp.uint8) << 3
+    return (sign | idx.astype(jnp.uint8)).astype(jnp.uint8)
+
+
+def fp4_decode(code: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`fp4_encode`."""
+    idx = (code & 0x7).astype(jnp.int32)
+    sign = jnp.where((code >> 3) & 1, -1.0, 1.0)
+    return sign * FP4_GRID[jnp.clip(idx, 0, 7)]
+
+
+# --------------------------------------------------------------------------
+# FP8 E4M3 (and the E8M3 extended-range proxy)
+# --------------------------------------------------------------------------
+
+# Python float (not a jnp scalar): Pallas kernels reject closed-over
+# constant arrays, and module-level jnp scalars count as such.
+_TINY = 1e-45
+
+
+def _binade(a: jnp.ndarray, min_exp: int, max_exp: int):
+    """Exponent (clipped) and mantissa ULP for a 3-mantissa-bit format.
+
+    Exact bit-level arithmetic throughout: ``frexp`` for the exponent
+    (not ``floor(log2(.))``) and an exponent-field bitcast for the step
+    (not ``exp2`` — XLA CPU's exp2 is polynomial-approximated and off by
+    an ulp at large exponents, which would break both the power-of-two
+    shift exactness of post hoc range alignment and bit-parity with the
+    Rust mirror). Requires min_exp >= -123 so the step stays normal.
+    """
+    _, e_f = jnp.frexp(jnp.maximum(a, _TINY))
+    e = jnp.clip(e_f - 1, int(min_exp), int(max_exp)).astype(jnp.int32)
+    step_bits = (e - 3 + 127) << 23
+    step = jax.lax.bitcast_convert_type(step_bits, jnp.float32)
+    return e.astype(jnp.float32), step
+
+
+def rtn_e4m3(v: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest-even onto the E4M3 grid, saturating at ±448.
+
+    Subnormals (|v| < 2^-6) quantize on the uniform 2^-9 grid; values that
+    round up across a binade boundary land exactly on the next power of
+    two, which is representable.
+    """
+    v = v.astype(jnp.float32)
+    a = jnp.minimum(jnp.abs(v), FP8_MAX)
+    _, step = _binade(a, -6, 8)
+    q = jnp.round(a / step) * step  # jnp.round is half-to-even
+    q = jnp.minimum(q, FP8_MAX)
+    return jnp.where(v < 0, -q, q)
+
+
+def sr_e4m3(v: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Stochastic rounding onto the E4M3 grid (unbiased within ±448)."""
+    v = v.astype(jnp.float32)
+    a = jnp.minimum(jnp.abs(v), FP8_MAX)
+    _, step = _binade(a, -6, 8)
+    lo = jnp.floor(a / step) * step
+    hi = lo + step
+    p_up = (a - lo) / step
+    q = jnp.where(u < p_up, hi, lo)
+    q = jnp.minimum(q, FP8_MAX)
+    return jnp.where(v < 0, -q, q)
+
+
+def rtn_e8m3(v: jnp.ndarray) -> jnp.ndarray:
+    """Round onto the extended-range "E8M3" pseudo-scale grid.
+
+    Same 3-bit mantissa as E4M3 but with the full 8-bit (BF16) exponent
+    range, so group scales never clip before the post hoc range-alignment
+    pass shifts them back into E4M3 territory (§7 / Figure 8).
+    """
+    v = v.astype(jnp.float32)
+    a = jnp.abs(v)
+    _, step = _binade(a, -123, 127)  # -123: keep the step normal (bitcast)
+    q = jnp.round(a / step) * step
+    return jnp.where(v < 0, -q, q)
+
+
+# --------------------------------------------------------------------------
+# Shared constants of the NVFP4 recipes (paper §3.1 / §3.3)
+# --------------------------------------------------------------------------
+
+#: Non-clipping FP4 budget: 6.0 * 16/17 (Q_SR; §3.1).
+SR_BUDGET = FP4_MAX * FP8_RTN_GUARD
+
+#: MSE-optimal clipping scale for Q_RTN over N(0,1): (6 * 16/17) / 0.93
+#: (§3.3 — "we numerically find that s = 1/0.93 * 6 * 16/17 minimizes the
+#: expected MSE").
+RTN_CLIP_SCALE = SR_BUDGET / 0.93
+
+#: FP8 scale head-room cap used by Q_RTN so that the EDEN correction can
+#: scale group scales *up* without overflowing E4M3 (§3.3: "FP8 scales are
+#: initially capped by 256.0 instead of 448.0").
+RTN_SCALE_CAP = 256.0
+
+#: NVFP4 micro-scaling group size.
+GROUP = 16
+
+#: Randomized-Hadamard rotation block (paper: d=128, chosen for
+#: mma.m16n8k16 on Blackwell; kept here so statistics match).
+ROT_BLOCK = 128

@@ -1,0 +1,88 @@
+"""Pallas kernel: block Randomized Hadamard Transform (RHT).
+
+The paper applies the RHT in blocks of 128 along the GEMM inner dimension
+(sized for the Blackwell ``mma.m16n8k16`` path; on TPU the same 128 block
+is one MXU-friendly tile that lives in VMEM for the whole
+rotate-quantize pipeline — see DESIGN.md §Hardware adaptation).
+
+The kernel processes a ``(TILE_M, 128)`` VMEM tile per grid step: loads
+the tile, multiplies by the pre-combined ``diag(signs) @ H`` rotation
+matrix held in VMEM, and writes the rotated tile. One rotation matrix is
+shared across all tiles (paper Appendix A: identical rotations per
+tensor per micro-batch, making the rotation a plain GEMM).
+
+Always ``interpret=True``: real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import formats as F
+from .ref import HADAMARD_128, rademacher_signs
+
+DEFAULT_TILE_M = 64
+
+
+def _rht_kernel(x_ref, rot_ref, o_ref):
+    """One tile: o = x @ (diag(signs) H), rot_ref holds the fused matrix."""
+    o_ref[...] = x_ref[...] @ rot_ref[...]
+
+
+def rotation_matrix(signs: jnp.ndarray) -> jnp.ndarray:
+    """Fused rotation operand: diag(signs) @ H (signs applied on input)."""
+    return signs[:, None] * HADAMARD_128
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "inverse"))
+def rht_pallas(
+    x: jnp.ndarray,
+    signs: jnp.ndarray,
+    tile_m: int = DEFAULT_TILE_M,
+    inverse: bool = False,
+) -> jnp.ndarray:
+    """Blockwise RHT of ``x`` along its last axis via a Pallas kernel.
+
+    ``x`` is reshaped to (rows, 128); rows must be a multiple of
+    ``tile_m``. ``inverse=True`` applies H @ diag(signs) instead (H is
+    symmetric orthogonal, so this is the exact inverse).
+    """
+    d = x.shape[-1]
+    if d % F.ROT_BLOCK:
+        raise ValueError(f"last dim {d} not a multiple of {F.ROT_BLOCK}")
+    shape = x.shape
+    xr = x.reshape(-1, F.ROT_BLOCK)
+    m = xr.shape[0]
+    tile_m = min(tile_m, m)
+    if m % tile_m:
+        raise ValueError(f"row count {m} not a multiple of tile_m={tile_m}")
+
+    if inverse:
+        rot = HADAMARD_128 * signs[None, :]  # H @ diag(signs)
+    else:
+        rot = rotation_matrix(signs)
+
+    out = pl.pallas_call(
+        _rht_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, F.ROT_BLOCK), jnp.float32),
+        grid=(m // tile_m,),
+        in_specs=[
+            pl.BlockSpec((tile_m, F.ROT_BLOCK), lambda i: (i, 0)),
+            pl.BlockSpec((F.ROT_BLOCK, F.ROT_BLOCK), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, F.ROT_BLOCK), lambda i: (i, 0)),
+        interpret=True,
+    )(xr.astype(jnp.float32), rot)
+    return out.reshape(shape)
+
+
+def rht_pallas_seeded(
+    x: jnp.ndarray, key: jax.Array, tile_m: int = DEFAULT_TILE_M
+) -> jnp.ndarray:
+    """Convenience wrapper deriving the sign diagonal from a PRNG key."""
+    return rht_pallas(x, rademacher_signs(key), tile_m=tile_m)

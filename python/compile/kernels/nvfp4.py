@@ -1,0 +1,177 @@
+"""Pallas kernels: NVFP4 RTN / SR / Four-over-Six quantization.
+
+Each kernel quantizes a ``(TILE_M, 128)`` VMEM-resident tile (eight
+16-element NVFP4 groups per row) given the externally-reduced per-tensor
+global scale. The paper makes the same split (§7, Appendix D.1): the
+global abs-max is a whole-tensor barrier and is fused into the producer
+kernel (optimizer / norm / non-linearity); everything per-group happens
+in one pass over the tile.
+
+Outputs are the NVFP4 representation (on-grid FP4 values + on-grid E4M3
+group scales); ``fake_*`` wrappers dequantize for the emulated-GEMM path.
+Numerics match ``ref.py`` exactly (pytest enforces allclose to f32
+round-off over shape/seed sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import formats as F
+
+DEFAULT_TILE_M = 64
+_G = F.GROUP
+_D = F.ROT_BLOCK  # tile width: 128 = 8 NVFP4 groups
+
+
+def _group_view(x):
+    return x.reshape(x.shape[0], x.shape[1] // _G, _G)
+
+
+def _tile_quant(x, gscale, budget, rtn: bool, u=None):
+    """Shared tile body: scales from group max anchored at `budget`,
+    then RTN or SR of the elements. Returns (values, scales).
+
+    The scale argument divides by the *product* gscale*budget in one
+    operation — bit-identical to ref.py (dividing twice rounds
+    differently by an ulp and can flip RTN ties)."""
+    gmax = jnp.max(jnp.abs(_group_view(x)), axis=-1)  # [tm, 8]
+    denom_g = gscale * budget
+    scales = F.rtn_e4m3(gmax / jnp.where(denom_g == 0.0, 1.0, denom_g))
+    denom = jnp.repeat(scales, _G, axis=-1) * gscale
+    ratio = x / jnp.where(denom == 0.0, 1.0, denom)
+    vals = F.rtn_fp4(ratio) if rtn else F.sr_fp4(ratio, u)
+    return vals, scales
+
+
+def _rtn_kernel(x_ref, gs_ref, vals_ref, scales_ref, *, budget):
+    vals, scales = _tile_quant(x_ref[...], gs_ref[0, 0], budget, rtn=True)
+    vals_ref[...] = vals
+    scales_ref[...] = scales
+
+
+def _sr_kernel(x_ref, gs_ref, u_ref, vals_ref, scales_ref, *, budget):
+    vals, scales = _tile_quant(
+        x_ref[...], gs_ref[0, 0], budget, rtn=False, u=u_ref[...]
+    )
+    vals_ref[...] = vals
+    scales_ref[...] = scales
+
+
+def _four_six_kernel(x_ref, gs_ref, vals_ref, scales_ref):
+    """Four-over-Six: evaluate the 6- and 4-anchored grids per group and
+    keep the lower-MSE branch (Cook et al. 2025). Fully tile-local."""
+    x = x_ref[...]
+    gs = gs_ref[0, 0]
+    v6, s6 = _tile_quant(x, gs, 6.0, rtn=True)
+    v4, s4 = _tile_quant(x, gs, 4.0, rtn=True)
+
+    def gerr(v, s):
+        est = v * jnp.repeat(s, _G, axis=-1) * gs
+        return jnp.sum(_group_view((est - x) ** 2), axis=-1)
+
+    pick4 = gerr(v4, s4) < gerr(v6, s6)
+    scales_ref[...] = jnp.where(pick4, s4, s6)
+    vals_ref[...] = jnp.where(jnp.repeat(pick4, _G, axis=-1), v4, v6)
+
+
+def _prep(x, tile_m):
+    d = x.shape[-1]
+    if d % _D:
+        raise ValueError(f"last dim {d} not a multiple of {_D}")
+    xr = x.reshape(-1, _D).astype(jnp.float32)
+    m = xr.shape[0]
+    tile_m = min(tile_m, m)
+    if m % tile_m:
+        raise ValueError(f"rows {m} not a multiple of tile_m={tile_m}")
+    return xr, m, tile_m
+
+
+def _specs(tile_m):
+    in_x = pl.BlockSpec((tile_m, _D), lambda i: (i, 0))
+    in_gs = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out_v = pl.BlockSpec((tile_m, _D), lambda i: (i, 0))
+    out_s = pl.BlockSpec((tile_m, _D // _G), lambda i: (i, 0))
+    return in_x, in_gs, out_v, out_s
+
+
+@functools.partial(jax.jit, static_argnames=("four_six", "tile_m"))
+def quantize_rtn_pallas(
+    x: jnp.ndarray, four_six: bool = False, tile_m: int = DEFAULT_TILE_M
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """NVFP4 RTN (optionally 4/6) via Pallas. Returns (values, scales, gscale)
+    with the same group layout as ``ref.quantize_rtn`` (1x16 native)."""
+    xr, m, tile_m = _prep(x, tile_m)
+    absmax = jnp.max(jnp.abs(xr))
+    gscale = jnp.where(absmax == 0.0, 0.0, absmax / (F.FP4_MAX * F.FP8_MAX))
+    in_x, in_gs, out_v, out_s = _specs(tile_m)
+
+    kernel = (
+        _four_six_kernel
+        if four_six
+        else functools.partial(_rtn_kernel, budget=6.0)
+    )
+    vals, scales = pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, _D), jnp.float32),
+            jax.ShapeDtypeStruct((m, _D // _G), jnp.float32),
+        ],
+        grid=(m // tile_m,),
+        in_specs=[in_x, in_gs],
+        out_specs=[out_v, out_s],
+        interpret=True,
+    )(xr, gscale.reshape(1, 1))
+    vs = vals.reshape(x.shape)
+    ss = scales.reshape(*x.shape[:-1], x.shape[-1] // _G)
+    return vs, ss, gscale
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def quantize_sr_pallas(
+    x: jnp.ndarray, key: jax.Array, tile_m: int = DEFAULT_TILE_M
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unbiased Q_SR (§3.1) via Pallas: budget 6*16/17, SR of elements.
+
+    The per-element uniforms are generated outside the kernel (one
+    jax.random call) and streamed in as a second tile operand — on real
+    hardware this is the in-kernel PRNG."""
+    xr, m, tile_m = _prep(x, tile_m)
+    absmax = jnp.max(jnp.abs(xr))
+    gscale = jnp.where(
+        absmax == 0.0, 0.0, absmax / (F.SR_BUDGET * F.FP8_MAX)
+    )
+    u = jax.random.uniform(key, xr.shape, jnp.float32)
+    in_x, in_gs, out_v, out_s = _specs(tile_m)
+
+    vals, scales = pl.pallas_call(
+        functools.partial(_sr_kernel, budget=float(F.SR_BUDGET)),
+        out_shape=[
+            jax.ShapeDtypeStruct((m, _D), jnp.float32),
+            jax.ShapeDtypeStruct((m, _D // _G), jnp.float32),
+        ],
+        grid=(m // tile_m,),
+        in_specs=[in_x, in_gs, in_x],
+        out_specs=[out_v, out_s],
+        interpret=True,
+    )(xr, gscale.reshape(1, 1), u)
+    vs = vals.reshape(x.shape)
+    ss = scales.reshape(*x.shape[:-1], x.shape[-1] // _G)
+    return vs, ss, gscale
+
+
+def fake_rtn_pallas(x, four_six=False, tile_m=DEFAULT_TILE_M):
+    """quantize->dequantize through the Pallas RTN kernel."""
+    v, s, g = quantize_rtn_pallas(x, four_six=four_six, tile_m=tile_m)
+    return v * jnp.repeat(s, _G, axis=-1) * g
+
+
+def fake_sr_pallas(x, key, tile_m=DEFAULT_TILE_M):
+    """quantize->dequantize through the Pallas SR kernel."""
+    v, s, g = quantize_sr_pallas(x, key, tile_m=tile_m)
+    return v * jnp.repeat(s, _G, axis=-1) * g

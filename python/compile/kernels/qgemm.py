@@ -1,0 +1,104 @@
+"""Pallas kernel: NVFP4 GEMM (emulated tensor-core dequant-in-MMA).
+
+Blackwell's NVFP4 tensor cores consume FP4 payloads and apply the E4M3
+group scales inside the MMA pipeline. This kernel reproduces the same
+dataflow on a (TILE_M, TILE_N, 128)-tiled grid: each step loads FP4
+value tiles and their per-16 scales into VMEM, forms the scaled operands
+*in-register*, and accumulates ``A_tile @ B_tile^T`` into the f32 output
+tile. The per-tensor FP32 global scales are folded into the epilogue.
+
+Both operands are quantized along the **inner** (k) dimension — the only
+layout NVFP4 hardware supports, and the reason Quartet II must
+re-quantize (and may rotate) both tensors of every backward GEMM.
+
+Numerics: identical to ``dequant(qa) @ dequant(qb)^T`` up to f32 matmul
+accumulation order (pytest checks allclose).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import formats as F
+from .ref import Quantized
+
+_G = F.GROUP
+_K = F.ROT_BLOCK  # k-tile: 128 = 8 NVFP4 groups
+
+DEFAULT_TILE_M = 64
+DEFAULT_TILE_N = 64
+
+
+def _qgemm_kernel(av_ref, as_ref, bv_ref, bs_ref, o_ref):
+    """One (m, n, k) grid step: o += (Av*As) @ (Bv*Bs)^T for a 128-k slab."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = av_ref[...] * jnp.repeat(as_ref[...], _G, axis=-1)
+    b = bv_ref[...] * jnp.repeat(bs_ref[...], _G, axis=-1)
+    o_ref[...] += a @ b.T
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def nvfp4_gemm(
+    a_vals: jnp.ndarray,
+    a_scales: jnp.ndarray,
+    a_gscale: jnp.ndarray,
+    b_vals: jnp.ndarray,
+    b_scales: jnp.ndarray,
+    b_gscale: jnp.ndarray,
+    tile_m: int = DEFAULT_TILE_M,
+    tile_n: int = DEFAULT_TILE_N,
+) -> jnp.ndarray:
+    """C = dequant(A) @ dequant(B)^T for NVFP4 operands, A:[m,k], B:[n,k].
+
+    Value tensors are on-grid FP4 numbers, scale tensors are on-grid
+    E4M3 per-16 group scales ([m, k/16] / [n, k/16]); the two FP32
+    global scales multiply the result in the epilogue (exactly how the
+    cuBLAS NVFP4 path applies per-tensor scales).
+    """
+    m, k = a_vals.shape
+    n, kb = b_vals.shape
+    if k != kb:
+        raise ValueError(f"inner dims differ: {k} vs {kb}")
+    if k % _K:
+        raise ValueError(f"inner dim {k} not a multiple of {_K}")
+    tile_m = min(tile_m, m)
+    tile_n = min(tile_n, n)
+    if m % tile_m or n % tile_n:
+        raise ValueError(f"({m},{n}) not multiples of ({tile_m},{tile_n})")
+
+    out = pl.pallas_call(
+        _qgemm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // tile_m, n // tile_n, k // _K),
+        in_specs=[
+            pl.BlockSpec((tile_m, _K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_m, _K // _G), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_n, _K), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((tile_n, _K // _G), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(
+        a_vals.astype(jnp.float32),
+        a_scales.astype(jnp.float32),
+        b_vals.astype(jnp.float32),
+        b_scales.astype(jnp.float32),
+    )
+    return out * (a_gscale * b_gscale)
+
+
+def nvfp4_gemm_q(qa: Quantized, qb: Quantized, **kw) -> jnp.ndarray:
+    """GEMM over two :class:`Quantized` operands (rotations must match:
+    either both None or both built with the same seed, so they cancel)."""
+    return nvfp4_gemm(
+        qa.values, qa.scales, qa.gscale, qb.values, qb.scales, qb.gscale, **kw
+    )

@@ -1,0 +1,373 @@
+"""Pure-jnp reference quantizers — the correctness oracle for the repo.
+
+Implements, exactly as specified in the paper (normative math collected
+in DESIGN.md §Quantizer math):
+
+* ``quantize_rtn``      — deterministic NVFP4 RTN with native 1x16 scales
+                          or 16x16 square-block scales, with optional
+                          Four-over-Six adaptive grid selection (Cook et
+                          al. 2025), i.e. every *forward-pass* scheme.
+* ``quantize_sr``       — the unbiased Q_SR recipe of §3.1 (element-wise
+                          stochastic rounding with the 16/17 guard), the
+                          backward-pass primitive of all prior NVFP4 work.
+* ``quantize_rtn_clipped`` — the clipping Q_RTN(x, s) of §3.3 with the
+                          MSE-optimal s and the 256.0 scale head-room cap.
+* ``quantize_ms_eden``  — Algorithm 1 (MS-EDEN): block-RHT -> clipped RTN
+                          -> per-16 EDEN correction factors -> stochastic
+                          rounding of the FP8 *scales* only.
+* ``rht`` / ``rht_inv`` — the 128-block randomized Hadamard transform.
+
+The Pallas kernels in this package must match these functions to float32
+round-off (pytest enforces it); the Rust mirror in ``rust/src/formats``
+must match them bit-for-bit on shared test vectors.
+
+All quantizers operate on the **last axis**, which must be a multiple of
+the group size 16 (128 for MS-EDEN). This is the GEMM *inner* dimension:
+rotations and scale corrections must live on the inner dimension so that
+they cancel between the two operands of a matmul (§3.3, "Practical
+Performance").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import formats as F
+
+# --------------------------------------------------------------------------
+# Randomized Hadamard Transform
+# --------------------------------------------------------------------------
+
+
+def _sylvester(n: int) -> np.ndarray:
+    h = np.ones((1, 1), dtype=np.float64)
+    while h.shape[0] < n:
+        h = np.block([[h, h], [h, -h]])
+    return h
+
+
+#: Normalized (orthogonal, symmetric) Hadamard matrix for the 128-block.
+HADAMARD_128 = jnp.asarray(
+    _sylvester(F.ROT_BLOCK) / np.sqrt(F.ROT_BLOCK), jnp.float32
+)
+
+
+def rademacher_signs(key: jax.Array, n: int = F.ROT_BLOCK) -> jnp.ndarray:
+    """±1 diagonal for the RHT, derived from ``key``.
+
+    One sign vector is shared by every 128-chunk of the tensor (paper
+    Appendix A: identical rotations per tensor per micro-batch, so the
+    rotation is a plain GEMM on hardware)."""
+    return jnp.where(jax.random.bernoulli(key, 0.5, (n,)), 1.0, -1.0).astype(
+        jnp.float32
+    )
+
+
+def rht(x: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Block randomized Hadamard transform along the last axis.
+
+    ``x.shape[-1]`` must be a multiple of 128. Computes, per 128-chunk c:
+    ``(x_c * signs) @ H`` with H the normalized symmetric Hadamard matrix,
+    i.e. the orthogonal map ``H . diag(signs)`` applied on the right.
+    """
+    d = x.shape[-1]
+    if d % F.ROT_BLOCK != 0:
+        raise ValueError(f"last dim {d} not a multiple of {F.ROT_BLOCK}")
+    shape = x.shape
+    xc = x.reshape(-1, F.ROT_BLOCK)
+    out = (xc * signs) @ HADAMARD_128
+    return out.reshape(shape)
+
+
+def rht_inv(x: jnp.ndarray, signs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`rht` (H is symmetric orthogonal: H^-1 = H)."""
+    shape = x.shape
+    xc = x.reshape(-1, F.ROT_BLOCK)
+    out = (xc @ HADAMARD_128) * signs
+    return out.reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# Quantized representation
+# --------------------------------------------------------------------------
+
+
+class Quantized(NamedTuple):
+    """An NVFP4(-like) quantized tensor.
+
+    ``values`` are *on-grid* E2M1 numbers (the FP4 payload, kept unpacked
+    as f32 for emulation), ``scales`` are on-grid E4M3 group scales (one
+    per 16 elements of the last axis, or one per 16x16 block for
+    square-block mode), ``gscale`` is the per-tensor FP32 range-extension
+    scale. ``signs`` carries the RHT diagonal when the representation
+    lives in rotated space (MS-EDEN), else None.
+    """
+
+    values: jnp.ndarray
+    scales: jnp.ndarray
+    gscale: jnp.ndarray
+    signs: Optional[jnp.ndarray] = None
+
+
+def _expand_like(s: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast group (or square-block) scales over the elements of x.
+
+    1x16 scales have shape ``x.shape[:-1] + (d//16,)``; square-block
+    scales have shape ``(m//16, n//16)`` against a 2-D ``(m, n)`` tensor.
+    """
+    if s.shape[:-1] == x.shape[:-1]:  # native 1x16 groups
+        return jnp.repeat(s, F.GROUP, axis=-1)
+    return jnp.repeat(jnp.repeat(s, F.GROUP, -2), F.GROUP, -1)
+
+
+def dequant(q: Quantized) -> jnp.ndarray:
+    """Reconstruct the (possibly rotated-space) f32 estimate."""
+    return q.values * _expand_like(q.scales, q.values) * q.gscale
+
+
+def dequant_unrotated(q: Quantized) -> jnp.ndarray:
+    """Like :func:`dequant` but undoes the RHT if present (for MSE eval).
+
+    Inside a GEMM this inverse is never materialized — the rotations of
+    the two operands cancel along the inner dimension."""
+    x = dequant(q)
+    if q.signs is not None:
+        x = rht_inv(x, q.signs)
+    return x
+
+
+def _group_max(a: jnp.ndarray) -> jnp.ndarray:
+    """Max |.| per 16-group along the last axis: [..., d] -> [..., d//16]."""
+    g = a.reshape(*a.shape[:-1], a.shape[-1] // F.GROUP, F.GROUP)
+    return jnp.max(jnp.abs(g), axis=-1)
+
+
+def _safe_div(num: jnp.ndarray, den: jnp.ndarray) -> jnp.ndarray:
+    return num / jnp.where(den == 0.0, 1.0, den)
+
+
+# --------------------------------------------------------------------------
+# Forward-pass quantizers: RTN (1x16 / 16x16) with optional Four-over-Six
+# --------------------------------------------------------------------------
+
+
+def _rtn_with_divisor(
+    x: jnp.ndarray, gmax: jnp.ndarray, gscale: jnp.ndarray, div: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One 4/6 branch: anchor the group max at grid value ``div``.
+
+    Returns (on-grid values, on-grid FP8 scales). ``gmax`` has the group
+    layout (1x16 vector groups or 16x16 blocks).
+    """
+    scales = F.rtn_e4m3(_safe_div(gmax, gscale * jnp.float32(div)))
+    denom = _expand_like(scales, x) * gscale
+    return F.rtn_fp4(_safe_div(x, denom)), scales
+
+
+def quantize_rtn(
+    x: jnp.ndarray,
+    four_six: bool = False,
+    square: bool = False,
+) -> Quantized:
+    """Deterministic NVFP4 RTN quantization (the forward-pass family).
+
+    ``square=True`` uses 16x16 square-block scales on a 2-D tensor (the
+    NVIDIA-recipe weight path, enabling transposed reuse in the backward
+    pass at the cost of one FP8 scale per 256 instead of per 16 values).
+    ``four_six=True`` evaluates both the 6.0- and the 4.0-anchored grid
+    per group and keeps the lower-MSE branch (Cook et al. 2025) —
+    deterministic, hence *biased*, hence forward-pass-only in Quartet II.
+    """
+    x = x.astype(jnp.float32)
+    if square:
+        if x.ndim != 2:
+            raise ValueError("square-block quantization expects a 2-D tensor")
+        m, n = x.shape
+        if m % F.GROUP or n % F.GROUP:
+            raise ValueError(f"dims {x.shape} not multiples of {F.GROUP}")
+        blocks = x.reshape(m // F.GROUP, F.GROUP, n // F.GROUP, F.GROUP)
+        gmax = jnp.max(jnp.abs(blocks), axis=(1, 3))  # [m/16, n/16]
+    else:
+        if x.shape[-1] % F.GROUP:
+            raise ValueError(f"last dim {x.shape[-1]} not a multiple of 16")
+        gmax = _group_max(x)
+
+    absmax = jnp.max(jnp.abs(x))
+    gscale = _safe_div(absmax, jnp.float32(F.FP4_MAX * F.FP8_MAX))
+
+    q6, s6 = _rtn_with_divisor(x, gmax, gscale, 6.0)
+    if not four_six:
+        return Quantized(q6, s6, gscale)
+
+    q4, s4 = _rtn_with_divisor(x, gmax, gscale, 4.0)
+
+    def group_err(q, s):
+        err = (q * _expand_like(s, x) * gscale - x) ** 2
+        if square:
+            eb = err.reshape(m // F.GROUP, F.GROUP, n // F.GROUP, F.GROUP)
+            return jnp.sum(eb, axis=(1, 3))
+        g = err.reshape(*err.shape[:-1], err.shape[-1] // F.GROUP, F.GROUP)
+        return jnp.sum(g, axis=-1)
+
+    pick4 = group_err(q4, s4) < group_err(q6, s6)
+    scales = jnp.where(pick4, s4, s6)
+    values = jnp.where(_expand_like(pick4, x), q4, q6)
+    return Quantized(values, scales, gscale)
+
+
+# --------------------------------------------------------------------------
+# Backward-pass quantizer of prior work: Q_SR (§3.1)
+# --------------------------------------------------------------------------
+
+
+def quantize_sr(
+    x: jnp.ndarray, key: jax.Array, four_six: bool = False
+) -> Quantized:
+    """Unbiased element-wise stochastic rounding to NVFP4 (§3.1).
+
+    The global scale budgets the FP4 grid at 6 * 16/17 so that after the
+    FP8 RTN of the group scales (which can shrink a scale by at most a
+    factor 16/17) no element exceeds ±6 — SR never clips, hence exact
+    unbiasedness: E[values * scales * gscale] = x.
+
+    ``four_six=True`` additionally applies the (biased!) 4/6 branch
+    selection on top of SR — reproduced only to demonstrate the paper's
+    claim (§4.2, Fig. 9) that MSE-based branch picking breaks
+    unbiasedness.
+    """
+    x = x.astype(jnp.float32)
+    if x.shape[-1] % F.GROUP:
+        raise ValueError(f"last dim {x.shape[-1]} not a multiple of 16")
+    absmax = jnp.max(jnp.abs(x))
+    gscale = _safe_div(absmax, jnp.float32(F.SR_BUDGET * F.FP8_MAX))
+    gmax = _group_max(x)
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+
+    def branch(budget):
+        # scale anchored so the group max lands at `budget` (6*16/17 for
+        # the standard branch; 4*16/17 for the 4/6 alternative).
+        scales = F.rtn_e4m3(_safe_div(gmax, gscale * jnp.float32(budget)))
+        ratio = _safe_div(x, _expand_like(scales, x) * gscale)
+        return F.sr_fp4(ratio, u), scales
+
+    q6, s6 = branch(F.SR_BUDGET)
+    if not four_six:
+        return Quantized(q6, s6, gscale)
+
+    q4, s4 = branch(4.0 * F.FP8_RTN_GUARD)
+
+    def group_err(q, s):
+        err = (q * _expand_like(s, x) * gscale - x) ** 2
+        g = err.reshape(*err.shape[:-1], err.shape[-1] // F.GROUP, F.GROUP)
+        return jnp.sum(g, axis=-1)
+
+    pick4 = group_err(q4, s4) < group_err(q6, s6)
+    scales = jnp.where(pick4, s4, s6)
+    values = jnp.where(_expand_like(pick4, x), q4, q6)
+    return Quantized(values, scales, gscale)
+
+
+# --------------------------------------------------------------------------
+# MS-EDEN (§3.3, Algorithm 1)
+# --------------------------------------------------------------------------
+
+
+def quantize_rtn_clipped(
+    x: jnp.ndarray, s: float = F.RTN_CLIP_SCALE
+) -> Quantized:
+    """The clipping Q_RTN(x, s) of §3.3 — MS-EDEN's inner quantizer.
+
+    Differences from :func:`quantize_rtn`: the group max is anchored at
+    ``s`` (default (6*16/17)/0.93, MSE-optimal over N(0,1)) so a small
+    fraction of elements RTN-clips at ±6, and the FP8 group scales are
+    capped at 256 instead of 448, leaving head-room for the EDEN
+    correction to scale them *up* without overflowing E4M3.
+    """
+    x = x.astype(jnp.float32)
+    if x.shape[-1] % F.GROUP:
+        raise ValueError(f"last dim {x.shape[-1]} not a multiple of 16")
+    absmax = jnp.max(jnp.abs(x))
+    gscale = _safe_div(absmax, jnp.float32(s) * jnp.float32(F.RTN_SCALE_CAP))
+    gmax = _group_max(x)
+    scales = F.rtn_e4m3(_safe_div(gmax, gscale * jnp.float32(s)))
+    ratio = _safe_div(x, _expand_like(scales, x) * gscale)
+    return Quantized(F.rtn_fp4(ratio), scales, gscale)
+
+
+def eden_factors(x_rot: jnp.ndarray, x_rtn: jnp.ndarray) -> jnp.ndarray:
+    """Per-16-group EDEN correction factors S_g = <x,x> / <x,Q(x)>.
+
+    Computed in rotated space, per NVFP4 group (not per rotation block):
+    Appendix A justifies 16-element unbiasing groups as a two-level RHT.
+    Groups with a vanishing (or negative — possible only for pathological
+    inputs) denominator fall back to S=1.
+    """
+    xr = x_rot.reshape(*x_rot.shape[:-1], x_rot.shape[-1] // F.GROUP, F.GROUP)
+    xq = x_rtn.reshape(*xr.shape)
+    num = jnp.sum(xr * xr, axis=-1)
+    den = jnp.sum(xr * xq, axis=-1)
+    return jnp.where(den > 0.0, _safe_div(num, den), 1.0)
+
+
+def quantize_ms_eden(
+    x: jnp.ndarray,
+    key: jax.Array,
+    s: float = F.RTN_CLIP_SCALE,
+) -> Quantized:
+    """MS-EDEN (Algorithm 1): the paper's unbiased NVFP4 quantizer.
+
+    Pipeline: 128-block RHT (seeded) -> clipped RTN NVFP4 -> per-16 EDEN
+    correction factors folded into the FP8 group scales via *stochastic
+    rounding of the scales only*. Unbiased in rotated space
+    (Corollary 3.1); the returned representation carries ``signs`` so a
+    GEMM partner (or :func:`dequant_unrotated`) can cancel the rotation.
+    """
+    x = x.astype(jnp.float32)
+    if x.shape[-1] % F.ROT_BLOCK:
+        raise ValueError(
+            f"last dim {x.shape[-1]} not a multiple of {F.ROT_BLOCK}"
+        )
+    k_rot, k_sr = jax.random.split(key)
+    signs = rademacher_signs(k_rot)
+    x_rot = rht(x, signs)
+
+    q = quantize_rtn_clipped(x_rot, s)
+    x_rtn = dequant(q)
+    S = eden_factors(x_rot, x_rtn)
+
+    u = jax.random.uniform(k_sr, q.scales.shape, jnp.float32)
+    scales = F.sr_e4m3(S * q.scales, u)
+    return Quantized(q.values, scales, q.gscale, signs=signs)
+
+
+# --------------------------------------------------------------------------
+# Convenience fake-quant wrappers (what the L2 model consumes)
+# --------------------------------------------------------------------------
+
+
+def fake_rtn(x, four_six=False, square=False):
+    """quantize->dequantize via RTN; the forward-pass estimate."""
+    return dequant(quantize_rtn(x, four_six=four_six, square=square))
+
+
+def fake_sr(x, key, four_six=False):
+    """quantize->dequantize via Q_SR (stays in original space)."""
+    return dequant(quantize_sr(x, key, four_six=four_six))
+
+
+def fake_ms_eden_rotated(x, key, s=F.RTN_CLIP_SCALE):
+    """quantize->dequantize via MS-EDEN, *staying in rotated space*.
+
+    Intended for GEMM inner-dimension use where both operands share the
+    same key and the rotations cancel: (A H)(B H)^T == A B^T.
+    """
+    return dequant(quantize_ms_eden(x, key, s))
+
+
+def fake_ms_eden(x, key, s=F.RTN_CLIP_SCALE):
+    """quantize->dequantize via MS-EDEN mapped back to original space."""
+    return dequant_unrotated(quantize_ms_eden(x, key, s))

@@ -1,0 +1,254 @@
+"""L2 — Llama-2-like transformer with QAT linear layers.
+
+Pure-functional JAX (no flax): parameters are a plain nested dict of
+f32 arrays, layers are stacked on a leading axis and the forward pass
+scans over them (keeps the lowered HLO O(1) in depth).
+
+Architecture (Touvron et al. 2023, as used by the paper's ablations):
+pre-norm RMSNorm, rotary position embeddings, multi-head causal
+attention, SwiGLU MLP, untied LM head. Every hidden linear layer goes
+through :func:`compile.qlinear.qlinear` under the model's QAT scheme;
+embedding and LM head stay in high precision (the paper's Table 7
+accounts the LM head separately from the FP4 GEMMs, and the NVIDIA
+recipe keeps edge layers in higher precision).
+
+Dimension constraints (enforced in :class:`ModelConfig`): ``dim`` and
+``ffn`` must be multiples of 128 so every GEMM inner dimension supports
+the 128-block RHT of the backward quantizers; ``batch*seq`` must be a
+multiple of 128 for the dW GEMM's token inner dimension.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .qlinear import qlinear
+from .schemes import Scheme, get_scheme
+
+Params = Dict[str, Any]
+
+
+class ModelConfig(NamedTuple):
+    """Model hyper-parameters (paper Appendix B analogue, CPU-scaled)."""
+
+    vocab: int = 256  # byte-level tokenizer (see rust/src/data)
+    dim: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    ffn: int = 768
+    seq_len: int = 128
+    rope_theta: float = 10000.0
+    scheme: str = "bf16"
+
+    def validate(self) -> "ModelConfig":
+        if self.dim % 128 or self.ffn % 128:
+            raise ValueError(
+                f"dim={self.dim} and ffn={self.ffn} must be multiples of 128 "
+                "(RHT block size on GEMM inner dims)"
+            )
+        if self.dim % self.n_heads:
+            raise ValueError("dim must divide evenly into heads")
+        return self
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    @property
+    def scheme_obj(self) -> Scheme:
+        return get_scheme(self.scheme)
+
+    def param_count(self, params=None) -> int:
+        per_layer = 4 * self.dim * self.dim + 3 * self.dim * self.ffn
+        return (
+            2 * self.vocab * self.dim
+            + self.n_layers * (per_layer + 2 * self.dim)
+            + self.dim
+        )
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """GPT-2-style init: N(0, 0.02) embeddings/projections, with the
+    residual-output projections (wo, w_down) scaled down by sqrt(2L)."""
+    cfg.validate()
+    k = jax.random.split(key, 10)
+    d, f, L, V = cfg.dim, cfg.ffn, cfg.n_layers, cfg.vocab
+    std = 0.02
+    res_std = std / jnp.sqrt(2.0 * L)
+
+    def norm_init(kk, *shape):
+        return jnp.ones(shape, jnp.float32)
+
+    def w(kk, *shape, s=std):
+        return (jax.random.normal(kk, shape, jnp.float32) * s).astype(
+            jnp.float32
+        )
+
+    return {
+        "embed": w(k[0], V, d),
+        "lm_head": w(k[1], V, d),
+        "final_norm": norm_init(None, d),
+        "layers": {
+            "attn_norm": jnp.ones((L, d), jnp.float32),
+            "mlp_norm": jnp.ones((L, d), jnp.float32),
+            "wq": w(k[2], L, d, d),
+            "wk": w(k[3], L, d, d),
+            "wv": w(k[4], L, d, d),
+            "wo": w(k[5], L, d, d, s=res_std),
+            "w_gate": w(k[6], L, f, d),
+            "w_up": w(k[7], L, f, d),
+            "w_down": w(k[8], L, d, f, s=res_std),
+        },
+    }
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5):
+    """RMSNorm (Llama): x * w / rms(x)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * weight
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float):
+    """cos/sin tables for rotary embeddings: [seq, head_dim/2]."""
+    inv = 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: [B, H, S, Dh]; rotate pairs (even, odd) by position angle."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[None, None], sin[None, None]
+    return jnp.concatenate(
+        [
+            (x1 * c - x2 * s)[..., None],
+            (x1 * s + x2 * c)[..., None],
+        ],
+        axis=-1,
+    ).reshape(x.shape)
+
+
+def _qlin(scheme: Scheme, x2d: jnp.ndarray, w: jnp.ndarray, seed):
+    return qlinear(scheme, x2d, w, seed)
+
+
+def _attention(cfg: ModelConfig, scheme, lp, x, cos, sin, seed):
+    """One pre-norm multi-head causal self-attention block."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    h = rmsnorm(x, lp["attn_norm"])
+    h2 = h.reshape(B * S, D)
+    q = _qlin(scheme, h2, lp["wq"], seed + jnp.uint32(1))
+    k = _qlin(scheme, h2, lp["wk"], seed + jnp.uint32(2))
+    v = _qlin(scheme, h2, lp["wv"], seed + jnp.uint32(3))
+
+    def heads(t):
+        return t.reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(Dh))
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    att = jnp.where(mask[None, None], att, -jnp.inf)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B * S, D)
+    o = _qlin(scheme, o, lp["wo"], seed + jnp.uint32(4))
+    return x + o.reshape(B, S, D)
+
+
+def _mlp(cfg: ModelConfig, scheme, lp, x, seed):
+    """Pre-norm SwiGLU MLP block."""
+    B, S, D = x.shape
+    h = rmsnorm(x, lp["mlp_norm"]).reshape(B * S, D)
+    g = _qlin(scheme, h, lp["w_gate"], seed + jnp.uint32(5))
+    u = _qlin(scheme, h, lp["w_up"], seed + jnp.uint32(6))
+    z = jax.nn.silu(g) * u
+    o = _qlin(scheme, z, lp["w_down"], seed + jnp.uint32(7))
+    return x + o.reshape(B, S, D)
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+
+def forward(
+    params: Params, cfg: ModelConfig, tokens: jnp.ndarray, seed: jnp.ndarray
+) -> jnp.ndarray:
+    """Logits [B, S, V]. ``seed`` (uint32 scalar) re-randomizes every
+    backward-pass rotation/SR stream; pass the step counter."""
+    scheme = cfg.scheme_obj
+    B, S = tokens.shape
+    if (B * S) % 128:
+        raise ValueError(
+            f"batch*seq={B*S} must be a multiple of 128 (dW inner dim)"
+        )
+    x = params["embed"][tokens]  # [B, S, D]
+    cos, sin = rope_tables(S, cfg.head_dim, cfg.rope_theta)
+
+    def layer_step(carry, inp):
+        x = carry
+        lp, li = inp
+        lseed = seed * jnp.uint32(4097) + li * jnp.uint32(97)
+        x = _attention(cfg, scheme, lp, x, cos, sin, lseed)
+        x = _mlp(cfg, scheme, lp, x, lseed + jnp.uint32(13))
+        return x, None
+
+    idx = jnp.arange(cfg.n_layers, dtype=jnp.uint32)
+    x, _ = jax.lax.scan(layer_step, x, (params["layers"], idx))
+
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"].T
+
+
+def loss_fn(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+    seed: jnp.ndarray,
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy (nats). BPB = loss / ln(2) for the
+    byte-level tokenizer."""
+    logits = forward(params, cfg, tokens, seed)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# --------------------------------------------------------------------------
+# Size presets (CPU-scaled stand-ins for the paper's 30M..200M sweep)
+# --------------------------------------------------------------------------
+
+PRESETS: Dict[str, ModelConfig] = {
+    # ~0.9M params: the Fig 1/2/4 ablation workhorse.
+    "tiny": ModelConfig(dim=128, n_layers=3, n_heads=4, ffn=384, seq_len=128),
+    # ~3.5M params: second ablation point (size trend).
+    "small": ModelConfig(dim=256, n_layers=4, n_heads=4, ffn=768, seq_len=128),
+    # ~8M params: flagship end-to-end training run (examples/train_llm.rs).
+    "base": ModelConfig(dim=384, n_layers=6, n_heads=6, ffn=1152, seq_len=128),
+}
+
+
+def preset(name: str, scheme: str = "bf16") -> ModelConfig:
+    cfg = PRESETS[name]._replace(scheme=scheme)
+    return cfg.validate()

@@ -1,0 +1,175 @@
+"""Quantized linear layer: the Quartet II computation graph (Figure 3).
+
+``qlinear(scheme, x, w, seed)`` computes ``y = x @ w.T`` with the
+forward/backward quantization prescribed by ``scheme``
+(:mod:`compile.schemes`), as a ``jax.custom_vjp``:
+
+* **Forward** — deterministic NVFP4 RTN (native 1x16 scales or 16x16
+  square blocks, optional Four-over-Six) on both activations and
+  weights; the quantized weight estimate is stashed for ``reuse``
+  schemes.
+
+* **Backward** — the two GEMMs dX = E·W and dW = Eᵀ·X are estimated
+  with the scheme's per-tensor quantizers along their *inner*
+  dimensions. MS-EDEN / SR+RHT rotations are shared between the two
+  operands of a GEMM (same rotation seed), so they cancel in the
+  product and no inverse rotation is materialized; the SR noise streams
+  of the two operands are independent (distinct fold_in constants) —
+  required for the product estimate to stay unbiased.
+
+The per-call ``seed`` is a uint32 scalar; backward keys are derived by
+folding in GEMM- and operand-specific constants, so a fresh seed per
+micro-batch re-randomizes all rotations (paper Appendix A, point 2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.dtypes
+import jax.numpy as jnp
+
+from .kernels import ref as R
+from .schemes import Scheme
+
+# fold_in tags (arbitrary distinct constants)
+_TAG_DX, _TAG_DW = 101, 202
+_TAG_ROT, _TAG_SR_A, _TAG_SR_B = 1, 2, 3
+
+# When True, forward-pass quantization runs through the L1 Pallas
+# kernels instead of the pure-jnp reference (identical numerics, proven
+# by pytest); flipped by `python -m compile.aot --pallas` so the
+# exported HLO contains the lowered Pallas kernel bodies.
+_USE_PALLAS = False
+
+
+def set_use_pallas(flag: bool) -> None:
+    """Route forward-pass quantization through the Pallas kernels."""
+    global _USE_PALLAS
+    _USE_PALLAS = bool(flag)
+
+
+def _quantize_operand(a, kind, rot_signs, sr_key, four_six=False):
+    """Quantize one GEMM operand ``a`` [rows, k] along k.
+
+    ``rot_signs`` is the shared RHT diagonal (or None): rotation happens
+    *before* quantization and is never undone — the GEMM partner carries
+    the same rotation, so they cancel in the product.
+    """
+    if rot_signs is not None:
+        a = R.rht(a, rot_signs)
+    if kind == "none":
+        return a
+    if kind == "sr":
+        return R.fake_sr(a, sr_key)
+    if kind == "sr46":
+        return R.fake_sr(a, sr_key, four_six=True)
+    raise ValueError(f"unexpected operand kind {kind!r}")
+
+
+def _estimate_gemm(a, b, kind_a, kind_b, key, rht_bwd):
+    """Estimate ``a @ b.T`` (a: [m,k], b: [n,k]) under quantizers
+    ``kind_a``/``kind_b`` applied along k, with shared inner-dim rotation.
+    """
+    if kind_a == "mseden" or kind_b == "mseden":
+        # MS-EDEN carries its own rotation; both sides must use it with
+        # the same rotation seed and *independent* scale-SR streams.
+        rot_key = jax.random.fold_in(key, _TAG_ROT)
+        signs = R.rademacher_signs(rot_key)
+        ka = jax.random.fold_in(key, _TAG_SR_A)
+        kb = jax.random.fold_in(key, _TAG_SR_B)
+        aq = _ms_eden_with_signs(a, signs, ka) if kind_a == "mseden" else R.rht(a, signs)
+        bq = _ms_eden_with_signs(b, signs, kb) if kind_b == "mseden" else R.rht(b, signs)
+        return aq @ bq.T
+
+    both_quant = kind_a != "none" and kind_b != "none"
+    rotate = rht_bwd and both_quant
+    signs = (
+        R.rademacher_signs(jax.random.fold_in(key, _TAG_ROT)) if rotate else None
+    )
+    aq = _quantize_operand(a, kind_a, signs, jax.random.fold_in(key, _TAG_SR_A))
+    bq = _quantize_operand(b, kind_b, signs, jax.random.fold_in(key, _TAG_SR_B))
+    return aq @ bq.T
+
+
+def _ms_eden_with_signs(x, signs, sr_key):
+    """MS-EDEN with an externally shared rotation diagonal."""
+    x_rot = R.rht(x, signs)
+    q = R.quantize_rtn_clipped(x_rot)
+    S = R.eden_factors(x_rot, R.dequant(q))
+    u = jax.random.uniform(sr_key, q.scales.shape, jnp.float32)
+    from .kernels import formats as F
+
+    scales = F.sr_e4m3(S * q.scales, u)
+    return R.dequant(R.Quantized(q.values, scales, q.gscale))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def qlinear(scheme: Scheme, x: jnp.ndarray, w: jnp.ndarray, seed: jnp.ndarray):
+    """y = x @ w.T with scheme-controlled fake quantization.
+
+    x: [tokens, in_features]; w: [out_features, in_features];
+    seed: uint32 scalar re-randomized per micro-batch."""
+    y, _ = _qlinear_fwd(scheme, x, w, seed)
+    return y
+
+
+def _fwd_quant(scheme: Scheme, x, w):
+    if not scheme.fwd_quant:
+        return x, w
+    if _USE_PALLAS and not scheme.fwd_square_w:
+        from .kernels.nvfp4 import fake_rtn_pallas
+
+        xq = fake_rtn_pallas(x, four_six=scheme.fwd_four_six)
+        wq = fake_rtn_pallas(w, four_six=scheme.fwd_four_six)
+        return xq, wq
+    xq = R.fake_rtn(x, four_six=scheme.fwd_four_six)
+    wq = R.fake_rtn(w, four_six=scheme.fwd_four_six, square=scheme.fwd_square_w)
+    return xq, wq
+
+
+def _qlinear_fwd(scheme: Scheme, x, w, seed):
+    xq, wq = _fwd_quant(scheme, x, w)
+    y = xq @ wq.T
+    # Residuals: original tensors for re-quantization paths, plus the
+    # forward-quantized weight for 'reuse' (saved exactly as the NVIDIA
+    # recipe keeps the quantized weight tensor for the dX GEMM).
+    keep_wq = wq if scheme.dx_w == "reuse" else None
+    return y, (x, w, keep_wq, seed)
+
+
+def _qlinear_bwd(scheme: Scheme, res, e):
+    x, w, wq, seed = res
+    key = jax.random.PRNGKey(seed)
+
+    # dX = E @ W; inner dim = out_features.
+    if scheme.dx_w == "reuse":
+        w_for_dx, kind_w = wq, "none"
+    else:
+        w_for_dx, kind_w = w, scheme.dx_w
+    dx = _estimate_gemm(
+        e,
+        w_for_dx.T,  # [in, out] so the GEMM inner dim is out_features
+        scheme.dx_e,
+        kind_w,
+        jax.random.fold_in(key, _TAG_DX),
+        scheme.rht_bwd,
+    )
+
+    # dW = E^T @ X; inner dim = tokens.
+    dw = _estimate_gemm(
+        e.T,
+        x.T,
+        scheme.dw_e,
+        scheme.dw_x,
+        jax.random.fold_in(key, _TAG_DW),
+        scheme.rht_bwd,
+    )
+
+    dseed = np.zeros(jnp.shape(seed), dtype=jax.dtypes.float0)
+    return dx, dw, dseed
+
+
+qlinear.defvjp(_qlinear_fwd, _qlinear_bwd)

@@ -1,0 +1,190 @@
+"""QAT scheme registry: every linear-layer quantization recipe we compare.
+
+A :class:`Scheme` describes how one linear layer ``Y = X W^T`` is
+quantized in the forward pass and in the two backward GEMMs
+
+    dX = E @ W        (inner dimension: out_features)
+    dW = E^T @ X      (inner dimension: tokens)
+
+following the scheme table in DESIGN.md. Per-tensor quantizer kinds:
+
+* ``none``   — keep BF16 (here f32) — tensor not quantized
+* ``reuse``  — reuse the *forward-pass* quantized tensor without
+               re-quantization (NVIDIA-recipe weight path; requires
+               square-block forward scales so the transpose is valid)
+* ``sr``     — unbiased element-wise stochastic rounding, Q_SR (§3.1)
+* ``sr46``   — SR with Four-over-Six branch selection (BIASED — §4.2;
+               kept to reproduce the paper's Fig. 9 bias demonstration)
+* ``mseden`` — MS-EDEN (Algorithm 1), requires re-quantization and
+               applies its own inner-dimension rotation
+
+``rht_bwd`` rotates the inner dimension of a backward GEMM whenever both
+of its operands are quantized with SR (Fig. 1 caption: "whenever both
+tensors in a GEMM are quantized, we perform RHT on the inner dimension
+in groups of 128"). MS-EDEN always rotates, by construction.
+
+The registry contains:
+* the full recipes compared in Fig. 4 / Fig. 5 / Table 5
+  (``bf16``, ``nvidia``, ``four_six``, ``tetrajet2``, ``quartet2``),
+* the forward-only ablations of Fig. 2 (``fwd_*``),
+* the selective-backward ablations of Fig. 1 (``bwd_{a..e}_{sr,mseden}``),
+* ``four_six_bwd`` — 4/6 applied on the backward pass, the biased
+  estimator Fig. 9 exposes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+QUANT_KINDS = ("none", "reuse", "sr", "sr46", "mseden")
+
+
+@dataclass(frozen=True)
+class Scheme:
+    """Quantization recipe for one linear layer (see module docstring)."""
+
+    name: str
+    # forward pass
+    fwd_quant: bool = False
+    fwd_square_w: bool = False  # 16x16 square-block scales on W
+    fwd_four_six: bool = False  # 4/6 adaptive grid (weights + activations)
+    # backward pass: dX = E @ W
+    dx_e: str = "none"
+    dx_w: str = "none"
+    # backward pass: dW = E^T @ X
+    dw_e: str = "none"
+    dw_x: str = "none"
+    rht_bwd: bool = True
+
+    def __post_init__(self):
+        for field in ("dx_e", "dw_e", "dw_x"):
+            kind = getattr(self, field)
+            if kind not in QUANT_KINDS or kind == "reuse":
+                if kind != "none" and kind not in ("sr", "sr46", "mseden"):
+                    raise ValueError(f"{field}={kind!r} invalid")
+        if self.dx_w not in QUANT_KINDS:
+            raise ValueError(f"dx_w={self.dx_w!r} invalid")
+        if self.dx_w == "reuse" and not (self.fwd_quant and self.fwd_square_w):
+            raise ValueError(
+                "dx_w='reuse' needs square-block forward weight scales "
+                "(transposing 1x16 group scales is not layout-valid)"
+            )
+        if "mseden" in (self.dx_e, self.dx_w) and self.dx_w not in (
+            "mseden",
+            "none",
+        ):
+            raise ValueError("MS-EDEN rotates the inner dim: both dX GEMM "
+                             "operands must be MS-EDEN (weight re-quantization "
+                             "is required — §4.1)")
+        if (self.dx_e == "mseden") != (self.dx_w == "mseden") and self.dx_w != "none":
+            raise ValueError("mixed mseden/non-mseden dX GEMM")
+
+    @property
+    def quantized_bwd(self) -> bool:
+        return any(
+            k != "none" for k in (self.dx_e, self.dx_w, self.dw_e, self.dw_x)
+        )
+
+
+def _s(name, **kw) -> Scheme:
+    return Scheme(name=name, **kw)
+
+
+SCHEMES = {
+    # ---- baselines and full recipes (Fig. 4 / Fig. 5 / Table 5) ----
+    "bf16": _s("bf16"),
+    # NVIDIA et al. (2025): square-block W (reused transposed in dX),
+    # SR everywhere on the backward, RHT when both operands quantized.
+    "nvidia": _s(
+        "nvidia",
+        fwd_quant=True,
+        fwd_square_w=True,
+        dx_e="sr",
+        dx_w="reuse",
+        dw_e="sr",
+        dw_x="sr",
+    ),
+    # Cook et al. (2025): NVIDIA recipe + 4/6 grid on the forward pass
+    # (with square blocks, 4/6 effectively only helps activations).
+    "four_six": _s(
+        "four_six",
+        fwd_quant=True,
+        fwd_square_w=True,
+        fwd_four_six=True,
+        dx_e="sr",
+        dx_w="reuse",
+        dw_e="sr",
+        dw_x="sr",
+    ),
+    # TetraJet-v2, GPU-feasible reading (§2): native 1x16 RTN forward,
+    # SR + RHT with weight re-quantization on both backward GEMMs.
+    "tetrajet2": _s(
+        "tetrajet2",
+        fwd_quant=True,
+        dx_e="sr",
+        dx_w="sr",
+        dw_e="sr",
+        dw_x="sr",
+    ),
+    # Quartet II (this paper): 1x16 RTN + 4/6 forward; MS-EDEN backward.
+    "quartet2": _s(
+        "quartet2",
+        fwd_quant=True,
+        fwd_four_six=True,
+        dx_e="mseden",
+        dx_w="mseden",
+        dw_e="mseden",
+        dw_x="mseden",
+    ),
+    # 4/6 on the *backward* pass: biased (Fig. 9's plateauing curve).
+    "four_six_bwd": _s(
+        "four_six_bwd",
+        fwd_quant=True,
+        fwd_square_w=True,
+        fwd_four_six=True,
+        dx_e="sr46",
+        dx_w="reuse",
+        dw_e="sr46",
+        dw_x="sr46",
+    ),
+}
+
+# ---- Fig. 2: forward-pass-only ablations ----
+SCHEMES.update(
+    {
+        "fwd_1x16": _s("fwd_1x16", fwd_quant=True),
+        "fwd_1x16_46": _s("fwd_1x16_46", fwd_quant=True, fwd_four_six=True),
+        "fwd_16x16": _s("fwd_16x16", fwd_quant=True, fwd_square_w=True),
+        "fwd_16x16_46": _s(
+            "fwd_16x16_46", fwd_quant=True, fwd_square_w=True, fwd_four_six=True
+        ),
+    }
+)
+
+# ---- Fig. 1: selective backward-pass ablations (forward stays BF16) ----
+# (a) dW GEMM only; (b) dX without W re-quant; (c) dX with W re-quant;
+# (d) both GEMMs without W re-quant; (e) both GEMMs with W re-quant.
+for q in ("sr", "mseden"):
+    SCHEMES[f"bwd_a_{q}"] = _s(f"bwd_a_{q}", dw_e=q, dw_x=q)
+    SCHEMES[f"bwd_c_{q}"] = _s(f"bwd_c_{q}", dx_e=q, dx_w=q)
+    SCHEMES[f"bwd_e_{q}"] = _s(f"bwd_e_{q}", dx_e=q, dx_w=q, dw_e=q, dw_x=q)
+# (b)/(d) quantize E against an unquantized W — incompatible with MS-EDEN
+# (it *requires* weight re-quantization, §4.1), so SR only:
+SCHEMES["bwd_b_sr"] = _s("bwd_b_sr", dx_e="sr")
+SCHEMES["bwd_d_sr"] = _s("bwd_d_sr", dx_e="sr", dw_e="sr", dw_x="sr")
+
+# Backward-only 4/6+SR (forward stays BF16): the biased estimator that
+# Figure 9 exposes, isolated from forward-quantization effects.
+SCHEMES["bwd_e_sr46"] = _s(
+    "bwd_e_sr46", dx_e="sr46", dx_w="sr46", dw_e="sr46", dw_x="sr46"
+)
+
+
+def get_scheme(name: str) -> Scheme:
+    """Look up a scheme by registry name (raises KeyError with choices)."""
+    try:
+        return SCHEMES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scheme {name!r}; available: {sorted(SCHEMES)}"
+        ) from None

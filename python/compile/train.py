@@ -1,0 +1,137 @@
+"""L2 — training step: AdamW + cosine schedule + gradient clipping.
+
+Implements the paper's Appendix B optimization setup (AdamW, cosine LR
+with 10% warm-up, global-norm clipping at 1.0, weight decay 0.1,
+FP32 optimizer state) as a single pure function suitable for AOT
+lowering: ``(params, m, v, step, tokens, targets) -> (params', m', v',
+loss)``. No optax dependency — the update rule is ~30 lines and being
+explicit keeps the artifact's input/output contract trivial.
+
+The QAT seed for the step's quantizer randomness is derived from the
+step counter, so a training run is exactly reproducible from the
+initial seed (paper §3: "users can sample the pseudo-randomness
+reproducibly").
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, loss_fn
+
+Params = Dict[str, Any]
+
+
+class TrainHParams(NamedTuple):
+    """Optimization hyper-parameters (paper Table 4, CPU-scaled LR)."""
+
+    lr: float = 1.2e-3
+    warmup_frac: float = 0.1
+    total_steps: int = 300
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+
+
+def lr_schedule(step: jnp.ndarray, hp: TrainHParams) -> jnp.ndarray:
+    """Linear warm-up for ``warmup_frac`` of training, then cosine to 0."""
+    warm = jnp.maximum(1.0, hp.warmup_frac * hp.total_steps)
+    t = step.astype(jnp.float32)
+    warm_lr = hp.lr * t / warm
+    prog = jnp.clip((t - warm) / jnp.maximum(1.0, hp.total_steps - warm), 0.0, 1.0)
+    cos_lr = hp.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(t < warm, warm_lr, cos_lr)
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l * l) for l in leaves))
+
+
+def _decay_mask(params: Params) -> Params:
+    """Weight decay on matrices only (not norms / not embeddings' bias-like
+    1-D tensors), matching the usual Llama recipe."""
+    return jax.tree_util.tree_map(lambda p: jnp.float32(p.ndim >= 2), params)
+
+
+def init_opt_state(params: Params) -> Tuple[Params, Params]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def train_step(
+    cfg: ModelConfig,
+    hp: TrainHParams,
+    params: Params,
+    m: Params,
+    v: Params,
+    step: jnp.ndarray,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+) -> Tuple[Params, Params, Params, jnp.ndarray]:
+    """One fully-fused AdamW step under the config's QAT scheme.
+
+    ``step`` is an int32 scalar (0-based); the QAT seed is derived from
+    it. Returns updated (params, m, v) and the step's training loss.
+    """
+    seed = step.astype(jnp.uint32) * jnp.uint32(2654435761) + jnp.uint32(12345)
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, tokens, targets, seed)
+
+    # Global-norm clip at hp.clip.
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, hp.clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    t = step.astype(jnp.float32) + 1.0
+    lr = lr_schedule(step, hp)
+    bc1 = 1.0 - hp.beta1**t
+    bc2 = 1.0 - hp.beta2**t
+    mask = _decay_mask(params)
+
+    def upd(p, g, m_, v_, dmask):
+        m2 = hp.beta1 * m_ + (1.0 - hp.beta1) * g
+        v2 = hp.beta2 * v_ + (1.0 - hp.beta2) * (g * g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + hp.eps) + hp.weight_decay * dmask * p
+        return p - lr * step_, m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v, mask)
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_m, new_v, loss
+
+
+def eval_step(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+) -> jnp.ndarray:
+    """Validation loss (nats/token). Deterministic: QAT forward
+    quantization is RTN, and backward never runs; seed is fixed."""
+    return loss_fn(params, cfg, tokens, targets, jnp.uint32(0))
+
+
+def fig9_grad(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,
+    targets: jnp.ndarray,
+    seed: jnp.ndarray,
+) -> jnp.ndarray:
+    """Gradient of layer-0 wq (the deepest attention block from the
+    backprop perspective — paper Appendix A / Figure 9), flattened.
+
+    Repeated calls with different seeds give i.i.d. samples of the
+    quantized gradient estimator; their running average converges to the
+    true gradient iff the estimator is unbiased.
+    """
+    grads = jax.grad(loss_fn)(params, cfg, tokens, targets, seed)
+    return grads["layers"]["wq"][0].reshape(-1)

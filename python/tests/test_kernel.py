@@ -1,0 +1,185 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE L1 correctness signal.
+
+Every kernel must reproduce its ref.py oracle exactly (quantized values
+and scales are on discrete grids, so equality is meaningful), across a
+hypothesis sweep of shapes and seeds.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import formats as F
+from compile.kernels import hadamard as H
+from compile.kernels import ms_eden as ME
+from compile.kernels import nvfp4 as K
+from compile.kernels import qgemm as G
+from compile.kernels import ref as R
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def _gauss(seed, rows, cols, scale=1.0):
+    return scale * jax.random.normal(
+        jax.random.PRNGKey(seed), (rows, cols), jnp.float32
+    )
+
+
+shapes = st.tuples(
+    st.sampled_from([64, 128, 192, 256]),  # rows
+    st.sampled_from([128, 256, 384]),  # cols (multiples of 128)
+)
+
+
+# ---------------------------------------------------------------- RHT
+
+
+class TestRhtKernel:
+    @given(shapes, st.integers(0, 1000))
+    @settings(max_examples=12, deadline=None)
+    def test_matches_ref(self, shape, seed):
+        x = _gauss(seed, *shape)
+        signs = R.rademacher_signs(jax.random.PRNGKey(seed + 1))
+        out = H.rht_pallas(x, signs)
+        ref = R.rht(x, signs)
+        np.testing.assert_allclose(_np(out), _np(ref), atol=1e-5)
+
+    def test_inverse(self):
+        x = _gauss(3, 128, 256)
+        signs = R.rademacher_signs(jax.random.PRNGKey(4))
+        back = H.rht_pallas(H.rht_pallas(x, signs), signs, inverse=True)
+        np.testing.assert_allclose(_np(back), _np(x), atol=1e-4)
+
+    def test_rejects_bad_dims(self):
+        with pytest.raises(ValueError):
+            H.rht_pallas(jnp.zeros((4, 100)), jnp.ones(128))
+
+
+# ---------------------------------------------------------------- RTN/SR
+
+
+class TestNvfp4Kernels:
+    @given(shapes, st.integers(0, 1000), st.booleans())
+    @settings(max_examples=12, deadline=None)
+    def test_rtn_matches_ref(self, shape, seed, four_six):
+        x = _gauss(seed, *shape)
+        v, s, g = K.quantize_rtn_pallas(x, four_six=four_six)
+        qr = R.quantize_rtn(x, four_six=four_six)
+        np.testing.assert_array_equal(_np(v), _np(qr.values))
+        np.testing.assert_array_equal(_np(s), _np(qr.scales))
+        np.testing.assert_allclose(float(g), float(qr.gscale), rtol=1e-6)
+
+    @given(shapes, st.integers(0, 1000))
+    @settings(max_examples=12, deadline=None)
+    def test_sr_matches_ref(self, shape, seed):
+        x = _gauss(seed, *shape)
+        key = jax.random.PRNGKey(seed + 7)
+        v, s, g = K.quantize_sr_pallas(x, key)
+        qr = R.quantize_sr(x, key)
+        np.testing.assert_array_equal(_np(v), _np(qr.values))
+        np.testing.assert_array_equal(_np(s), _np(qr.scales))
+
+    def test_outlier_tensor(self):
+        """Heavy-tailed input exercises the global-scale range extension."""
+        x = _gauss(11, 128, 256)
+        x = x.at[0, 0].set(5000.0)
+        v, s, g = K.quantize_rtn_pallas(x)
+        qr = R.quantize_rtn(x)
+        np.testing.assert_array_equal(_np(v), _np(qr.values))
+        np.testing.assert_array_equal(_np(s), _np(qr.scales))
+
+
+# ---------------------------------------------------------------- MS-EDEN
+
+
+class TestMsEdenKernels:
+    @given(shapes, st.integers(0, 1000))
+    @settings(max_examples=8, deadline=None)
+    def test_naive_bit_identical_to_ref(self, shape, seed):
+        x = _gauss(seed, *shape)
+        key = jax.random.PRNGKey(seed + 13)
+        qn = ME.quantize_ms_eden_naive(x, key)
+        qr = R.quantize_ms_eden(x, key)
+        np.testing.assert_array_equal(_np(qn.values), _np(qr.values))
+        np.testing.assert_array_equal(_np(qn.scales), _np(qr.scales))
+        np.testing.assert_array_equal(_np(qn.signs), _np(qr.signs))
+
+    def test_posthoc_mse_matches_naive(self):
+        """Post hoc range alignment changes the kernel schedule, not the
+        estimator quality: MSEs agree within a few percent."""
+        x = _gauss(17, 512, 512)
+        key = jax.random.PRNGKey(23)
+        en = R.dequant_unrotated(ME.quantize_ms_eden_naive(x, key))
+        ep = R.dequant_unrotated(ME.quantize_ms_eden_posthoc(x, key))
+        mse_n = float(jnp.mean((en - x) ** 2))
+        mse_p = float(jnp.mean((ep - x) ** 2))
+        assert mse_p == pytest.approx(mse_n, rel=0.05)
+
+    def test_posthoc_unbiased(self):
+        x = _gauss(19, 64, 256)
+        n = 48
+        acc = jnp.zeros_like(x)
+        for i in range(n):
+            q = ME.quantize_ms_eden_posthoc(x, jax.random.PRNGKey(2000 + i))
+            acc = acc + R.dequant_unrotated(q)
+        avg = acc / n
+        base = float(jnp.mean(
+            (R.dequant_unrotated(ME.quantize_ms_eden_posthoc(x, jax.random.PRNGKey(1))) - x) ** 2
+        ))
+        resid = float(jnp.mean((avg - x) ** 2))
+        assert resid < 3.0 * base / n
+
+    def test_posthoc_gscale_is_pow2(self):
+        x = _gauss(29, 128, 256)
+        q = ME.quantize_ms_eden_posthoc(x, jax.random.PRNGKey(0))
+        g = float(q.gscale)
+        assert g > 0 and abs(np.log2(g) - round(np.log2(g))) < 1e-6
+
+
+# ---------------------------------------------------------------- qgemm
+
+
+class TestQGemm:
+    @given(
+        st.sampled_from([64, 128]),
+        st.sampled_from([64, 128]),
+        st.sampled_from([128, 256]),
+        st.integers(0, 100),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_matches_dequant_matmul(self, m, n, k, seed):
+        a = _gauss(seed, m, k)
+        b = _gauss(seed + 1, n, k)
+        qa = R.quantize_rtn(a)
+        qb = R.quantize_rtn(b)
+        out = G.nvfp4_gemm_q(qa, qb)
+        ref = R.dequant(qa) @ R.dequant(qb).T
+        np.testing.assert_allclose(_np(out), _np(ref), rtol=1e-4, atol=1e-4)
+
+    def test_rotated_operands_cancel(self):
+        """MS-EDEN operands with the same seed multiply to an estimate of
+        the *unrotated* product."""
+        a = _gauss(31, 64, 256)
+        b = _gauss(37, 64, 256)
+        key = jax.random.PRNGKey(41)
+        # same rotation seed -> same signs; independent scale-SR noise is
+        # exercised through qlinear; here key reuse is fine for the identity.
+        qa = R.quantize_ms_eden(a, key)
+        qb = R.quantize_ms_eden(b, key)
+        out = G.nvfp4_gemm_q(qa, qb)
+        exact = a @ b.T
+        # quantization noise remains, but the rotation must not distort
+        # the product systematically: correlation stays high.
+        num = float(jnp.sum(out * exact))
+        den = float(jnp.linalg.norm(out) * jnp.linalg.norm(exact))
+        assert num / den > 0.98
+
+    def test_rejects_mismatched_inner(self):
+        qa = R.quantize_rtn(_gauss(1, 64, 128))
+        qb = R.quantize_rtn(_gauss(2, 64, 256))
+        with pytest.raises(ValueError):
+            G.nvfp4_gemm_q(qa, qb)

@@ -1,0 +1,182 @@
+"""Tests for the quantized linear layer (qlinear.py) and scheme registry.
+
+The key property: for every *unbiased* scheme, the averaged backward
+estimates converge to the exact gradients at the 1/N Monte-Carlo rate —
+this is the micro version of the paper's Figure 9.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.qlinear import qlinear
+from compile.schemes import SCHEMES, Scheme, get_scheme
+
+T, IN, OUT = 128, 128, 256
+
+
+@pytest.fixture(scope="module")
+def xwe():
+    kx, kw, ke = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (T, IN), jnp.float32)
+    w = jax.random.normal(kw, (OUT, IN), jnp.float32) * 0.05
+    e = jax.random.normal(ke, (T, OUT), jnp.float32)
+    return x, w, e
+
+
+def _vjp(scheme, x, w, e, seed):
+    y, pull = jax.vjp(
+        lambda a, b: qlinear(scheme, a, b, jnp.uint32(seed)), x, w
+    )
+    dx, dw = pull(e)
+    return y, dx, dw
+
+
+# ------------------------------------------------------------- registry
+
+
+class TestRegistry:
+    def test_all_schemes_construct(self):
+        assert len(SCHEMES) >= 15
+        for name, s in SCHEMES.items():
+            assert s.name == name
+
+    def test_reuse_requires_square(self):
+        with pytest.raises(ValueError):
+            Scheme(name="bad", fwd_quant=True, dx_w="reuse")
+
+    def test_mseden_requires_requant(self):
+        with pytest.raises(ValueError):
+            Scheme(name="bad", dx_e="mseden", dx_w="sr")
+
+    def test_unknown_scheme(self):
+        with pytest.raises(KeyError):
+            get_scheme("nope")
+
+    def test_quartet2_shape(self):
+        s = get_scheme("quartet2")
+        assert s.fwd_quant and s.fwd_four_six and not s.fwd_square_w
+        assert (s.dx_e, s.dx_w, s.dw_e, s.dw_x) == ("mseden",) * 4
+
+    def test_nvidia_reuses_weight(self):
+        s = get_scheme("nvidia")
+        assert s.fwd_square_w and s.dx_w == "reuse"
+
+
+# ------------------------------------------------------------- bf16 exact
+
+
+class TestBf16Passthrough:
+    def test_forward_exact(self, xwe):
+        x, w, e = xwe
+        y, dx, dw = _vjp(get_scheme("bf16"), x, w, e, 0)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T), rtol=1e-5)
+
+    def test_backward_exact(self, xwe):
+        x, w, e = xwe
+        _, dx, dw = _vjp(get_scheme("bf16"), x, w, e, 0)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(e @ w), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dw), np.asarray(e.T @ x), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- smoke all
+
+
+@pytest.mark.parametrize("name", sorted(SCHEMES))
+def test_scheme_runs_and_shapes(name, xwe):
+    x, w, e = xwe
+    y, dx, dw = _vjp(get_scheme(name), x, w, e, 3)
+    assert y.shape == (T, OUT)
+    assert dx.shape == x.shape and dw.shape == w.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.all(np.isfinite(np.asarray(dx)))
+    assert np.all(np.isfinite(np.asarray(dw)))
+
+
+# ------------------------------------------------------------- forward err
+
+
+class TestForwardQuality:
+    def test_forward_46_beats_plain(self, xwe):
+        x, w, e = xwe
+        exact = x @ w.T
+        y46, *_ = _vjp(get_scheme("quartet2"), x, w, e, 0)
+        y16, *_ = _vjp(get_scheme("tetrajet2"), x, w, e, 0)
+        ysq, *_ = _vjp(get_scheme("nvidia"), x, w, e, 0)
+        e46 = float(jnp.mean((y46 - exact) ** 2))
+        e16 = float(jnp.mean((y16 - exact) ** 2))
+        esq = float(jnp.mean((ysq - exact) ** 2))
+        assert e46 < e16 < esq  # 4/6+native < native < square-block
+
+
+# ------------------------------------------------------------- unbiased bwd
+
+
+def _avg_grads(scheme, x, w, e, n):
+    dx_acc = jnp.zeros_like(x)
+    dw_acc = jnp.zeros_like(w)
+    for i in range(n):
+        _, dx, dw = _vjp(scheme, x, w, e, 7000 + i)
+        dx_acc += dx
+        dw_acc += dw
+    return dx_acc / n, dw_acc / n
+
+
+@pytest.mark.parametrize("name", ["tetrajet2", "quartet2", "bwd_e_sr", "bwd_e_mseden"])
+def test_backward_unbiased(name, xwe):
+    x, w, e = xwe
+    n = 32
+    scheme = get_scheme(name)
+    dx_avg, dw_avg = _avg_grads(scheme, x, w, e, n)
+    dx_exact, dw_exact = e @ w, e.T @ x
+    _, dx1, dw1 = _vjp(scheme, x, w, e, 1)
+    base_dx = float(jnp.mean((dx1 - dx_exact) ** 2))
+    base_dw = float(jnp.mean((dw1 - dw_exact) ** 2))
+    resid_dx = float(jnp.mean((dx_avg - dx_exact) ** 2))
+    resid_dw = float(jnp.mean((dw_avg - dw_exact) ** 2))
+    assert resid_dx < 3.5 * base_dx / n, f"dX biased: {resid_dx} vs {base_dx}/{n}"
+    assert resid_dw < 3.5 * base_dw / n, f"dW biased: {resid_dw} vs {base_dw}/{n}"
+
+
+def test_four_six_backward_biased(xwe):
+    """The paper's §4.2 claim at the GEMM level: averaged 4/6 backward
+    estimates stop improving at the CLT rate while the unbiased schemes
+    stay at ratio ~= 1. At GEMM level (after rotation gaussianizes the
+    operands) the residual bias of the 4/6 branch selection is small, so
+    the test asserts a calibrated separation rather than a plateau: the
+    biased ratio must exceed the unbiased one beyond Monte-Carlo noise
+    (unbiased ratios concentrate in 1 +- 0.02 at this N; the element-
+    level bias plateau is asserted in test_quantizers / Figure 9)."""
+    x, w, e = xwe
+    n = 160
+
+    def ratio(name):
+        scheme = get_scheme(name)
+        _, dw_avg = _avg_grads(scheme, x, w, e, n)
+        dw_exact = e.T @ x
+        _, _, dw1 = _vjp(scheme, x, w, e, 1)
+        base = float(jnp.mean((dw1 - dw_exact) ** 2))
+        return float(jnp.mean((dw_avg - dw_exact) ** 2)) / (base / n)
+
+    r_biased = ratio("four_six_bwd")
+    r_unbiased = ratio("tetrajet2")
+    assert r_biased > r_unbiased + 0.03, (
+        f"4/6 bwd ratio {r_biased:.3f} vs tetrajet2 {r_unbiased:.3f}"
+    )
+
+
+def test_ms_eden_beats_sr_variance(xwe):
+    """Table 1 at the gradient level: per-sample dW error of Quartet II
+    is materially lower than TetraJet-v2's SR."""
+    x, w, e = xwe
+    dw_exact = e.T @ x
+    errs = {}
+    for name in ("tetrajet2", "quartet2"):
+        s = get_scheme(name)
+        tot = 0.0
+        for i in range(8):
+            _, _, dw = _vjp(s, x, w, e, 100 + i)
+            tot += float(jnp.mean((dw - dw_exact) ** 2))
+        errs[name] = tot / 8
+    assert errs["quartet2"] < 0.65 * errs["tetrajet2"]

@@ -1,0 +1,209 @@
+"""Invariant tests for the reference NVFP4 quantizers (ref.py).
+
+Covers representation validity (everything on-grid, caps respected),
+statistical unbiasedness of Q_SR and MS-EDEN, the *bias* of 4/6, the
+rotation-cancellation identity used by backward GEMMs, and edge cases.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import formats as F
+from compile.kernels import ref as R
+
+
+def _np(x):
+    return np.asarray(x)
+
+
+def _on_fp4_grid(v):
+    grid = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+    return np.all(np.isin(np.abs(_np(v)), grid))
+
+
+@pytest.fixture(scope="module")
+def gauss():
+    return jax.random.normal(jax.random.PRNGKey(0), (512, 256), jnp.float32)
+
+
+# ------------------------------------------------------------- validity
+
+
+class TestRepresentation:
+    def test_rtn_on_grid(self, gauss):
+        q = R.quantize_rtn(gauss)
+        assert _on_fp4_grid(q.values)
+        assert _np(q.scales).max() <= 448.0
+        assert _np(q.scales).min() >= 0.0
+
+    def test_sr_on_grid_and_never_clips(self, gauss):
+        """§3.1: with the 16/17 guard, SR's pre-rounding argument is
+        within ±6 — check by reconstructing the ratio."""
+        q = R.quantize_sr(gauss, jax.random.PRNGKey(1))
+        assert _on_fp4_grid(q.values)
+        denom = jnp.repeat(q.scales, 16, -1) * q.gscale
+        ratio = _np(gauss / jnp.where(denom == 0, 1, denom))
+        assert np.abs(ratio).max() <= 6.0 + 1e-4
+
+    def test_rtn_clipped_scale_cap(self, gauss):
+        """§3.3: Q_RTN caps FP8 scales at 256 (EDEN head-room)."""
+        q = R.quantize_rtn_clipped(gauss)
+        assert _np(q.scales).max() <= 256.0
+
+    def test_ms_eden_scales_in_fp8(self, gauss):
+        q = R.quantize_ms_eden(gauss, jax.random.PRNGKey(2))
+        assert _np(q.scales).max() <= 448.0
+        assert _on_fp4_grid(q.values)
+
+    def test_square_block_layout(self):
+        w = jax.random.normal(jax.random.PRNGKey(3), (64, 128), jnp.float32)
+        q = R.quantize_rtn(w, square=True)
+        assert q.scales.shape == (4, 8)
+        est = R.dequant(q)
+        assert est.shape == w.shape
+
+    def test_zero_tensor(self):
+        z = jnp.zeros((4, 128), jnp.float32)
+        for q in (
+            R.quantize_rtn(z),
+            R.quantize_sr(z, jax.random.PRNGKey(0)),
+            R.quantize_ms_eden(z, jax.random.PRNGKey(0)),
+        ):
+            est = R.dequant(q)
+            assert np.all(_np(est) == 0.0)
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError):
+            R.quantize_rtn(jnp.zeros((4, 17)))
+        with pytest.raises(ValueError):
+            R.quantize_ms_eden(jnp.zeros((4, 64)), jax.random.PRNGKey(0))
+        with pytest.raises(ValueError):
+            R.quantize_rtn(jnp.zeros((3, 32)), square=True)
+
+    @given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_rtn_error_bound_hypothesis(self, rows, groups128, seed):
+        """|dequant - x| <= gap(6)/2 * scale * gscale elementwise, i.e.
+        relative to the group ceiling the error is at most one FP4 ulp."""
+        x = jax.random.normal(
+            jax.random.PRNGKey(seed), (rows, groups128 * 128), jnp.float32
+        )
+        q = R.quantize_rtn(x)
+        est = R.dequant(q)
+        bound = jnp.repeat(q.scales, 16, -1) * q.gscale * 1.0 + 1e-8
+        assert np.all(np.abs(_np(est - x)) <= _np(bound) * (17 / 16))
+
+
+# ------------------------------------------------------------ unbiasedness
+
+
+def _avg_estimate(quant_fn, x, n):
+    acc = jnp.zeros_like(x)
+    for i in range(n):
+        acc = acc + quant_fn(x, jax.random.PRNGKey(1000 + i))
+    return acc / n
+
+
+class TestUnbiasedness:
+    N = 64
+
+    def test_sr_unbiased(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (64, 256), jnp.float32)
+        avg = _avg_estimate(lambda a, k: R.fake_sr(a, k), x, self.N)
+        base = float(jnp.mean((R.fake_sr(x, jax.random.PRNGKey(0)) - x) ** 2))
+        resid = float(jnp.mean((avg - x) ** 2))
+        # unbiased estimator: residual MSE ~ base/N
+        assert resid < 3.0 * base / self.N
+
+    def test_ms_eden_unbiased(self):
+        x = jax.random.normal(jax.random.PRNGKey(6), (64, 256), jnp.float32)
+        avg = _avg_estimate(lambda a, k: R.fake_ms_eden(a, k), x, self.N)
+        base = float(
+            jnp.mean((R.fake_ms_eden(x, jax.random.PRNGKey(0)) - x) ** 2)
+        )
+        resid = float(jnp.mean((avg - x) ** 2))
+        assert resid < 3.0 * base / self.N
+
+    def test_rtn_biased(self):
+        """RTN is deterministic: averaging cannot reduce its error."""
+        x = jax.random.normal(jax.random.PRNGKey(7), (64, 256), jnp.float32)
+        est = R.fake_rtn(x)
+        base = float(jnp.mean((est - x) ** 2))
+        assert base > 1e-4  # nonzero deterministic error
+
+    def test_sr_four_six_biased(self):
+        """§4.2: picking the lower-MSE branch breaks unbiasedness — the
+        averaged estimate plateaus well above base/N while plain SR keeps
+        decaying at the 1/N rate (the Figure 9 signature)."""
+        n = 256
+        x = jax.random.normal(jax.random.PRNGKey(8), (64, 256), jnp.float32)
+        avg46 = _avg_estimate(
+            lambda a, k: R.fake_sr(a, k, four_six=True), x, n
+        )
+        base46 = float(
+            jnp.mean((R.fake_sr(x, jax.random.PRNGKey(0), four_six=True) - x) ** 2)
+        )
+        ratio46 = float(jnp.mean((avg46 - x) ** 2)) / (base46 / n)
+        assert ratio46 > 2.0, f"4/6+SR looks unbiased: ratio {ratio46}"
+
+
+# ------------------------------------------------------------- rotations
+
+
+class TestRotations:
+    def test_rht_orthogonal(self):
+        x = jax.random.normal(jax.random.PRNGKey(9), (32, 256), jnp.float32)
+        signs = R.rademacher_signs(jax.random.PRNGKey(10))
+        y = R.rht(x, signs)
+        np.testing.assert_allclose(
+            float(jnp.sum(x * x)), float(jnp.sum(y * y)), rtol=1e-5
+        )
+        back = R.rht_inv(y, signs)
+        np.testing.assert_allclose(_np(back), _np(x), atol=1e-5)
+
+    def test_rotation_cancels_in_gemm(self):
+        """(A H)(B H)^T == A B^T — the identity that lets the backward
+        GEMMs skip the inverse rotation (§3.3)."""
+        ka, kb, ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        a = jax.random.normal(ka, (32, 256), jnp.float32)
+        b = jax.random.normal(kb, (48, 256), jnp.float32)
+        signs = R.rademacher_signs(ks)
+        lhs = R.rht(a, signs) @ R.rht(b, signs).T
+        rhs = a @ b.T
+        np.testing.assert_allclose(_np(lhs), _np(rhs), atol=2e-4)
+
+    def test_hadamard_is_symmetric_orthogonal(self):
+        h = _np(R.HADAMARD_128)
+        np.testing.assert_allclose(h, h.T)
+        np.testing.assert_allclose(h @ h, np.eye(128), atol=1e-5)
+
+    def test_eden_factors_near_one(self, ):
+        """Paper (§3.2): correction factors live in ~[0.94, 1.06]."""
+        x = jax.random.normal(jax.random.PRNGKey(12), (128, 512), jnp.float32)
+        signs = R.rademacher_signs(jax.random.PRNGKey(13))
+        xr = R.rht(x, signs)
+        q = R.quantize_rtn_clipped(xr)
+        S = _np(R.eden_factors(xr, R.dequant(q)))
+        assert S.min() > 0.85 and S.max() < 1.2
+        assert 0.99 < np.median(S) < 1.05
+
+
+# --------------------------------------------------------------- 4/6
+
+
+class TestFourOverSix:
+    def test_never_worse_per_group(self, gauss):
+        """Branch selection can only decrease per-group MSE."""
+        q_plain = R.quantize_rtn(gauss)
+        q_46 = R.quantize_rtn(gauss, four_six=True)
+        e_plain = _np((R.dequant(q_plain) - gauss) ** 2).reshape(512, -1, 16).sum(-1)
+        e_46 = _np((R.dequant(q_46) - gauss) ** 2).reshape(512, -1, 16).sum(-1)
+        assert np.all(e_46 <= e_plain + 1e-9)
+
+    def test_some_groups_pick_four(self, gauss):
+        q_plain = R.quantize_rtn(gauss)
+        q_46 = R.quantize_rtn(gauss, four_six=True)
+        assert not np.array_equal(_np(q_plain.scales), _np(q_46.scales))

@@ -1,0 +1,80 @@
+//! Bench: coordinator-side costs — data pipeline throughput and the
+//! end-to-end PJRT train-step latency split (how much of a step is the
+//! coordinator vs the XLA executable). L3 must not be the bottleneck.
+
+use std::path::Path;
+use std::time::Instant;
+
+use quartet2::bench::{black_box, header, Bencher};
+use quartet2::coordinator::{Trainer, TrainerOptions};
+use quartet2::data::{Batcher, PrefetchBatcher};
+use quartet2::runtime::Engine;
+
+fn main() {
+    header("Coordinator overhead");
+    let b = Bencher::default();
+
+    // Data pipeline: raw batch synthesis throughput.
+    let r = b.run("batcher.next (4x128 tokens)", || {
+        let mut batcher = Batcher::train(1, 4, 128);
+        black_box(batcher.next());
+    });
+    r.report();
+    let toks = 4.0 * 128.0;
+    println!("    -> {:.1} Mtok/s", toks / r.median_secs() / 1e6);
+
+    // Steady-state (no construction): one shared batcher.
+    let mut steady = Batcher::train(2, 4, 128);
+    let r = b.run("batcher.next steady-state", || {
+        black_box(steady.next());
+    });
+    r.report();
+    println!("    -> {:.1} Mtok/s", toks / r.median_secs() / 1e6);
+
+    // Prefetched receive latency.
+    let pf = PrefetchBatcher::new(Batcher::train(3, 4, 128), 2);
+    let r = b.run("prefetched recv", || {
+        black_box(pf.next());
+    });
+    r.report();
+
+    // End-to-end train step via PJRT (needs artifacts).
+    let dir = Path::new("artifacts");
+    if Engine::artifact_exists(dir, "train_tiny_bf16") {
+        let engine = Engine::cpu().unwrap();
+        let opts = TrainerOptions {
+            preset: "tiny".into(),
+            scheme: "bf16".into(),
+            steps: 0,
+            seed: 1,
+            eval_every: 0,
+            verbose: false,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&engine, dir, opts).unwrap();
+        let (batch, seq) = t.batch_shape();
+        let mut feeder = Batcher::train(1, batch, seq);
+        // warm
+        let bt = feeder.next();
+        t.step(0, bt.tokens, bt.targets).unwrap();
+        let n = 20;
+        let t0 = Instant::now();
+        for s in 1..=n {
+            let bt = feeder.next();
+            t.step(s, bt.tokens, bt.targets).unwrap();
+        }
+        let per_step = t0.elapsed().as_secs_f64() / n as f64;
+        println!(
+            "train step (tiny/bf16, PJRT e2e): {:.2} ms/step = {:.0} tok/s",
+            per_step * 1e3,
+            (batch * seq) as f64 / per_step
+        );
+        println!(
+            "coordinator share: batch synthesis {:.3} ms = {:.1}% of step",
+            r.median_secs() * 1e3,
+            r.median_secs() / per_step * 100.0
+        );
+    } else {
+        println!("(skipping PJRT step bench: artifacts missing — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench: paper Figure 10 — forward-only linear-layer speedup over BF16.
+
+use quartet2::bench::header;
+
+fn main() {
+    header("Figure 10: forward-only speedups (analytical Blackwell model)");
+    quartet2::experiments::perf::fig10(std::path::Path::new("results")).unwrap();
+}

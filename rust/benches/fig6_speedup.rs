@@ -1,0 +1,9 @@
+//! Bench: paper Figure 6 — linear-layer (fwd+bwd) speedup over BF16 on
+//! the modeled RTX 5090 and B200, per Table 6 model size.
+
+use quartet2::bench::header;
+
+fn main() {
+    header("Figure 6: linear-layer speedups (analytical Blackwell model)");
+    quartet2::experiments::perf::fig6(std::path::Path::new("results")).unwrap();
+}

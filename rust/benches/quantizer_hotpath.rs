@@ -1,0 +1,70 @@
+//! Bench: hot-path microbenchmarks of the native format substrate —
+//! codecs, RHT, EDEN factors — the pieces the §Perf pass optimizes.
+
+use quartet2::bench::{black_box, header, Bencher};
+use quartet2::formats::{eden_factors, quantize_rtn_clipped, rtn_e4m3, rtn_fp4, sr_fp4};
+use quartet2::hadamard;
+use quartet2::util::rng::Rng;
+
+fn main() {
+    header("Quantizer hot paths (native)");
+    let b = Bencher::default();
+    let n = 1 << 20;
+    let x = Rng::seed_from(1).normal_vec(n);
+    let u = Rng::seed_from(2).uniform_vec(n);
+
+    let r = b.run("rtn_fp4 x 1M", || {
+        let mut acc = 0.0f32;
+        for &v in &x {
+            acc += rtn_fp4(black_box(v));
+        }
+        black_box(acc);
+    });
+    r.report();
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_secs() / 1e6);
+
+    let r = b.run("sr_fp4 x 1M", || {
+        let mut acc = 0.0f32;
+        for (&v, &uu) in x.iter().zip(&u) {
+            acc += sr_fp4(black_box(v), uu);
+        }
+        black_box(acc);
+    });
+    r.report();
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_secs() / 1e6);
+
+    let r = b.run("rtn_e4m3 x 1M", || {
+        let mut acc = 0.0f32;
+        for &v in &x {
+            acc += rtn_e4m3(black_box(v * 100.0));
+        }
+        black_box(acc);
+    });
+    r.report();
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_secs() / 1e6);
+
+    let mut rng = Rng::seed_from(3);
+    let signs = hadamard::rademacher_signs(&mut rng);
+    let r = b.run("rht 1M elems (FWHT)", || {
+        let mut y = x.clone();
+        hadamard::rht(black_box(&mut y), &signs).unwrap();
+        black_box(y);
+    });
+    r.report();
+    println!("    -> {:.0} Melem/s (incl. clone)", n as f64 / r.median_secs() / 1e6);
+
+    let rows = n / 1024;
+    let q = quantize_rtn_clipped(&x, rows, 1024, quartet2::formats::RTN_CLIP_SCALE).unwrap();
+    let deq = q.dequant();
+    let r = b.run("eden_factors 1M elems", || {
+        black_box(eden_factors(black_box(&x), black_box(&deq)));
+    });
+    r.report();
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_secs() / 1e6);
+
+    let r = b.run("dequant 1M elems", || {
+        black_box(q.dequant());
+    });
+    r.report();
+    println!("    -> {:.0} Melem/s", n as f64 / r.median_secs() / 1e6);
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate paper Table 1 (MSE over N(0,1) per quantizer) and
+//! time each native quantizer on a 1M-element tensor.
+
+use quartet2::bench::{black_box, header, Bencher};
+use quartet2::formats::{quantize_ms_eden, quantize_ms_eden_posthoc, quantize_rtn, quantize_sr};
+use quartet2::util::rng::Rng;
+
+fn main() {
+    header("Table 1: NVFP4 quantizer MSE over N(0,1) + native throughput");
+    // The table itself:
+    quartet2::experiments::perf::table1(std::path::Path::new("results")).unwrap();
+
+    // Throughput of each quantizer (hot-path deliverable):
+    let (rows, cols) = (1024, 1024);
+    let x = Rng::seed_from(1).normal_vec(rows * cols);
+    let b = Bencher::default();
+    let n = (rows * cols) as f64;
+
+    let mut report = |r: quartet2::bench::BenchResult| {
+        r.report();
+        println!("    -> {:.1} Melem/s", n / r.median_secs() / 1e6);
+    };
+
+    report(b.run("quantize_rtn 1x16 (1M elems)", || {
+        black_box(quantize_rtn(black_box(&x), rows, cols, false, false).unwrap());
+    }));
+    report(b.run("quantize_rtn +4/6 (1M elems)", || {
+        black_box(quantize_rtn(black_box(&x), rows, cols, true, false).unwrap());
+    }));
+    report(b.run("quantize_sr (1M elems)", || {
+        let mut rng = Rng::seed_from(2);
+        black_box(quantize_sr(black_box(&x), rows, cols, &mut rng).unwrap());
+    }));
+    report(b.run("quantize_ms_eden naive (1M elems)", || {
+        let mut rng = Rng::seed_from(3);
+        black_box(quantize_ms_eden(black_box(&x), rows, cols, &mut rng).unwrap());
+    }));
+    report(b.run("quantize_ms_eden posthoc (1M elems)", || {
+        let mut rng = Rng::seed_from(3);
+        black_box(quantize_ms_eden_posthoc(black_box(&x), rows, cols, &mut rng).unwrap());
+    }));
+}

@@ -1,0 +1,9 @@
+//! Bench: paper Table 7 — kernel-time breakdown of 1.1B nanochat
+//! training on the modeled RTX 5090.
+
+use quartet2::bench::header;
+
+fn main() {
+    header("Table 7: kernel-time breakdown (analytical model)");
+    quartet2::experiments::perf::table7().unwrap();
+}

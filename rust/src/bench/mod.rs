@@ -1,0 +1,175 @@
+//! Mini-criterion: a warmup + timed-iterations bench harness.
+//!
+//! Criterion is unavailable offline; this provides the part the benches
+//! need — stable medians with outlier-robust statistics, black_box, and
+//! uniform reporting — under `cargo bench` with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12} median {:>12} mean   ({} iters, min {:?}, max {:?})",
+            self.name,
+            format_duration(self.median),
+            format_duration(self.mean),
+            self.iters,
+            self.min,
+            self.max,
+        );
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+pub fn format_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner: measures `f` until `target_time` elapses (after
+/// `warmup`), reporting per-iteration statistics over batches.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_time: Duration,
+    pub min_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            target_time: Duration::from_secs(2),
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target_time: Duration::from_millis(400),
+            min_iters: 3,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        // Estimate batch size for ~20 samples in target_time
+        let per_iter = start.elapsed() / warm_iters.max(1) as u32;
+        let samples_wanted = 20u64;
+        let batch = ((self.target_time.as_nanos() as u64
+            / samples_wanted.max(1)
+            / per_iter.as_nanos().max(1) as u64)
+            .max(1)) as u32;
+
+        let mut durations = Vec::new();
+        let bench_start = Instant::now();
+        let mut total_iters = 0u64;
+        while (bench_start.elapsed() < self.target_time
+            || durations.len() < self.min_iters as usize)
+            && durations.len() < 500
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            durations.push(t0.elapsed() / batch);
+            total_iters += batch as u64;
+        }
+        durations.sort();
+        let median = durations[durations.len() / 2];
+        let mean = durations.iter().sum::<Duration>() / durations.len() as u32;
+        BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            median,
+            mean,
+            min: *durations.first().unwrap(),
+            max: *durations.last().unwrap(),
+        }
+    }
+}
+
+/// Print a bench suite header (uniform look across bench binaries).
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(r.median.as_nanos() > 0);
+        assert!(r.iters >= 3);
+        black_box(acc);
+    }
+
+    #[test]
+    fn ordering_sane() {
+        // large contrast + means so background load can't flip the order
+        let b = Bencher::quick();
+        let fast = b.run("fast", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        let slow = b.run("slow", || {
+            let mut acc = 0u64;
+            for i in 0..1_000_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(slow.mean > fast.mean, "{:?} vs {:?}", slow.mean, fast.mean);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(format_duration(Duration::from_nanos(500)).contains("ns"));
+        assert!(format_duration(Duration::from_micros(50)).contains("µs"));
+        assert!(format_duration(Duration::from_millis(5)).contains("ms"));
+        assert!(format_duration(Duration::from_secs(2)).contains(" s"));
+    }
+}

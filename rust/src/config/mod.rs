@@ -1,0 +1,279 @@
+//! Experiment configuration: a TOML-subset parser + typed configs.
+//!
+//! Supports the TOML subset experiments actually need: `[section]`
+//! headers, `key = value` with strings, integers, floats, booleans and
+//! flat arrays, plus `#` comments. Every experiment driver is
+//! config-file-first (`configs/*.toml`), with CLI overrides on top.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A TOML-ish scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_str_vec(&self) -> Result<Vec<String>> {
+        match self {
+            Value::Arr(a) => a
+                .iter()
+                .map(|v| v.as_str().map(String::from))
+                .collect(),
+            _ => bail!("expected array of strings"),
+        }
+    }
+}
+
+/// Parsed config: `section.key -> Value` (top-level keys have empty
+/// section, addressed as just `key`).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut out = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: value {:?}", lineno + 1, val.trim()))?;
+            out.values.insert(full_key, value);
+        }
+        Ok(out)
+    }
+
+    pub fn parse_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().ok())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64().ok())
+            .map(|v| v as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.values.insert(key.to_string(), value);
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but fine: no # inside our string values
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let items: Result<Vec<Value>> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(parse_value)
+            .collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Training-run configuration shared by the coordinator and the
+/// experiment drivers.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub preset: String,
+    pub scheme: String,
+    pub steps: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub artifacts_dir: String,
+    pub results_dir: String,
+}
+
+impl RunConfig {
+    pub fn from_config(cfg: &Config) -> RunConfig {
+        RunConfig {
+            preset: cfg.str_or("run.preset", "tiny"),
+            scheme: cfg.str_or("run.scheme", "bf16"),
+            steps: cfg.usize_or("run.steps", 300),
+            batch: cfg.usize_or("run.batch", 4),
+            seq: cfg.usize_or("run.seq", 128),
+            seed: cfg.usize_or("run.seed", 42) as u64,
+            eval_every: cfg.usize_or("run.eval_every", 50),
+            eval_batches: cfg.usize_or("run.eval_batches", 8),
+            artifacts_dir: cfg.str_or("run.artifacts_dir", "artifacts"),
+            results_dir: cfg.str_or("run.results_dir", "results"),
+        }
+    }
+
+    pub fn defaults() -> RunConfig {
+        Self::from_config(&Config::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "fig4"
+
+[run]
+preset = "tiny"       # model preset
+scheme = "quartet2"
+steps = 150
+lr = 1.2e-3
+schemes = ["nvidia", "quartet2"]
+verbose = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("title", ""), "fig4");
+        assert_eq!(c.str_or("run.preset", ""), "tiny");
+        assert_eq!(c.usize_or("run.steps", 0), 150);
+        assert!((c.f64_or("run.lr", 0.0) - 1.2e-3).abs() < 1e-12);
+        assert!(c.bool_or("run.verbose", false));
+        assert_eq!(
+            c.get("run.schemes").unwrap().as_str_vec().unwrap(),
+            vec!["nvidia", "quartet2"]
+        );
+    }
+
+    #[test]
+    fn run_config_from_toml() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let rc = RunConfig::from_config(&c);
+        assert_eq!(rc.scheme, "quartet2");
+        assert_eq!(rc.steps, 150);
+        assert_eq!(rc.batch, 4); // default
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let c = Config::parse("# just a comment\n\nx = 1").unwrap();
+        assert_eq!(c.usize_or("x", 0), 1);
+    }
+}

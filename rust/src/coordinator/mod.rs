@@ -1,0 +1,11 @@
+//! Training coordinator: the L3 runtime loop.
+//!
+//! Owns the PJRT engine, the artifact triple (init / train / eval), the
+//! prefetching data pipeline, and the metric stream. The hot loop is
+//! PJRT-bound: batches are produced on a worker thread, the train-step
+//! artifact consumes and returns the full optimizer state
+//! (params, m, v) each step, and only the scalar loss is inspected.
+
+pub mod trainer;
+
+pub use trainer::{TrainOutcome, Trainer, TrainerOptions};

@@ -1,0 +1,242 @@
+//! The training loop driver.
+//!
+//! Hot-path design (§Perf): the full optimizer state (params, m, v)
+//! lives as `xla::Literal`s and is fed back into the train-step
+//! executable *by reference* each step — no host `Vec<f32>`
+//! round-trips. Only the scalar loss is decoded per step. Batch
+//! synthesis runs on a prefetch thread.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{Batcher, PrefetchBatcher};
+use crate::metrics::{CurvePoint, LossCurve};
+use crate::runtime::executor::{Engine, HostTensor, LoadedArtifact};
+
+/// Options for one training run.
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    pub preset: String,
+    pub scheme: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// log training loss every N steps
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            preset: "tiny".into(),
+            scheme: "bf16".into(),
+            steps: 300,
+            seed: 42,
+            eval_every: 50,
+            eval_batches: 8,
+            log_every: 10,
+            verbose: true,
+        }
+    }
+}
+
+/// Result of a completed run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub curve: LossCurve,
+    pub final_val_loss: f64,
+    pub tokens_per_sec: f64,
+}
+
+/// Orchestrates init -> (train step)* -> eval over PJRT artifacts.
+pub struct Trainer {
+    train_art: LoadedArtifact,
+    eval_art: LoadedArtifact,
+    /// flat state literals: params..., m..., v...  (3 * n_params)
+    state: Vec<xla::Literal>,
+    n_params: usize,
+    batch: usize,
+    seq: usize,
+    opts: TrainerOptions,
+}
+
+impl Trainer {
+    /// Load the artifact bundle for (preset, scheme) and initialize
+    /// parameters via the init artifact.
+    pub fn new(engine: &Engine, artifacts_dir: &Path, opts: TrainerOptions) -> Result<Trainer> {
+        let init_name = format!("init_{}", opts.preset);
+        let train_name = format!("train_{}_{}", opts.preset, opts.scheme);
+        let eval_name = format!("eval_{}_{}", opts.preset, opts.scheme);
+
+        let init_art = engine
+            .load(artifacts_dir, &init_name)
+            .with_context(|| format!("loading {init_name}"))?;
+        let train_art = engine
+            .load(artifacts_dir, &train_name)
+            .with_context(|| format!("loading {train_name}"))?;
+        let eval_art = engine
+            .load(artifacts_dir, &eval_name)
+            .with_context(|| format!("loading {eval_name}"))?;
+
+        let n_params = train_art.meta.n_params();
+        if n_params == 0 {
+            bail!("train artifact {train_name} declares no parameters");
+        }
+        let batch = train_art.meta.batch;
+        let seq = train_art.meta.seq_len;
+        if batch == 0 || seq == 0 {
+            bail!("train artifact {train_name} missing batch/seq metadata");
+        }
+
+        // Initialize parameters; zero literals for the Adam moments.
+        let seed_lit =
+            init_art.literal_for(0, &HostTensor::U32(vec![opts.seed as u32]))?;
+        let mut state = init_art.run_raw(&[&seed_lit])?;
+        if state.len() != n_params {
+            bail!(
+                "init produced {} leaves, train expects {n_params}",
+                state.len()
+            );
+        }
+        for copy in 0..2 {
+            let _ = copy;
+            for spec in &train_art.meta.inputs[..n_params] {
+                let dims: Vec<usize> = spec.shape.clone();
+                state.push(xla::Literal::create_from_shape(
+                    xla::PrimitiveType::F32,
+                    &dims,
+                ));
+            }
+        }
+
+        Ok(Trainer {
+            train_art,
+            eval_art,
+            state,
+            n_params,
+            batch,
+            seq,
+            opts,
+        })
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq)
+    }
+
+    /// One optimizer step; returns the training loss. State literals are
+    /// passed by reference and replaced by the step outputs.
+    pub fn step(&mut self, step_idx: usize, tokens: Vec<i32>, targets: Vec<i32>) -> Result<f64> {
+        let n3 = 3 * self.n_params;
+        let step_lit = self
+            .train_art
+            .literal_for(n3, &HostTensor::I32(vec![step_idx as i32]))?;
+        let tok_lit = self
+            .train_art
+            .literal_for(n3 + 1, &HostTensor::I32(tokens))?;
+        let tgt_lit = self
+            .train_art
+            .literal_for(n3 + 2, &HostTensor::I32(targets))?;
+
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(n3 + 3);
+        inputs.extend(self.state.iter());
+        inputs.push(&step_lit);
+        inputs.push(&tok_lit);
+        inputs.push(&tgt_lit);
+
+        let mut outputs = self.train_art.run_raw(&inputs)?;
+        let loss_lit = outputs.pop().expect("train artifact returns loss last");
+        let loss = loss_lit
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("reading loss: {e}"))? as f64;
+        self.state = outputs; // params', m', v'
+        Ok(loss)
+    }
+
+    /// Validation loss averaged over `n_batches` deterministic batches.
+    pub fn evaluate(&self, val: &mut Batcher, n_batches: usize) -> Result<f64> {
+        val.reset();
+        let np = self.n_params;
+        let mut total = 0.0;
+        for _ in 0..n_batches {
+            let b = val.next();
+            let tok_lit = self
+                .eval_art
+                .literal_for(np, &HostTensor::I32(b.tokens))?;
+            let tgt_lit = self
+                .eval_art
+                .literal_for(np + 1, &HostTensor::I32(b.targets))?;
+            let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(np + 2);
+            inputs.extend(self.state[..np].iter());
+            inputs.push(&tok_lit);
+            inputs.push(&tgt_lit);
+            let out = self.eval_art.run_raw(&inputs)?;
+            total += out[0]
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("reading eval loss: {e}"))? as f64;
+        }
+        Ok(total / n_batches as f64)
+    }
+
+    /// Full run: steps with periodic eval, returning the loss curve.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        let opts = self.opts.clone();
+        let run_name = format!(
+            "{}_{}_s{}_seed{}",
+            opts.preset, opts.scheme, opts.steps, opts.seed
+        );
+        let mut curve = LossCurve::new(&run_name, &opts.scheme, &opts.preset);
+
+        let train_feed = PrefetchBatcher::new(
+            Batcher::train(opts.seed, self.batch, self.seq),
+            2,
+        );
+        let mut val_feed = Batcher::val(opts.seed, self.batch, self.seq);
+
+        let t0 = Instant::now();
+        let tokens_per_step = self.batch * self.seq;
+        let mut last_eval = f64::NAN;
+        for s in 0..opts.steps {
+            let b = train_feed.next();
+            let loss = self.step(s, b.tokens, b.targets)?;
+            let is_last = s + 1 == opts.steps;
+            let do_eval = opts.eval_every > 0
+                && ((s + 1) % opts.eval_every == 0 || is_last);
+            let val_loss = if do_eval {
+                last_eval = self.evaluate(&mut val_feed, opts.eval_batches)?;
+                Some(last_eval)
+            } else {
+                None
+            };
+            if do_eval || s % opts.log_every == 0 || is_last {
+                curve.push(CurvePoint {
+                    step: s,
+                    tokens: (s + 1) * tokens_per_step,
+                    train_loss: loss,
+                    val_loss,
+                    wall_secs: t0.elapsed().as_secs_f64(),
+                });
+                if opts.verbose {
+                    match val_loss {
+                        Some(v) => println!(
+                            "step {s:>5}  train {loss:.4}  val {v:.4}  ({:.1}s)",
+                            t0.elapsed().as_secs_f64()
+                        ),
+                        None => println!("step {s:>5}  train {loss:.4}"),
+                    }
+                }
+            }
+        }
+
+        let secs = t0.elapsed().as_secs_f64();
+        Ok(TrainOutcome {
+            tokens_per_sec: (opts.steps * tokens_per_step) as f64 / secs,
+            final_val_loss: last_eval,
+            curve,
+        })
+    }
+}

@@ -1,0 +1,16 @@
+//! Data pipeline: synthetic corpus, byte tokenizer, batch prefetcher.
+//!
+//! Offline substitution for the paper's C4 / FineWeb-Edu corpora (see
+//! DESIGN.md §Hardware adaptation): a seeded Markov "language" whose
+//! n-gram statistics produce a smoothly decreasing, non-trivial LM loss.
+//! QAT *gap* measurements (quantized-vs-BF16 loss deltas at equal
+//! tokens) depend on activation/gradient statistics, not on the corpus
+//! being English.
+
+pub mod batcher;
+pub mod synthetic;
+pub mod tokenizer;
+
+pub use batcher::{Batch, Batcher, PrefetchBatcher};
+pub use synthetic::SyntheticCorpus;
+pub use tokenizer::ByteTokenizer;

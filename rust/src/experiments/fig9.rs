@@ -1,0 +1,121 @@
+//! Figure 9 — unbiasedness verification via CLT concentration.
+//!
+//! For each scheme, repeat the quantized backward pass B times with
+//! fresh seeds and track ||avg - G||^2 / ||G||^2 against the exact
+//! (BF16) gradient G of layer-0 wq. Unbiased estimators decay ~ 1/B;
+//! biased ones (4/6 on the backward) plateau at the squared bias.
+
+use anyhow::{Context, Result};
+
+use super::Env;
+use crate::metrics::rel_quadratic_error;
+use crate::runtime::executor::HostTensor;
+use crate::util::json::{self, Json};
+
+/// Schemes traced in the paper's Figure 9: backward-only quantization
+/// variants, so the estimand is exactly the BF16 gradient (the paper
+/// measures "quantized backward passes ... w.r.t. the reference
+/// unquantized gradient"; a quantized *forward* would shift the
+/// expectation and add a forward-capacity plateau on every curve —
+/// observed and documented in EXPERIMENTS.md).
+/// bwd_e_sr = TetraJet-v2/NVIDIA-style SR backward; bwd_e_mseden =
+/// Quartet II backward; bwd_e_sr46 = the biased 4/6 backward.
+const SCHEMES: [&str; 3] = ["bwd_e_sr", "bwd_e_mseden", "bwd_e_sr46"];
+
+pub fn run(env: &Env) -> Result<()> {
+    run_with(env, 128)
+}
+
+pub fn run_with(env: &Env, b_max: usize) -> Result<()> {
+    let dir = env.artifacts_dir;
+    let init = env
+        .engine
+        .load(dir, &format!("init_{}", env.preset))
+        .context("fig9 needs the init artifact")?;
+    let params = init.run(&[HostTensor::U32(vec![env.seed as u32])])?;
+
+    // Fixed evaluation batch (deterministic).
+    let ref_art = env
+        .engine
+        .load(dir, &format!("fig9_{}_bf16", env.preset))
+        .context("fig9 needs fig9_<preset>_bf16 (make experiment-artifacts)")?;
+    let (batch, seq) = (ref_art.meta.batch, ref_art.meta.seq_len);
+    let mut batcher = crate::data::Batcher::val(env.seed, batch, seq);
+    let data = batcher.next();
+
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::I32(data.tokens.clone()));
+    inputs.push(HostTensor::I32(data.targets.clone()));
+    inputs.push(HostTensor::U32(vec![0]));
+    let reference = ref_art.run(&inputs)?[0].as_f32()?.to_vec();
+
+    let checkpoints: Vec<usize> = (0..)
+        .map(|i| 1usize << i)
+        .take_while(|&b| b <= b_max)
+        .collect();
+
+    println!("\n=== Figure 9: gradient-average concentration (B up to {b_max}) ===");
+    println!("unbiased schemes decay ~1/B; 4/6-backward plateaus\n");
+    let mut all_series = Vec::new();
+    for scheme in SCHEMES {
+        let name = format!("fig9_{}_{}", env.preset, scheme);
+        let art = match env.engine.load(dir, &name) {
+            Ok(a) => a,
+            Err(e) => {
+                println!("[skip] {scheme}: {e}");
+                continue;
+            }
+        };
+        let mut acc = vec![0.0f64; reference.len()];
+        let mut series = Vec::new();
+        for b in 1..=b_max {
+            let mut inputs = params.clone();
+            inputs.push(HostTensor::I32(data.tokens.clone()));
+            inputs.push(HostTensor::I32(data.targets.clone()));
+            inputs.push(HostTensor::U32(vec![(env.seed as u32)
+                .wrapping_mul(2654435761)
+                .wrapping_add(b as u32)]));
+            let grad = art.run(&inputs)?;
+            for (a, g) in acc.iter_mut().zip(grad[0].as_f32()?) {
+                *a += *g as f64;
+            }
+            if checkpoints.contains(&b) {
+                let avg: Vec<f32> =
+                    acc.iter().map(|a| (*a / b as f64) as f32).collect();
+                series.push((b, rel_quadratic_error(&avg, &reference)));
+            }
+        }
+        print!("{scheme:<14}");
+        for (b, e) in &series {
+            print!("  B={b}:{e:.2e}");
+        }
+        println!();
+        all_series.push(json::obj(vec![
+            ("scheme", json::s(scheme)),
+            (
+                "points",
+                Json::Arr(
+                    series
+                        .iter()
+                        .map(|(b, e)| {
+                            json::obj(vec![
+                                ("B", json::n(*b as f64)),
+                                ("rel_err", json::n(*e)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    std::fs::create_dir_all(env.results_dir)?;
+    std::fs::write(
+        env.results_dir.join("fig9.json"),
+        json::obj(vec![
+            ("experiment", json::s("fig9")),
+            ("series", Json::Arr(all_series)),
+        ])
+        .to_string(),
+    )?;
+    Ok(())
+}

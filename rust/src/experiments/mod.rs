@@ -1,0 +1,56 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md index).
+//!
+//! Training experiments (Fig 1/2/4/5, Table 5) drive PJRT artifacts
+//! through the [`crate::coordinator`]; numeric experiments (Table 1/2,
+//! Fig 6/10, Table 7) run natively on the Rust mirrors. Every driver
+//! prints the paper-shaped table and persists JSON under `results/`.
+
+pub mod fig9;
+pub mod perf;
+pub mod training;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+
+/// Common experiment environment.
+pub struct Env<'a> {
+    pub engine: &'a Engine,
+    pub artifacts_dir: &'a Path,
+    pub results_dir: &'a Path,
+    pub preset: String,
+    pub steps: usize,
+    pub seed: u64,
+    /// reuse cached run results when present
+    pub resume: bool,
+}
+
+/// Dispatch an experiment by id.
+pub fn run(env: &Env, id: &str) -> Result<()> {
+    match id {
+        "fig1" => training::fig1(env),
+        "fig2" => training::fig2(env),
+        "fig4" => training::fig4(env),
+        "fig5" => training::fig5(env),
+        "table5" => training::table5(env),
+        "fig9" => fig9::run(env),
+        "table1" => perf::table1(env.results_dir),
+        "table2" => perf::table2(),
+        "fig6" => perf::fig6(env.results_dir),
+        "fig10" => perf::fig10(env.results_dir),
+        "table7" => perf::table7(),
+        "all-numeric" => {
+            perf::table1(env.results_dir)?;
+            perf::table2()?;
+            perf::fig6(env.results_dir)?;
+            perf::fig10(env.results_dir)?;
+            perf::table7()
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; available: fig1 fig2 fig4 fig5 \
+             fig9 table1 table2 table5 table7 fig6 fig10 all-numeric"
+        ),
+    }
+}

@@ -1,0 +1,167 @@
+//! Numeric experiments running natively on the Rust mirrors:
+//! Table 1 (MSE), Table 2 (kernel costs), Fig 6 / Fig 10 (speedups),
+//! Table 7 (time breakdown).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::formats::{
+    quantize_ms_eden, quantize_rtn, quantize_sr,
+};
+use crate::perfmodel::{breakdown, kernels, linear, B200, RTX5090};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Table 1: quadratic error over N(0,1) per NVFP4 rounding scheme.
+pub fn table1(results_dir: &Path) -> Result<()> {
+    let (rows, cols) = (1024, 1024);
+    let mut rng = Rng::seed_from(0x7AB1E);
+    let x = rng.normal_vec(rows * cols);
+
+    let mut table: Vec<(String, String, f64, bool)> = Vec::new();
+    let mse_of = |q: &crate::formats::Quantized, x: &[f32]| q.mse(x) * 1e3;
+
+    let q = quantize_rtn(&x, rows, cols, false, false)?;
+    table.push(("RTN".into(), "1x16".into(), mse_of(&q, &x), false));
+    let q = quantize_rtn(&x, rows, cols, true, false)?;
+    table.push(("+4/6".into(), "1x16".into(), mse_of(&q, &x), false));
+    let q = quantize_rtn(&x, rows, cols, false, true)?;
+    table.push(("RTN".into(), "16x16".into(), mse_of(&q, &x), false));
+    let q = quantize_rtn(&x, rows, cols, true, true)?;
+    table.push(("+4/6".into(), "16x16".into(), mse_of(&q, &x), false));
+    let mut r2 = Rng::seed_from(7);
+    let q = quantize_sr(&x, rows, cols, &mut r2)?;
+    table.push(("SR".into(), "1x16".into(), mse_of(&q, &x), true));
+    let mut r3 = Rng::seed_from(8);
+    let rq = quantize_ms_eden(&x, rows, cols, &mut r3)?;
+    let est = rq.dequant_unrotated();
+    let mse: f64 = est
+        .iter()
+        .zip(&x)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / x.len() as f64;
+    table.push(("MS-EDEN".into(), "1x16".into(), mse * 1e3, true));
+
+    println!("\n=== Table 1: MSE x 1e-3 over N(0,1) ===");
+    println!("(paper: RTN 9.0 | +4/6 7.6 | RTN-sq 12.4 | +4/6-sq 12.4 | SR 23.5 | MS-EDEN 9.4)");
+    println!("{:<10} {:<8} {:>12} {:>10}", "Method", "Group", "MSE x 1e-3", "Unbiased");
+    for (m, g, v, u) in &table {
+        println!(
+            "{:<10} {:<8} {:>12.2} {:>10}",
+            m,
+            g,
+            v,
+            if *u { "yes" } else { "no" }
+        );
+    }
+    std::fs::create_dir_all(results_dir)?;
+    std::fs::write(
+        results_dir.join("table1.json"),
+        Json::Arr(
+            table
+                .iter()
+                .map(|(m, g, v, u)| {
+                    json::obj(vec![
+                        ("method", json::s(m)),
+                        ("group", json::s(g)),
+                        ("mse_e3", json::n(*v)),
+                        ("unbiased", Json::Bool(*u)),
+                    ])
+                })
+                .collect(),
+        )
+        .to_string(),
+    )?;
+    Ok(())
+}
+
+/// Table 2: naïve vs post hoc MS-EDEN re-quantization kernel costs.
+pub fn table2() -> Result<()> {
+    println!("\n=== Table 2: MS-EDEN re-quantization kernel costs ===");
+    println!("(paper: naive 4.5+4.5 / 0+4.5 / 2 mma; post hoc 4.5+1 / 5+0.5 / 1 mma)");
+    println!("{:<24} {:>12} {:>12}", "", "Naive", "Post hoc");
+    for (name, naive, post, _) in kernels::table2_rows() {
+        println!("{name:<24} {naive:>12} {post:>12}");
+    }
+    let n = kernels::ms_eden_requant_naive();
+    let p = kernels::ms_eden_requant_posthoc();
+    println!(
+        "bandwidth saving: {:.0}%  (paper: ~20%)",
+        (1.0 - p.total_bits() / n.total_bits()) * 100.0
+    );
+    Ok(())
+}
+
+fn speedup_table(fwd_only: bool, results_dir: &Path, name: &str) -> Result<()> {
+    let title = if fwd_only {
+        "Figure 10: forward-only linear-layer speedup over BF16"
+    } else {
+        "Figure 6: linear-layer (fwd+bwd) speedup over BF16"
+    };
+    println!("\n=== {title} ===");
+    let mut rows = Vec::new();
+    for gpu in [&RTX5090, &B200] {
+        println!(
+            "{:<10} {:>8} {:>10} {:>12} {:>12}",
+            gpu.name, "model", "actual", "matmul-only", "quant-frac"
+        );
+        for p in linear::speedup_series(gpu, fwd_only) {
+            println!(
+                "{:<10} {:>8} {:>9.2}x {:>11.2}x {:>11.1}%",
+                "", p.model, p.actual, p.matmul_only, p.quant_frac * 100.0
+            );
+            rows.push(json::obj(vec![
+                ("gpu", json::s(p.gpu)),
+                ("model", json::s(p.model)),
+                ("actual", json::n(p.actual)),
+                ("matmul_only", json::n(p.matmul_only)),
+                ("quant_frac", json::n(p.quant_frac)),
+            ]));
+        }
+    }
+    std::fs::create_dir_all(results_dir)?;
+    std::fs::write(
+        results_dir.join(format!("{name}.json")),
+        Json::Arr(rows).to_string(),
+    )?;
+    Ok(())
+}
+
+/// Figure 6: fwd+bwd linear-layer speedups (both GPUs, Table 6 sizes).
+pub fn fig6(results_dir: &Path) -> Result<()> {
+    speedup_table(false, results_dir, "fig6")
+}
+
+/// Figure 10: forward-only speedups.
+pub fn fig10(results_dir: &Path) -> Result<()> {
+    speedup_table(true, results_dir, "fig10")
+}
+
+/// Table 7: kernel-time breakdown for the 1.1B nanochat model.
+pub fn table7() -> Result<()> {
+    let rows = breakdown::breakdown(&breakdown::NANOCHAT_1B, &RTX5090);
+    let fwd_total: f64 = rows.iter().map(|r| r.fwd_us).sum();
+    let bwd_total: f64 = rows.iter().map(|r| r.bwd_us).sum();
+    println!("\n=== Table 7: kernel-time breakdown, 1.1B nanochat on RTX 5090 ===");
+    println!(
+        "{:<14} {:>12} {:>9} | {:>12} {:>9}",
+        "Op", "fwd [us]", "fwd %", "bwd [us]", "bwd %"
+    );
+    for r in &rows {
+        println!(
+            "{:<14} {:>12.0} {:>8.1}% | {:>12.0} {:>8.1}%",
+            r.op,
+            r.fwd_us,
+            r.fwd_us / fwd_total * 100.0,
+            r.bwd_us,
+            r.bwd_us / bwd_total * 100.0
+        );
+    }
+    println!(
+        "non-FP4 fraction of total: {:.0}%  (paper: ~60%)",
+        breakdown::non_fp4_fraction(&rows) * 100.0
+    );
+    Ok(())
+}

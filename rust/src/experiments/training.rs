@@ -1,0 +1,213 @@
+//! Training-based experiments: Fig 1 / Fig 2 / Fig 4 / Fig 5 / Table 5.
+//!
+//! Each experiment trains the preset model under a list of QAT schemes
+//! at identical hyper-parameters/seed and reports final-validation-loss
+//! gaps versus the BF16 baseline — the paper's y-axes. Artifacts must
+//! exist for every scheme (`make experiment-artifacts PRESET=tiny`).
+
+use anyhow::{Context, Result};
+
+use super::Env;
+use crate::coordinator::{Trainer, TrainerOptions};
+use crate::metrics::{bpb, LossCurve};
+use crate::util::json::{self, Json};
+
+/// Train (or load a cached result for) one scheme.
+pub fn run_scheme(env: &Env, scheme: &str) -> Result<LossCurve> {
+    let run_name = format!(
+        "{}_{}_s{}_seed{}",
+        env.preset, scheme, env.steps, env.seed
+    );
+    let cached = env.results_dir.join(format!("{run_name}.json"));
+    if env.resume && cached.exists() {
+        let curve = LossCurve::load(&cached)?;
+        println!(
+            "[cached] {run_name}: val {:.4}",
+            curve.final_val_loss().unwrap_or(f64::NAN)
+        );
+        return Ok(curve);
+    }
+    println!("== training {run_name} ==");
+    let opts = TrainerOptions {
+        preset: env.preset.clone(),
+        scheme: scheme.to_string(),
+        steps: env.steps,
+        seed: env.seed,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(env.engine, env.artifacts_dir, opts)
+        .with_context(|| format!("scheme {scheme}"))?;
+    let outcome = trainer.run()?;
+    println!(
+        "   {} final val {:.4} @ {:.0} tok/s",
+        run_name, outcome.final_val_loss, outcome.tokens_per_sec
+    );
+    outcome.curve.save(env.results_dir)?;
+    Ok(outcome.curve)
+}
+
+fn gap_table(env: &Env, title: &str, schemes: &[&str], out_name: &str) -> Result<()> {
+    let base = run_scheme(env, "bf16")?;
+    let base_loss = base
+        .final_val_loss()
+        .context("bf16 baseline produced no eval point")?;
+    println!("\n=== {title} (preset {}, {} steps) ===", env.preset, env.steps);
+    println!("{:<16} {:>10} {:>12}", "scheme", "val loss", "gap vs BF16");
+    println!("{:<16} {:>10.4} {:>12}", "bf16", base_loss, "--");
+    let mut rows = vec![("bf16".to_string(), base_loss, 0.0)];
+    for s in schemes {
+        let curve = run_scheme(env, s)?;
+        let loss = curve.final_val_loss().unwrap_or(f64::NAN);
+        let gap = loss - base_loss;
+        println!("{:<16} {:>10.4} {:>+12.4}", s, loss, gap);
+        rows.push((s.to_string(), loss, gap));
+    }
+    let payload = Json::Arr(
+        rows.iter()
+            .map(|(s, l, g)| {
+                json::obj(vec![
+                    ("scheme", json::s(s)),
+                    ("val_loss", json::n(*l)),
+                    ("gap", json::n(*g)),
+                ])
+            })
+            .collect(),
+    );
+    std::fs::create_dir_all(env.results_dir)?;
+    std::fs::write(
+        env.results_dir.join(format!("{out_name}.json")),
+        json::obj(vec![
+            ("experiment", json::s(out_name)),
+            ("preset", json::s(&env.preset)),
+            ("steps", json::n(env.steps as f64)),
+            ("rows", payload),
+        ])
+        .to_string(),
+    )?;
+    Ok(())
+}
+
+/// Fig. 1 — selective backward-pass quantization (a)–(e), SR vs MS-EDEN.
+pub fn fig1(env: &Env) -> Result<()> {
+    gap_table(
+        env,
+        "Figure 1: selective NVFP4 backward-pass quantization",
+        &[
+            "bwd_a_sr",
+            "bwd_b_sr",
+            "bwd_c_sr",
+            "bwd_d_sr",
+            "bwd_e_sr",
+            "bwd_a_mseden",
+            "bwd_c_mseden",
+            "bwd_e_mseden",
+        ],
+        "fig1",
+    )
+}
+
+/// Fig. 2 — forward-pass-only quantization: 1x16 vs 16x16, ±4/6.
+pub fn fig2(env: &Env) -> Result<()> {
+    gap_table(
+        env,
+        "Figure 2: NVFP4 forward-pass quantization",
+        &["fwd_1x16", "fwd_1x16_46", "fwd_16x16", "fwd_16x16_46"],
+        "fig2",
+    )
+}
+
+/// Fig. 4 — fully-quantized training: Quartet II vs prior recipes.
+pub fn fig4(env: &Env) -> Result<()> {
+    gap_table(
+        env,
+        "Figure 4: fully-NVFP4 training",
+        &["nvidia", "four_six", "tetrajet2", "quartet2"],
+        "fig4",
+    )
+}
+
+/// Fig. 5 — validation BPB-increase curves over training.
+pub fn fig5(env: &Env) -> Result<()> {
+    let schemes = ["nvidia", "four_six", "tetrajet2", "quartet2"];
+    let base = run_scheme(env, "bf16")?;
+    println!("\n=== Figure 5: relative BPB increase over BF16 ===");
+    let base_pts: Vec<(usize, f64)> = base
+        .points
+        .iter()
+        .filter_map(|p| p.val_loss.map(|v| (p.step, v)))
+        .collect();
+    let mut series = Vec::new();
+    for s in schemes {
+        let curve = run_scheme(env, s)?;
+        let pts: Vec<Json> = curve
+            .points
+            .iter()
+            .filter_map(|p| p.val_loss.map(|v| (p.step, v)))
+            .filter_map(|(step, v)| {
+                let b = base_pts.iter().find(|(bs, _)| *bs == step)?.1;
+                let rel = (bpb(v, 1.0) - bpb(b, 1.0)) / bpb(b, 1.0) * 100.0;
+                Some(json::obj(vec![
+                    ("step", json::n(step as f64)),
+                    ("bpb_increase_pct", json::n(rel)),
+                ]))
+            })
+            .collect();
+        if let Some(last) = pts.last() {
+            println!(
+                "{s:<12} final BPB increase: {:.2}%",
+                last.get("bpb_increase_pct")?.as_f64()?
+            );
+        }
+        series.push(json::obj(vec![
+            ("scheme", json::s(s)),
+            ("points", Json::Arr(pts)),
+        ]));
+    }
+    std::fs::create_dir_all(env.results_dir)?;
+    std::fs::write(
+        env.results_dir.join("fig5.json"),
+        json::obj(vec![
+            ("experiment", json::s("fig5")),
+            ("series", Json::Arr(series)),
+        ])
+        .to_string(),
+    )?;
+    Ok(())
+}
+
+/// Table 5 — final validation BPB per scheme + increase over BF16.
+pub fn table5(env: &Env) -> Result<()> {
+    let base = run_scheme(env, "bf16")?;
+    let base_bpb = bpb(base.final_val_loss().context("no baseline eval")?, 1.0);
+    println!("\n=== Table 5 analogue: final validation BPB ===");
+    println!(
+        "{:<12} {:>10} {:>18}",
+        "method", "val BPB", "increase over BF16"
+    );
+    println!("{:<12} {:>10.4} {:>18}", "bf16", base_bpb, "--");
+    let mut rows = vec![("bf16".to_string(), base_bpb, 0.0)];
+    for s in ["nvidia", "four_six", "tetrajet2", "quartet2"] {
+        let curve = run_scheme(env, s)?;
+        let b = bpb(curve.final_val_loss().unwrap_or(f64::NAN), 1.0);
+        let inc = (b - base_bpb) / base_bpb * 100.0;
+        println!("{:<12} {:>10.4} {:>17.2}%", s, b, inc);
+        rows.push((s.to_string(), b, inc));
+    }
+    std::fs::create_dir_all(env.results_dir)?;
+    std::fs::write(
+        env.results_dir.join("table5.json"),
+        Json::Arr(
+            rows.iter()
+                .map(|(s, b, i)| {
+                    json::obj(vec![
+                        ("method", json::s(s)),
+                        ("val_bpb", json::n(*b)),
+                        ("increase_pct", json::n(*i)),
+                    ])
+                })
+                .collect(),
+        )
+        .to_string(),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! FP4 E2M1 — the NVFP4 element format.
+//!
+//! Grid ±{0, 0.5, 1, 1.5, 2, 3, 4, 6}: piecewise uniform with steps
+//! 0.5 / 1 / 2 on [0,2] / [2,4] / [4,6]. The rounding functions mirror
+//! `python/compile/kernels/formats.py` operation-for-operation (f32
+//! arithmetic, ties-to-even), so the two implementations agree
+//! bit-for-bit (rust/tests/parity.rs).
+
+/// The positive half of the E2M1 grid.
+pub const FP4_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Largest magnitude representable in E2M1.
+pub const FP4_MAX: f32 = 6.0;
+
+/// Round-to-nearest-even onto the E2M1 grid, saturating at ±6.
+///
+/// Ties land on the grid point with an even mantissa bit
+/// (0.25 -> 0, 0.75 -> 1, 2.5 -> 2, 3.5 -> 4, 5.0 -> 4).
+#[inline]
+pub fn rtn_fp4(v: f32) -> f32 {
+    let a = v.abs().min(FP4_MAX);
+    let q = if a <= 2.0 {
+        (a * 2.0).round_ties_even() * 0.5
+    } else if a <= 4.0 {
+        a.round_ties_even()
+    } else {
+        (a * 0.5).round_ties_even() * 2.0
+    };
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Stochastic rounding onto the E2M1 grid; unbiased within ±6 given
+/// `u ~ U[0,1)`.
+#[inline]
+pub fn sr_fp4(v: f32, u: f32) -> f32 {
+    let a = v.abs().min(FP4_MAX);
+    let (lo, gap) = if a < 2.0 {
+        ((a * 2.0).floor() * 0.5, 0.5)
+    } else if a < 4.0 {
+        (a.floor(), 1.0)
+    } else {
+        ((a * 0.5).floor() * 2.0, 2.0)
+    };
+    let p_up = ((a - lo) / gap).min(1.0);
+    let q = (if u < p_up { lo + gap } else { lo }).min(FP4_MAX);
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Map an on-grid E2M1 value to its 4-bit code: `sign << 3 | index`.
+#[inline]
+pub fn fp4_encode(v: f32) -> u8 {
+    let a = v.abs();
+    let idx = FP4_GRID
+        .iter()
+        .position(|&g| g == a)
+        .expect("fp4_encode: value not on the E2M1 grid") as u8;
+    (if v.is_sign_negative() { 8 } else { 0 }) | idx
+}
+
+/// Inverse of [`fp4_encode`].
+#[inline]
+pub fn fp4_decode(code: u8) -> f32 {
+    let v = FP4_GRID[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Pack FP4 codes two-per-byte (low nibble first) — the real NVFP4
+/// storage container (2x compression over FP8, 4x over BF16).
+pub fn pack_codes(codes: &[u8]) -> Vec<u8> {
+    codes
+        .chunks(2)
+        .map(|c| (c[0] & 0xF) | (c.get(1).copied().unwrap_or(0) << 4))
+        .collect()
+}
+
+/// Inverse of [`pack_codes`].
+pub fn unpack_codes(packed: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for b in packed {
+        out.push(b & 0xF);
+        if out.len() < n {
+            out.push(b >> 4);
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_fixed_points() {
+        for &g in &FP4_GRID {
+            assert_eq!(rtn_fp4(g), g);
+            assert_eq!(rtn_fp4(-g), -g);
+            assert_eq!(sr_fp4(g, 0.0), g);
+        }
+    }
+
+    #[test]
+    fn ties_to_even() {
+        let cases = [
+            (0.25, 0.0),
+            (0.75, 1.0),
+            (1.25, 1.0),
+            (1.75, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (5.0, 4.0),
+        ];
+        for (x, want) in cases {
+            assert_eq!(rtn_fp4(x), want, "rtn_fp4({x})");
+            assert_eq!(rtn_fp4(-x), -want);
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(rtn_fp4(100.0), 6.0);
+        assert_eq!(rtn_fp4(-9.5), -6.0);
+        assert_eq!(sr_fp4(7.0, 0.999), 6.0);
+    }
+
+    #[test]
+    fn sr_brackets() {
+        // rounds up with probability p = (a - lo)/gap: u < p -> hi,
+        // so u=0 takes the UPPER neighbour (p > 0) and u~1 the lower.
+        assert_eq!(sr_fp4(2.4, 0.0), 3.0);
+        assert_eq!(sr_fp4(2.4, 0.9999), 2.0);
+        assert_eq!(sr_fp4(4.5, 0.0), 6.0);
+        assert_eq!(sr_fp4(4.5, 0.9999), 4.0);
+        // exact grid values never move, regardless of u
+        assert_eq!(sr_fp4(3.0, 0.0), 3.0);
+    }
+
+    #[test]
+    fn sr_unbiased_monte_carlo() {
+        let mut rng = crate::util::rng::Rng::seed_from(11);
+        for target in [0.3f32, 1.2, 2.7, 4.4, 5.5] {
+            let n = 100_000;
+            let mean: f64 = (0..n)
+                .map(|_| sr_fp4(target, rng.uniform_f32()) as f64)
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean - target as f64).abs() < 0.02,
+                "E[SR({target})] = {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn codes_roundtrip() {
+        for code in 0u8..16 {
+            let v = fp4_decode(code);
+            // -0 normalizes to +0 on decode/encode comparison by value
+            assert_eq!(fp4_decode(fp4_encode(v)), v);
+        }
+    }
+
+    #[test]
+    fn packing_roundtrip() {
+        let codes: Vec<u8> = (0..33).map(|i| (i % 16) as u8).collect();
+        let packed = pack_codes(&codes);
+        assert_eq!(packed.len(), 17);
+        assert_eq!(unpack_codes(&packed, 33), codes);
+    }
+}

@@ -1,0 +1,200 @@
+//! FP8 E4M3 (NVFP4 group scales) and "E8M3" (extended-range pseudo-
+//! scales for post hoc range alignment, §7).
+//!
+//! The binade exponent is extracted from the f32 bit pattern — exactly
+//! what `jnp.frexp` computes — so results are bit-identical to the
+//! python reference even one ulp away from a power of two.
+
+/// Largest magnitude representable in E4M3 (OCP variant, no infinity).
+pub const FP8_MAX: f32 = 448.0;
+
+/// floor(log2(a)) for a > 0, exact (bit extraction; handles subnormals).
+#[inline]
+pub fn floor_log2(a: f32) -> i32 {
+    let bits = a.to_bits();
+    let e = ((bits >> 23) & 0xFF) as i32;
+    if e == 0 {
+        // subnormal: value = mantissa * 2^-149
+        let m = bits & 0x7F_FFFF;
+        debug_assert!(m != 0, "floor_log2(0)");
+        -118 - m.leading_zeros() as i32
+    } else {
+        e - 127
+    }
+}
+
+#[inline]
+fn exp2i(e: i32) -> f32 {
+    (2.0f32).powi(e)
+}
+
+/// Mantissa ULP of a 3-mantissa-bit format in the (clipped) binade of `a`.
+#[inline]
+fn binade_step(a: f32, min_exp: i32, max_exp: i32) -> f32 {
+    let x = a.max(1e-45);
+    let e = floor_log2(x).clamp(min_exp, max_exp);
+    exp2i(e - 3)
+}
+
+/// Round-to-nearest-even onto the E4M3 grid, saturating at ±448.
+#[inline]
+pub fn rtn_e4m3(v: f32) -> f32 {
+    let a = v.abs().min(FP8_MAX);
+    let step = binade_step(a, -6, 8);
+    let q = ((a / step).round_ties_even() * step).min(FP8_MAX);
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Stochastic rounding onto the E4M3 grid (unbiased within ±448).
+#[inline]
+pub fn sr_e4m3(v: f32, u: f32) -> f32 {
+    let a = v.abs().min(FP8_MAX);
+    let step = binade_step(a, -6, 8);
+    let lo = (a / step).floor() * step;
+    let p_up = (a - lo) / step;
+    let q = (if u < p_up { lo + step } else { lo }).min(FP8_MAX);
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Round onto the extended-range "E8M3" pseudo-scale grid: 3-bit
+/// mantissa with the full 8-bit (BF16) exponent range.
+#[inline]
+pub fn rtn_e8m3(v: f32) -> f32 {
+    let a = v.abs();
+    if a == 0.0 {
+        return if v < 0.0 { -0.0 } else { 0.0 };
+    }
+    // -123 matches the python mirror (its bitcast step must stay normal)
+    let step = binade_step(a, -123, 127);
+    let q = (a / step).round_ties_even() * step;
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e4m3_grid() -> Vec<f32> {
+        let mut vals = vec![0.0f32];
+        for e in -6..=8 {
+            for m in 0..8 {
+                let v = (1.0 + m as f32 / 8.0) * exp2i(e);
+                if v <= 448.0 {
+                    vals.push(v);
+                }
+            }
+        }
+        for m in 1..8 {
+            vals.push(m as f32 / 8.0 * exp2i(-6)); // subnormals
+        }
+        vals.sort_by(f32::total_cmp);
+        vals.dedup();
+        vals
+    }
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(1.9999999), 0);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(f32::MIN_POSITIVE), -126);
+        assert_eq!(floor_log2(1.4e-45), -149); // smallest subnormal
+        // one ulp below a power of two must NOT round up
+        let just_below = f32::from_bits(2.0f32.to_bits() - 1);
+        assert_eq!(floor_log2(just_below), 0);
+    }
+
+    #[test]
+    fn grid_fixed_points() {
+        for v in e4m3_grid() {
+            assert_eq!(rtn_e4m3(v), v, "rtn_e4m3({v})");
+            assert_eq!(rtn_e4m3(-v), -v);
+            assert_eq!(sr_e4m3(v, 0.0), v);
+        }
+    }
+
+    #[test]
+    fn nearest_property() {
+        let grid = e4m3_grid();
+        let mut rng = crate::util::rng::Rng::seed_from(5);
+        for _ in 0..2000 {
+            let v = (rng.uniform_f32() * 448.0).max(1e-6);
+            let q = rtn_e4m3(v);
+            let best = grid
+                .iter()
+                .map(|g| (g - v).abs())
+                .fold(f32::INFINITY, f32::min);
+            assert!((q - v).abs() <= best * (1.0 + 1e-6) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(rtn_e4m3(1e9), 448.0);
+        assert_eq!(rtn_e4m3(-1e9), -448.0);
+        assert_eq!(sr_e4m3(460.0, 0.99), 448.0);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // RTN relative error <= 2^-4 for normal range: the 16/17 guard's
+        // premise (§3.1).
+        let mut rng = crate::util::rng::Rng::seed_from(6);
+        for _ in 0..5000 {
+            let v = (rng.uniform_f32() * 10.0 - 4.0).exp2();
+            let q = rtn_e4m3(v.min(448.0));
+            let rel = (q - v.min(448.0)).abs() / v.min(448.0);
+            assert!(rel <= 1.0 / 16.0 + 1e-6, "v={v} q={q}");
+        }
+    }
+
+    #[test]
+    fn sr_unbiased() {
+        let mut rng = crate::util::rng::Rng::seed_from(7);
+        for target in [0.011f32, 0.9, 37.0, 300.0] {
+            let n = 100_000;
+            let mean: f64 = (0..n)
+                .map(|_| sr_e4m3(target, rng.uniform_f32()) as f64)
+                .sum::<f64>()
+                / n as f64;
+            let rel = (mean - target as f64).abs() / target as f64;
+            assert!(rel < 2e-3, "E[SR({target})]={mean}");
+        }
+    }
+
+    #[test]
+    fn e8m3_extends_range() {
+        assert!((rtn_e8m3(1e6) - 1e6).abs() / 1e6 < 1.0 / 16.0);
+        assert!((rtn_e8m3(3e-9) - 3e-9).abs() / 3e-9 < 1.0 / 16.0);
+        assert_eq!(rtn_e8m3(0.0), 0.0);
+    }
+
+    #[test]
+    fn e8m3_pow2_shift_commutes() {
+        // rtn_e8m3(a) / 2^k == rtn_e4m3(a / 2^k): the post hoc range
+        // alignment exactness argument.
+        // shifted results must stay in E4M3's *normal* range (the
+        // subnormal region genuinely differs — paper App. A note 3).
+        let mut rng = crate::util::rng::Rng::seed_from(8);
+        for _ in 0..5000 {
+            let a = (2.0 + rng.uniform_f32() * 14.5).exp2();
+            let k = 8;
+            let lhs = rtn_e8m3(a) / exp2i(k);
+            let rhs = rtn_e4m3(a / exp2i(k));
+            assert_eq!(lhs, rhs, "a={a}");
+        }
+    }
+}

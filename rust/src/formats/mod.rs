@@ -1,0 +1,62 @@
+//! Native Rust mirror of the NVFP4 numeric formats and quantizers.
+//!
+//! Bit-identical to the python reference (`python/compile/kernels/`):
+//! the elementwise codecs ([`fp4`], [`fp8`]) reproduce the exact f32
+//! arithmetic of `formats.py` (same piecewise-uniform FP4 rounding, same
+//! frexp-based binade extraction), verified on shared test vectors by
+//! `rust/tests/parity.rs`.
+//!
+//! Why mirror at all? The runtime path executes quantization inside the
+//! AOT-compiled XLA artifacts — this module exists so that
+//! (1) property-based tests can hammer invariants at native speed,
+//! (2) the Table 1 MSE bench and the host-side analyses run without
+//! round-tripping through PJRT, and (3) the packed-byte NVFP4 container
+//! ([`fp4::pack_codes`]) documents the real storage layout.
+
+pub mod fp4;
+pub mod fp8;
+pub mod ms_eden;
+pub mod nvfp4;
+
+pub use fp4::{fp4_decode, fp4_encode, rtn_fp4, sr_fp4, FP4_GRID, FP4_MAX};
+pub use fp8::{rtn_e4m3, rtn_e8m3, sr_e4m3, FP8_MAX};
+pub use ms_eden::{
+    eden_factors, ms_eden_core, quantize_ms_eden, quantize_ms_eden_posthoc,
+    quantize_rtn_clipped,
+};
+pub use nvfp4::{quantize_rtn, quantize_sr, Quantized, ScaleLayout};
+
+use crate::GROUP;
+
+/// The paper's guard factor: RTN to E4M3 can increase a value by at most
+/// a relative 1/16, so budgeting the FP4 grid at 6 * 16/17 guarantees SR
+/// never clips (§3.1).
+pub const FP8_RTN_GUARD: f32 = 16.0 / 17.0;
+
+/// Non-clipping FP4 budget for Q_SR: 6 * 16/17.
+pub const SR_BUDGET: f32 = FP4_MAX * FP8_RTN_GUARD;
+
+/// MSE-optimal clipping scale for Q_RTN over N(0,1): (6*16/17)/0.93 (§3.3).
+pub const RTN_CLIP_SCALE: f32 = SR_BUDGET / 0.93;
+
+/// FP8 scale head-room cap for Q_RTN (§3.3: 256 instead of 448, so the
+/// EDEN correction can scale group scales up without overflow).
+pub const RTN_SCALE_CAP: f32 = 256.0;
+
+#[inline]
+pub(crate) fn safe_div(num: f32, den: f32) -> f32 {
+    num / if den == 0.0 { 1.0 } else { den }
+}
+
+/// Max |.| over each 16-element group of a row-major [rows, cols] tensor.
+pub(crate) fn group_max(x: &[f32], cols: usize) -> Vec<f32> {
+    debug_assert_eq!(cols % GROUP, 0);
+    x.chunks_exact(GROUP)
+        .map(|g| g.iter().fold(0.0f32, |m, v| m.max(v.abs())))
+        .collect()
+}
+
+/// Max |.| over the whole tensor.
+pub(crate) fn abs_max(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}

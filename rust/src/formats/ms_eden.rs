@@ -1,0 +1,322 @@
+//! MS-EDEN (Algorithm 1) — native mirror, naïve and post hoc variants.
+//!
+//! See `python/compile/kernels/ms_eden.py` for the normative pipeline
+//! and the power-of-two-global-scale exactness argument of the post hoc
+//! range-alignment variant (ER-NVFP4, paper §7 / Figure 8).
+//!
+//! Randomness is taken from an explicit [`Rng`] (rotation signs) plus a
+//! second stream for the scale SR, mirroring the paper's
+//! (ω_RHT, ω_SR) split. `quantize_*_with` variants accept materialized
+//! signs/uniforms for cross-language parity tests.
+
+use anyhow::{bail, Result};
+
+use super::{
+    abs_max, fp4, fp8, group_max, safe_div, Quantized, ScaleLayout,
+    RTN_CLIP_SCALE, RTN_SCALE_CAP,
+};
+use crate::hadamard;
+use crate::util::rng::Rng;
+use crate::{GROUP, ROT_BLOCK};
+
+/// The clipping Q_RTN(x, s) of §3.3 — MS-EDEN's inner quantizer
+/// (group max anchored at `s`, FP8 scales capped at 256).
+pub fn quantize_rtn_clipped(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    s: f32,
+) -> Result<Quantized> {
+    if x.len() != rows * cols {
+        bail!("tensor length {} != {rows}x{cols}", x.len());
+    }
+    if cols % GROUP != 0 {
+        bail!("cols={cols} not a multiple of {GROUP}");
+    }
+    let absmax = abs_max(x);
+    let gscale = safe_div(absmax, s * RTN_SCALE_CAP);
+    let gmax = group_max(x, cols);
+    let mut values = vec![0.0f32; x.len()];
+    let mut scales = vec![0.0f32; x.len() / GROUP];
+    for (g, chunk) in x.chunks_exact(GROUP).enumerate() {
+        let sc = fp8::rtn_e4m3(safe_div(gmax[g], gscale * s));
+        scales[g] = sc;
+        let denom = sc * gscale;
+        for (i, &v) in chunk.iter().enumerate() {
+            values[g * GROUP + i] = fp4::rtn_fp4(safe_div(v, denom));
+        }
+    }
+    Ok(Quantized {
+        values,
+        scales,
+        gscale,
+        rows,
+        cols,
+        layout: ScaleLayout::Vector1x16,
+    })
+}
+
+/// Per-16-group EDEN correction factors S_g = <x,x> / <x,Q(x)>,
+/// computed in rotated space (Appendix A two-level-RHT argument).
+pub fn eden_factors(x_rot: &[f32], x_rtn: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x_rot.len(), x_rtn.len());
+    x_rot
+        .chunks_exact(GROUP)
+        .zip(x_rtn.chunks_exact(GROUP))
+        .map(|(xr, xq)| {
+            let (mut num, mut den) = (0.0f32, 0.0f32);
+            for i in 0..GROUP {
+                num += xr[i] * xr[i];
+                den += xr[i] * xq[i];
+            }
+            if den > 0.0 {
+                safe_div(num, den)
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+/// Core of MS-EDEN given a *pre-rotated* tensor and explicit scale-SR
+/// uniforms (shared by both public variants and the parity tests).
+pub fn ms_eden_core(
+    x_rot: &[f32],
+    rows: usize,
+    cols: usize,
+    s: f32,
+    u_scales: &[f32],
+) -> Result<Quantized> {
+    let mut q = quantize_rtn_clipped(x_rot, rows, cols, s)?;
+    let deq = q.dequant();
+    let factors = eden_factors(x_rot, &deq);
+    if u_scales.len() != q.scales.len() {
+        bail!("need {} scale uniforms, got {}", q.scales.len(), u_scales.len());
+    }
+    for (i, sc) in q.scales.iter_mut().enumerate() {
+        *sc = fp8::sr_e4m3(factors[i] * *sc, u_scales[i]);
+    }
+    Ok(q)
+}
+
+/// A quantized tensor living in rotated space, carrying its rotation.
+#[derive(Clone, Debug)]
+pub struct RotatedQuantized {
+    pub q: Quantized,
+    pub signs: Vec<f32>,
+}
+
+impl RotatedQuantized {
+    /// Dequantize and undo the rotation (for MSE evaluation; GEMMs never
+    /// do this — partner rotations cancel).
+    pub fn dequant_unrotated(&self) -> Vec<f32> {
+        let mut est = self.q.dequant();
+        hadamard::rht_inv(&mut est, &self.signs).expect("validated dims");
+        est
+    }
+}
+
+/// MS-EDEN (Algorithm 1): RHT -> clipped RTN -> EDEN-corrected,
+/// stochastically-rounded FP8 scales. Unbiased in rotated space.
+pub fn quantize_ms_eden(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &mut Rng,
+) -> Result<RotatedQuantized> {
+    if cols % ROT_BLOCK != 0 {
+        bail!("cols={cols} not a multiple of {ROT_BLOCK}");
+    }
+    let mut rot_rng = rng.fold_in(1);
+    let mut sr_rng = rng.fold_in(2);
+    let signs = hadamard::rademacher_signs(&mut rot_rng);
+    let mut x_rot = x.to_vec();
+    hadamard::rht(&mut x_rot, &signs)?;
+    let u = sr_rng.uniform_vec(x.len() / GROUP);
+    let q = ms_eden_core(&x_rot, rows, cols, RTN_CLIP_SCALE, &u)?;
+    Ok(RotatedQuantized { q, signs })
+}
+
+/// MS-EDEN via post hoc range alignment (ER-NVFP4, §7 / Figure 8):
+/// one full pass quantizing against E8M3 pseudo-scales, then a
+/// scales-only fix-up against the power-of-two global scale.
+pub fn quantize_ms_eden_posthoc(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &mut Rng,
+) -> Result<RotatedQuantized> {
+    if cols % ROT_BLOCK != 0 {
+        bail!("cols={cols} not a multiple of {ROT_BLOCK}");
+    }
+    let mut rot_rng = rng.fold_in(1);
+    let mut sr_rng = rng.fold_in(2);
+    let signs = hadamard::rademacher_signs(&mut rot_rng);
+    let mut x_rot = x.to_vec();
+    hadamard::rht(&mut x_rot, &signs)?;
+
+    let s = RTN_CLIP_SCALE;
+    // Pass 1 (per tile on hardware): extended-range pseudo-scales, FP4
+    // payload, EDEN factors, partial abs-max — no global knowledge.
+    let gmax = group_max(&x_rot, cols);
+    let pseudo: Vec<f32> = gmax.iter().map(|&m| fp8::rtn_e8m3(m / s)).collect();
+    let mut values = vec![0.0f32; x.len()];
+    for (g, chunk) in x_rot.chunks_exact(GROUP).enumerate() {
+        for (i, &v) in chunk.iter().enumerate() {
+            values[g * GROUP + i] = fp4::rtn_fp4(safe_div(v, pseudo[g]));
+        }
+    }
+    // EDEN factors against the pseudo-scale dequantization.
+    let mut deq = vec![0.0f32; x.len()];
+    for (g, chunk) in values.chunks_exact(GROUP).enumerate() {
+        for (i, &v) in chunk.iter().enumerate() {
+            deq[g * GROUP + i] = v * pseudo[g];
+        }
+    }
+    let factors = eden_factors(&x_rot, &deq);
+    let absmax = abs_max(&x_rot);
+
+    // Global reduction: next power of two of absmax/(s*256) so the scale
+    // shift is an exact exponent move.
+    let gscale = if absmax == 0.0 {
+        0.0
+    } else {
+        let raw = absmax / (s * RTN_SCALE_CAP);
+        (raw.log2().ceil()).exp2()
+    };
+
+    // Pass 2 (scales only, ~1/16 of the bytes): shift, correct, SR.
+    let scales: Vec<f32> = pseudo
+        .iter()
+        .zip(&factors)
+        .map(|(&p, &f)| {
+            fp8::sr_e4m3(f * safe_div(p, gscale), sr_rng.uniform_f32())
+        })
+        .collect();
+
+    Ok(RotatedQuantized {
+        q: Quantized {
+            values,
+            scales,
+            gscale,
+            rows,
+            cols,
+            layout: ScaleLayout::Vector1x16,
+        },
+        signs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        Rng::seed_from(seed).normal_vec(n)
+    }
+
+    fn mse(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / a.len() as f64
+    }
+
+    #[test]
+    fn table1_band() {
+        // MS-EDEN MSE over N(0,1) ~ 9.4e-3 (paper Table 1).
+        let x = gauss(256 * 512, 1);
+        let mut rng = Rng::seed_from(2);
+        let rq = quantize_ms_eden(&x, 256, 512, &mut rng).unwrap();
+        let m = mse(&rq.dequant_unrotated(), &x);
+        assert!((0.0085..0.0105).contains(&m), "mse={m}");
+    }
+
+    #[test]
+    fn beats_sr_by_2x() {
+        let x = gauss(128 * 512, 3);
+        let mut r1 = Rng::seed_from(4);
+        let mut r2 = Rng::seed_from(5);
+        let eden = quantize_ms_eden(&x, 128, 512, &mut r1).unwrap();
+        let sr = super::super::quantize_sr(&x, 128, 512, &mut r2).unwrap();
+        let me = mse(&eden.dequant_unrotated(), &x);
+        let ms = sr.mse(&x);
+        assert!(ms / me > 2.0, "sr={ms} eden={me}");
+    }
+
+    #[test]
+    fn unbiased_on_average() {
+        let x = gauss(32 * 256, 6);
+        let n = 64;
+        let mut acc = vec![0.0f64; x.len()];
+        for seed in 0..n {
+            let mut rng = Rng::seed_from(1000 + seed);
+            let rq = quantize_ms_eden(&x, 32, 256, &mut rng).unwrap();
+            for (a, v) in acc.iter_mut().zip(rq.dequant_unrotated()) {
+                *a += v as f64;
+            }
+        }
+        let avg: Vec<f32> = acc.iter().map(|a| (a / n as f64) as f32).collect();
+        let resid = mse(&avg, &x);
+        let mut rng = Rng::seed_from(77);
+        let base = mse(
+            &quantize_ms_eden(&x, 32, 256, &mut rng)
+                .unwrap()
+                .dequant_unrotated(),
+            &x,
+        );
+        assert!(resid < 3.0 * base / n as f64, "resid={resid} base={base}");
+    }
+
+    #[test]
+    fn posthoc_matches_naive_quality() {
+        let x = gauss(128 * 512, 8);
+        let mut r1 = Rng::seed_from(9);
+        let mut r2 = Rng::seed_from(9);
+        let naive = quantize_ms_eden(&x, 128, 512, &mut r1).unwrap();
+        let post = quantize_ms_eden_posthoc(&x, 128, 512, &mut r2).unwrap();
+        let mn = mse(&naive.dequant_unrotated(), &x);
+        let mp = mse(&post.dequant_unrotated(), &x);
+        assert!((mp - mn).abs() / mn < 0.05, "naive={mn} posthoc={mp}");
+    }
+
+    #[test]
+    fn posthoc_gscale_pow2() {
+        let x = gauss(32 * 256, 10);
+        let mut rng = Rng::seed_from(11);
+        let rq = quantize_ms_eden_posthoc(&x, 32, 256, &mut rng).unwrap();
+        let l = rq.q.gscale.log2();
+        assert!((l - l.round()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eden_factors_near_one() {
+        let x = gauss(128 * 512, 12);
+        let mut x_rot = x.clone();
+        let mut rng = Rng::seed_from(13);
+        let signs = hadamard::rademacher_signs(&mut rng);
+        hadamard::rht(&mut x_rot, &signs).unwrap();
+        let q = quantize_rtn_clipped(&x_rot, 128, 512, RTN_CLIP_SCALE).unwrap();
+        let f = eden_factors(&x_rot, &q.dequant());
+        let min = f.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+        let max = f.iter().fold(0.0f32, |m, &v| m.max(v));
+        assert!(min > 0.85 && max < 1.2, "S in [{min}, {max}]");
+    }
+
+    #[test]
+    fn scale_cap_respected() {
+        let x = gauss(32 * 256, 14);
+        let q = quantize_rtn_clipped(&x, 32, 256, RTN_CLIP_SCALE).unwrap();
+        for &s in &q.scales {
+            assert!(s <= 256.0);
+        }
+    }
+
+    #[test]
+    fn rejects_non_rot_multiple() {
+        let x = vec![0.0f32; 4 * 64];
+        let mut rng = Rng::seed_from(1);
+        assert!(quantize_ms_eden(&x, 4, 64, &mut rng).is_err());
+    }
+}

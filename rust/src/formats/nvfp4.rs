@@ -1,0 +1,389 @@
+//! NVFP4 tensor quantizers: RTN (1x16 / 16x16, ±4/6) and Q_SR.
+//!
+//! Mirrors `python/compile/kernels/ref.py` (see that module for the
+//! normative math and paper references). Tensors are row-major
+//! `[rows, cols]` f32 slices; quantization groups run along `cols`
+//! (the GEMM inner dimension).
+
+use anyhow::{bail, Result};
+
+use super::{
+    abs_max, fp4, fp8, group_max, safe_div, FP8_MAX, SR_BUDGET,
+};
+use crate::util::rng::Rng;
+use crate::GROUP;
+
+/// Scale layout of a quantized tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleLayout {
+    /// Native NVFP4: one E4M3 scale per 16 consecutive elements.
+    Vector1x16,
+    /// NVIDIA-recipe square blocks: one scale per 16x16 tile (enables
+    /// transposed reuse in the backward pass; coarser, lower capacity).
+    Square16x16,
+}
+
+/// A quantized NVFP4 tensor (values kept unpacked as on-grid f32 for
+/// emulation; see [`fp4::pack_codes`] for the real storage container).
+#[derive(Clone, Debug)]
+pub struct Quantized {
+    pub values: Vec<f32>,
+    pub scales: Vec<f32>,
+    pub gscale: f32,
+    pub rows: usize,
+    pub cols: usize,
+    pub layout: ScaleLayout,
+}
+
+impl Quantized {
+    /// Reconstruct the f32 estimate.
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.values.len()];
+        self.dequant_into(&mut out);
+        out
+    }
+
+    /// Dequantize into a caller-provided buffer (hot-path variant).
+    pub fn dequant_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.values.len());
+        match self.layout {
+            ScaleLayout::Vector1x16 => {
+                for (g, chunk) in self.values.chunks_exact(GROUP).enumerate() {
+                    let s = self.scales[g] * self.gscale;
+                    for (o, v) in out[g * GROUP..(g + 1) * GROUP]
+                        .iter_mut()
+                        .zip(chunk)
+                    {
+                        *o = v * s;
+                    }
+                }
+            }
+            ScaleLayout::Square16x16 => {
+                let bc = self.cols / GROUP;
+                for r in 0..self.rows {
+                    for c in 0..self.cols {
+                        let s = self.scales[(r / GROUP) * bc + c / GROUP];
+                        out[r * self.cols + c] =
+                            self.values[r * self.cols + c] * s * self.gscale;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mean squared reconstruction error against the original tensor.
+    pub fn mse(&self, x: &[f32]) -> f64 {
+        let est = self.dequant();
+        est.iter()
+            .zip(x)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / x.len() as f64
+    }
+
+    /// Bytes the real packed container would occupy (FP4 payload + FP8
+    /// scales + one f32 global scale) — used by the perf model.
+    pub fn packed_bytes(&self) -> usize {
+        self.values.len() / 2 + self.scales.len() + 4
+    }
+}
+
+fn check_dims(x: &[f32], rows: usize, cols: usize, square: bool) -> Result<()> {
+    if x.len() != rows * cols {
+        bail!("tensor length {} != {rows}x{cols}", x.len());
+    }
+    if cols % GROUP != 0 {
+        bail!("cols={cols} not a multiple of {GROUP}");
+    }
+    if square && rows % GROUP != 0 {
+        bail!("square blocks need rows % 16 == 0, got rows={rows}");
+    }
+    Ok(())
+}
+
+/// One 4/6 branch: quantize with the group max anchored at `div`.
+fn rtn_branch(
+    x: &[f32],
+    gmax: &[f32],
+    gscale: f32,
+    div: f32,
+    values: &mut [f32],
+    scales: &mut [f32],
+) {
+    for (g, chunk) in x.chunks_exact(GROUP).enumerate() {
+        let s = fp8::rtn_e4m3(safe_div(gmax[g], gscale * div));
+        scales[g] = s;
+        let denom = s * gscale;
+        for (i, &v) in chunk.iter().enumerate() {
+            values[g * GROUP + i] = fp4::rtn_fp4(safe_div(v, denom));
+        }
+    }
+}
+
+fn group_err(x: &[f32], values: &[f32], scales: &[f32], gscale: f32, g: usize) -> f64 {
+    let s = scales[g] * gscale;
+    let mut e = 0.0f64;
+    for i in 0..GROUP {
+        let d = (values[g * GROUP + i] * s - x[g * GROUP + i]) as f64;
+        e += d * d;
+    }
+    e
+}
+
+/// Deterministic NVFP4 RTN quantization — the forward-pass family.
+///
+/// `four_six` evaluates the 6.0- and 4.0-anchored grids per group and
+/// keeps the lower-MSE branch (Cook et al. 2025; biased, forward-only).
+/// `square` uses 16x16 block scales (NVIDIA-recipe weight path).
+pub fn quantize_rtn(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+    square: bool,
+) -> Result<Quantized> {
+    check_dims(x, rows, cols, square)?;
+    let absmax = abs_max(x);
+    let gscale = safe_div(absmax, fp4::FP4_MAX * FP8_MAX);
+
+    if square {
+        return quantize_rtn_square(x, rows, cols, four_six, gscale);
+    }
+
+    let ngroups = rows * cols / GROUP;
+    let gmax = group_max(x, cols);
+    let mut values = vec![0.0f32; x.len()];
+    let mut scales = vec![0.0f32; ngroups];
+    rtn_branch(x, &gmax, gscale, 6.0, &mut values, &mut scales);
+
+    if four_six {
+        let mut v4 = vec![0.0f32; x.len()];
+        let mut s4 = vec![0.0f32; ngroups];
+        rtn_branch(x, &gmax, gscale, 4.0, &mut v4, &mut s4);
+        for g in 0..ngroups {
+            let e6 = group_err(x, &values, &scales, gscale, g);
+            let e4 = group_err(x, &v4, &s4, gscale, g);
+            if e4 < e6 {
+                scales[g] = s4[g];
+                values[g * GROUP..(g + 1) * GROUP]
+                    .copy_from_slice(&v4[g * GROUP..(g + 1) * GROUP]);
+            }
+        }
+    }
+
+    Ok(Quantized {
+        values,
+        scales,
+        gscale,
+        rows,
+        cols,
+        layout: ScaleLayout::Vector1x16,
+    })
+}
+
+fn quantize_rtn_square(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+    gscale: f32,
+) -> Result<Quantized> {
+    let (br, bc) = (rows / GROUP, cols / GROUP);
+    // block max
+    let mut gmax = vec![0.0f32; br * bc];
+    for r in 0..rows {
+        for c in 0..cols {
+            let b = (r / GROUP) * bc + c / GROUP;
+            gmax[b] = gmax[b].max(x[r * cols + c].abs());
+        }
+    }
+
+    let quant_with = |div: f32| -> (Vec<f32>, Vec<f32>) {
+        let scales: Vec<f32> = gmax
+            .iter()
+            .map(|&m| fp8::rtn_e4m3(safe_div(m, gscale * div)))
+            .collect();
+        let mut values = vec![0.0f32; x.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                let s = scales[(r / GROUP) * bc + c / GROUP];
+                values[r * cols + c] =
+                    fp4::rtn_fp4(safe_div(x[r * cols + c], s * gscale));
+            }
+        }
+        (values, scales)
+    };
+
+    let (mut values, mut scales) = quant_with(6.0);
+    if four_six {
+        let (v4, s4) = quant_with(4.0);
+        for b in 0..br * bc {
+            let (r0, c0) = (b / bc * GROUP, b % bc * GROUP);
+            let berr = |vals: &[f32], s: f32| -> f64 {
+                let mut e = 0.0f64;
+                for r in r0..r0 + GROUP {
+                    for c in c0..c0 + GROUP {
+                        let d = (vals[r * cols + c] * s * gscale
+                            - x[r * cols + c]) as f64;
+                        e += d * d;
+                    }
+                }
+                e
+            };
+            if berr(&v4, s4[b]) < berr(&values, scales[b]) {
+                scales[b] = s4[b];
+                for r in r0..r0 + GROUP {
+                    for c in c0..c0 + GROUP {
+                        values[r * cols + c] = v4[r * cols + c];
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(Quantized {
+        values,
+        scales,
+        gscale,
+        rows,
+        cols,
+        layout: ScaleLayout::Square16x16,
+    })
+}
+
+/// Unbiased element-wise stochastic rounding to NVFP4 (Q_SR, §3.1).
+///
+/// The 16/17 guard guarantees SR never clips, hence exact unbiasedness.
+pub fn quantize_sr(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &mut Rng,
+) -> Result<Quantized> {
+    check_dims(x, rows, cols, false)?;
+    let absmax = abs_max(x);
+    let gscale = safe_div(absmax, SR_BUDGET * FP8_MAX);
+    let gmax = group_max(x, cols);
+
+    let mut values = vec![0.0f32; x.len()];
+    let mut scales = vec![0.0f32; x.len() / GROUP];
+    for (g, chunk) in x.chunks_exact(GROUP).enumerate() {
+        let s = fp8::rtn_e4m3(safe_div(gmax[g], gscale * SR_BUDGET));
+        scales[g] = s;
+        let denom = s * gscale;
+        for (i, &v) in chunk.iter().enumerate() {
+            values[g * GROUP + i] =
+                fp4::sr_fp4(safe_div(v, denom), rng.uniform_f32());
+        }
+    }
+    Ok(Quantized {
+        values,
+        scales,
+        gscale,
+        rows,
+        cols,
+        layout: ScaleLayout::Vector1x16,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        Rng::seed_from(seed).normal_vec(n)
+    }
+
+    #[test]
+    fn rtn_reasonable_mse() {
+        let x = gauss(64 * 256, 1);
+        let q = quantize_rtn(&x, 64, 256, false, false).unwrap();
+        let mse = q.mse(&x);
+        assert!((0.006..0.013).contains(&mse), "mse={mse}");
+    }
+
+    #[test]
+    fn four_six_improves() {
+        let x = gauss(64 * 256, 2);
+        let plain = quantize_rtn(&x, 64, 256, false, false).unwrap().mse(&x);
+        let fs = quantize_rtn(&x, 64, 256, true, false).unwrap().mse(&x);
+        assert!(fs < plain * 0.95, "4/6 {fs} vs plain {plain}");
+    }
+
+    #[test]
+    fn square_blocks_worse_than_native() {
+        let x = gauss(64 * 256, 3);
+        let native = quantize_rtn(&x, 64, 256, false, false).unwrap().mse(&x);
+        let square = quantize_rtn(&x, 64, 256, false, true).unwrap().mse(&x);
+        assert!(square > native * 1.15);
+    }
+
+    #[test]
+    fn sr_unbiased_on_average() {
+        let x = gauss(16 * 128, 4);
+        let mut acc = vec![0.0f64; x.len()];
+        let n = 64;
+        for seed in 0..n {
+            let mut rng = Rng::seed_from(100 + seed);
+            let q = quantize_sr(&x, 16, 128, &mut rng).unwrap();
+            for (a, v) in acc.iter_mut().zip(q.dequant()) {
+                *a += v as f64;
+            }
+        }
+        let resid: f64 = acc
+            .iter()
+            .zip(&x)
+            .map(|(a, &b)| (a / n as f64 - b as f64).powi(2))
+            .sum::<f64>()
+            / x.len() as f64;
+        let mut rng = Rng::seed_from(999);
+        let base = quantize_sr(&x, 16, 128, &mut rng).unwrap().mse(&x);
+        assert!(resid < 3.0 * base / n as f64, "resid={resid} base={base}");
+    }
+
+    #[test]
+    fn sr_never_clips() {
+        let x = gauss(16 * 128, 5);
+        let mut rng = Rng::seed_from(6);
+        let q = quantize_sr(&x, 16, 128, &mut rng).unwrap();
+        // ratio reconstruction stays within the grid
+        for (g, chunk) in x.chunks_exact(GROUP).enumerate() {
+            let denom = q.scales[g] * q.gscale;
+            for &v in chunk {
+                assert!(safe_div(v, denom).abs() <= 6.0 + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let x = vec![0.0f32; 4 * 128];
+        let q = quantize_rtn(&x, 4, 128, true, false).unwrap();
+        assert!(q.dequant().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dim_validation() {
+        assert!(quantize_rtn(&[0.0; 10], 1, 10, false, false).is_err());
+        assert!(quantize_rtn(&[0.0; 32], 2, 16, false, true).is_err());
+        assert!(quantize_rtn(&[0.0; 10], 2, 16, false, false).is_err());
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        let x = gauss(16 * 128, 7);
+        let q = quantize_rtn(&x, 16, 128, false, false).unwrap();
+        // 2048 elems: 1024 payload bytes + 128 scale bytes + 4 global
+        assert_eq!(q.packed_bytes(), 1024 + 128 + 4);
+    }
+
+    #[test]
+    fn scales_on_e4m3_grid() {
+        let x = gauss(16 * 128, 8);
+        let q = quantize_rtn(&x, 16, 128, false, false).unwrap();
+        for &s in &q.scales {
+            assert_eq!(fp8::rtn_e4m3(s), s);
+            assert!(s <= 448.0);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Block Randomized Hadamard Transform (RHT) — native mirror.
+//!
+//! Same 128-block rotation as `python/compile/kernels/hadamard.py`:
+//! `y = (x * signs) @ H` per 128-chunk, with H the normalized symmetric
+//! Sylvester-Hadamard matrix. Implemented as an in-place O(n log n)
+//! fast Walsh-Hadamard butterfly (the matrix product form only exists
+//! on GPU because there it *is* an mma; on the host the butterfly is
+//! ~10x faster and exactly equivalent up to f32 accumulation order).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+use crate::ROT_BLOCK;
+
+/// In-place unnormalized FWHT of a power-of-two-length slice.
+fn fwht(data: &mut [f32]) {
+    let n = data.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (data[j], data[j + h]);
+                data[j] = a + b;
+                data[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Rademacher ±1 diagonal for the rotation, from a seeded stream.
+pub fn rademacher_signs(rng: &mut Rng) -> Vec<f32> {
+    rng.rademacher_vec(ROT_BLOCK)
+}
+
+/// Blockwise RHT along the last axis (length must be a multiple of 128):
+/// per chunk c, `y_c = (x_c * signs) . H` with H normalized.
+pub fn rht(x: &mut [f32], signs: &[f32]) -> Result<()> {
+    if x.len() % ROT_BLOCK != 0 {
+        bail!("length {} not a multiple of {ROT_BLOCK}", x.len());
+    }
+    if signs.len() != ROT_BLOCK {
+        bail!("signs must have length {ROT_BLOCK}");
+    }
+    let norm = 1.0 / (ROT_BLOCK as f32).sqrt();
+    for chunk in x.chunks_exact_mut(ROT_BLOCK) {
+        for (v, s) in chunk.iter_mut().zip(signs) {
+            *v *= s;
+        }
+        fwht(chunk);
+        for v in chunk.iter_mut() {
+            *v *= norm;
+        }
+    }
+    Ok(())
+}
+
+/// Inverse of [`rht`]: `x_c = (y_c . H) * signs` (H symmetric orthogonal).
+pub fn rht_inv(x: &mut [f32], signs: &[f32]) -> Result<()> {
+    if x.len() % ROT_BLOCK != 0 {
+        bail!("length {} not a multiple of {ROT_BLOCK}", x.len());
+    }
+    let norm = 1.0 / (ROT_BLOCK as f32).sqrt();
+    for chunk in x.chunks_exact_mut(ROT_BLOCK) {
+        fwht(chunk);
+        for (v, s) in chunk.iter_mut().zip(signs) {
+            *v *= norm * s;
+        }
+    }
+    Ok(())
+}
+
+/// Dense normalized Hadamard matrix (for tests / the perf model's
+/// byte accounting of the GEMM-form rotation).
+pub fn hadamard_matrix(n: usize) -> Vec<f32> {
+    assert!(n.is_power_of_two());
+    let mut h = vec![1.0f32];
+    let mut size = 1;
+    while size < n {
+        let mut next = vec![0.0f32; 4 * size * size];
+        for r in 0..size {
+            for c in 0..size {
+                let v = h[r * size + c];
+                next[r * 2 * size + c] = v;
+                next[r * 2 * size + c + size] = v;
+                next[(r + size) * 2 * size + c] = v;
+                next[(r + size) * 2 * size + c + size] = -v;
+            }
+        }
+        h = next;
+        size *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    h.iter().map(|v| v * norm).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let orig: Vec<f32> = rng.normal_vec(4 * ROT_BLOCK);
+        let signs = rademacher_signs(&mut rng);
+        let mut x = orig.clone();
+        rht(&mut x, &signs).unwrap();
+        rht_inv(&mut x, &signs).unwrap();
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut rng = Rng::seed_from(2);
+        let orig: Vec<f32> = rng.normal_vec(ROT_BLOCK);
+        let signs = rademacher_signs(&mut rng);
+        let mut x = orig.clone();
+        rht(&mut x, &signs).unwrap();
+        let n0: f64 = orig.iter().map(|v| (*v as f64).powi(2)).sum();
+        let n1: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn matches_dense_matrix() {
+        let mut rng = Rng::seed_from(3);
+        let x: Vec<f32> = rng.normal_vec(ROT_BLOCK);
+        let signs = rademacher_signs(&mut rng);
+        let h = hadamard_matrix(ROT_BLOCK);
+        // dense: y[j] = sum_i x[i]*signs[i]*H[i][j]
+        let mut dense = vec![0.0f32; ROT_BLOCK];
+        for j in 0..ROT_BLOCK {
+            let mut acc = 0.0f64;
+            for i in 0..ROT_BLOCK {
+                acc += (x[i] * signs[i]) as f64 * h[i * ROT_BLOCK + j] as f64;
+            }
+            dense[j] = acc as f32;
+        }
+        let mut fast = x.clone();
+        rht(&mut fast, &signs).unwrap();
+        for (a, b) in fast.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gemm_cancellation() {
+        // (A H)(B H)^T == A B^T — the inner-dim identity (§3.3).
+        let mut rng = Rng::seed_from(4);
+        let a: Vec<f32> = rng.normal_vec(ROT_BLOCK);
+        let b: Vec<f32> = rng.normal_vec(ROT_BLOCK);
+        let signs = rademacher_signs(&mut rng);
+        let dot = |u: &[f32], v: &[f32]| -> f64 {
+            u.iter().zip(v).map(|(x, y)| (x * y) as f64).sum()
+        };
+        let exact = dot(&a, &b);
+        let (mut ar, mut br) = (a.clone(), b.clone());
+        rht(&mut ar, &signs).unwrap();
+        rht(&mut br, &signs).unwrap();
+        assert!((dot(&ar, &br) - exact).abs() < 1e-3 * exact.abs().max(1.0));
+    }
+
+    #[test]
+    fn rejects_bad_len() {
+        let mut x = vec![0.0f32; 100];
+        assert!(rht(&mut x, &vec![1.0; ROT_BLOCK]).is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! # Quartet II — NVFP4 LLM pre-training with MS-EDEN unbiased gradients
+//!
+//! Rust + JAX + Pallas reproduction of *"Quartet II: Accurate LLM
+//! Pre-Training in NVFP4 by Improved Unbiased Gradient Estimation"*
+//! (Panferov et al., ICML 2026).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L1 (Pallas, build-time)** — quantization kernels
+//!   (`python/compile/kernels/`), lowered into the L2 HLO.
+//! * **L2 (JAX, build-time)** — Llama-like transformer with the
+//!   Quartet II quantized-linear computation graph
+//!   (`python/compile/`), AOT-exported as HLO text into `artifacts/`.
+//! * **L3 (this crate, runtime)** — loads the artifacts through the
+//!   PJRT CPU client ([`runtime`]) and owns the whole training stack:
+//!   data pipeline ([`data`]), training coordination ([`coordinator`]),
+//!   experiment drivers regenerating every paper table/figure
+//!   ([`experiments`]), and the analytical Blackwell performance model
+//!   ([`perfmodel`]).
+//!
+//! The crate additionally mirrors every NVFP4 numeric format and
+//! quantizer natively ([`formats`], [`hadamard`]) — bit-identical to
+//! the python reference (enforced by `rust/tests/parity.rs`) — so that
+//! property tests, Table 1 benches, and host-side analysis run at
+//! native speed without round-tripping through XLA.
+//!
+//! This build environment is fully offline: everything beyond the `xla`
+//! crate (CLI parsing, JSON, RNG, bench harness, property testing) is
+//! implemented in-tree under [`util`], [`bench`] and [`testing`].
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod formats;
+pub mod hadamard;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// NVFP4 micro-scaling group size (16 FP4 elements per E4M3 scale).
+pub const GROUP: usize = 16;
+
+/// Randomized Hadamard rotation block (paper: 128, sized for Blackwell's
+/// `mma.m16n8k16`; kept identical so all statistics match).
+pub const ROT_BLOCK: usize = 128;

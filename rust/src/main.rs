@@ -1,0 +1,218 @@
+//! quartet2 — CLI entrypoint for the Quartet II reproduction.
+//!
+//! Subcommands:
+//!   train        train one (preset, scheme) via the PJRT artifacts
+//!   experiment   regenerate a paper table/figure (fig1..fig10, table1..7)
+//!   perfmodel    print the analytical Blackwell model report
+//!   data         inspect the synthetic corpus / batcher
+//!   info         list available artifacts and their contracts
+//!
+//! Examples:
+//!   quartet2 train --preset tiny --scheme quartet2 --steps 300
+//!   quartet2 experiment fig4 --steps 150 --resume
+//!   quartet2 experiment all-numeric
+//!   quartet2 info --artifacts-dir artifacts
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use quartet2::config::{Config, RunConfig};
+use quartet2::coordinator::{Trainer, TrainerOptions};
+use quartet2::data::Batcher;
+use quartet2::experiments::{self, Env};
+use quartet2::runtime::Engine;
+use quartet2::util::cli::Args;
+
+const USAGE: &str = "\
+quartet2 — NVFP4 LLM pre-training with MS-EDEN (Quartet II reproduction)
+
+USAGE:
+  quartet2 train      [--preset tiny] [--scheme quartet2] [--steps 300]
+                      [--seed 42] [--eval-every 50] [--eval-batches 8]
+                      [--artifacts-dir artifacts] [--results-dir results]
+                      [--config file.toml]
+  quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|all-numeric>
+                      [--preset tiny] [--steps 150] [--seed 42] [--resume]
+  quartet2 perfmodel  (= experiment all-numeric)
+  quartet2 data       [--seed 42] [--batch 4] [--seq 128] [--n 2]
+  quartet2 info       [--artifacts-dir artifacts]
+";
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("perfmodel") => {
+            let env = numeric_env(&args)?;
+            experiments::run(&env_ref(&env), "all-numeric")
+        }
+        Some("data") => cmd_data(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load_run_config(args: &Args) -> Result<RunConfig> {
+    let mut rc = match args.opt("config") {
+        Some(path) => RunConfig::from_config(&Config::parse_file(Path::new(path))?),
+        None => RunConfig::defaults(),
+    };
+    if let Some(p) = args.opt("preset") {
+        rc.preset = p.to_string();
+    }
+    if let Some(s) = args.opt("scheme") {
+        rc.scheme = s.to_string();
+    }
+    rc.steps = args.usize_or("steps", rc.steps)?;
+    rc.seed = args.u64_or("seed", rc.seed)?;
+    rc.eval_every = args.usize_or("eval-every", rc.eval_every)?;
+    rc.eval_batches = args.usize_or("eval-batches", rc.eval_batches)?;
+    if let Some(d) = args.opt("artifacts-dir") {
+        rc.artifacts_dir = d.to_string();
+    }
+    if let Some(d) = args.opt("results-dir") {
+        rc.results_dir = d.to_string();
+    }
+    Ok(rc)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rc = load_run_config(args)?;
+    let engine = Engine::cpu()?;
+    println!(
+        "platform: {} | preset {} scheme {} steps {}",
+        engine.platform(),
+        rc.preset,
+        rc.scheme,
+        rc.steps
+    );
+    let opts = TrainerOptions {
+        preset: rc.preset.clone(),
+        scheme: rc.scheme.clone(),
+        steps: rc.steps,
+        seed: rc.seed,
+        eval_every: rc.eval_every,
+        eval_batches: rc.eval_batches,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&engine, Path::new(&rc.artifacts_dir), opts)?;
+    let outcome = trainer.run()?;
+    let path = outcome.curve.save(Path::new(&rc.results_dir))?;
+    println!(
+        "done: final val loss {:.4}, {:.0} tokens/s, curve -> {path:?}",
+        outcome.final_val_loss, outcome.tokens_per_sec
+    );
+    Ok(())
+}
+
+struct OwnedEnv {
+    engine: Engine,
+    artifacts_dir: String,
+    results_dir: String,
+    preset: String,
+    steps: usize,
+    seed: u64,
+    resume: bool,
+}
+
+fn env_ref(o: &OwnedEnv) -> Env<'_> {
+    Env {
+        engine: &o.engine,
+        artifacts_dir: Path::new(&o.artifacts_dir),
+        results_dir: Path::new(&o.results_dir),
+        preset: o.preset.clone(),
+        steps: o.steps,
+        seed: o.seed,
+        resume: o.resume,
+    }
+}
+
+fn numeric_env(args: &Args) -> Result<OwnedEnv> {
+    let rc = load_run_config(args)?;
+    Ok(OwnedEnv {
+        engine: Engine::cpu()?,
+        artifacts_dir: rc.artifacts_dir,
+        results_dir: rc.results_dir,
+        preset: rc.preset,
+        steps: args.usize_or("steps", 150)?,
+        seed: rc.seed,
+        resume: args.flag("resume"),
+    })
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("experiment needs an id, e.g. `quartet2 experiment fig4`")?;
+    let env = numeric_env(args)?;
+    experiments::run(&env_ref(&env), id)
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 42)?;
+    let batch = args.usize_or("batch", 4)?;
+    let seq = args.usize_or("seq", 128)?;
+    let n = args.usize_or("n", 2)?;
+    let mut b = Batcher::train(seed, batch, seq);
+    for i in 0..n {
+        let batch = b.next();
+        let text: Vec<u8> = batch.tokens[..seq.min(96)]
+            .iter()
+            .map(|&t| t as u8)
+            .collect();
+        println!(
+            "batch {i}: {} tokens | row0: {:?}",
+            batch.n_tokens(),
+            String::from_utf8_lossy(&text)
+        );
+    }
+    let corpus = quartet2::data::SyntheticCorpus::new(seed);
+    println!("unigram entropy: {:.2} bits/byte", corpus.unigram_bpb(1 << 16));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts-dir", "artifacts");
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading artifacts dir {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().to_string())
+        .filter(|n| n.ends_with(".meta.json"))
+        .collect();
+    entries.sort();
+    println!("{:<32} {:>7} {:>8} {:>6} {:>6}", "artifact", "inputs", "outputs", "batch", "seq");
+    for name in entries {
+        let base = name.trim_end_matches(".meta.json");
+        match quartet2::runtime::ArtifactMeta::load(Path::new(dir), base) {
+            Ok(m) => println!(
+                "{:<32} {:>7} {:>8} {:>6} {:>6}",
+                base,
+                m.inputs.len(),
+                m.outputs.len(),
+                m.batch,
+                m.seq_len
+            ),
+            Err(e) => println!("{base:<32} (unreadable: {e})"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,277 @@
+//! Metrics: loss curves, bits-per-byte, gap-vs-baseline, CLT
+//! concentration series, and result persistence.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Nats-per-token -> bits-per-byte for a byte-level tokenizer.
+pub fn bpb(loss_nats: f64, tokens_per_byte: f64) -> f64 {
+    loss_nats / std::f64::consts::LN_2 * tokens_per_byte
+}
+
+/// One logged training point.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub tokens: usize,
+    pub train_loss: f64,
+    pub val_loss: Option<f64>,
+    pub wall_secs: f64,
+}
+
+/// A training-run record: the loss curve plus identifying metadata.
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub run_name: String,
+    pub scheme: String,
+    pub preset: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl LossCurve {
+    pub fn new(run_name: &str, scheme: &str, preset: &str) -> Self {
+        LossCurve {
+            run_name: run_name.into(),
+            scheme: scheme.into(),
+            preset: preset.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    /// Final validation loss (the Figure 1/2/4 quantity).
+    pub fn final_val_loss(&self) -> Option<f64> {
+        self.points.iter().rev().find_map(|p| p.val_loss)
+    }
+
+    /// Mean training loss over the last `n` logged points (smoother
+    /// alternative when eval points are sparse).
+    pub fn tail_train_loss(&self, n: usize) -> f64 {
+        let tail = &self.points[self.points.len().saturating_sub(n)..];
+        tail.iter().map(|p| p.train_loss).sum::<f64>() / tail.len().max(1) as f64
+    }
+
+    /// Tokens/sec over the whole run.
+    pub fn throughput(&self) -> f64 {
+        match (self.points.first(), self.points.last()) {
+            (Some(a), Some(b)) if b.wall_secs > a.wall_secs => {
+                (b.tokens - a.tokens) as f64 / (b.wall_secs - a.wall_secs)
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("run_name", json::s(&self.run_name)),
+            ("scheme", json::s(&self.scheme)),
+            ("preset", json::s(&self.preset)),
+            (
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|p| {
+                            json::obj(vec![
+                                ("step", json::n(p.step as f64)),
+                                ("tokens", json::n(p.tokens as f64)),
+                                ("train_loss", json::n(p.train_loss)),
+                                (
+                                    "val_loss",
+                                    p.val_loss.map(json::n).unwrap_or(Json::Null),
+                                ),
+                                ("wall_secs", json::n(p.wall_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {dir:?}"))?;
+        let path = dir.join(format!("{}.json", self.run_name));
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+
+    pub fn load(path: &Path) -> Result<LossCurve> {
+        let v = Json::parse_file(path)?;
+        let mut curve = LossCurve::new(
+            v.get("run_name")?.as_str()?,
+            v.get("scheme")?.as_str()?,
+            v.get("preset")?.as_str()?,
+        );
+        for p in v.get("points")?.as_arr()? {
+            curve.push(CurvePoint {
+                step: p.get("step")?.as_usize()?,
+                tokens: p.get("tokens")?.as_usize()?,
+                train_loss: p.get("train_loss")?.as_f64()?,
+                val_loss: match p.get("val_loss")? {
+                    Json::Null => None,
+                    v => Some(v.as_f64()?),
+                },
+                wall_secs: p.get("wall_secs")?.as_f64()?,
+            });
+        }
+        Ok(curve)
+    }
+}
+
+/// Loss gap of a quantized run relative to its BF16 baseline — the
+/// y-axis of Figures 1, 2, 4 and 5.
+pub fn loss_gap(quantized: &LossCurve, baseline: &LossCurve) -> Option<f64> {
+    Some(quantized.final_val_loss()? - baseline.final_val_loss()?)
+}
+
+/// Relative quadratic error of a running-average estimator — the
+/// Figure 9 concentration series. `avg` is (1/B) * sum of estimates,
+/// `reference` the exact value.
+pub fn rel_quadratic_error(avg: &[f32], reference: &[f32]) -> f64 {
+    let num: f64 = avg
+        .iter()
+        .zip(reference)
+        .map(|(a, r)| ((a - r) as f64).powi(2))
+        .sum();
+    let den: f64 = reference.iter().map(|r| (*r as f64).powi(2)).sum();
+    num / den.max(1e-30)
+}
+
+/// Simple streaming mean/variance (Welford) for bench statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        }
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bpb_conversion() {
+        // ln(256) nats/token at 1 token/byte = 8 bits/byte
+        assert!((bpb((256f64).ln(), 1.0) - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_roundtrip() {
+        let dir = std::env::temp_dir().join("q2_metrics_test");
+        let mut c = LossCurve::new("run1", "quartet2", "tiny");
+        c.push(CurvePoint {
+            step: 0,
+            tokens: 512,
+            train_loss: 5.5,
+            val_loss: None,
+            wall_secs: 0.1,
+        });
+        c.push(CurvePoint {
+            step: 50,
+            tokens: 512 * 51,
+            train_loss: 4.0,
+            val_loss: Some(4.1),
+            wall_secs: 10.0,
+        });
+        let path = c.save(&dir).unwrap();
+        let back = LossCurve::load(&path).unwrap();
+        assert_eq!(back.points.len(), 2);
+        assert_eq!(back.final_val_loss(), Some(4.1));
+        assert_eq!(back.scheme, "quartet2");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gap() {
+        let mut q = LossCurve::new("q", "quartet2", "tiny");
+        let mut b = LossCurve::new("b", "bf16", "tiny");
+        for (c, v) in [(&mut q, 4.2), (&mut b, 4.0)] {
+            c.push(CurvePoint {
+                step: 1,
+                tokens: 1,
+                train_loss: v,
+                val_loss: Some(v),
+                wall_secs: 1.0,
+            });
+        }
+        assert!((loss_gap(&q, &b).unwrap() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err() {
+        let exact = [1.0f32, 2.0, 3.0];
+        assert_eq!(rel_quadratic_error(&exact, &exact), 0.0);
+        let off = [1.1f32, 2.0, 3.0];
+        assert!(rel_quadratic_error(&off, &exact) > 0.0);
+    }
+
+    #[test]
+    fn stats_welford() {
+        let mut s = Stats::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let mut c = LossCurve::new("t", "bf16", "tiny");
+        c.push(CurvePoint { step: 0, tokens: 0, train_loss: 1.0, val_loss: None, wall_secs: 0.0 });
+        c.push(CurvePoint { step: 10, tokens: 1000, train_loss: 1.0, val_loss: None, wall_secs: 2.0 });
+        assert!((c.throughput() - 500.0).abs() < 1e-9);
+    }
+}

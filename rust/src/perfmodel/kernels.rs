@@ -1,0 +1,182 @@
+//! Quantization-kernel cost accounting (paper §7, Table 2).
+//!
+//! Derives, from the format constants alone, the bits moved per element
+//! and the MMA (rotation) instruction counts of every quantization
+//! kernel in the Quartet II pipeline — in particular the naïve
+//! (Figure 7) vs post hoc range alignment (Figure 8) comparison of the
+//! re-quantizing MS-EDEN operation, which Table 2 summarizes.
+
+use super::GpuSpec;
+use crate::GROUP;
+
+/// Bits per element of each storage format (scales amortized per group).
+pub const BITS_BF16: f64 = 16.0;
+/// NVFP4: 4-bit payload + one E4M3 scale per 16 elements.
+pub const BITS_NVFP4: f64 = 4.0 + 8.0 / GROUP as f64;
+/// ER-NVFP4 pseudo-scales: one BF16 ("E8M3") value per 16 elements.
+pub const BITS_PSEUDO_SCALE: f64 = 16.0 / GROUP as f64;
+/// Final FP8 scales alone.
+pub const BITS_FP8_SCALE: f64 = 8.0 / GROUP as f64;
+/// FP4 payload alone.
+pub const BITS_FP4_PAYLOAD: f64 = 4.0;
+
+/// GMEM traffic + rotation-MMA counts of one kernel pipeline,
+/// per element of the tensor being (re-)quantized.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelCost {
+    /// bits loaded GMEM -> SM, per element, summed over all passes
+    pub load_bits: f64,
+    /// bits stored SM -> GMEM, per element
+    pub store_bits: f64,
+    /// `mma.m16n8k16` rotation-GEMM calls per NVFP4 group of 16
+    pub mma_per_group: f64,
+}
+
+impl KernelCost {
+    pub fn total_bits(&self) -> f64 {
+        self.load_bits + self.store_bits
+    }
+
+    /// Wall-clock estimate for an n-element tensor on `gpu`: bandwidth
+    /// term + rotation-FLOPs term (2*128 MACs per rotated element).
+    pub fn time(&self, n_elems: usize, gpu: &GpuSpec) -> f64 {
+        let bytes = self.total_bits() / 8.0 * n_elems as f64;
+        let rot_flops =
+            self.mma_per_group * 2.0 * 128.0 * n_elems as f64;
+        gpu.mem_time(bytes) + rot_flops / (gpu.bf16_flops * gpu.achievable)
+    }
+}
+
+/// Table 2, "Naïve" column: re-quantizing MS-EDEN with a separate
+/// abs-max kernel. The saved NVFP4 tensor is loaded AND rotated twice
+/// (once to reduce the rotated abs-max, once to quantize); only the
+/// second pass writes the final NVFP4 output.
+pub fn ms_eden_requant_naive() -> KernelCost {
+    KernelCost {
+        load_bits: BITS_NVFP4 + BITS_NVFP4, // 4.5 + 4.5
+        store_bits: 0.0 + BITS_NVFP4,       // 0 + 4.5
+        mma_per_group: 2.0,                 // rotation GEMM twice
+    }
+}
+
+/// Table 2, "Post hoc" column: pass 1 loads once, rotates once, writes
+/// FP4 payload + extended-range pseudo-scales; pass 2 touches scales
+/// only (loads pseudo-scales, writes FP8 scales).
+pub fn ms_eden_requant_posthoc() -> KernelCost {
+    KernelCost {
+        load_bits: BITS_NVFP4 + BITS_PSEUDO_SCALE, // 4.5 + 1
+        store_bits: (BITS_FP4_PAYLOAD + BITS_PSEUDO_SCALE) + BITS_FP8_SCALE, // 5 + 0.5
+        mma_per_group: 1.0,
+    }
+}
+
+/// MS-EDEN quantization of a BF16 tensor (the error tensor E), post hoc
+/// pipeline: load BF16 once, rotate once, write ER then fix scales.
+pub fn ms_eden_quant_bf16() -> KernelCost {
+    KernelCost {
+        load_bits: BITS_BF16 + BITS_PSEUDO_SCALE,
+        store_bits: (BITS_FP4_PAYLOAD + BITS_PSEUDO_SCALE) + BITS_FP8_SCALE,
+        mma_per_group: 1.0,
+    }
+}
+
+/// Four-over-Six forward quantization: one BF16 load, both grid branches
+/// evaluated in registers, one NVFP4 store. No rotation.
+pub fn four_six_quant() -> KernelCost {
+    KernelCost {
+        load_bits: BITS_BF16,
+        store_bits: BITS_NVFP4,
+        mma_per_group: 0.0,
+    }
+}
+
+/// Plain SR/RTN quantization of a BF16 tensor (baseline recipes),
+/// with optional backward RHT rotation.
+pub fn sr_quant(rotated: bool) -> KernelCost {
+    KernelCost {
+        load_bits: if rotated {
+            2.0 * BITS_BF16 // abs-max of rotated tensor needs its own pass
+        } else {
+            BITS_BF16
+        },
+        store_bits: BITS_NVFP4,
+        mma_per_group: if rotated { 2.0 } else { 0.0 },
+    }
+}
+
+/// Render Table 2 as printable rows.
+pub fn table2_rows() -> Vec<(String, String, String, String)> {
+    let naive = ms_eden_requant_naive();
+    let post = ms_eden_requant_posthoc();
+    vec![
+        (
+            "GMEM->SM bits/elem".into(),
+            format!("{:.1}+{:.1}", BITS_NVFP4, BITS_NVFP4),
+            format!("{:.1}+{:.0}", BITS_NVFP4, BITS_PSEUDO_SCALE),
+            format!("{:.2} vs {:.2}", naive.load_bits, post.load_bits),
+        ),
+        (
+            "SM->GMEM bits/elem".into(),
+            format!("0+{:.1}", BITS_NVFP4),
+            format!(
+                "{:.0}+{:.1}",
+                BITS_FP4_PAYLOAD + BITS_PSEUDO_SCALE,
+                BITS_FP8_SCALE
+            ),
+            format!("{:.2} vs {:.2}", naive.store_bits, post.store_bits),
+        ),
+        (
+            "mma.m16n8k16 / group".into(),
+            format!("{}", naive.mma_per_group),
+            format!("{}", post.mma_per_group),
+            String::new(),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let naive = ms_eden_requant_naive();
+        let post = ms_eden_requant_posthoc();
+        // Paper Table 2: naive 4.5+4.5 loaded / 0+4.5 stored / 2 mma;
+        // post hoc 4.5+1 / 5+0.5 / 1 mma.
+        assert!((naive.load_bits - 9.0).abs() < 1e-9);
+        assert!((naive.store_bits - 4.5).abs() < 1e-9);
+        assert_eq!(naive.mma_per_group, 2.0);
+        assert!((post.load_bits - 5.5).abs() < 1e-9);
+        assert!((post.store_bits - 5.5).abs() < 1e-9);
+        assert_eq!(post.mma_per_group, 1.0);
+    }
+
+    #[test]
+    fn posthoc_saves_20pct_bandwidth() {
+        // "a theoretical bandwidth saving of around 20%" (§7)
+        let naive = ms_eden_requant_naive().total_bits();
+        let post = ms_eden_requant_posthoc().total_bits();
+        let saving = 1.0 - post / naive;
+        assert!((0.15..0.30).contains(&saving), "saving={saving}");
+    }
+
+    #[test]
+    fn second_pass_is_tiny() {
+        // "practical latency of the second kernel being more than 10x
+        // less than the first one" (§7): scales-only traffic.
+        let pass1 = BITS_NVFP4 + BITS_FP4_PAYLOAD + BITS_PSEUDO_SCALE;
+        let pass2 = BITS_PSEUDO_SCALE + BITS_FP8_SCALE;
+        assert!(pass1 / pass2 > 6.0);
+    }
+
+    #[test]
+    fn time_positive_and_ordered() {
+        let gpu = super::super::RTX5090;
+        let n = 4096 * 4096;
+        let tn = ms_eden_requant_naive().time(n, &gpu);
+        let tp = ms_eden_requant_posthoc().time(n, &gpu);
+        assert!(tp < tn);
+        assert!(tp > 0.0);
+    }
+}

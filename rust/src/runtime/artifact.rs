@@ -1,0 +1,177 @@
+//! Artifact metadata: the `<name>.meta.json` sidecar contract.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            _ => bail!("unsupported dtype {s:?}"),
+        })
+    }
+}
+
+/// Shape + dtype + logical name of one artifact input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: DType::parse(v.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// flat parameter-leaf paths in artifact order (train/eval/init/fig9)
+    pub param_paths: Vec<String>,
+    pub preset: Option<String>,
+    pub scheme: Option<String>,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path, name: &str) -> Result<ArtifactMeta> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let v = Json::parse_file(&path)
+            .with_context(|| format!("artifact meta {path:?}"))?;
+        Self::from_json(v)
+    }
+
+    pub fn from_json(v: Json) -> Result<ArtifactMeta> {
+        let inputs = v
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = v
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let param_paths = match v.opt("param_paths") {
+            Some(p) => p
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_str().map(String::from))
+                .collect::<Result<Vec<_>>>()?,
+            None => vec![],
+        };
+        let seq_len = v
+            .opt("model")
+            .and_then(|m| m.opt("seq_len"))
+            .and_then(|s| s.as_usize().ok())
+            .unwrap_or(0);
+        Ok(ArtifactMeta {
+            name: v.get("name")?.as_str()?.to_string(),
+            kind: v
+                .opt("kind")
+                .and_then(|k| k.as_str().ok())
+                .unwrap_or("unknown")
+                .to_string(),
+            inputs,
+            outputs,
+            param_paths,
+            preset: v.opt("preset").and_then(|p| p.as_str().ok()).map(String::from),
+            scheme: v.opt("scheme").and_then(|p| p.as_str().ok()).map(String::from),
+            batch: v.opt("batch").and_then(|b| b.as_usize().ok()).unwrap_or(0),
+            seq_len,
+            raw: v,
+        })
+    }
+
+    pub fn hlo_path(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("{}.hlo.txt", self.name))
+    }
+
+    /// Number of parameter leaves (train artifacts carry 3 copies:
+    /// params, m, v).
+    pub fn n_params(&self) -> usize {
+        self.param_paths.len()
+    }
+
+    /// Index of a named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input {name:?}", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "eval_tiny_bf16",
+        "kind": "eval",
+        "preset": "tiny",
+        "scheme": "bf16",
+        "batch": 4,
+        "model": {"dim": 128, "seq_len": 128},
+        "param_paths": ["embed", "layers.wq"],
+        "inputs": [
+            {"name": "params.embed", "shape": [256, 128], "dtype": "f32"},
+            {"name": "tokens", "shape": [4, 128], "dtype": "i32"}
+        ],
+        "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+    }"#;
+
+    #[test]
+    fn parses_meta() {
+        let m = ArtifactMeta::from_json(Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.name, "eval_tiny_bf16");
+        assert_eq!(m.kind, "eval");
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.seq_len, 128);
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].dtype, DType::F32);
+        assert_eq!(m.inputs[0].numel(), 256 * 128);
+        assert_eq!(m.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.outputs[0].numel(), 1);
+        assert_eq!(m.input_index("tokens").unwrap(), 1);
+        assert!(m.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert!(DType::parse("f32").is_ok());
+        assert!(DType::parse("f64").is_err());
+    }
+}

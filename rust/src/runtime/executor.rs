@@ -1,0 +1,283 @@
+//! PJRT execution engine: compile HLO-text artifacts, run them, shuttle
+//! literals across the boundary.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::{ArtifactMeta, DType, TensorSpec};
+
+/// Wrapper around the PJRT CPU client. One engine per process; all
+/// loaded artifacts share it.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `artifacts/<name>.{hlo.txt,meta.json}`.
+    pub fn load(&self, dir: &Path, name: &str) -> Result<LoadedArtifact> {
+        let meta = ArtifactMeta::load(dir, name)?;
+        let hlo_path = meta.hlo_path(dir);
+        if !hlo_path.exists() {
+            bail!(
+                "artifact HLO missing: {hlo_path:?} — build it with \
+                 `make artifacts` (or `python -m compile.aot --preset \
+                 {} --scheme {}`)",
+                meta.preset.as_deref().unwrap_or("<preset>"),
+                meta.scheme.as_deref().unwrap_or("<scheme>"),
+            );
+        }
+        let hlo_str = hlo_path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-UTF-8 path {hlo_path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(hlo_str)
+            .map_err(|e| anyhow!("parsing HLO text {hlo_path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        Ok(LoadedArtifact {
+            name: name.to_string(),
+            meta,
+            exe,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Check whether an artifact bundle exists on disk (without loading).
+    pub fn artifact_exists(dir: &Path, name: &str) -> bool {
+        dir.join(format!("{name}.hlo.txt")).exists()
+            && dir.join(format!("{name}.meta.json")).exists()
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub name: String,
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    #[allow(dead_code)]
+    dir: PathBuf,
+}
+
+/// Host-side tensor crossing the artifact boundary.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl HostTensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+            HostTensor::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+            HostTensor::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.len() != spec.numel() {
+            bail!(
+                "input {:?}: expected {} elements ({:?}), got {}",
+                spec.name,
+                spec.numel(),
+                spec.shape,
+                self.len()
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input {:?}: dtype mismatch ({:?} vs {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v.as_slice()),
+            HostTensor::I32(v) => xla::Literal::vec1(v.as_slice()),
+            HostTensor::U32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        if spec.shape.is_empty() {
+            // rank-0: reshape a 1-element vec to scalar shape
+            Ok(lit
+                .reshape(&[])
+                .map_err(|e| anyhow!("reshape {:?} to scalar: {e}", spec.name))?)
+        } else {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {:?} to {dims:?}: {e}", spec.name))?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32(
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading {:?}: {e}", spec.name))?,
+            ),
+            DType::I32 => HostTensor::I32(
+                lit.to_vec::<i32>()
+                    .map_err(|e| anyhow!("reading {:?}: {e}", spec.name))?,
+            ),
+            DType::U32 => HostTensor::U32(
+                lit.to_vec::<u32>()
+                    .map_err(|e| anyhow!("reading {:?}: {e}", spec.name))?,
+            ),
+        })
+    }
+}
+
+impl LoadedArtifact {
+    /// Hot-path execution: raw literals in, raw literals out (no host
+    /// f32 round-trip). The coordinator keeps the full optimizer state
+    /// as `xla::Literal`s and feeds them back by reference each step —
+    /// the §Perf fix that removed ~4 full-state memcpys per step
+    /// (EXPERIMENTS.md §Perf).
+    pub fn run_raw(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", self.name))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {} declared {} outputs, produced {}",
+                self.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Build an input literal for a named position from a host tensor.
+    pub fn literal_for(&self, idx: usize, t: &HostTensor) -> Result<xla::Literal> {
+        t.to_literal(&self.meta.inputs[idx])
+    }
+
+    /// Execute with host tensors; validates arity/shape/dtype against the
+    /// meta contract, unpacks the tuple output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.meta.inputs)
+            .map(|(t, spec)| t.to_literal(spec))
+            .collect::<Result<_>>()?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.name))?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", self.name))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {} declared {} outputs, produced {}",
+                self.name,
+                self.meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_validation() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 2],
+            dtype: DType::F32,
+        };
+        let ok = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(ok.to_literal(&spec).is_ok());
+        let wrong_len = HostTensor::F32(vec![1.0]);
+        assert!(wrong_len.to_literal(&spec).is_err());
+        let wrong_ty = HostTensor::I32(vec![1, 2, 3, 4]);
+        assert!(wrong_ty.to_literal(&spec).is_err());
+    }
+
+    #[test]
+    fn scalar_accessors() {
+        let t = HostTensor::F32(vec![3.5]);
+        assert_eq!(t.scalar_f32().unwrap(), 3.5);
+        assert!(HostTensor::F32(vec![1.0, 2.0]).scalar_f32().is_err());
+        assert!(HostTensor::I32(vec![1]).scalar_f32().is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Interchange contract (see `python/compile/aot.py`):
+//! `artifacts/<name>.hlo.txt` is HLO *text* (xla_extension 0.5.1
+//! rejects jax >= 0.5 serialized protos — 64-bit instruction ids; the
+//! text parser reassigns ids), `artifacts/<name>.meta.json` describes
+//! the exact input/output arity, shapes and dtypes, validated at load.
+//!
+//! Python never runs here: artifacts are produced once by
+//! `make artifacts` and the binary is self-contained afterwards.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, DType, TensorSpec};
+pub use executor::{Engine, LoadedArtifact};

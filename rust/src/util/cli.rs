@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `program <subcommand> [--flag] [--key value] [positional…]`
+//! with typed accessors, defaults, and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&str> {
+        self.opt(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}={v}: not an integer ({e})")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}={v}: not an integer ({e})")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}={v}: not a number ({e})")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        // note: a bare `--name` followed by a non-`--` token parses as
+        // an option (`--name value`) — flags must come last or be
+        // followed by another `--option` (how every quartet2 command is
+        // shaped: positionals first, e.g. `experiment fig4 --resume`).
+        let a = parse("train extra --steps 300 --preset tiny --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 300);
+        assert_eq!(a.get_or("preset", "x"), "tiny");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn eq_style() {
+        let a = parse("bench --out=results.json");
+        assert_eq!(a.get("out").unwrap(), "results.json");
+    }
+
+    #[test]
+    fn missing_required() {
+        assert!(parse("x").get("nope").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.f64_or("lr", 0.001).unwrap(), 0.001);
+        assert_eq!(a.u64_or("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = parse("run --steps abc");
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates replacing unavailable third-party crates.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so this module provides the small,
+//! well-bounded utilities a production crate would normally pull from
+//! crates.io: a seeded RNG ([`rng`]), a JSON parser/writer ([`json`]),
+//! and a CLI argument parser ([`cli`]).
+
+pub mod cli;
+pub mod json;
+pub mod rng;

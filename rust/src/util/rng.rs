@@ -1,0 +1,197 @@
+//! Deterministic pseudo-randomness: SplitMix64 seeding, xoshiro256++
+//! streams, uniform/normal/Rademacher draws.
+//!
+//! Every stochastic component in the crate (SR uniforms, RHT signs,
+//! synthetic corpus, property-test generators) goes through this module
+//! with an explicit seed, so all experiments are exactly reproducible —
+//! the paper's own requirement for its quantizer randomness ω (§3).
+
+/// SplitMix64: used to expand a single `u64` seed into stream state.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality, 2^256-period generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from Box-Muller
+    spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed a stream from a single u64 (SplitMix64 expansion, as
+    /// recommended by the xoshiro authors).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64(seed);
+        Rng {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            spare: None,
+        }
+    }
+
+    /// Derive an independent child stream (cheap `fold_in` analogue).
+    pub fn fold_in(&self, tag: u64) -> Rng {
+        let mut sm = SplitMix64(self.s[0] ^ tag.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut sm2 = SplitMix64(self.s[2] ^ tag.rotate_left(17));
+        Rng {
+            s: [sm.next_u64(), sm2.next_u64(), sm.next_u64(), sm2.next_u64()],
+            spare: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let [s0, s1, s2, s3] = self.s;
+        let result = s0.wrapping_add(s3).rotate_left(23).wrapping_add(s0);
+        let t = s1 << 17;
+        let mut s = [s0, s1, s2, s3];
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        self.s = s;
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // widening-multiply rejection-free (Lemire); bias < 2^-64 * n
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller (deterministic, good enough for
+    /// data generation and tests; the hot loops never sample normals).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            let u2 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// ±1 with equal probability.
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Vector helpers ------------------------------------------------
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal_f32()).collect()
+    }
+
+    pub fn uniform_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_f32()).collect()
+    }
+
+    pub fn rademacher_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rademacher()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn fold_in_decorrelates() {
+        let base = Rng::seed_from(7);
+        let mut a = base.fold_in(1);
+        let mut b = base.fold_in(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::seed_from(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(2);
+        let n = 100_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        assert!((s1 / n as f64).abs() < 0.02);
+        assert!((s2 / n as f64 - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut r = Rng::seed_from(3);
+        let sum: f32 = (0..10_000).map(|_| r.rademacher()).sum();
+        assert!(sum.abs() < 400.0);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::seed_from(4);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+}
