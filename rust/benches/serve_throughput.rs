@@ -1,0 +1,116 @@
+//! Bench: serving decode throughput — continuous batching vs
+//! single-request decode on the native NVFP4 stack.
+//!
+//! The scheduler coalesces decode steps of all active sequences into
+//! one micro-batch, so each packed weight group is unpacked once per
+//! step instead of once per sequence (plus the per-step fixed costs
+//! amortize). This bench quantifies that: decode tokens/sec at batch 1
+//! vs batched, with the acceptance bar `batched >= 2x single`.
+//!
+//! Results land in `results/serve_throughput.json` using the same
+//! bench-JSON shape as the fig6/fig10 files (array of flat records).
+
+use quartet2::bench::header;
+use quartet2::serve::{
+    preset, ModelWeightsF32, PackedModel, Request, Scheduler, SchedulerOptions,
+};
+use quartet2::util::json::{self, Json};
+
+const NEW_TOKENS: usize = 32;
+const PROMPT_LEN: usize = 8;
+const REPEATS: usize = 3;
+
+/// Decode throughput (tokens/sec over pure-decode steps) serving
+/// `n_requests` identical-shape requests at `max_batch`.
+fn decode_tok_s(model: &PackedModel, n_requests: usize, max_batch: usize) -> f64 {
+    let mut best = 0.0f64;
+    for rep in 0..REPEATS {
+        let mut sched = Scheduler::new(
+            model,
+            SchedulerOptions {
+                max_batch,
+                prefill_chunk: 32,
+                kv_capacity: 128,
+                temperature: 0.0,
+                seed: 3 + rep as u64,
+            },
+        )
+        .expect("scheduler");
+        for i in 0..n_requests {
+            let prompt: Vec<i32> = (0..PROMPT_LEN).map(|j| ((i * 31 + j * 7) % 256) as i32).collect();
+            sched
+                .submit(Request {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: NEW_TOKENS,
+                })
+                .expect("submit");
+        }
+        sched.run_until_idle().expect("serve");
+        best = best.max(sched.stats().decode_tokens_per_sec());
+    }
+    best
+}
+
+fn main() {
+    header("Serving: continuous-batched vs single-request decode (NVFP4 packed)");
+    let cfg = preset("base").expect("preset");
+    let weights = ModelWeightsF32::init(&cfg, 40).expect("init");
+    let model = PackedModel::pack(&weights, true, 41).expect("pack");
+    println!(
+        "model: base ({} params, {} packed weight bytes)",
+        cfg.param_count(),
+        model.packed_bytes()
+    );
+
+    // warmup
+    let _ = decode_tok_s(&model, 1, 1);
+
+    let single = decode_tok_s(&model, 1, 1);
+    println!("{:<28} {:>12.1} tok/s", "single-request decode", single);
+
+    let mut rows = vec![json::obj(vec![
+        ("name", json::s("decode_single")),
+        ("batch", json::n(1.0)),
+        ("tok_s", json::n(single)),
+        ("speedup_vs_single", json::n(1.0)),
+    ])];
+    let mut best = (1usize, single);
+    for &b in &[2usize, 4, 8, 16] {
+        let tps = decode_tok_s(&model, b, b);
+        let speedup = tps / single;
+        println!(
+            "{:<28} {:>12.1} tok/s  ({:.2}x single)",
+            format!("batched decode (batch {b})"),
+            tps,
+            speedup
+        );
+        rows.push(json::obj(vec![
+            ("name", json::s("decode_batched")),
+            ("batch", json::n(b as f64)),
+            ("tok_s", json::n(tps)),
+            ("speedup_vs_single", json::n(speedup)),
+        ]));
+        if tps > best.1 {
+            best = (b, tps);
+        }
+    }
+    let ratio = best.1 / single;
+    println!(
+        "\nbest: batch {} at {:.1} tok/s -> {:.2}x single-request \
+         (scheduler coalescing target: >= 2x)",
+        best.0, best.1, ratio
+    );
+    if ratio < 2.0 {
+        println!("WARNING: coalescing speedup below the 2x target");
+    }
+
+    let results = std::path::Path::new("results");
+    std::fs::create_dir_all(results).expect("results dir");
+    std::fs::write(
+        results.join("serve_throughput.json"),
+        Json::Arr(rows).to_string(),
+    )
+    .expect("write results");
+    println!("results -> results/serve_throughput.json");
+}

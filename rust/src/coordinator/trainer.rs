@@ -158,6 +158,8 @@ impl Trainer {
     }
 
     /// Validation loss averaged over `n_batches` deterministic batches.
+    /// Fails fast on `n_batches == 0` (a 0/0 would otherwise surface as
+    /// a silent NaN in the curve).
     pub fn evaluate(&self, val: &mut Batcher, n_batches: usize) -> Result<f64> {
         val.reset();
         let np = self.n_params;
@@ -179,7 +181,7 @@ impl Trainer {
                 .get_first_element::<f32>()
                 .map_err(|e| anyhow!("reading eval loss: {e}"))? as f64;
         }
-        Ok(total / n_batches as f64)
+        batch_mean(total, n_batches)
     }
 
     /// Full run: steps with periodic eval, returning the loss curve.
@@ -204,8 +206,7 @@ impl Trainer {
             let b = train_feed.next();
             let loss = self.step(s, b.tokens, b.targets)?;
             let is_last = s + 1 == opts.steps;
-            let do_eval = opts.eval_every > 0
-                && ((s + 1) % opts.eval_every == 0 || is_last);
+            let do_eval = should_eval(s, opts.steps, opts.eval_every, opts.eval_batches);
             let val_loss = if do_eval {
                 last_eval = self.evaluate(&mut val_feed, opts.eval_batches)?;
                 Some(last_eval)
@@ -238,5 +239,48 @@ impl Trainer {
             final_val_loss: last_eval,
             curve,
         })
+    }
+}
+
+/// Mean of `n_batches` accumulated losses; errors on zero batches
+/// instead of returning the 0/0 NaN `evaluate` used to produce.
+fn batch_mean(total: f64, n_batches: usize) -> Result<f64> {
+    if n_batches == 0 {
+        bail!("evaluate called with eval_batches == 0; disable eval (eval_every = 0) instead");
+    }
+    Ok(total / n_batches as f64)
+}
+
+/// Eval gate for step `s` of `steps`: periodic (and always on the last
+/// step), but only when evaluation is actually configured — an
+/// `eval_batches == 0` run must never reach `evaluate`.
+fn should_eval(s: usize, steps: usize, eval_every: usize, eval_batches: usize) -> bool {
+    let is_last = s + 1 == steps;
+    eval_every > 0 && eval_batches > 0 && ((s + 1) % eval_every == 0 || is_last)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_mean_guards_zero_batches() {
+        assert!(batch_mean(1.0, 0).is_err());
+        let m = batch_mean(6.0, 3).unwrap();
+        assert_eq!(m, 2.0);
+        assert!(!batch_mean(0.0, 4).unwrap().is_nan());
+    }
+
+    #[test]
+    fn eval_gate_respects_zero_batches() {
+        // the old gate evaluated on the last step even with 0 batches,
+        // producing NaN via 0/0
+        assert!(!should_eval(99, 100, 50, 0));
+        assert!(should_eval(99, 100, 50, 8));
+        assert!(should_eval(49, 100, 50, 8));
+        assert!(!should_eval(48, 100, 50, 8));
+        assert!(!should_eval(49, 100, 0, 8));
+        // last step always evals when configured
+        assert!(should_eval(99, 100, 7, 8));
     }
 }

@@ -41,16 +41,18 @@ pub fn run(env: &Env, id: &str) -> Result<()> {
         "fig6" => perf::fig6(env.results_dir),
         "fig10" => perf::fig10(env.results_dir),
         "table7" => perf::table7(),
+        "serving" => perf::serving(env.results_dir),
         "all-numeric" => {
             perf::table1(env.results_dir)?;
             perf::table2()?;
             perf::fig6(env.results_dir)?;
             perf::fig10(env.results_dir)?;
-            perf::table7()
+            perf::table7()?;
+            perf::serving(env.results_dir)
         }
         other => anyhow::bail!(
             "unknown experiment {other:?}; available: fig1 fig2 fig4 fig5 \
-             fig9 table1 table2 table5 table7 fig6 fig10 all-numeric"
+             fig9 table1 table2 table5 table7 fig6 fig10 serving all-numeric"
         ),
     }
 }

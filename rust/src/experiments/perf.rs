@@ -9,7 +9,7 @@ use anyhow::Result;
 use crate::formats::{
     quantize_ms_eden, quantize_rtn, quantize_sr,
 };
-use crate::perfmodel::{breakdown, kernels, linear, B200, RTX5090};
+use crate::perfmodel::{breakdown, kernels, linear, serving, B200, RTX5090};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
@@ -137,6 +137,55 @@ pub fn fig6(results_dir: &Path) -> Result<()> {
 /// Figure 10: forward-only speedups.
 pub fn fig10(results_dir: &Path) -> Result<()> {
     speedup_table(true, results_dir, "fig10")
+}
+
+/// Serving costs: prefill vs decode arithmetic intensity + NVFP4
+/// decode payoff over the Table 6 models (roofline companion to the
+/// native `serve` subsystem).
+pub fn serving(results_dir: &Path) -> Result<()> {
+    println!("\n=== Serving costs: prefill vs decode (analytical model) ===");
+    let batches = [1usize, 8, 64];
+    let mut rows = Vec::new();
+    for gpu in [&RTX5090, &B200] {
+        println!(
+            "{:<10} {:>6} {:>6} {:>14} {:>14} {:>10} {:>10} {:>8}",
+            gpu.name, "model", "batch", "prefill tok/s", "decode tok/s", "pre I", "dec I", "vs bf16"
+        );
+        for p in serving::serving_series(gpu, &batches) {
+            println!(
+                "{:<10} {:>6} {:>6} {:>14.3e} {:>14.1} {:>10.0} {:>10.1} {:>7.2}x",
+                "",
+                p.model,
+                p.batch,
+                p.prefill_tok_s,
+                p.decode_tok_s,
+                p.prefill_intensity,
+                p.decode_intensity,
+                p.decode_speedup_vs_bf16
+            );
+            rows.push(json::obj(vec![
+                ("gpu", json::s(p.gpu)),
+                ("model", json::s(p.model)),
+                ("batch", json::n(p.batch as f64)),
+                ("prefill_tok_s", json::n(p.prefill_tok_s)),
+                ("decode_tok_s", json::n(p.decode_tok_s)),
+                ("prefill_intensity", json::n(p.prefill_intensity)),
+                ("decode_intensity", json::n(p.decode_intensity)),
+                ("decode_speedup_vs_bf16", json::n(p.decode_speedup_vs_bf16)),
+            ]));
+        }
+    }
+    println!(
+        "(decode at small batch is weight-bandwidth-bound: packed NVFP4's \
+         {:.2}x byte cut is the speedup)",
+        serving::BF16_BYTES_PER_ELEM / serving::NVFP4_BYTES_PER_ELEM
+    );
+    std::fs::create_dir_all(results_dir)?;
+    std::fs::write(
+        results_dir.join("serving.json"),
+        Json::Arr(rows).to_string(),
+    )?;
+    Ok(())
 }
 
 /// Table 7: kernel-time breakdown for the 1.1B nanochat model.

@@ -82,6 +82,51 @@ pub fn rtn_e8m3(v: f32) -> f32 {
     }
 }
 
+/// Encode an on-grid E4M3 value into its byte: `sign(1) exp(4, bias 7)
+/// mantissa(3)`, OCP variant (no infinities, max ±448). Off-grid inputs
+/// are rounded via [`rtn_e4m3`] first, so `e4m3_encode` is total.
+///
+/// This is the *real* scale container for packed NVFP4 weights
+/// (`serve::packed`): one byte per 16-element group.
+#[inline]
+pub fn e4m3_encode(v: f32) -> u8 {
+    let v = rtn_e4m3(v);
+    let sign = if v.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = v.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    let e = floor_log2(a).clamp(-6, 8);
+    // mantissa in eighths of the binade step (see binade_step)
+    let m = (a / exp2i(e - 3)).round_ties_even() as u32;
+    if e == -6 && m < 8 {
+        // subnormal: exponent field 0, value = m/8 * 2^-6
+        sign | (m as u8)
+    } else if m >= 16 {
+        // rounding crossed into the next binade: (1.0, e+1)
+        sign | ((((e + 1 + 7) as u8) << 3) & 0x78)
+    } else {
+        // normal: value = (1 + (m-8)/8) * 2^e, exponent field e+7
+        sign | (((e + 7) as u8) << 3) | ((m - 8) as u8)
+    }
+}
+
+/// Inverse of [`e4m3_encode`]. The all-ones mantissa at the top
+/// exponent (0x7F/0xFF) is NaN in OCP E4M3; this decoder saturates it
+/// to ±448 (the encoder never emits it).
+#[inline]
+pub fn e4m3_decode(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0xF) as i32;
+    let m = (b & 0x7) as f32;
+    let a = if e == 0 {
+        m / 8.0 * exp2i(-6)
+    } else {
+        ((1.0 + m / 8.0) * exp2i(e - 7)).min(FP8_MAX)
+    };
+    sign * a
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +218,45 @@ mod tests {
             let rel = (mean - target as f64).abs() / target as f64;
             assert!(rel < 2e-3, "E[SR({target})]={mean}");
         }
+    }
+
+    #[test]
+    fn e4m3_codec_roundtrip_on_grid() {
+        for v in e4m3_grid() {
+            assert_eq!(e4m3_decode(e4m3_encode(v)), v, "encode({v})");
+            assert_eq!(e4m3_decode(e4m3_encode(-v)), -v);
+        }
+    }
+
+    #[test]
+    fn e4m3_codec_byte_roundtrip() {
+        for b in 0u8..=255 {
+            let v = e4m3_decode(b);
+            // NaN patterns (0x7F/0xFF) decode saturated to ±448, which
+            // re-encodes to the canonical 448 byte; skip those two.
+            if b & 0x7F == 0x7F {
+                assert_eq!(v.abs(), 448.0);
+                continue;
+            }
+            // -0 canonicalizes to +0 through rtn_e4m3
+            if b == 0x80 {
+                assert_eq!(v, 0.0);
+                continue;
+            }
+            assert_eq!(e4m3_encode(v), b, "byte {b:#x} decodes to {v}");
+        }
+    }
+
+    #[test]
+    fn e4m3_encode_total_on_off_grid_inputs() {
+        let mut rng = crate::util::rng::Rng::seed_from(9);
+        for _ in 0..2000 {
+            let v = rng.normal_f32() * 100.0;
+            let b = e4m3_encode(v);
+            assert_eq!(e4m3_decode(b), rtn_e4m3(v), "v={v}");
+        }
+        assert_eq!(e4m3_decode(e4m3_encode(1e9)), 448.0);
+        assert_eq!(e4m3_decode(e4m3_encode(-1e9)), -448.0);
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod ms_eden;
 pub mod nvfp4;
 
 pub use fp4::{fp4_decode, fp4_encode, rtn_fp4, sr_fp4, FP4_GRID, FP4_MAX};
-pub use fp8::{rtn_e4m3, rtn_e8m3, sr_e4m3, FP8_MAX};
+pub use fp8::{e4m3_decode, e4m3_encode, rtn_e4m3, rtn_e8m3, sr_e4m3, FP8_MAX};
 pub use ms_eden::{
     eden_factors, ms_eden_core, quantize_ms_eden, quantize_ms_eden_posthoc,
     quantize_rtn_clipped,

@@ -18,6 +18,14 @@
 //!   ([`experiments`]), and the analytical Blackwell performance model
 //!   ([`perfmodel`]).
 //!
+//! L3 additionally owns the **serving layer** ([`serve`]): trained (or
+//! freshly initialized) weights are bit-packed into the real NVFP4
+//! storage container (packed store -> quantized GEMM -> continuous-
+//! batching scheduler) and decoded autoregressively through a native
+//! Llama-like forward pass with a ring-buffer KV cache — `quartet2
+//! generate` / `quartet2 serve`. The roofline side of that story is
+//! [`perfmodel::serving`] (prefill vs decode arithmetic intensity).
+//!
 //! The crate additionally mirrors every NVFP4 numeric format and
 //! quantizer natively ([`formats`], [`hadamard`]) — bit-identical to
 //! the python reference (enforced by `rust/tests/parity.rs`) — so that
@@ -38,6 +46,7 @@ pub mod hadamard;
 pub mod metrics;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;
 

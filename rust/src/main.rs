@@ -4,6 +4,8 @@
 //!   train        train one (preset, scheme) via the PJRT artifacts
 //!   experiment   regenerate a paper table/figure (fig1..fig10, table1..7)
 //!   perfmodel    print the analytical Blackwell model report
+//!   generate     one-shot decode from a packed NVFP4 checkpoint
+//!   serve        continuous-batching JSON-lines request loop (stdin)
 //!   data         inspect the synthetic corpus / batcher
 //!   info         list available artifacts and their contracts
 //!
@@ -11,19 +13,26 @@
 //!   quartet2 train --preset tiny --scheme quartet2 --steps 300
 //!   quartet2 experiment fig4 --steps 150 --resume
 //!   quartet2 experiment all-numeric
+//!   quartet2 generate --preset tiny --max-tokens 32
+//!   echo '{"prompt": "hello", "max_tokens": 8}' | quartet2 serve
 //!   quartet2 info --artifacts-dir artifacts
 
-use std::path::Path;
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
 use quartet2::config::{Config, RunConfig};
 use quartet2::coordinator::{Trainer, TrainerOptions};
-use quartet2::data::Batcher;
+use quartet2::data::{Batcher, ByteTokenizer};
 use quartet2::experiments::{self, Env};
 use quartet2::runtime::Engine;
+use quartet2::serve::{
+    self, PackedModel, Request, Scheduler, SchedulerOptions,
+};
 use quartet2::util::cli::Args;
+use quartet2::util::json::{self, Json};
 
 const USAGE: &str = "\
 quartet2 — NVFP4 LLM pre-training with MS-EDEN (Quartet II reproduction)
@@ -33,9 +42,20 @@ USAGE:
                       [--seed 42] [--eval-every 50] [--eval-batches 8]
                       [--artifacts-dir artifacts] [--results-dir results]
                       [--config file.toml]
-  quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|all-numeric>
+  quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
+  quartet2 generate   [--preset tiny] [--prompt \"The \"] [--max-tokens 32]
+                      [--checkpoint checkpoints/serve_<preset>] [--temperature 0]
+                      [--kv-capacity 256] [--seed 42]
+                      one-shot decode; packs + saves a NVFP4 checkpoint on
+                      first use, then serves from the packed container
+  quartet2 serve      [--preset tiny] [--checkpoint ...] [--max-batch 8]
+                      [--prefill-chunk 32] [--kv-capacity 256]
+                      [--temperature 0] [--seed 42]
+                      JSON-lines loop on stdin: {\"id\": 1, \"prompt\": \"...\",
+                      \"max_tokens\": 16} per line; completions + a final
+                      stats record are emitted as JSON lines on stdout
   quartet2 data       [--seed 42] [--batch 4] [--seq 128] [--n 2]
   quartet2 info       [--artifacts-dir artifacts]
 ";
@@ -59,6 +79,8 @@ fn real_main() -> Result<()> {
             let env = numeric_env(&args)?;
             experiments::run(&env_ref(&env), "all-numeric")
         }
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("data") => cmd_data(&args),
         Some("info") => cmd_info(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
@@ -165,6 +187,184 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .context("experiment needs an id, e.g. `quartet2 experiment fig4`")?;
     let env = numeric_env(args)?;
     experiments::run(&env_ref(&env), id)
+}
+
+/// Load the serving checkpoint for `--preset`, packing + saving a
+/// fresh one (random init, RHT-rotated NVFP4) on first use. Always
+/// serves from the on-disk packed container.
+fn load_or_init_model(args: &Args) -> Result<(PackedModel, PathBuf)> {
+    let preset = args.get_or("preset", "tiny");
+    let seed = args.u64_or("seed", 42)?;
+    let dir = match args.opt("checkpoint") {
+        Some(d) => PathBuf::from(d),
+        None => PathBuf::from(format!("checkpoints/serve_{preset}")),
+    };
+    if !PackedModel::exists(&dir) {
+        let cfg = serve::preset(preset)?;
+        let weights = serve::ModelWeightsF32::init(&cfg, seed)?;
+        let model = PackedModel::pack(&weights, true, seed ^ 0x5e7e)?;
+        model.save(&dir)?;
+        eprintln!(
+            "packed fresh {preset} weights ({} params) -> {dir:?} ({} packed bytes)",
+            cfg.param_count(),
+            model.packed_bytes()
+        );
+    }
+    let model = PackedModel::load(&dir)
+        .with_context(|| format!("loading serving checkpoint {dir:?}"))?;
+    Ok((model, dir))
+}
+
+fn scheduler_options(args: &Args, model: &PackedModel) -> Result<SchedulerOptions> {
+    let defaults = SchedulerOptions::default();
+    Ok(SchedulerOptions {
+        max_batch: args.usize_or("max-batch", defaults.max_batch)?,
+        prefill_chunk: args.usize_or("prefill-chunk", defaults.prefill_chunk)?,
+        kv_capacity: args.usize_or("kv-capacity", model.cfg.max_seq.max(256))?,
+        temperature: args.f64_or("temperature", 0.0)? as f32,
+        seed: args.u64_or("seed", 42)?,
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let (model, dir) = load_or_init_model(args)?;
+    let prompt = args.get_or("prompt", "The ");
+    let max_tokens = args.usize_or("max-tokens", 32)?;
+    let tok = ByteTokenizer;
+    let opts = scheduler_options(args, &model)?;
+    let mut sched = Scheduler::new(&model, opts)?;
+    sched.submit(Request {
+        id: 0,
+        prompt: tok.encode(prompt.as_bytes()),
+        max_new_tokens: max_tokens,
+    })?;
+    let mut done = sched.run_until_idle()?;
+    let c = done.pop().context("scheduler returned no completion")?;
+    let text = String::from_utf8_lossy(&tok.decode(&c.tokens)).into_owned();
+    println!("checkpoint: {dir:?} ({} packed bytes)", model.packed_bytes());
+    println!("prompt ({} tokens): {prompt:?}", c.prompt_len);
+    println!("generated ({} tokens): {text:?}", c.tokens.len());
+    let s = sched.stats();
+    println!(
+        "decode: {:.1} tok/s | ttft {:.1} ms | total {:.1} ms",
+        s.decode_tokens_per_sec(),
+        c.ttft_secs * 1e3,
+        c.latency_secs * 1e3
+    );
+    Ok(())
+}
+
+fn parse_request(line: &str, fallback_id: u64, tok: &ByteTokenizer) -> Result<Request> {
+    let v = Json::parse(line).with_context(|| format!("parsing request line {line:?}"))?;
+    // absent fields get defaults; *malformed* fields are rejected so a
+    // client typo doesn't silently generate 32 tokens under a made-up id
+    let id = match v.opt("id") {
+        Some(j) => j.as_usize().context("request `id` must be a number")? as u64,
+        None => fallback_id,
+    };
+    let prompt = v.get("prompt")?.as_str()?.to_string();
+    let max_tokens = match v.opt("max_tokens") {
+        Some(j) => j
+            .as_usize()
+            .context("request `max_tokens` must be a number")?,
+        None => 32,
+    };
+    Ok(Request {
+        id,
+        prompt: tok.encode(prompt.as_bytes()),
+        max_new_tokens: max_tokens,
+    })
+}
+
+fn completion_json(c: &serve::Completion, tok: &ByteTokenizer) -> Json {
+    json::obj(vec![
+        ("event", json::s("completion")),
+        ("id", json::n(c.id as f64)),
+        ("prompt_len", json::n(c.prompt_len as f64)),
+        (
+            "text",
+            json::s(&String::from_utf8_lossy(&tok.decode(&c.tokens))),
+        ),
+        ("tokens", json::n(c.tokens.len() as f64)),
+        ("ttft_ms", json::n(c.ttft_secs * 1e3)),
+        ("latency_ms", json::n(c.latency_secs * 1e3)),
+    ])
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (model, dir) = load_or_init_model(args)?;
+    let tok = ByteTokenizer;
+    let opts = scheduler_options(args, &model)?;
+    eprintln!(
+        "serving {} from {dir:?}: max_batch {}, prefill_chunk {}, kv {}",
+        model.cfg.name, opts.max_batch, opts.prefill_chunk, opts.kv_capacity
+    );
+    let mut sched = Scheduler::new(&model, opts)?;
+    // Requests stream in on a reader thread so the engine keeps
+    // stepping in-flight sequences while stdin sits idle (a blocking
+    // read here would stall decoding until the next line arrived).
+    let (tx, rx) = std::sync::mpsc::channel::<String>();
+    let reader = std::thread::spawn(move || {
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    let mut next_id = 1u64;
+    let mut stdin_open = true;
+    let emit_error = |e: &anyhow::Error| {
+        let err = json::obj(vec![
+            ("event", json::s("error")),
+            ("error", json::s(&format!("{e:#}"))),
+        ]);
+        println!("{}", err.to_string());
+    };
+    while stdin_open || sched.outstanding() > 0 {
+        // drain whatever arrived; block only when there is nothing to do
+        loop {
+            let recv = if sched.outstanding() == 0 && stdin_open {
+                rx.recv().map_err(|_| std::sync::mpsc::TryRecvError::Disconnected)
+            } else {
+                rx.try_recv()
+            };
+            match recv {
+                Ok(line) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match parse_request(line.trim(), next_id, &tok)
+                        .and_then(|req| {
+                            next_id = next_id.max(req.id) + 1;
+                            sched.submit(req)
+                        }) {
+                        Ok(()) => {}
+                        Err(e) => emit_error(&e),
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    stdin_open = false;
+                    break;
+                }
+            }
+        }
+        if sched.outstanding() > 0 {
+            for c in sched.step()? {
+                println!("{}", completion_json(&c, &tok).to_string());
+            }
+        }
+    }
+    reader.join().ok();
+    let mut stats = match sched.report() {
+        Json::Obj(m) => m,
+        other => bail!("unexpected stats shape {other:?}"),
+    };
+    stats.insert("event".into(), json::s("stats"));
+    println!("{}", Json::Obj(stats).to_string());
+    Ok(())
 }
 
 fn cmd_data(args: &Args) -> Result<()> {

@@ -195,6 +195,73 @@ impl Stats {
     }
 }
 
+/// Latency sample recorder with percentile readout — the serving
+/// layer's p50/p99 reporting substrate.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn push(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Nearest-rank percentile (`q` in [0, 1]); `None` when empty.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let rank = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+        Some(sorted[rank])
+    }
+
+    pub fn p50(&self) -> Option<f64> {
+        self.percentile(0.50)
+    }
+
+    pub fn p99(&self) -> Option<f64> {
+        self.percentile(0.99)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        // sort once and index both ranks (percentile() would re-sort)
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let rank = |q: f64| -> Json {
+            if sorted.is_empty() {
+                Json::Null
+            } else {
+                let i = (q * (sorted.len() - 1) as f64).round() as usize;
+                json::n(sorted[i] * 1e3)
+            }
+        };
+        json::obj(vec![
+            ("count", json::n(self.count() as f64)),
+            (
+                "mean_ms",
+                self.mean().map(|s| json::n(s * 1e3)).unwrap_or(Json::Null),
+            ),
+            ("p50_ms", rank(0.50)),
+            ("p99_ms", rank(0.99)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -265,6 +332,20 @@ mod tests {
         assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-9);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut r = LatencyRecorder::default();
+        assert!(r.p50().is_none());
+        for i in 1..=100 {
+            r.push(i as f64 * 1e-3);
+        }
+        assert_eq!(r.count(), 100);
+        assert!((r.p50().unwrap() - 0.050).abs() < 2e-3);
+        assert!((r.p99().unwrap() - 0.099).abs() < 2e-3);
+        assert!((r.mean().unwrap() - 0.0505).abs() < 1e-6);
+        assert!(r.p99().unwrap() >= r.p50().unwrap());
     }
 
     #[test]

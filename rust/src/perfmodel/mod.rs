@@ -19,10 +19,14 @@
 //! 3. **Layer/model aggregation** ([`linear`], [`breakdown`]): the
 //!    Table 6 layer shapes, fwd+bwd GEMM inventories, and the Table 7
 //!    whole-model time breakdown.
+//! 4. **Serving costs** ([`serving`]): prefill vs decode arithmetic
+//!    intensity and the decode-throughput payoff of packed NVFP4
+//!    weights — the roofline companion to the native `serve` stack.
 
 pub mod breakdown;
 pub mod kernels;
 pub mod linear;
+pub mod serving;
 
 /// Peak capabilities of a modeled accelerator.
 #[derive(Clone, Copy, Debug)]

@@ -1,0 +1,159 @@
+//! Serving-cost roofline: prefill vs decode arithmetic intensity.
+//!
+//! Training GEMMs are compute-bound; serving splits into two regimes:
+//!
+//! * **Prefill** processes the whole prompt at once — `m = prompt`
+//!   rows per linear, high arithmetic intensity, lands on the compute
+//!   roof like training.
+//! * **Decode** feeds one row per sequence — `m = batch`, intensity
+//!   `~2*batch` FLOPs per weight byte, bandwidth-bound until the batch
+//!   is large. This is why packed NVFP4 weights (0.5625 B/elem vs 2
+//!   for BF16, a 3.6x traffic cut) translate almost 1:1 into decode
+//!   throughput at small batch, and why the serving scheduler
+//!   (`serve::scheduler`) coalesces decode steps.
+//!
+//! Costs are aggregated over the paper's Table 6 layer shapes (one
+//! fwd pass of the four linears), matching how [`super::linear`]
+//! frames the training-side speedups.
+
+use super::linear::ModelShapes;
+use super::{GpuSpec, Precision};
+
+/// NVFP4 packed bytes per element (FP4 payload + E4M3 scale / 16).
+pub const NVFP4_BYTES_PER_ELEM: f64 = 0.5 + 1.0 / 16.0;
+/// BF16 bytes per element.
+pub const BF16_BYTES_PER_ELEM: f64 = 2.0;
+
+/// One serving-cost row: a (model, gpu, decode-batch) operating point.
+#[derive(Clone, Debug)]
+pub struct ServingPoint {
+    pub model: &'static str,
+    pub gpu: &'static str,
+    pub batch: usize,
+    /// prompt tokens/sec during prefill (at `prefill_tokens` prompt)
+    pub prefill_tok_s: f64,
+    /// generated tokens/sec across the batch during decode
+    pub decode_tok_s: f64,
+    /// FLOPs per byte moved, prefill pass
+    pub prefill_intensity: f64,
+    /// FLOPs per byte moved, decode step
+    pub decode_intensity: f64,
+    /// decode throughput ratio NVFP4 vs BF16 weights
+    pub decode_speedup_vs_bf16: f64,
+}
+
+/// Tokens per prefill measurement (one full trained context of the
+/// paper's serving-scale models).
+pub const PREFILL_TOKENS: usize = 2048;
+
+fn linear_pass(
+    m: &ModelShapes,
+    gpu: &GpuSpec,
+    rows: usize,
+    prec: Precision,
+) -> (f64, f64, f64) {
+    // returns (time, flops, bytes) of one forward pass over the four
+    // Table 6 linears with `rows` activation rows
+    let elem_bytes = match prec {
+        Precision::Bf16 => BF16_BYTES_PER_ELEM,
+        Precision::Nvfp4 => NVFP4_BYTES_PER_ELEM,
+    };
+    let mut time = 0.0;
+    let mut flops = 0.0;
+    let mut bytes = 0.0;
+    for l in &m.layers {
+        time += gpu.gemm_time(rows, l.out_dim, l.in_dim, prec);
+        flops += 2.0 * rows as f64 * l.in_dim as f64 * l.out_dim as f64;
+        // weights at packed precision, activations in/out at BF16
+        bytes += elem_bytes * (l.in_dim * l.out_dim) as f64
+            + BF16_BYTES_PER_ELEM * (rows * l.in_dim + rows * l.out_dim) as f64;
+    }
+    (time, flops, bytes)
+}
+
+/// Serving costs of one model on one GPU for a decode batch size.
+pub fn serving_point(m: &ModelShapes, gpu: &GpuSpec, batch: usize) -> ServingPoint {
+    let (t_pre, f_pre, b_pre) = linear_pass(m, gpu, PREFILL_TOKENS, Precision::Nvfp4);
+    let (t_dec, f_dec, b_dec) = linear_pass(m, gpu, batch, Precision::Nvfp4);
+    let (t_dec_bf16, _, _) = linear_pass(m, gpu, batch, Precision::Bf16);
+    ServingPoint {
+        model: m.name,
+        gpu: gpu.name,
+        batch,
+        prefill_tok_s: PREFILL_TOKENS as f64 / t_pre,
+        decode_tok_s: batch as f64 / t_dec,
+        prefill_intensity: f_pre / b_pre,
+        decode_intensity: f_dec / b_dec,
+        decode_speedup_vs_bf16: t_dec_bf16 / t_dec,
+    }
+}
+
+/// The full serving series: every Table 6 model at each batch size.
+pub fn serving_series(gpu: &GpuSpec, batches: &[usize]) -> Vec<ServingPoint> {
+    let mut out = Vec::new();
+    for m in &super::linear::TABLE6 {
+        for &b in batches {
+            out.push(serving_point(m, gpu, b));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{B200, RTX5090};
+    use super::*;
+
+    #[test]
+    fn decode_is_bandwidth_bound_at_batch_1() {
+        // time ~ packed weight bytes / bandwidth for the biggest model
+        let m = super::super::linear::TABLE6.last().unwrap();
+        let p = serving_point(m, &RTX5090, 1);
+        let w_bytes: f64 = m
+            .layers
+            .iter()
+            .map(|l| NVFP4_BYTES_PER_ELEM * (l.in_dim * l.out_dim) as f64)
+            .sum();
+        let t_floor = w_bytes / RTX5090.gmem_bw;
+        let t_model = 1.0 / p.decode_tok_s;
+        assert!(
+            t_model >= t_floor * 0.95 && t_model <= t_floor * 3.0,
+            "decode step {t_model} vs weight-traffic floor {t_floor}"
+        );
+    }
+
+    #[test]
+    fn intensity_separates_regimes() {
+        let m = &super::super::linear::TABLE6[1];
+        let p1 = serving_point(m, &B200, 1);
+        let p64 = serving_point(m, &B200, 64);
+        // decode intensity grows ~linearly with batch
+        assert!(p64.decode_intensity > 30.0 * p1.decode_intensity);
+        // prefill is orders of magnitude more intense than decode@1
+        assert!(p1.prefill_intensity > 100.0 * p1.decode_intensity);
+    }
+
+    #[test]
+    fn packed_weights_buy_decode_throughput() {
+        // bandwidth-bound decode speeds up by ~ the byte ratio (3.6x)
+        for gpu in [&RTX5090, &B200] {
+            let m = super::super::linear::TABLE6.last().unwrap();
+            let p = serving_point(m, gpu, 1);
+            assert!(
+                (2.0..4.5).contains(&p.decode_speedup_vs_bf16),
+                "{}: decode speedup {}",
+                gpu.name,
+                p.decode_speedup_vs_bf16
+            );
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_weight_traffic() {
+        let m = &super::super::linear::TABLE6[0];
+        let p1 = serving_point(m, &RTX5090, 1);
+        let p16 = serving_point(m, &RTX5090, 16);
+        // 16 sequences decode much faster than 16x a single decode
+        assert!(p16.decode_tok_s > 6.0 * p1.decode_tok_s);
+    }
+}

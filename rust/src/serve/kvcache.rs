@@ -1,0 +1,207 @@
+//! Ring-buffer KV cache for autoregressive decode.
+//!
+//! One cache per active sequence, holding the per-layer key/value rows
+//! of the last `capacity` positions. When a sequence outgrows the ring
+//! it degrades gracefully into sliding-window attention (the oldest
+//! entries are overwritten); absolute positions address the ring
+//! directly (`slot = pos % capacity`) so RoPE stays correct across
+//! wrap-around.
+//!
+//! The forward pass runs layer-outer / token-inner, so the API is
+//! position-explicit: [`KvCache::write_at`] stages the k/v rows of one
+//! `(layer, pos)`, [`KvCache::window`] iterates the attention window of
+//! a position oldest-to-newest, and [`KvCache::commit`] records the new
+//! sequence length once the whole step finished. Within a layer the
+//! engine writes token `p` *then* attends it before touching `p+1`,
+//! which keeps the window valid for prompt chunks of any length.
+//!
+//! Layout: `k[layer][slot][dim]` flat, `dim = n_heads * head_dim`.
+
+use anyhow::{ensure, Result};
+
+/// Per-sequence ring-buffer KV store.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    dim: usize,
+    capacity: usize,
+    /// committed sequence length (positions 0..len have been appended)
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, dim: usize, capacity: usize) -> Result<KvCache> {
+        ensure!(capacity > 0, "kv cache capacity must be positive");
+        ensure!(n_layers > 0 && dim > 0, "kv cache needs layers and dim");
+        Ok(KvCache {
+            n_layers,
+            dim,
+            capacity,
+            len: 0,
+            k: vec![0.0; n_layers * capacity * dim],
+            v: vec![0.0; n_layers * capacity * dim],
+        })
+    }
+
+    /// Committed sequence length (absolute position of the next token).
+    pub fn seq_len(&self) -> usize {
+        self.len
+    }
+
+    /// Number of positions currently resident (≤ capacity).
+    pub fn resident(&self) -> usize {
+        self.len.min(self.capacity)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    fn offset(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.capacity + pos % self.capacity) * self.dim
+    }
+
+    /// Stage the key/value rows of `(layer, pos)`. Positions must be
+    /// written in non-decreasing order per layer (the ring overwrites
+    /// `pos - capacity`).
+    pub fn write_at(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        ensure!(layer < self.n_layers, "layer {layer} out of range");
+        ensure!(
+            k_row.len() == self.dim && v_row.len() == self.dim,
+            "kv rows must have dim {} (got {}/{})",
+            self.dim,
+            k_row.len(),
+            v_row.len()
+        );
+        let off = self.offset(layer, pos);
+        self.k[off..off + self.dim].copy_from_slice(k_row);
+        self.v[off..off + self.dim].copy_from_slice(v_row);
+        Ok(())
+    }
+
+    /// Attention window of the token at absolute position `pos`:
+    /// `(abs_pos, k_row, v_row)` oldest-to-newest over the last
+    /// `capacity` positions up to and including `pos` itself (the
+    /// caller stages `pos` via [`write_at`] first, so self-attention
+    /// sees the new token).
+    ///
+    /// [`write_at`]: KvCache::write_at
+    pub fn window<'a>(
+        &'a self,
+        layer: usize,
+        pos: usize,
+    ) -> impl Iterator<Item = (usize, &'a [f32], &'a [f32])> + 'a {
+        let lo = (pos + 1).saturating_sub(self.capacity);
+        (lo..=pos).map(move |p| {
+            let off = self.offset(layer, p);
+            (
+                p,
+                &self.k[off..off + self.dim],
+                &self.v[off..off + self.dim],
+            )
+        })
+    }
+
+    /// Record the committed sequence length after a full forward step
+    /// appended tokens up to position `new_len - 1`.
+    pub fn commit(&mut self, new_len: usize) -> Result<()> {
+        ensure!(
+            new_len >= self.len,
+            "kv commit must not shrink ({} -> {new_len})",
+            self.len
+        );
+        self.len = new_len;
+        Ok(())
+    }
+
+    /// Drop all state, keeping the allocation — for callers that pool
+    /// caches instead of reallocating per sequence. (The scheduler
+    /// currently allocates per request; pooling is a ROADMAP item.)
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill_row(tag: f32, dim: usize) -> Vec<f32> {
+        (0..dim).map(|i| tag + i as f32 * 0.01).collect()
+    }
+
+    #[test]
+    fn write_then_window_in_order() {
+        let mut c = KvCache::new(2, 4, 8).unwrap();
+        for pos in 0..5 {
+            for layer in 0..2 {
+                let r = fill_row((layer * 100 + pos) as f32, 4);
+                c.write_at(layer, pos, &r, &r).unwrap();
+            }
+        }
+        c.commit(5).unwrap();
+        assert_eq!(c.seq_len(), 5);
+        assert_eq!(c.resident(), 5);
+        let got: Vec<usize> = c.window(1, 4).map(|(p, _, _)| p).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        let (p, k, _) = c.window(1, 4).last().unwrap();
+        assert_eq!(p, 4);
+        assert_eq!(k[0], 104.0);
+    }
+
+    #[test]
+    fn ring_wraps_to_sliding_window() {
+        let mut c = KvCache::new(1, 2, 4).unwrap();
+        for pos in 0..10 {
+            c.write_at(0, pos, &fill_row(pos as f32, 2), &fill_row(pos as f32, 2))
+                .unwrap();
+        }
+        c.commit(10).unwrap();
+        assert_eq!(c.resident(), 4);
+        let got: Vec<usize> = c.window(0, 9).map(|(p, _, _)| p).collect();
+        assert_eq!(got, vec![6, 7, 8, 9]);
+        let (_, k, _) = c.window(0, 9).next().unwrap();
+        assert_eq!(k[0], 6.0);
+    }
+
+    #[test]
+    fn window_sees_staged_position_before_commit() {
+        let mut c = KvCache::new(1, 2, 4).unwrap();
+        c.write_at(0, 0, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        let items: Vec<(usize, Vec<f32>, Vec<f32>)> = c
+            .window(0, 0)
+            .map(|(p, k, v)| (p, k.to_vec(), v.to_vec()))
+            .collect();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0], (0, vec![1.0, 2.0], vec![3.0, 4.0]));
+        assert_eq!(c.seq_len(), 0); // not committed yet
+        c.commit(1).unwrap();
+        assert_eq!(c.seq_len(), 1);
+    }
+
+    #[test]
+    fn reset_and_commit_guard() {
+        let mut c = KvCache::new(1, 2, 4).unwrap();
+        c.commit(3).unwrap();
+        assert!(c.commit(2).is_err());
+        c.reset();
+        assert!(c.is_empty());
+        assert_eq!(c.capacity(), 4);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(KvCache::new(0, 2, 4).is_err());
+        assert!(KvCache::new(1, 2, 0).is_err());
+        let mut c = KvCache::new(1, 2, 4).unwrap();
+        assert!(c.write_at(1, 0, &[0.0; 2], &[0.0; 2]).is_err());
+        assert!(c.write_at(0, 0, &[0.0; 3], &[0.0; 2]).is_err());
+    }
+}

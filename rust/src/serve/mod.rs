@@ -1,0 +1,38 @@
+//! L3 serving layer: native NVFP4 inference over packed weights.
+//!
+//! The training stack emulates NVFP4 in unpacked f32 because gradients
+//! need the full-precision view; serving is where the format's memory
+//! story pays off. This subsystem turns the reproduction into a
+//! trainable-*and*-servable stack:
+//!
+//! * [`packed`] — the bit-packed weight store: FP4 codes two-per-byte
+//!   + E4M3-encoded group scales (`.nvf4` containers, checkpoint
+//!   directories, conversion from trainer state).
+//! * [`qgemm`] — the quantized GEMM engine: f32 activations contracted
+//!   against packed codes through a 16-entry LUT with per-group scale
+//!   fusion; no dequantized weight matrix is ever materialized.
+//! * [`kvcache`] — per-sequence ring-buffer KV cache (graceful
+//!   sliding-window degradation past capacity).
+//! * [`model`] — the Llama-like forward pass (pre-norm, RoPE, SwiGLU)
+//!   mirroring `python/compile/model.py`, with blockwise RHT rotation
+//!   (via [`crate::hadamard`]) applied to weights at pack time and to
+//!   activations at inference, QuaRot-style.
+//! * [`scheduler`] — continuous batching: a request queue coalescing
+//!   prefill chunks and decode tokens into shared micro-batches, with
+//!   tokens/sec + p50/p99 telemetry through [`crate::metrics`].
+//!
+//! Entry points: `quartet2 generate` (one-shot) and `quartet2 serve`
+//! (JSON-lines request loop) in `main.rs`; serving-side roofline costs
+//! live in [`crate::perfmodel::serving`].
+
+pub mod kvcache;
+pub mod model;
+pub mod packed;
+pub mod qgemm;
+pub mod scheduler;
+
+pub use kvcache::KvCache;
+pub use model::{preset, ModelConfig, ModelWeightsF32, PackedModel, StepSeq};
+pub use packed::PackedTensor;
+pub use qgemm::{matmul_f32, qgemm};
+pub use scheduler::{Completion, Request, Scheduler, SchedulerOptions, ServeStats};

@@ -1,0 +1,897 @@
+//! Native Llama-like forward pass over packed NVFP4 weights.
+//!
+//! Mirrors the L2 model (`python/compile/model.py`: pre-norm blocks,
+//! RoPE multi-head causal attention, SwiGLU MLP, byte vocab 256) but
+//! runs entirely in Rust for serving: every linear is a [`qgemm`] over
+//! a bit-packed [`PackedTensor`], contracted against f32 activations
+//! with no dequantized weight materialization.
+//!
+//! Packing applies a blockwise Randomized Hadamard Transform along each
+//! weight's input dimension (reusing [`crate::hadamard`], block 128 —
+//! the same rotation the training scheme uses on GEMM inner dims).
+//! At inference the matching rotation is applied to activations right
+//! before each quantized GEMM; `<RHT(x), RHT(w)> = <x, w>` keeps the
+//! product exact while the rotation gaussianizes weight groups, which
+//! is what makes 4-bit RTN weights servable (QuaRot-style).
+//!
+//! The forward is **micro-batched**: [`PackedModel::forward_batch`]
+//! takes any mix of prefill chunks and single-token decode steps,
+//! concatenates their rows, and runs each linear once for the whole
+//! batch — the weight-traversal amortization the continuous-batching
+//! scheduler ([`super::scheduler`]) is built on. Attention remains
+//! per-sequence over each sequence's own [`KvCache`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::hadamard;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::ROT_BLOCK;
+
+use super::kvcache::KvCache;
+use super::packed::PackedTensor;
+use super::qgemm::qgemm;
+
+/// Serving checkpoint manifest version.
+pub const CHECKPOINT_VERSION: u32 = 1;
+/// Manifest file name inside a checkpoint directory.
+pub const MANIFEST: &str = "serve_checkpoint.json";
+
+/// Model hyper-parameters (native mirror of the python `ModelConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    /// trained context length (default KV capacity; the ring cache can
+    /// slide beyond it)
+    pub max_seq: usize,
+    pub rope_theta: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.dim % ROT_BLOCK == 0 && self.ffn % ROT_BLOCK == 0,
+            "dim={} and ffn={} must be multiples of {ROT_BLOCK} (RHT block)",
+            self.dim,
+            self.ffn
+        );
+        ensure!(
+            self.n_heads > 0 && self.dim % self.n_heads == 0,
+            "dim must divide evenly into heads"
+        );
+        ensure!(self.head_dim() % 2 == 0, "RoPE needs an even head_dim");
+        ensure!(
+            self.vocab > 0 && self.n_layers > 0 && self.max_seq > 0,
+            "vocab/layers/max_seq must be positive"
+        );
+        Ok(())
+    }
+
+    /// Total parameter count (embeddings + blocks + final norm).
+    pub fn param_count(&self) -> usize {
+        let (d, f) = (self.dim, self.ffn);
+        let per_layer = 4 * d * d + 3 * d * f + 2 * d;
+        2 * self.vocab * d + self.n_layers * per_layer + d
+    }
+}
+
+/// Size presets mirroring `python/compile/model.py::PRESETS`.
+pub fn preset(name: &str) -> Result<ModelConfig> {
+    let (dim, n_layers, n_heads, ffn) = match name {
+        "tiny" => (128, 3, 4, 384),
+        "small" => (256, 4, 4, 768),
+        "base" => (384, 6, 6, 1152),
+        other => bail!("unknown preset {other:?} (available: tiny small base)"),
+    };
+    let cfg = ModelConfig {
+        name: name.to_string(),
+        vocab: 256,
+        dim,
+        n_layers,
+        n_heads,
+        ffn,
+        max_seq: 128,
+        rope_theta: 10000.0,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Unpacked f32 weights of one transformer block. Linears are
+/// `[out_features, in_features]` row-major (`y = x @ w.T`).
+#[derive(Clone, Debug)]
+pub struct LayerWeightsF32 {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub w_gate: Vec<f32>,
+    pub w_up: Vec<f32>,
+    pub w_down: Vec<f32>,
+}
+
+/// Full-precision master weights: the source a serving checkpoint is
+/// packed from (fresh init, or a trained state via
+/// [`ModelWeightsF32::from_named_tensors`]).
+#[derive(Clone, Debug)]
+pub struct ModelWeightsF32 {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>,
+    pub lm_head: Vec<f32>,
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<LayerWeightsF32>,
+}
+
+impl ModelWeightsF32 {
+    /// GPT-2-style init matching `python/compile/model.py::init_params`:
+    /// N(0, 0.02) projections, residual outputs (wo, w_down) scaled by
+    /// 1/sqrt(2L), unit norms.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Result<ModelWeightsF32> {
+        cfg.validate()?;
+        let (d, f, v) = (cfg.dim, cfg.ffn, cfg.vocab);
+        let std = 0.02f32;
+        let res_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+        let mut rng = Rng::seed_from(seed);
+        let mut w = |n: usize, s: f32| -> Vec<f32> {
+            (0..n).map(|_| rng.normal_f32() * s).collect()
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(LayerWeightsF32 {
+                attn_norm: vec![1.0; d],
+                mlp_norm: vec![1.0; d],
+                wq: w(d * d, std),
+                wk: w(d * d, std),
+                wv: w(d * d, std),
+                wo: w(d * d, res_std),
+                w_gate: w(f * d, std),
+                w_up: w(f * d, std),
+                w_down: w(d * f, res_std),
+            });
+        }
+        Ok(ModelWeightsF32 {
+            embed: w(v * d, std),
+            lm_head: w(v * d, std),
+            final_norm: vec![1.0; d],
+            layers,
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// Assemble from named flat tensors using the trainer's
+    /// `param_paths` naming: `embed`, `lm_head`, `final_norm`, and
+    /// layer-stacked `layers.<name>` arrays (`[L, ...]`, the L2 scan
+    /// layout). This is the trainer-state -> serving conversion hook.
+    pub fn from_named_tensors(
+        cfg: &ModelConfig,
+        tensors: &BTreeMap<String, Vec<f32>>,
+    ) -> Result<ModelWeightsF32> {
+        cfg.validate()?;
+        let (d, f, v, l) = (cfg.dim, cfg.ffn, cfg.vocab, cfg.n_layers);
+        let get = |name: &str, want: usize| -> Result<&Vec<f32>> {
+            let t = tensors
+                .get(name)
+                .with_context(|| format!("missing tensor {name:?}"))?;
+            ensure!(
+                t.len() == want,
+                "tensor {name:?} has {} elems, want {want}",
+                t.len()
+            );
+            Ok(t)
+        };
+        let slice_layer = |name: &str, per: usize, li: usize| -> Result<Vec<f32>> {
+            let t = get(name, l * per)?;
+            Ok(t[li * per..(li + 1) * per].to_vec())
+        };
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            layers.push(LayerWeightsF32 {
+                attn_norm: slice_layer("layers.attn_norm", d, li)?,
+                mlp_norm: slice_layer("layers.mlp_norm", d, li)?,
+                wq: slice_layer("layers.wq", d * d, li)?,
+                wk: slice_layer("layers.wk", d * d, li)?,
+                wv: slice_layer("layers.wv", d * d, li)?,
+                wo: slice_layer("layers.wo", d * d, li)?,
+                w_gate: slice_layer("layers.w_gate", f * d, li)?,
+                w_up: slice_layer("layers.w_up", f * d, li)?,
+                w_down: slice_layer("layers.w_down", d * f, li)?,
+            });
+        }
+        Ok(ModelWeightsF32 {
+            embed: get("embed", v * d)?.clone(),
+            lm_head: get("lm_head", v * d)?.clone(),
+            final_norm: get("final_norm", d)?.clone(),
+            layers,
+            cfg: cfg.clone(),
+        })
+    }
+}
+
+/// One packed transformer block.
+#[derive(Clone, Debug)]
+pub struct PackedLayer {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub wq: PackedTensor,
+    pub wk: PackedTensor,
+    pub wv: PackedTensor,
+    pub wo: PackedTensor,
+    pub w_gate: PackedTensor,
+    pub w_up: PackedTensor,
+    pub w_down: PackedTensor,
+}
+
+/// The servable model: packed NVFP4 linears + f32 embeddings/norms.
+#[derive(Clone, Debug)]
+pub struct PackedModel {
+    pub cfg: ModelConfig,
+    /// token embedding table `[vocab, dim]` (gather, not a GEMM — f32)
+    pub embed: Vec<f32>,
+    pub lm_head: PackedTensor,
+    pub final_norm: Vec<f32>,
+    pub layers: Vec<PackedLayer>,
+    /// RHT signs for dim-space GEMM inputs (block-replicated)
+    pub signs_dim: Vec<f32>,
+    /// RHT signs for ffn-space GEMM inputs (w_down)
+    pub signs_ffn: Vec<f32>,
+    /// whether linears were packed in rotated space
+    pub rotate: bool,
+    /// seed the rotation signs derive from (persisted in the manifest)
+    pub rot_seed: u64,
+}
+
+/// One sequence's contribution to a micro-batch step: its KV cache and
+/// the new tokens to feed (a prompt chunk, or one decode token).
+pub struct StepSeq<'a> {
+    pub cache: &'a mut KvCache,
+    pub tokens: Vec<i32>,
+}
+
+impl PackedModel {
+    /// Quantize + bit-pack master weights into a servable model.
+    pub fn pack(w: &ModelWeightsF32, rotate: bool, rot_seed: u64) -> Result<PackedModel> {
+        w.cfg.validate()?;
+        let (d, f, v) = (w.cfg.dim, w.cfg.ffn, w.cfg.vocab);
+        let mut sign_rng = Rng::seed_from(rot_seed);
+        let signs_dim = sign_rng.rademacher_vec(ROT_BLOCK);
+        let signs_ffn = sign_rng.rademacher_vec(ROT_BLOCK);
+
+        let pack_one = |data: &[f32], rows: usize, cols: usize, signs: &[f32]| -> Result<PackedTensor> {
+            let mut p = if rotate {
+                let mut rot = data.to_vec();
+                // rows are contiguous multiples of ROT_BLOCK, so the
+                // flat blockwise RHT rotates each row independently
+                hadamard::rht(&mut rot, signs)?;
+                PackedTensor::quantize_pack(&rot, rows, cols, true)?
+            } else {
+                PackedTensor::quantize_pack(data, rows, cols, true)?
+            };
+            p.rotated = rotate;
+            Ok(p)
+        };
+
+        let mut layers = Vec::with_capacity(w.layers.len());
+        for lw in &w.layers {
+            layers.push(PackedLayer {
+                attn_norm: lw.attn_norm.clone(),
+                mlp_norm: lw.mlp_norm.clone(),
+                wq: pack_one(&lw.wq, d, d, &signs_dim)?,
+                wk: pack_one(&lw.wk, d, d, &signs_dim)?,
+                wv: pack_one(&lw.wv, d, d, &signs_dim)?,
+                wo: pack_one(&lw.wo, d, d, &signs_dim)?,
+                w_gate: pack_one(&lw.w_gate, f, d, &signs_dim)?,
+                w_up: pack_one(&lw.w_up, f, d, &signs_dim)?,
+                w_down: pack_one(&lw.w_down, d, f, &signs_ffn)?,
+            });
+        }
+        Ok(PackedModel {
+            lm_head: pack_one(&w.lm_head, v, d, &signs_dim)?,
+            embed: w.embed.clone(),
+            final_norm: w.final_norm.clone(),
+            layers,
+            signs_dim,
+            signs_ffn,
+            rotate,
+            rot_seed,
+            cfg: w.cfg.clone(),
+        })
+    }
+
+    /// Packed payload bytes across all quantized linears.
+    pub fn packed_bytes(&self) -> usize {
+        let mut total = self.lm_head.packed_bytes();
+        for l in &self.layers {
+            total += l.wq.packed_bytes()
+                + l.wk.packed_bytes()
+                + l.wv.packed_bytes()
+                + l.wo.packed_bytes()
+                + l.w_gate.packed_bytes()
+                + l.w_up.packed_bytes()
+                + l.w_down.packed_bytes();
+        }
+        total
+    }
+
+    /// Activation rotation + packed GEMM (`y` is zeroed here). For
+    /// activations shared by several linears (q/k/v, gate/up) prefer
+    /// rotating once via [`PackedModel::rotate_rows`] and calling the
+    /// plain [`qgemm`] on the pre-rotated buffer.
+    fn rot_qgemm(
+        &self,
+        x: &[f32],
+        m: usize,
+        w: &PackedTensor,
+        signs: &[f32],
+        y: &mut [f32],
+    ) -> Result<()> {
+        y.fill(0.0);
+        if self.rotate && w.rotated {
+            let mut xr = x.to_vec();
+            hadamard::rht(&mut xr, signs)?;
+            qgemm(&xr, m, w, y)
+        } else {
+            qgemm(x, m, w, y)
+        }
+    }
+
+    /// Copy `x` into `out` applying the activation-side RHT when this
+    /// model is rotation-packed (identity copy otherwise). `out` then
+    /// feeds the plain [`qgemm`] for every linear sharing that input.
+    fn rotate_rows(&self, x: &[f32], signs: &[f32], out: &mut [f32]) -> Result<()> {
+        out.copy_from_slice(x);
+        if self.rotate {
+            hadamard::rht(out, signs)?;
+        }
+        Ok(())
+    }
+
+    /// Run one micro-batch step: for each sequence, feed its new tokens
+    /// through all layers (updating its KV cache) and return the logits
+    /// of its **last** new token. Sequences may be in different phases
+    /// (prefill chunk vs single-token decode) — that heterogeneity is
+    /// the whole point.
+    pub fn forward_batch(&self, batch: &mut [StepSeq<'_>]) -> Result<Vec<Vec<f32>>> {
+        let cfg = &self.cfg;
+        let (d, f) = (cfg.dim, cfg.ffn);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        ensure!(!batch.is_empty(), "forward_batch needs at least one sequence");
+
+        // ---- stage rows: embed lookups + (seq, pos) metadata
+        let mut meta: Vec<(usize, usize)> = Vec::new();
+        let mut last_row = vec![0usize; batch.len()];
+        for (s, seq) in batch.iter().enumerate() {
+            ensure!(
+                !seq.tokens.is_empty(),
+                "sequence {s} contributes no tokens"
+            );
+            let p0 = seq.cache.seq_len();
+            for (t, &tok) in seq.tokens.iter().enumerate() {
+                ensure!(
+                    (0..cfg.vocab as i32).contains(&tok),
+                    "token {tok} out of vocab {}",
+                    cfg.vocab
+                );
+                meta.push((s, p0 + t));
+            }
+            last_row[s] = meta.len() - 1;
+        }
+        let total = meta.len();
+        let mut x = vec![0.0f32; total * d];
+        {
+            let mut row = 0;
+            for seq in batch.iter() {
+                for &tok in &seq.tokens {
+                    let t = tok as usize;
+                    x[row * d..(row + 1) * d]
+                        .copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+                    row += 1;
+                }
+            }
+        }
+
+        // ---- scratch buffers reused across layers
+        let mut h = vec![0.0f32; total * d];
+        // pre-rotated copy of `h`, shared by the grouped linears so
+        // the RHT runs once per block instead of once per GEMM
+        let mut hr = vec![0.0f32; total * d];
+        let mut q = vec![0.0f32; total * d];
+        let mut k = vec![0.0f32; total * d];
+        let mut v = vec![0.0f32; total * d];
+        let mut attn = vec![0.0f32; total * d];
+        let mut o = vec![0.0f32; total * d];
+        let mut g = vec![0.0f32; total * f];
+        let mut u = vec![0.0f32; total * f];
+        let mut scores: Vec<f32> = Vec::new();
+        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+        // RoPE inverse frequencies depend only on (i, head_dim):
+        // precompute once instead of powf-ing in the per-token loop
+        let rope_freqs: Vec<f32> = (0..hd / 2)
+            .map(|i| cfg.rope_theta.powf(-(2.0 * i as f32) / hd as f32))
+            .collect();
+
+        for (l, layer) in self.layers.iter().enumerate() {
+            // ---- attention block
+            rmsnorm_rows(&x, &layer.attn_norm, d, &mut h);
+            self.rotate_rows(&h, &self.signs_dim, &mut hr)?;
+            q.fill(0.0);
+            qgemm(&hr, total, &layer.wq, &mut q)?;
+            k.fill(0.0);
+            qgemm(&hr, total, &layer.wk, &mut k)?;
+            v.fill(0.0);
+            qgemm(&hr, total, &layer.wv, &mut v)?;
+
+            attn.fill(0.0);
+            for r in 0..total {
+                let (s, pos) = meta[r];
+                let qrow = &mut q[r * d..(r + 1) * d];
+                apply_rope_row(qrow, nh, hd, pos, &rope_freqs);
+                let krow = &mut k[r * d..(r + 1) * d];
+                apply_rope_row(krow, nh, hd, pos, &rope_freqs);
+                batch[s]
+                    .cache
+                    .write_at(l, pos, &k[r * d..(r + 1) * d], &v[r * d..(r + 1) * d])?;
+                let cache: &KvCache = &*batch[s].cache;
+                for head in 0..nh {
+                    let h0 = head * hd;
+                    let qh = &q[r * d + h0..r * d + h0 + hd];
+                    scores.clear();
+                    for (_, kr, _) in cache.window(l, pos) {
+                        let kh = &kr[h0..h0 + hd];
+                        let mut dot = 0.0f32;
+                        for (a, b) in qh.iter().zip(kh) {
+                            dot += a * b;
+                        }
+                        scores.push(dot * inv_sqrt_hd);
+                    }
+                    softmax_inplace(&mut scores);
+                    let out = &mut attn[r * d + h0..r * d + h0 + hd];
+                    for ((_, _, vr), &wgt) in cache.window(l, pos).zip(scores.iter()) {
+                        let vh = &vr[h0..h0 + hd];
+                        for (oo, vv) in out.iter_mut().zip(vh) {
+                            *oo += wgt * vv;
+                        }
+                    }
+                }
+            }
+            self.rot_qgemm(&attn, total, &layer.wo, &self.signs_dim, &mut o)?;
+            for (xv, ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+
+            // ---- SwiGLU MLP block
+            rmsnorm_rows(&x, &layer.mlp_norm, d, &mut h);
+            self.rotate_rows(&h, &self.signs_dim, &mut hr)?;
+            g.fill(0.0);
+            qgemm(&hr, total, &layer.w_gate, &mut g)?;
+            u.fill(0.0);
+            qgemm(&hr, total, &layer.w_up, &mut u)?;
+            for (gv, uv) in g.iter_mut().zip(&u) {
+                *gv = silu(*gv) * uv;
+            }
+            self.rot_qgemm(&g, total, &layer.w_down, &self.signs_ffn, &mut o)?;
+            for (xv, ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+        }
+
+        // ---- logits for each sequence's last new token, batched
+        // through one LM-head GEMM so weight traversal amortizes across
+        // sequences exactly like the block linears
+        let nseq = batch.len();
+        let mut xlast = vec![0.0f32; nseq * d];
+        for (s, &r) in last_row.iter().enumerate() {
+            xlast[s * d..(s + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
+        }
+        let mut hlast = vec![0.0f32; nseq * d];
+        rmsnorm_rows(&xlast, &self.final_norm, d, &mut hlast);
+        let mut logits_flat = vec![0.0f32; nseq * self.cfg.vocab];
+        self.rot_qgemm(&hlast, nseq, &self.lm_head, &self.signs_dim, &mut logits_flat)?;
+        let logits_out: Vec<Vec<f32>> = logits_flat
+            .chunks_exact(self.cfg.vocab)
+            .map(<[f32]>::to_vec)
+            .collect();
+
+        // ---- commit KV growth
+        for seq in batch.iter_mut() {
+            let new_len = seq.cache.seq_len() + seq.tokens.len();
+            seq.cache.commit(new_len)?;
+        }
+        Ok(logits_out)
+    }
+
+    /// Convenience single-sequence wrapper: feed `tokens`, return the
+    /// last token's logits.
+    pub fn forward_seq(&self, cache: &mut KvCache, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mut batch = [StepSeq {
+            cache,
+            tokens: tokens.to_vec(),
+        }];
+        Ok(self.forward_batch(&mut batch)?.pop().expect("one sequence"))
+    }
+
+    /// Fresh KV cache sized for this model (`capacity` positions).
+    pub fn new_cache(&self, capacity: usize) -> Result<KvCache> {
+        KvCache::new(self.cfg.n_layers, self.cfg.dim, capacity)
+    }
+
+    // -------------------------------------------------------- IO
+
+    /// Write the checkpoint directory: manifest + `.nvf4` linears +
+    /// raw-f32 embeddings/norms.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let c = &self.cfg;
+        let manifest = json::obj(vec![
+            ("version", json::n(CHECKPOINT_VERSION as f64)),
+            ("name", json::s(&c.name)),
+            ("vocab", json::n(c.vocab as f64)),
+            ("dim", json::n(c.dim as f64)),
+            ("n_layers", json::n(c.n_layers as f64)),
+            ("n_heads", json::n(c.n_heads as f64)),
+            ("ffn", json::n(c.ffn as f64)),
+            ("max_seq", json::n(c.max_seq as f64)),
+            ("rope_theta", json::n(c.rope_theta as f64)),
+            ("rotate", Json::Bool(self.rotate)),
+            ("rot_seed", json::n(self.rot_seed as f64)),
+        ]);
+        std::fs::write(dir.join(MANIFEST), manifest.to_string())
+            .with_context(|| format!("writing {MANIFEST}"))?;
+        write_f32(dir, "embed", &self.embed)?;
+        write_f32(dir, "final_norm", &self.final_norm)?;
+        self.lm_head.save(dir, "lm_head")?;
+        for (i, l) in self.layers.iter().enumerate() {
+            write_f32(dir, &format!("layer{i}.attn_norm"), &l.attn_norm)?;
+            write_f32(dir, &format!("layer{i}.mlp_norm"), &l.mlp_norm)?;
+            l.wq.save(dir, &format!("layer{i}.wq"))?;
+            l.wk.save(dir, &format!("layer{i}.wk"))?;
+            l.wv.save(dir, &format!("layer{i}.wv"))?;
+            l.wo.save(dir, &format!("layer{i}.wo"))?;
+            l.w_gate.save(dir, &format!("layer{i}.w_gate"))?;
+            l.w_up.save(dir, &format!("layer{i}.w_up"))?;
+            l.w_down.save(dir, &format!("layer{i}.w_down"))?;
+        }
+        Ok(())
+    }
+
+    /// Whether `dir` holds a serving checkpoint.
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(MANIFEST).exists()
+    }
+
+    /// Load a checkpoint directory written by [`PackedModel::save`].
+    pub fn load(dir: &Path) -> Result<PackedModel> {
+        let m = Json::parse_file(&dir.join(MANIFEST))
+            .with_context(|| format!("loading {MANIFEST} from {dir:?}"))?;
+        let version = m.get("version")?.as_usize()?;
+        ensure!(
+            version as u32 == CHECKPOINT_VERSION,
+            "unsupported checkpoint version {version}"
+        );
+        let cfg = ModelConfig {
+            name: m.get("name")?.as_str()?.to_string(),
+            vocab: m.get("vocab")?.as_usize()?,
+            dim: m.get("dim")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            ffn: m.get("ffn")?.as_usize()?,
+            max_seq: m.get("max_seq")?.as_usize()?,
+            rope_theta: m.get("rope_theta")?.as_f64()? as f32,
+        };
+        cfg.validate()?;
+        let rotate = match m.get("rotate")? {
+            Json::Bool(b) => *b,
+            other => bail!("manifest `rotate` must be a bool, got {other:?}"),
+        };
+        let rot_seed = m.get("rot_seed")?.as_usize()? as u64;
+        let mut sign_rng = Rng::seed_from(rot_seed);
+        let signs_dim = sign_rng.rademacher_vec(ROT_BLOCK);
+        let signs_ffn = sign_rng.rademacher_vec(ROT_BLOCK);
+
+        let (d, f) = (cfg.dim, cfg.ffn);
+        let load_packed = |name: &str, rows: usize, cols: usize| -> Result<PackedTensor> {
+            let p = PackedTensor::load(dir, name)?;
+            ensure!(
+                p.rows == rows && p.cols == cols,
+                "{name}: shape [{}, {}] vs expected [{rows}, {cols}]",
+                p.rows,
+                p.cols
+            );
+            ensure!(
+                p.rotated == rotate,
+                "{name}: rotation flag disagrees with manifest"
+            );
+            Ok(p)
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            layers.push(PackedLayer {
+                attn_norm: read_f32(dir, &format!("layer{i}.attn_norm"), d)?,
+                mlp_norm: read_f32(dir, &format!("layer{i}.mlp_norm"), d)?,
+                wq: load_packed(&format!("layer{i}.wq"), d, d)?,
+                wk: load_packed(&format!("layer{i}.wk"), d, d)?,
+                wv: load_packed(&format!("layer{i}.wv"), d, d)?,
+                wo: load_packed(&format!("layer{i}.wo"), d, d)?,
+                w_gate: load_packed(&format!("layer{i}.w_gate"), f, d)?,
+                w_up: load_packed(&format!("layer{i}.w_up"), f, d)?,
+                w_down: load_packed(&format!("layer{i}.w_down"), d, f)?,
+            });
+        }
+        Ok(PackedModel {
+            embed: read_f32(dir, "embed", cfg.vocab * d)?,
+            lm_head: load_packed("lm_head", cfg.vocab, d)?,
+            final_norm: read_f32(dir, "final_norm", d)?,
+            layers,
+            signs_dim,
+            signs_ffn,
+            rotate,
+            rot_seed,
+            cfg,
+        })
+    }
+}
+
+/// RMSNorm each `dim`-length row of `x` into `out` (Llama: eps 1e-5).
+fn rmsnorm_rows(x: &[f32], weight: &[f32], dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(weight.len(), dim);
+    for (xr, or) in x.chunks_exact(dim).zip(out.chunks_exact_mut(dim)) {
+        let ms: f32 = xr.iter().map(|v| v * v).sum::<f32>() / dim as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for ((o, &v), &w) in or.iter_mut().zip(xr).zip(weight) {
+            *o = v * inv * w;
+        }
+    }
+}
+
+/// Rotary position embedding over one `[n_heads * head_dim]` row,
+/// interleaved pairs `(2i, 2i+1)` per head — matches the python
+/// mirror. `freqs` holds the `head_dim / 2` precomputed inverse
+/// frequencies (`theta^(-2i/head_dim)`).
+fn apply_rope_row(row: &mut [f32], n_heads: usize, head_dim: usize, pos: usize, freqs: &[f32]) {
+    debug_assert_eq!(freqs.len(), head_dim / 2);
+    for head in 0..n_heads {
+        let base = head * head_dim;
+        for (i, &freq) in freqs.iter().enumerate() {
+            let ang = pos as f32 * freq;
+            let (sin, cos) = ang.sin_cos();
+            let (a, b) = (row[base + 2 * i], row[base + 2 * i + 1]);
+            row[base + 2 * i] = a * cos - b * sin;
+            row[base + 2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Numerically-stable in-place softmax.
+fn softmax_inplace(s: &mut [f32]) {
+    let mx = s.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for v in s.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in s.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn write_f32(dir: &Path, name: &str, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let path = dir.join(format!("{name}.f32"));
+    std::fs::write(&path, bytes).with_context(|| format!("writing {path:?}"))
+}
+
+fn read_f32(dir: &Path, name: &str, want: usize) -> Result<Vec<f32>> {
+    let path = dir.join(format!("{name}.f32"));
+    let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+    ensure!(
+        bytes.len() == want * 4,
+        "{path:?}: {} bytes, want {} f32s",
+        bytes.len(),
+        want
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            vocab: 256,
+            dim: 128,
+            n_layers: 2,
+            n_heads: 4,
+            ffn: 128,
+            max_seq: 64,
+            rope_theta: 10000.0,
+        }
+    }
+
+    fn test_model() -> PackedModel {
+        let w = ModelWeightsF32::init(&test_cfg(), 7).unwrap();
+        PackedModel::pack(&w, true, 11).unwrap()
+    }
+
+    #[test]
+    fn presets_validate() {
+        for name in ["tiny", "small", "base"] {
+            let cfg = preset(name).unwrap();
+            assert!(cfg.param_count() > 0);
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let m = test_model();
+        let toks = vec![10, 72, 101, 108];
+        let mut c1 = m.new_cache(64).unwrap();
+        let mut c2 = m.new_cache(64).unwrap();
+        let a = m.forward_seq(&mut c1, &toks).unwrap();
+        let b = m.forward_seq(&mut c2, &toks).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+        assert_eq!(a.len(), 256);
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_prefill() {
+        let m = test_model();
+        let toks = vec![3, 50, 90, 120, 33];
+        let mut full = m.new_cache(64).unwrap();
+        let full_logits = m.forward_seq(&mut full, &toks).unwrap();
+        let mut inc = m.new_cache(64).unwrap();
+        let mut last = Vec::new();
+        for &t in &toks {
+            last = m.forward_seq(&mut inc, &[t]).unwrap();
+        }
+        assert_eq!(full.seq_len(), inc.seq_len());
+        for (i, (a, b)) in full_logits.iter().zip(&last).enumerate() {
+            assert!((a - b).abs() < 1e-4, "logit {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_step_matches_isolated_sequences() {
+        let m = test_model();
+        let prompts = [vec![1, 2, 3], vec![200, 100]];
+        // isolated
+        let mut solo = Vec::new();
+        for p in &prompts {
+            let mut c = m.new_cache(64).unwrap();
+            solo.push(m.forward_seq(&mut c, p).unwrap());
+        }
+        // one coalesced micro-batch
+        let mut ca = m.new_cache(64).unwrap();
+        let mut cb = m.new_cache(64).unwrap();
+        let mut batch = [
+            StepSeq { cache: &mut ca, tokens: prompts[0].clone() },
+            StepSeq { cache: &mut cb, tokens: prompts[1].clone() },
+        ];
+        let both = m.forward_batch(&mut batch).unwrap();
+        for (s, (a, b)) in solo.iter().zip(&both).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert!((x - y).abs() < 1e-4, "seq {s} logit {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_logits_approximately() {
+        // RHT commutes with the contraction, so rotated and unrotated
+        // packings differ only in quantization noise.
+        let w = ModelWeightsF32::init(&test_cfg(), 5).unwrap();
+        let rot = PackedModel::pack(&w, true, 9).unwrap();
+        let flat = PackedModel::pack(&w, false, 9).unwrap();
+        let toks = vec![40, 41, 42];
+        let mut c1 = rot.new_cache(64).unwrap();
+        let mut c2 = flat.new_cache(64).unwrap();
+        let a = rot.forward_seq(&mut c1, &toks).unwrap();
+        let b = flat.forward_seq(&mut c2, &toks).unwrap();
+        let num: f64 = a.iter().zip(&b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = b.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!(num / den.max(1e-30) < 0.3, "rel sq dev {}", num / den);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_logits() {
+        let dir = std::env::temp_dir().join("q2_serve_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let m = test_model();
+        m.save(&dir).unwrap();
+        assert!(PackedModel::exists(&dir));
+        let back = PackedModel::load(&dir).unwrap();
+        assert_eq!(back.cfg, m.cfg);
+        let toks = vec![9, 8, 7];
+        let mut c1 = m.new_cache(32).unwrap();
+        let mut c2 = back.new_cache(32).unwrap();
+        assert_eq!(
+            m.forward_seq(&mut c1, &toks).unwrap(),
+            back.forward_seq(&mut c2, &toks).unwrap()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn named_tensor_conversion() {
+        let cfg = test_cfg();
+        let w = ModelWeightsF32::init(&cfg, 3).unwrap();
+        let (d, f, l) = (cfg.dim, cfg.ffn, cfg.n_layers);
+        let mut m: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        m.insert("embed".into(), w.embed.clone());
+        m.insert("lm_head".into(), w.lm_head.clone());
+        m.insert("final_norm".into(), w.final_norm.clone());
+        let stack = |get: &dyn Fn(&LayerWeightsF32) -> &Vec<f32>| -> Vec<f32> {
+            let mut out = Vec::new();
+            for lw in &w.layers {
+                out.extend_from_slice(get(lw));
+            }
+            out
+        };
+        m.insert("layers.attn_norm".into(), stack(&|x| &x.attn_norm));
+        m.insert("layers.mlp_norm".into(), stack(&|x| &x.mlp_norm));
+        m.insert("layers.wq".into(), stack(&|x| &x.wq));
+        m.insert("layers.wk".into(), stack(&|x| &x.wk));
+        m.insert("layers.wv".into(), stack(&|x| &x.wv));
+        m.insert("layers.wo".into(), stack(&|x| &x.wo));
+        m.insert("layers.w_gate".into(), stack(&|x| &x.w_gate));
+        m.insert("layers.w_up".into(), stack(&|x| &x.w_up));
+        m.insert("layers.w_down".into(), stack(&|x| &x.w_down));
+        let back = ModelWeightsF32::from_named_tensors(&cfg, &m).unwrap();
+        assert_eq!(back.embed, w.embed);
+        assert_eq!(back.layers[1].wq, w.layers[1].wq);
+        assert_eq!(back.layers.len(), l);
+        assert_eq!(back.layers[0].w_down.len(), d * f);
+        // missing / wrong-size tensors are rejected
+        let mut bad = m.clone();
+        bad.remove("lm_head");
+        assert!(ModelWeightsF32::from_named_tensors(&cfg, &bad).is_err());
+        let mut bad2 = m;
+        bad2.insert("embed".into(), vec![0.0; 3]);
+        assert!(ModelWeightsF32::from_named_tensors(&cfg, &bad2).is_err());
+    }
+
+    #[test]
+    fn packing_shrinks_memory() {
+        let m = test_model();
+        let f32_linear_bytes = {
+            let c = &m.cfg;
+            let per_layer = 4 * c.dim * c.dim + 3 * c.dim * c.ffn;
+            (c.n_layers * per_layer + c.vocab * c.dim) * 4
+        };
+        assert!(
+            m.packed_bytes() * 4 < f32_linear_bytes,
+            "packed {} vs f32 {}",
+            m.packed_bytes(),
+            f32_linear_bytes
+        );
+    }
+}

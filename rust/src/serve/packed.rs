@@ -1,0 +1,276 @@
+//! Packed NVFP4 weight store — the *real* serving container.
+//!
+//! Training-side code keeps quantized tensors unpacked as on-grid f32
+//! ([`Quantized`]) because the emulation path re-reads them constantly.
+//! Serving flips the trade-off: weights are read-only and traversed by
+//! every token, so they live bit-packed — FP4 codes two-per-byte
+//! ([`fp4::pack_codes`]) plus one E4M3-encoded byte per 16-element
+//! group ([`fp8::e4m3_encode`]) and a single f32 global scale. That is
+//! `0.5625` bytes/element vs `4` for the f32 emulation (~7x) and vs
+//! `2` for BF16 (~3.5x).
+//!
+//! The on-disk container (`<name>.nvf4`) is a flat little-endian dump
+//! of the same fields behind a magic/version header, so checkpoints
+//! mmap-read cleanly on any host.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::fp4::{self, fp4_decode, fp4_encode};
+use crate::formats::fp8::{e4m3_decode, e4m3_encode};
+use crate::formats::{quantize_rtn, Quantized, ScaleLayout};
+use crate::GROUP;
+
+/// Magic bytes of the `.nvf4` container.
+pub const MAGIC: [u8; 4] = *b"NVF4";
+/// Container format version.
+pub const VERSION: u32 = 1;
+
+/// A bit-packed NVFP4 tensor: `[rows, cols]` row-major, quantization
+/// groups of [`GROUP`] elements along `cols` (the GEMM inner dim).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    /// FP4 codes, two per byte, low nibble first: `rows*cols/2` bytes.
+    pub codes: Vec<u8>,
+    /// E4M3-encoded group scales: `rows*cols/GROUP` bytes.
+    pub scales: Vec<u8>,
+    /// Global f32 scale (per-tensor range extension).
+    pub gscale: f32,
+    /// Whether the cols-axis was RHT-rotated at pack time (the serving
+    /// engine must rotate activations with the matching signs).
+    pub rotated: bool,
+}
+
+impl PackedTensor {
+    /// Bit-pack an unpacked [`Quantized`] tensor (1x16 layout only —
+    /// square 16x16 blocks are a training-side weight-path variant).
+    pub fn from_quantized(q: &Quantized) -> Result<PackedTensor> {
+        if q.layout != ScaleLayout::Vector1x16 {
+            bail!("packing requires the native 1x16 scale layout");
+        }
+        let codes_unpacked: Vec<u8> = q.values.iter().map(|&v| fp4_encode(v)).collect();
+        Ok(PackedTensor {
+            rows: q.rows,
+            cols: q.cols,
+            codes: fp4::pack_codes(&codes_unpacked),
+            scales: q.scales.iter().map(|&s| e4m3_encode(s)).collect(),
+            gscale: q.gscale,
+            rotated: false,
+        })
+    }
+
+    /// Quantize (RTN, optionally 4/6-branched) and pack in one step.
+    pub fn quantize_pack(x: &[f32], rows: usize, cols: usize, four_six: bool) -> Result<PackedTensor> {
+        let q = quantize_rtn(x, rows, cols, four_six, false)?;
+        Self::from_quantized(&q)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Number of 16-element groups.
+    pub fn ngroups(&self) -> usize {
+        self.numel() / GROUP
+    }
+
+    /// Bytes of the packed payload (codes + scales + global scale) —
+    /// what the perf model charges for weight traffic.
+    pub fn packed_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() + 4
+    }
+
+    /// Dequantized scale of group `g` (E4M3 byte x global scale).
+    #[inline]
+    pub fn group_scale(&self, g: usize) -> f32 {
+        e4m3_decode(self.scales[g]) * self.gscale
+    }
+
+    /// Reconstruct the full f32 tensor (test/reference path — the
+    /// serving GEMM never materializes this).
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.numel()];
+        let codes = fp4::unpack_codes(&self.codes, self.numel());
+        for (g, chunk) in codes.chunks_exact(GROUP).enumerate() {
+            let s = self.group_scale(g);
+            for (o, &c) in out[g * GROUP..(g + 1) * GROUP].iter_mut().zip(chunk) {
+                *o = fp4_decode(c) * s;
+            }
+        }
+        out
+    }
+
+    /// Round-trip the packed representation back into an unpacked
+    /// [`Quantized`] (exact: both sides are on-grid).
+    pub fn unpack(&self) -> Quantized {
+        let codes = fp4::unpack_codes(&self.codes, self.numel());
+        Quantized {
+            values: codes.iter().map(|&c| fp4_decode(c)).collect(),
+            scales: self.scales.iter().map(|&b| e4m3_decode(b)).collect(),
+            gscale: self.gscale,
+            rows: self.rows,
+            cols: self.cols,
+            layout: ScaleLayout::Vector1x16,
+        }
+    }
+
+    // ------------------------------------------------------------ IO
+
+    /// Serialize into the `.nvf4` byte container.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32 + self.codes.len() + self.scales.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.rows as u64).to_le_bytes());
+        out.extend_from_slice(&(self.cols as u64).to_le_bytes());
+        out.push(self.rotated as u8);
+        out.extend_from_slice(&self.gscale.to_le_bytes());
+        out.extend_from_slice(&self.scales);
+        out.extend_from_slice(&self.codes);
+        out
+    }
+
+    /// Parse a `.nvf4` byte container.
+    pub fn from_bytes(buf: &[u8]) -> Result<PackedTensor> {
+        fn take<'a>(buf: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+            let end = off
+                .checked_add(n)
+                .filter(|&e| e <= buf.len())
+                .with_context(|| {
+                    format!("truncated nvf4 container ({} bytes left, need {n})", buf.len() - *off)
+                })?;
+            let out = &buf[*off..end];
+            *off = end;
+            Ok(out)
+        }
+        let mut off = 0usize;
+        if take(buf, &mut off, 4)? != &MAGIC[..] {
+            bail!("bad nvf4 magic");
+        }
+        let version = u32::from_le_bytes(take(buf, &mut off, 4)?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported nvf4 version {version}");
+        }
+        let rows = u64::from_le_bytes(take(buf, &mut off, 8)?.try_into().unwrap()) as usize;
+        let cols = u64::from_le_bytes(take(buf, &mut off, 8)?.try_into().unwrap()) as usize;
+        let rotated = take(buf, &mut off, 1)?[0] != 0;
+        let gscale = f32::from_le_bytes(take(buf, &mut off, 4)?.try_into().unwrap());
+        if cols == 0 || cols % GROUP != 0 {
+            bail!("nvf4 cols={cols} not a positive multiple of {GROUP}");
+        }
+        let numel = rows.checked_mul(cols).context("nvf4 dims overflow")?;
+        let scales = take(buf, &mut off, numel / GROUP)?.to_vec();
+        let codes = take(buf, &mut off, numel.div_ceil(2))?.to_vec();
+        if off != buf.len() {
+            bail!("trailing bytes in nvf4 container");
+        }
+        Ok(PackedTensor {
+            rows,
+            cols,
+            codes,
+            scales,
+            gscale,
+            rotated,
+        })
+    }
+
+    /// Write `<dir>/<name>.nvf4`.
+    pub fn save(&self, dir: &Path, name: &str) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        let path = dir.join(format!("{name}.nvf4"));
+        let mut f =
+            std::fs::File::create(&path).with_context(|| format!("creating {path:?}"))?;
+        f.write_all(&self.to_bytes())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(())
+    }
+
+    /// Read `<dir>/<name>.nvf4`.
+    pub fn load(dir: &Path, name: &str) -> Result<PackedTensor> {
+        let path = dir.join(format!("{name}.nvf4"));
+        let mut buf = Vec::new();
+        std::fs::File::open(&path)
+            .and_then(|mut f| f.read_to_end(&mut buf))
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(&buf).with_context(|| format!("parsing {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(rows: usize, cols: usize, seed: u64) -> PackedTensor {
+        let x = Rng::seed_from(seed).normal_vec(rows * cols);
+        PackedTensor::quantize_pack(&x, rows, cols, true).unwrap()
+    }
+
+    #[test]
+    fn pack_matches_unpacked_dequant() {
+        let x = Rng::seed_from(1).normal_vec(24 * 64);
+        let q = quantize_rtn(&x, 24, 64, true, false).unwrap();
+        let p = PackedTensor::from_quantized(&q).unwrap();
+        let (a, b) = (p.dequant(), q.dequant());
+        for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(u, v, "elem {i}");
+        }
+        // and the unpacked roundtrip is exact
+        let back = p.unpack();
+        assert_eq!(back.values, q.values);
+        assert_eq!(back.scales, q.scales);
+        assert_eq!(back.gscale, q.gscale);
+    }
+
+    #[test]
+    fn container_byte_roundtrip() {
+        let p = sample(8, 48, 2);
+        let q = PackedTensor::from_bytes(&p.to_bytes()).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn container_rejects_corruption() {
+        let p = sample(4, 32, 3);
+        let bytes = p.to_bytes();
+        assert!(PackedTensor::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(PackedTensor::from_bytes(&bad).is_err());
+        let mut extra = bytes;
+        extra.push(0);
+        assert!(PackedTensor::from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("q2_packed_test");
+        let p = sample(16, 128, 4);
+        p.save(&dir, "w0").unwrap();
+        let q = PackedTensor::load(&dir, "w0").unwrap();
+        assert_eq!(p, q);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn memory_reduction_is_real() {
+        let p = sample(64, 256, 5);
+        let f32_bytes = p.numel() * 4;
+        assert!(
+            p.packed_bytes() * 4 < f32_bytes,
+            "packed {} vs f32 {f32_bytes}",
+            p.packed_bytes()
+        );
+    }
+
+    #[test]
+    fn rejects_square_layout() {
+        let x = Rng::seed_from(6).normal_vec(32 * 32);
+        let q = quantize_rtn(&x, 32, 32, false, true).unwrap();
+        assert!(PackedTensor::from_quantized(&q).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Native quantized GEMM: f32 activations x packed NVFP4 weights.
+//!
+//! Computes `y[m, n] = x[m, k] @ W[n, k]^T` directly on the packed
+//! representation — FP4 codes are looked up in a 16-entry LUT and the
+//! per-group E4M3 scale is fused into a small decoded tile, so the
+//! full f32 weight matrix is never materialized.
+//!
+//! Loop order is the serving-throughput story: weight groups are outer,
+//! activation rows inner. Each 16-element weight group is unpacked and
+//! scale-fused **once**, then reused across all `m` activation rows in
+//! the micro-batch — decode cost amortizes as `1/m`, which is exactly
+//! why the continuous-batching scheduler coalesces decode steps
+//! ([`super::scheduler`]). The f32 reference path ([`matmul_f32`]) is
+//! cache-blocked over output columns and used for parity tests and the
+//! non-quantized baseline.
+
+use anyhow::{bail, Result};
+
+use crate::GROUP;
+
+use super::packed::PackedTensor;
+
+/// 16-entry FP4 decode LUT indexed by the 4-bit code (sign << 3 |
+/// grid index; mirrors [`crate::formats::fp4::fp4_decode`]).
+pub const FP4_LUT: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// Activation-row tile: rows of `x` processed per weight traversal.
+/// Large enough to amortize unpacking, small enough that the tile of
+/// partial sums stays in registers/L1.
+const M_TILE: usize = 16;
+
+/// `y[m, n] = x[m, k] @ W^T` with `W` packed NVFP4 `[n, k]`.
+///
+/// `y` must be zeroed (or hold a bias) on entry; results accumulate.
+pub fn qgemm(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()> {
+    let (n, k) = (w.rows, w.cols);
+    if x.len() != m * k {
+        bail!("qgemm: x has {} elems, want {m}x{k}", x.len());
+    }
+    if y.len() != m * n {
+        bail!("qgemm: y has {} elems, want {m}x{n}", y.len());
+    }
+    let groups_per_row = k / GROUP;
+    let mut wtile = [0.0f32; GROUP];
+
+    for i0 in (0..m).step_by(M_TILE) {
+        let i1 = (i0 + M_TILE).min(m);
+        for row in 0..n {
+            for g in 0..groups_per_row {
+                let gid = row * groups_per_row + g;
+                let s = w.group_scale(gid);
+                // unpack + scale-fuse the 16-element group once...
+                let base = gid * (GROUP / 2);
+                for (j, &b) in w.codes[base..base + GROUP / 2].iter().enumerate() {
+                    wtile[2 * j] = FP4_LUT[(b & 0xF) as usize] * s;
+                    wtile[2 * j + 1] = FP4_LUT[(b >> 4) as usize] * s;
+                }
+                // ...then reuse it for every activation row in the tile
+                let col0 = g * GROUP;
+                for i in i0..i1 {
+                    let xrow = &x[i * k + col0..i * k + col0 + GROUP];
+                    let mut acc = 0.0f32;
+                    for (xv, wv) in xrow.iter().zip(&wtile) {
+                        acc += xv * wv;
+                    }
+                    y[i * n + row] += acc;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dequantize-then-multiply reference: numerically identical math
+/// (same per-group products, same accumulation order) but through the
+/// materialized f32 weight matrix. Used to cross-check [`qgemm`].
+pub fn qgemm_reference(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()> {
+    let dense = w.dequant();
+    matmul_f32(x, m, &dense, w.rows, w.cols, y)
+}
+
+/// Cache-blocked f32 GEMM: `y[m, n] += x[m, k] @ w[n, k]^T`.
+///
+/// Both `x` rows and `w` rows are contiguous along `k`, so the inner
+/// dot is a unit-stride streaming kernel; blocking over output columns
+/// keeps the active slice of `w` hot across the `m` loop.
+pub fn matmul_f32(x: &[f32], m: usize, w: &[f32], n: usize, k: usize, y: &mut [f32]) -> Result<()> {
+    if x.len() != m * k || w.len() != n * k || y.len() != m * n {
+        bail!(
+            "matmul_f32: shape mismatch x={} w={} y={} for m={m} n={n} k={k}",
+            x.len(),
+            w.len(),
+            y.len()
+        );
+    }
+    const N_BLOCK: usize = 64;
+    for j0 in (0..n).step_by(N_BLOCK) {
+        let j1 = (j0 + N_BLOCK).min(n);
+        for i in 0..m {
+            let xrow = &x[i * k..(i + 1) * k];
+            for j in j0..j1 {
+                let wrow = &w[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (xv, wv) in xrow.iter().zip(wrow) {
+                    acc += xv * wv;
+                }
+                y[i * n + j] += acc;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::fp4::{fp4_decode, fp4_encode};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lut_matches_decoder() {
+        for (code, &v) in FP4_LUT.iter().enumerate() {
+            assert_eq!(fp4_decode(code as u8), v, "code {code}");
+            if v != 0.0 {
+                assert_eq!(fp4_encode(v) as usize, code);
+            }
+        }
+    }
+
+    // Parity of qgemm vs the dequant reference is covered at the crate
+    // boundary: tests/integration.rs (fixed shapes, the acceptance
+    // gate) and tests/proptests.rs (randomized shapes). Unit tests here
+    // focus on the LUT, accumulation semantics, and validation.
+
+    #[test]
+    fn qgemm_close_to_f32_matmul() {
+        // end-to-end quantization error stays in the RTN band
+        let mut rng = Rng::seed_from(12);
+        let (m, n, k) = (8, 24, 256);
+        let x = rng.normal_vec(m * k);
+        let wx = rng.normal_vec(n * k);
+        let w = PackedTensor::quantize_pack(&wx, n, k, true).unwrap();
+        let mut y = vec![0.0f32; m * n];
+        qgemm(&x, m, &w, &mut y).unwrap();
+        let mut exact = vec![0.0f32; m * n];
+        matmul_f32(&x, m, &wx, n, k, &mut exact).unwrap();
+        let num: f64 = y
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = exact.iter().map(|v| (*v as f64).powi(2)).sum();
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.15, "relative gemm error {rel}");
+    }
+
+    #[test]
+    fn accumulates_into_y() {
+        let x = [1.0f32; 16];
+        let w = PackedTensor::quantize_pack(&[1.0f32; 16], 1, 16, false).unwrap();
+        let mut y = vec![10.0f32];
+        qgemm(&x, 1, &w, &mut y).unwrap();
+        assert!((y[0] - 26.0).abs() < 1e-4, "y={}", y[0]);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let w = PackedTensor::quantize_pack(&[0.0f32; 32], 2, 16, false).unwrap();
+        let mut y = vec![0.0f32; 2];
+        assert!(qgemm(&[0.0; 15], 1, &w, &mut y).is_err());
+        assert!(qgemm(&[0.0; 16], 1, &w, &mut y[..1]).is_err());
+        assert!(matmul_f32(&[0.0; 4], 1, &[0.0; 4], 2, 4, &mut [0.0; 2]).is_err());
+    }
+}

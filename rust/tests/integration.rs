@@ -1,12 +1,17 @@
-//! Integration tests over the PJRT runtime + coordinator, driving the
-//! real AOT artifacts (skipped with a notice when `make artifacts` has
-//! not been run yet).
+//! Integration tests: the PJRT runtime + coordinator driving the real
+//! AOT artifacts (skipped with a notice when `make artifacts` has not
+//! been run yet), plus the native NVFP4 serving stack end-to-end
+//! (packed checkpoint -> quantized GEMM -> scheduler decode), which
+//! needs no artifacts.
 
 use std::path::{Path, PathBuf};
 
 use quartet2::coordinator::{Trainer, TrainerOptions};
-use quartet2::data::Batcher;
+use quartet2::data::{Batcher, ByteTokenizer};
 use quartet2::runtime::executor::{Engine, HostTensor};
+use quartet2::serve::{
+    self, matmul_f32, qgemm, PackedModel, PackedTensor, Request, Scheduler, SchedulerOptions,
+};
 use quartet2::util::rng::Rng;
 
 fn artifacts_dir() -> PathBuf {
@@ -161,6 +166,127 @@ fn artifact_rejects_wrong_arity() {
     let engine = Engine::cpu().unwrap();
     let eval = engine.load(&artifacts_dir(), "eval_tiny_bf16").unwrap();
     assert!(eval.run(&[HostTensor::U32(vec![0])]).is_err());
+}
+
+// ---------------------------------------------------------------
+// Native serving stack (no artifacts required)
+// ---------------------------------------------------------------
+
+#[test]
+fn packed_gemm_parity_with_dequant_matmul() {
+    // Acceptance gate: packed-GEMM output must match the dequantized
+    // reference matmul within 1e-5 relative error (at matrix scale —
+    // the two paths differ only by f32 partial-sum association).
+    let mut rng = Rng::seed_from(0xC0FFEE);
+    for &(m, n, k) in &[(1usize, 64usize, 128usize), (8, 384, 128), (32, 128, 384)] {
+        let x = rng.normal_vec(m * k);
+        let w_raw = rng.normal_vec(n * k);
+        let w = PackedTensor::quantize_pack(&w_raw, n, k, true).unwrap();
+        let mut y = vec![0.0f32; m * n];
+        qgemm(&x, m, &w, &mut y).unwrap();
+        let mut yref = vec![0.0f32; m * n];
+        matmul_f32(&x, m, &w.dequant(), n, k, &mut yref).unwrap();
+        let ymax = yref.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-12);
+        for (i, (a, b)) in y.iter().zip(&yref).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * ymax,
+                "({m},{n},{k}) elem {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+fn serve_checkpoint_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("q2_serve_e2e_{tag}"))
+}
+
+#[test]
+fn generate_end_to_end_from_packed_checkpoint() {
+    // pack -> save -> load -> decode: the `quartet2 generate` flow.
+    let dir = serve_checkpoint_dir("gen");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = serve::preset("tiny").unwrap();
+    let weights = serve::ModelWeightsF32::init(&cfg, 42).unwrap();
+    PackedModel::pack(&weights, true, 43).unwrap().save(&dir).unwrap();
+
+    let model = PackedModel::load(&dir).unwrap();
+    let tok = ByteTokenizer;
+    let run = || -> Vec<i32> {
+        let mut sched = Scheduler::new(
+            &model,
+            SchedulerOptions {
+                kv_capacity: 128,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        sched
+            .submit(Request {
+                id: 1,
+                prompt: tok.encode(b"The quartet"),
+                max_new_tokens: 16,
+            })
+            .unwrap();
+        let done = sched.run_until_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        done.into_iter().next().unwrap().tokens
+    };
+    let a = run();
+    assert_eq!(a.len(), 16, "generated token count");
+    assert!(a.iter().all(|&t| (0..256).contains(&t)), "tokens in vocab");
+    // decoding from a reloaded packed checkpoint is deterministic
+    assert_eq!(a, run());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coalesced_micro_batches_preserve_outputs() {
+    // Mixed prefill/decode micro-batches (the continuous-batching
+    // fast path) must produce exactly the tokens each request would
+    // get served alone.
+    let cfg = serve::ModelConfig {
+        name: "itest".into(),
+        n_layers: 1,
+        ffn: 128,
+        ..serve::preset("tiny").unwrap()
+    };
+    let weights = serve::ModelWeightsF32::init(&cfg, 7).unwrap();
+    let model = PackedModel::pack(&weights, true, 8).unwrap();
+    let opts = SchedulerOptions {
+        max_batch: 3,
+        prefill_chunk: 2,
+        kv_capacity: 64,
+        temperature: 0.0,
+        seed: 5,
+    };
+    // staggered prompt lengths force prefill/decode mixtures
+    let reqs: Vec<Request> = vec![
+        Request { id: 0, prompt: vec![5, 6, 7, 8, 9], max_new_tokens: 4 },
+        Request { id: 1, prompt: vec![100], max_new_tokens: 6 },
+        Request { id: 2, prompt: vec![30, 31, 32], max_new_tokens: 3 },
+    ];
+    let mut batched = Scheduler::new(&model, opts.clone()).unwrap();
+    for r in &reqs {
+        batched.submit(r.clone()).unwrap();
+    }
+    let mut got = batched.run_until_idle().unwrap();
+    got.sort_by_key(|c| c.id);
+    assert_eq!(got.len(), 3);
+    for r in &reqs {
+        let mut solo = Scheduler::new(&model, opts.clone()).unwrap();
+        solo.submit(r.clone()).unwrap();
+        let alone = solo.run_until_idle().unwrap();
+        assert_eq!(
+            alone[0].tokens, got[r.id as usize].tokens,
+            "request {} diverged under coalescing",
+            r.id
+        );
+    }
+    // telemetry flows through metrics
+    let stats = batched.stats();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.prefill_tokens, 5 + 1 + 3);
+    assert!(stats.latency.p99().unwrap() >= stats.latency.p50().unwrap());
 }
 
 #[test]

@@ -6,6 +6,7 @@ use quartet2::formats::{
     quantize_ms_eden, quantize_rtn, quantize_sr, FP4_GRID,
 };
 use quartet2::hadamard;
+use quartet2::serve::PackedTensor;
 use quartet2::testing::{check, check_close, for_all, gen_dims, gen_tensor, PropConfig};
 use quartet2::util::rng::Rng;
 use quartet2::{GROUP, ROT_BLOCK};
@@ -191,6 +192,73 @@ fn prop_packed_container_roundtrip() {
             let d = fp4_decode(*c);
             check(*v == d || (*v == 0.0 && d == 0.0), || {
                 format!("decode {d} vs {v}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_tensor_pack_roundtrip() {
+    // Full container round-trip over random tensors: quantize ->
+    // encode + bit-pack + E4M3-encode scales -> unpack must be
+    // *bit-exact*, covering odd group counts (odd rows x one group)
+    // and the ±6 clip boundary (outlier draws saturate groups).
+    for_all(PropConfig::new(48), |rng| {
+        let (rows, cols) = gen_dims(rng, 9, 512, GROUP);
+        let mut x = gen_tensor(rng, rows * cols);
+        // Force some exact clip-boundary hits: elements at ±6x their
+        // group's scale land exactly on the FP4 grid edge.
+        if rng.below(2) == 0 && !x.is_empty() {
+            let i = rng.below(x.len() as u64) as usize;
+            x[i] = 6.0 * x[i].abs().max(1.0);
+            let j = rng.below(x.len() as u64) as usize;
+            x[j] = -x[i];
+        }
+        let four_six = rng.below(2) == 0;
+        let q = quantize_rtn(&x, rows, cols, four_six, false).unwrap();
+        let p = PackedTensor::from_quantized(&q).unwrap();
+        check(p.codes.len() == (rows * cols).div_ceil(2), || {
+            format!("code bytes {}", p.codes.len())
+        })?;
+        check(p.scales.len() == rows * cols / GROUP, || {
+            format!("scale bytes {}", p.scales.len())
+        })?;
+        let back = p.unpack();
+        for (i, (a, b)) in back.values.iter().zip(&q.values).enumerate() {
+            check(a == b || (*a == 0.0 && *b == 0.0), || {
+                format!("value[{i}] {a} vs {b}")
+            })?;
+        }
+        for (g, (a, b)) in back.scales.iter().zip(&q.scales).enumerate() {
+            check(a == b, || format!("scale[{g}] {a} vs {b}"))?;
+        }
+        check(back.gscale == q.gscale, || "gscale".into())?;
+        // and the dequantized views agree elementwise
+        for (i, (a, b)) in p.dequant().iter().zip(q.dequant()).enumerate() {
+            check(*a == b, || format!("dequant[{i}] {a} vs {b}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_gemm_matches_dequant_matmul() {
+    use quartet2::serve::{matmul_f32, qgemm};
+    for_all(PropConfig::new(24), |rng| {
+        let m = 1 + rng.below(6) as usize;
+        let (n, k) = gen_dims(rng, 12, 256, GROUP);
+        let x = gen_tensor(rng, m * k);
+        let w_raw = gen_tensor(rng, n * k);
+        let w = PackedTensor::quantize_pack(&w_raw, n, k, true).unwrap();
+        let mut y = vec![0.0f32; m * n];
+        qgemm(&x, m, &w, &mut y).unwrap();
+        let mut yref = vec![0.0f32; m * n];
+        matmul_f32(&x, m, &w.dequant(), n, k, &mut yref).unwrap();
+        let ymax = yref.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-12);
+        for (i, (a, b)) in y.iter().zip(&yref).enumerate() {
+            check((a - b).abs() <= 1e-5 * ymax, || {
+                format!("({m},{n},{k}) elem {i}: {a} vs {b} (scale {ymax})")
             })?;
         }
         Ok(())

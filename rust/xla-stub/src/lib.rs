@@ -1,0 +1,296 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! quartet2's runtime layer (`runtime::executor`, `coordinator`) is
+//! written against the real `xla` crate (xla_extension 0.5.1 bindings).
+//! That crate needs a vendored XLA C++ distribution and cannot be built
+//! in this offline environment, so this stub mirrors the consumed API
+//! surface exactly:
+//!
+//! * [`Literal`] is a *functional* host-side tensor container (typed
+//!   buffer + dims) — creation, reshape, readback all work, so every
+//!   host-side code path (input staging, state bookkeeping, tests)
+//!   behaves normally.
+//! * [`PjRtClient`] / [`PjRtLoadedExecutable`] exist and type-check,
+//!   but `compile`/`execute` return a descriptive [`Error`]: actually
+//!   running AOT artifacts requires the real bindings (build with the
+//!   `pjrt` feature after vendoring them).
+//!
+//! Everything the native (non-PJRT) stack does — formats, hadamard,
+//! perfmodel, and the whole `serve` subsystem — never touches these
+//! types and runs at full fidelity.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type matching the real crate's surface (only `Display` is
+/// consumed by quartet2, via `anyhow!("...: {e}")`).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(feature = "pjrt")]
+const BACKEND_HINT: &str = "the `pjrt` feature is enabled but the stub `xla` \
+     crate is still in use — vendor the real xla_extension bindings \
+     (replace rust/xla-stub in Cargo.toml) to execute artifacts";
+#[cfg(not(feature = "pjrt"))]
+const BACKEND_HINT: &str = "PJRT execution is unavailable in this offline \
+     build — rebuild with `--features pjrt` and vendored xla_extension \
+     bindings; native paths (formats, serve, perfmodel) do not need it";
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("{what}: {BACKEND_HINT}"))
+}
+
+/// Element types the runtime layer stages across the boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    U32,
+}
+
+impl PrimitiveType {
+    /// Signed-32 alias (the real crate spells it `S32`).
+    pub const I32: PrimitiveType = PrimitiveType::S32;
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+    impl Sealed for u32 {}
+}
+
+/// Host scalar types a [`Literal`] can hold.
+pub trait NativeType: private::Sealed + Copy + Default {
+    const TY: PrimitiveType;
+    fn extract(data: &LiteralData) -> Option<&[Self]>
+    where
+        Self: Sized;
+    fn wrap(v: Vec<Self>) -> LiteralData
+    where
+        Self: Sized;
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl LiteralData {
+    fn len(&self) -> usize {
+        match self {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::U32(v) => v.len(),
+        }
+    }
+}
+
+macro_rules! native {
+    ($t:ty, $variant:ident, $prim:expr) => {
+        impl NativeType for $t {
+            const TY: PrimitiveType = $prim;
+            fn extract(data: &LiteralData) -> Option<&[Self]> {
+                match data {
+                    LiteralData::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+            fn wrap(v: Vec<Self>) -> LiteralData {
+                LiteralData::$variant(v)
+            }
+        }
+    };
+}
+
+native!(f32, F32, PrimitiveType::F32);
+native!(i32, I32, PrimitiveType::S32);
+native!(u32, U32, PrimitiveType::U32);
+
+/// Host-side tensor: typed buffer + dims. Fully functional in the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<usize>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len()],
+            data: T::wrap(v.to_vec()),
+        }
+    }
+
+    /// Zero-initialized literal of the given type and shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let data = match ty {
+            PrimitiveType::F32 => LiteralData::F32(vec![0.0; n]),
+            PrimitiveType::S32 => LiteralData::I32(vec![0; n]),
+            PrimitiveType::U32 => LiteralData::U32(vec![0; n]),
+        };
+        Literal {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    /// Reshape (element count must be preserved; `&[]` means scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: usize = dims.iter().map(|&d| d.max(0) as usize).product::<usize>().max(1);
+        if n != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.iter().map(|&d| d.max(0) as usize).collect(),
+        })
+    }
+
+    /// Read the buffer back as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// First element (the scalar-loss fast path).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::extract(&self.data)
+            .and_then(|v| v.first().copied())
+            .ok_or_else(|| Error("literal empty or element type mismatch".into()))
+    }
+
+    /// Destructure a tuple literal. Stub literals are never tuples —
+    /// only executable outputs are, and the stub never produces them.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("to_tuple on a non-tuple stub literal"))
+    }
+
+    pub fn shape_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Parsed HLO module handle (opaque in the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("parsing HLO text"))
+    }
+}
+
+/// Computation handle (opaque in the stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle returned by `execute` (never constructed by the
+/// stub, but the type must exist for the call sites to compile).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("fetching a device buffer"))
+    }
+}
+
+/// PJRT client handle. Construction succeeds (so host-only flows and
+/// error-path tests run); compilation reports the missing backend.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (no PJRT backend)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling an XLA computation"))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing an artifact"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape_dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        // scalar reshape of a 1-element literal
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn literal_type_mismatch() {
+        let l = Literal::vec1(&[1u32]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.get_first_element::<i32>().is_err());
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn zero_init_shapes() {
+        let l = Literal::create_from_shape(PrimitiveType::F32, &[3, 5]);
+        assert_eq!(l.element_count(), 15);
+        assert!(l.to_vec::<f32>().unwrap().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn execution_paths_report_missing_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(client.compile(&XlaComputation).is_err());
+        assert!(PjRtLoadedExecutable
+            .execute::<Literal>(&[])
+            .is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI gate: format, lints, then the tier-1 verify (ROADMAP.md).
+#
+#   scripts/ci.sh          # full gate
+#   scripts/ci.sh --fix    # apply rustfmt instead of checking
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if [[ "${1:-}" == "--fix" ]]; then
+    cargo fmt
+else
+    cargo fmt --check
+fi
+
+cargo clippy --all-targets -- -D warnings
+
+# tier-1 (ROADMAP.md)
+cargo build --release
+cargo test -q
