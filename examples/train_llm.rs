@@ -33,6 +33,7 @@ fn main() -> Result<()> {
         eval_batches: 8,
         log_every: 10,
         verbose: true,
+        ..Default::default()
     };
     let mut trainer = Trainer::new(&engine, artifacts, opts).context(
         "base-preset artifacts missing — run `make experiment-artifacts` \

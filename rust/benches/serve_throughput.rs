@@ -12,9 +12,11 @@
 
 use quartet2::bench::header;
 use quartet2::serve::{
-    preset, ModelWeightsF32, PackedModel, Request, Scheduler, SchedulerOptions,
+    preset, qgemm_threads, ModelWeightsF32, PackedModel, PackedTensor, Request,
+    Scheduler, SchedulerOptions,
 };
 use quartet2::util::json::{self, Json};
+use quartet2::util::rng::Rng;
 
 const NEW_TOKENS: usize = 32;
 const PROMPT_LEN: usize = 8;
@@ -50,6 +52,53 @@ fn decode_tok_s(model: &PackedModel, n_requests: usize, max_batch: usize) -> f64
         best = best.max(sched.stats().decode_tokens_per_sec());
     }
     best
+}
+
+/// Median seconds per call of `f` over `reps` timed runs.
+fn median_secs(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+/// Before/after for the row-parallel LUT contraction: one prefill-shaped
+/// GEMM (the largest linear of the `base` preset) at 1 thread vs auto.
+fn qgemm_parallel_rows(rows: &mut Vec<Json>) {
+    let (m, n, k) = (64usize, 1152usize, 384usize); // base w_gate under a prefill chunk
+    let mut rng = Rng::seed_from(9);
+    let x = rng.normal_vec(m * k);
+    let w = PackedTensor::quantize_pack(&rng.normal_vec(n * k), n, k, true).expect("pack");
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut y = vec![0.0f32; m * n];
+    let mut bench = |t: usize| -> f64 {
+        median_secs(5, || {
+            y.fill(0.0);
+            qgemm_threads(&x, m, &w, &mut y, t).expect("qgemm");
+        })
+    };
+    let serial = bench(1);
+    let parallel = bench(threads);
+    let gmacs = |secs: f64| (m * n * k) as f64 / secs / 1e9;
+    println!(
+        "qgemm {m}x{n}x{k}: serial {:.2} GMAC/s | {threads} threads {:.2} GMAC/s ({:.2}x)",
+        gmacs(serial),
+        gmacs(parallel),
+        serial / parallel
+    );
+    for (name, t, secs) in [("qgemm_serial", 1, serial), ("qgemm_parallel", threads, parallel)] {
+        rows.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("threads", json::n(t as f64)),
+            ("gmacs", json::n(gmacs(secs))),
+            ("speedup_vs_serial", json::n(serial / secs)),
+        ]));
+    }
 }
 
 fn main() {
@@ -104,6 +153,9 @@ fn main() {
     if ratio < 2.0 {
         println!("WARNING: coalescing speedup below the 2x target");
     }
+
+    println!();
+    qgemm_parallel_rows(&mut rows);
 
     let results = std::path::Path::new("results");
     std::fs::create_dir_all(results).expect("results dir");

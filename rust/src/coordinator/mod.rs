@@ -1,11 +1,13 @@
 //! Training coordinator: the L3 runtime loop.
 //!
-//! Owns the PJRT engine, the artifact triple (init / train / eval), the
-//! prefetching data pipeline, and the metric stream. The hot loop is
-//! PJRT-bound: batches are produced on a worker thread, the train-step
-//! artifact consumes and returns the full optimizer state
-//! (params, m, v) each step, and only the scalar loss is inspected.
+//! Owns the run loop (prefetching data pipeline, periodic eval, metric
+//! stream) and drives it over a pluggable [`Backend`]: the PJRT
+//! executor ([`PjrtBackend`], artifact-driven, state held as literals)
+//! or the native Quartet II engine ([`crate::engine::NativeBackend`],
+//! pure Rust, host-exportable parameters). The hot loop stays
+//! backend-bound: batches are produced on a worker thread and only the
+//! scalar loss is inspected per step.
 
 pub mod trainer;
 
-pub use trainer::{TrainOutcome, Trainer, TrainerOptions};
+pub use trainer::{Backend, PjrtBackend, TrainOutcome, Trainer, TrainerOptions};

@@ -1,0 +1,360 @@
+//! The native transformer: Llama-like blocks (pre-norm, RoPE causal
+//! attention, SwiGLU) assembled from the fused ops of [`super::ops`],
+//! with every linear running the Quartet II quantized scheme.
+//!
+//! Mirrors the L2 model (`python/compile/model.py`) and the serving
+//! forward (`crate::serve::model`): same presets, same GPT-2-style
+//! init, same parameter naming as the trainer's `param_paths`
+//! (`embed`, `lm_head`, `final_norm`, stacked `layers.*`), so a
+//! natively trained state exports straight through
+//! [`crate::serve::ModelWeightsF32::from_named_tensors`] into a packed
+//! `.nvf4` serving checkpoint.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::serve::{ModelConfig, ModelWeightsF32};
+use crate::util::rng::Rng;
+
+use super::ops::{
+    add, causal_attention, cross_entropy, embedding, linear, rmsnorm, rope,
+    swiglu, QuantMode,
+};
+use super::tape::{Tape, VarId};
+use super::tensor::Tensor;
+
+/// One named parameter (f32 master value; quantization happens inside
+/// the matmuls, never on the stored weights — paper §4).
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub value: Tensor,
+}
+
+/// Parameters per transformer block, in storage order.
+const PER_LAYER: usize = 9;
+/// Leading non-layer parameters: embed, lm_head, final_norm.
+const HEADER: usize = 3;
+
+/// The native trainable model: config + flat named parameter list.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    pub mode: QuantMode,
+    pub params: Vec<Param>,
+}
+
+impl NativeModel {
+    /// GPT-2-style init (N(0, 0.02), residual outputs scaled by
+    /// 1/sqrt(2L), unit norms) — matches `ModelWeightsF32::init` and
+    /// the python `init_params`.
+    pub fn init(cfg: &ModelConfig, mode: QuantMode, seed: u64) -> Result<NativeModel> {
+        ensure!(
+            cfg.n_heads > 0 && cfg.dim % cfg.n_heads == 0,
+            "dim {} must divide into {} heads",
+            cfg.dim,
+            cfg.n_heads
+        );
+        ensure!((cfg.dim / cfg.n_heads) % 2 == 0, "RoPE needs an even head_dim");
+        ensure!(cfg.vocab > 0 && cfg.n_layers > 0, "vocab/layers must be positive");
+        let grain = mode.grain();
+        if grain != 0 {
+            // quantized matmuls need grain-aligned GEMM dims (every
+            // linear's in/out features and the vocab all appear as an
+            // inner dim of some forward/backward matmul); the
+            // misalignment fallback would silently de-quantize them
+            ensure!(
+                cfg.dim % grain == 0 && cfg.ffn % grain == 0 && cfg.vocab % grain == 0,
+                "quantized training ({mode:?}) needs dim ({}), ffn ({}) and vocab ({}) to be multiples of {grain}",
+                cfg.dim,
+                cfg.ffn,
+                cfg.vocab
+            );
+        }
+        let (d, f, v) = (cfg.dim, cfg.ffn, cfg.vocab);
+        let std = 0.02f32;
+        let res_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+        let mut rng = Rng::seed_from(seed);
+        let mut params = Vec::with_capacity(HEADER + cfg.n_layers * PER_LAYER);
+        let mut push = |name: String, shape: &[usize], std: f32, rng: &mut Rng| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if std == 0.0 {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| rng.normal_f32() * std).collect()
+            };
+            params.push(Param {
+                name,
+                value: Tensor::new(data, shape).expect("init shape"),
+            });
+        };
+        push("embed".into(), &[v, d], std, &mut rng);
+        push("lm_head".into(), &[v, d], std, &mut rng);
+        push("final_norm".into(), &[d], 0.0, &mut rng);
+        for i in 0..cfg.n_layers {
+            push(format!("layer{i}.attn_norm"), &[d], 0.0, &mut rng);
+            push(format!("layer{i}.mlp_norm"), &[d], 0.0, &mut rng);
+            push(format!("layer{i}.wq"), &[d, d], std, &mut rng);
+            push(format!("layer{i}.wk"), &[d, d], std, &mut rng);
+            push(format!("layer{i}.wv"), &[d, d], std, &mut rng);
+            push(format!("layer{i}.wo"), &[d, d], res_std, &mut rng);
+            push(format!("layer{i}.w_gate"), &[f, d], std, &mut rng);
+            push(format!("layer{i}.w_up"), &[f, d], std, &mut rng);
+            push(format!("layer{i}.w_down"), &[d, f], res_std, &mut rng);
+        }
+        Ok(NativeModel {
+            cfg: cfg.clone(),
+            mode,
+            params,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.value.numel()).sum()
+    }
+
+    fn layer_base(&self, i: usize) -> usize {
+        HEADER + i * PER_LAYER
+    }
+
+    /// Build the full forward graph for one `[batch, seq]` token block
+    /// and return (tape, scalar loss id, param leaf ids aligned with
+    /// `self.params`). `rng` seeds the quantizer randomness ω of every
+    /// linear (fold it per step for fresh draws, fix it for eval).
+    pub fn loss_graph(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+        rng: &Rng,
+    ) -> Result<(Tape, VarId, Vec<VarId>)> {
+        self.loss_graph_with(tokens, targets, batch, seq, rng, self.mode)
+    }
+
+    /// [`NativeModel::loss_graph`] with an explicit quantization mode
+    /// (evaluation uses the exact f32 forward regardless of the
+    /// training mode; see [`NativeModel::eval_loss_exact`]).
+    #[allow(clippy::too_many_arguments)]
+    fn loss_graph_with(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+        rng: &Rng,
+        mode: QuantMode,
+    ) -> Result<(Tape, VarId, Vec<VarId>)> {
+        ensure!(batch > 0 && seq > 0, "empty batch");
+        ensure!(
+            tokens.len() == batch * seq && targets.len() == batch * seq,
+            "tokens/targets must be batch*seq = {} (got {} / {})",
+            batch * seq,
+            tokens.len(),
+            targets.len()
+        );
+        let mut tape = Tape::new();
+        let pids: Vec<VarId> = self
+            .params
+            .iter()
+            .map(|p| tape.leaf(p.value.clone()))
+            .collect();
+        let positions: Vec<usize> = (0..batch).flat_map(|_| 0..seq).collect();
+        let mut op = 0u64;
+        let mut next_rng = || {
+            op += 1;
+            rng.fold_in(1000 + op)
+        };
+
+        let mut x = embedding(&mut tape, pids[0], tokens).context("embedding")?;
+        for i in 0..self.cfg.n_layers {
+            let b = self.layer_base(i);
+            let (attn_norm, mlp_norm) = (pids[b], pids[b + 1]);
+            let (wq, wk, wv, wo) = (pids[b + 2], pids[b + 3], pids[b + 4], pids[b + 5]);
+            let (w_gate, w_up, w_down) = (pids[b + 6], pids[b + 7], pids[b + 8]);
+
+            let h = rmsnorm(&mut tape, x, attn_norm)?;
+            let q = linear(&mut tape, h, wq, mode, &next_rng())?;
+            let k = linear(&mut tape, h, wk, mode, &next_rng())?;
+            let v = linear(&mut tape, h, wv, mode, &next_rng())?;
+            let qr = rope(&mut tape, q, self.cfg.n_heads, &positions, self.cfg.rope_theta)?;
+            let kr = rope(&mut tape, k, self.cfg.n_heads, &positions, self.cfg.rope_theta)?;
+            let a = causal_attention(&mut tape, qr, kr, v, self.cfg.n_heads, batch, seq)?;
+            let o = linear(&mut tape, a, wo, mode, &next_rng())?;
+            x = add(&mut tape, x, o)?;
+
+            let h = rmsnorm(&mut tape, x, mlp_norm)?;
+            let g = linear(&mut tape, h, w_gate, mode, &next_rng())?;
+            let u = linear(&mut tape, h, w_up, mode, &next_rng())?;
+            let s = swiglu(&mut tape, g, u)?;
+            let o = linear(&mut tape, s, w_down, mode, &next_rng())?;
+            x = add(&mut tape, x, o)?;
+        }
+        let h = rmsnorm(&mut tape, x, pids[2])?;
+        let logits = linear(&mut tape, h, pids[1], mode, &next_rng())?;
+        let loss = cross_entropy(&mut tape, logits, targets)?;
+        Ok((tape, loss, pids))
+    }
+
+    /// Forward-only loss under the model's training mode
+    /// (deterministic for a fixed `rng`).
+    pub fn eval_loss(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+        rng: &Rng,
+    ) -> Result<f64> {
+        let (tape, loss, _) = self.loss_graph(tokens, targets, batch, seq, rng)?;
+        Ok(tape.value(loss).item() as f64)
+    }
+
+    /// Forward-only loss through the **exact f32 forward**, whatever
+    /// the training mode. This is the validation metric: it isolates
+    /// training quality (what the gradient estimator produced) from
+    /// eval-time forward-quantization noise — otherwise an SR-vs-
+    /// MS-EDEN gap comparison would be partly predetermined by their
+    /// different forward MSEs.
+    pub fn eval_loss_exact(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<f64> {
+        let rng = Rng::seed_from(0); // unused by the f32 path
+        let (tape, loss, _) =
+            self.loss_graph_with(tokens, targets, batch, seq, &rng, QuantMode::F32)?;
+        Ok(tape.value(loss).item() as f64)
+    }
+
+    /// Current parameters as the trainer's named flat tensors: `embed`,
+    /// `lm_head`, `final_norm`, plus per-field `layers.<name>` arrays
+    /// stacked over layers (`[L, ...]`, the L2 scan layout) — the exact
+    /// shape [`ModelWeightsF32::from_named_tensors`] consumes.
+    pub fn export_named_tensors(&self) -> BTreeMap<String, Vec<f32>> {
+        let mut out = BTreeMap::new();
+        for (idx, name) in ["embed", "lm_head", "final_norm"].iter().enumerate() {
+            out.insert(name.to_string(), self.params[idx].value.data.clone());
+        }
+        let fields = [
+            "attn_norm", "mlp_norm", "wq", "wk", "wv", "wo", "w_gate", "w_up",
+            "w_down",
+        ];
+        for (fi, field) in fields.iter().enumerate() {
+            let mut stacked = Vec::new();
+            for i in 0..self.cfg.n_layers {
+                stacked.extend_from_slice(
+                    &self.params[self.layer_base(i) + fi].value.data,
+                );
+            }
+            out.insert(format!("layers.{field}"), stacked);
+        }
+        out
+    }
+
+    /// Convert the current parameters into serving master weights
+    /// (ready for `PackedModel::pack`). Requires a serving-valid config
+    /// (preset-shaped dims).
+    pub fn to_weights(&self) -> Result<ModelWeightsF32> {
+        ModelWeightsF32::from_named_tensors(&self.cfg, &self.export_named_tensors())
+    }
+}
+
+/// A micro config for fast f32-mode engine tests (too small to
+/// quantize — [`NativeModel::init`] rejects it for quantized modes).
+/// Shared across the engine's unit-test modules.
+#[cfg(test)]
+pub(crate) fn micro_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "micro".into(),
+        vocab: 16,
+        dim: 8,
+        n_layers: 1,
+        n_heads: 2,
+        ffn: 12,
+        max_seq: 8,
+        rope_theta: 10000.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_starts_near_uniform() {
+        let m = NativeModel::init(&micro_cfg(), QuantMode::F32, 1).unwrap();
+        let rng = Rng::seed_from(2);
+        let tokens = vec![1i32, 5, 3, 2, 9, 0, 4, 7];
+        let targets = vec![5i32, 3, 2, 9, 0, 4, 7, 1];
+        let loss = m.eval_loss(&tokens, &targets, 2, 4, &rng).unwrap();
+        assert!((loss - (16f64).ln()).abs() < 0.5, "init loss {loss}");
+    }
+
+    #[test]
+    fn quantized_mode_rejects_unaligned_dims() {
+        assert!(NativeModel::init(&micro_cfg(), QuantMode::MsEden, 1).is_err());
+        assert!(NativeModel::init(&micro_cfg(), QuantMode::F32, 1).is_ok());
+    }
+
+    #[test]
+    fn full_model_grad_check_on_sampled_coords() {
+        // Finite-difference check of the whole graph (f32 mode) on a
+        // few sampled coordinates of every parameter kind.
+        let cfg = micro_cfg();
+        let m = NativeModel::init(&cfg, QuantMode::F32, 3).unwrap();
+        let rng = Rng::seed_from(4);
+        let tokens = vec![1i32, 5, 3, 2];
+        let targets = vec![5i32, 3, 2, 9];
+        let (tape, loss, pids) = m.loss_graph(&tokens, &targets, 1, 4, &rng).unwrap();
+        let grads = tape.backward(loss).unwrap();
+
+        let eval_with = |pi: usize, ci: usize, delta: f32| -> f64 {
+            let mut m2 = NativeModel {
+                cfg: m.cfg.clone(),
+                mode: m.mode,
+                params: m.params.clone(),
+            };
+            m2.params[pi].value.data[ci] += delta;
+            m2.eval_loss(&tokens, &targets, 1, 4, &rng).unwrap()
+        };
+        let eps = 1e-2f32;
+        for (pi, coord) in [(0, 9), (1, 3), (2, 1), (3, 2), (5, 7), (9, 4), (11, 5)] {
+            let g = grads.get(pids[pi]).map(|t| t.data[coord] as f64);
+            let num = (eval_with(pi, coord, eps) - eval_with(pi, coord, -eps))
+                / (2.0 * eps as f64);
+            match g {
+                Some(ana) => {
+                    let scale = num.abs().max(ana.abs()).max(0.05);
+                    assert!(
+                        (num - ana).abs() / scale < 0.08,
+                        "param {pi} ({}) coord {coord}: numeric {num} vs autograd {ana}",
+                        m.params[pi].name
+                    );
+                }
+                None => panic!("param {pi} has no grad"),
+            }
+        }
+    }
+
+    #[test]
+    fn export_matches_serve_conversion_layout() {
+        // export -> from_named_tensors must reproduce the params
+        // exactly for a serving-valid (preset-shaped) config.
+        let cfg = crate::serve::preset("tiny").unwrap();
+        let m = NativeModel::init(&cfg, QuantMode::F32, 9).unwrap();
+        let w = m.to_weights().unwrap();
+        assert_eq!(w.embed, m.params[0].value.data);
+        assert_eq!(w.lm_head, m.params[1].value.data);
+        assert_eq!(w.final_norm, m.params[2].value.data);
+        for i in 0..cfg.n_layers {
+            let b = HEADER + i * PER_LAYER;
+            assert_eq!(w.layers[i].attn_norm, m.params[b].value.data);
+            assert_eq!(w.layers[i].wq, m.params[b + 2].value.data);
+            assert_eq!(w.layers[i].w_down, m.params[b + 8].value.data);
+        }
+        assert_eq!(m.n_params(), cfg.param_count());
+    }
+}

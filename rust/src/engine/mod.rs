@@ -1,0 +1,44 @@
+//! Native Quartet II training engine: pure-Rust tensors, reverse-mode
+//! autograd, and a fully-NVFP4-quantized transformer — end-to-end
+//! pre-training with **no XLA**.
+//!
+//! The PJRT path (L1/L2 artifacts + [`crate::runtime`]) executes the
+//! paper's computation graph as compiled HLO, but the offline build
+//! stubs its executor; this subsystem is the self-contained
+//! counterpart that actually trains:
+//!
+//! * [`tensor`] — dense row-major f32 tensors.
+//! * [`tape`] — define-by-run reverse-mode autograd over fused ops.
+//! * [`ops`] — the op set; its centerpiece, [`ops::linear`], quantizes
+//!   **all three** matmuls (forward, grad-input, grad-weight) to NVFP4
+//!   via MS-EDEN (RHT + EDEN-corrected clipped RTN, unbiased), SR (the
+//!   prior-work baseline), or an exact f32 reference — the paper's §4
+//!   scheme, selectable per run for A/B loss-curve comparison.
+//! * [`layers`] — the Llama-like model (embedding, RMSNorm, RoPE
+//!   causal attention, SwiGLU, cross-entropy) with trainer-compatible
+//!   parameter naming.
+//! * [`optim`] — AdamW over f32 master weights (warmup + cosine).
+//! * [`backend`] — [`backend::NativeBackend`], the
+//!   [`crate::coordinator::Backend`] implementation wiring the engine
+//!   into `coordinator::Trainer`, `quartet2 train-native`, and the
+//!   `train_native` experiment.
+//!
+//! Train-and-serve loop closure: after training, parameters export via
+//! [`layers::NativeModel::export_named_tensors`] straight into
+//! [`crate::serve::ModelWeightsF32::from_named_tensors`], pack to a
+//! `.nvf4` checkpoint, and serve through `quartet2 generate` — one
+//! process, no artifacts.
+
+pub mod backend;
+pub mod layers;
+pub mod ops;
+pub mod optim;
+pub mod tape;
+pub mod tensor;
+
+pub use backend::NativeBackend;
+pub use layers::{NativeModel, Param};
+pub use ops::QuantMode;
+pub use optim::{AdamW, AdamWOptions};
+pub use tape::{Gradients, Parent, Tape, VarId};
+pub use tensor::Tensor;

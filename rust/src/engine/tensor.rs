@@ -1,0 +1,135 @@
+//! Dense row-major f32 tensors — the native engine's value type.
+//!
+//! Deliberately minimal: the engine's hot paths are the fused ops in
+//! [`super::ops`], which work on raw `&[f32]` slices; `Tensor` exists to
+//! carry shape metadata through the autograd tape and the optimizer.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            bail!(
+                "tensor data has {} elems, shape {shape:?} wants {want}",
+                data.len()
+            );
+        }
+        Ok(Tensor {
+            data,
+            shape: shape.to_vec(),
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            data: vec![v],
+            shape: vec![1],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Dimension `i` of the shape.
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    /// Rows of a 2-D tensor (leading dims collapsed for >2-D).
+    pub fn rows(&self) -> usize {
+        self.numel() / self.cols()
+    }
+
+    /// Last dimension.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("tensor has a shape")
+    }
+
+    /// The single value of a scalar tensor.
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.numel(), 1);
+        self.data[0]
+    }
+
+    /// 2-D transpose (rows x cols -> cols x rows), materialized.
+    pub fn transposed(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor {
+            data: out,
+            shape: vec![c, r],
+        }
+    }
+
+    /// Elementwise accumulate (`self += other`); shapes must agree.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+}
+
+/// Transpose a raw row-major `[rows, cols]` slice.
+pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            out[j * rows + i] = x[i * cols + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![0.0; 6], &[2, 3]).is_ok());
+        assert!(Tensor::new(vec![0.0; 5], &[2, 3]).is_err());
+        let t = Tensor::zeros(&[4, 8]);
+        assert_eq!((t.rows(), t.cols(), t.numel()), (4, 8, 32));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new((0..6).map(|v| v as f32).collect(), &[2, 3]).unwrap();
+        let tt = t.transposed();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.data[2], t.data[1]);
+        assert_eq!(tt.transposed(), t);
+        assert_eq!(transpose(&t.data, 2, 3), tt.data);
+    }
+
+    #[test]
+    fn accumulate() {
+        let mut a = Tensor::new(vec![1.0, 2.0], &[2]).unwrap();
+        let b = Tensor::new(vec![10.0, 20.0], &[2]).unwrap();
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![11.0, 22.0]);
+    }
+}

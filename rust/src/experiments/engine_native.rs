@@ -1,0 +1,122 @@
+//! `train-native` experiment: the paper's central A/B on the native
+//! engine — identical runs (preset, seed, data order) under the f32
+//! reference, SR-quantized (prior-work baseline), and MS-EDEN-quantized
+//! (Quartet II) training schemes, reporting final-loss gaps vs f32.
+//!
+//! This is the Figure 4 story without XLA: if MS-EDEN's lower-MSE
+//! unbiased gradient estimator is doing its job, its gap to the f32
+//! curve should sit well inside the SR gap. Validation always runs the
+//! exact f32 forward (`NativeModel::eval_loss_exact`), so the gaps
+//! measure *training* quality, not eval-time forward-quantization
+//! noise.
+
+use anyhow::{Context, Result};
+
+use super::Env;
+use crate::coordinator::{Trainer, TrainerOptions};
+use crate::metrics::LossCurve;
+use crate::util::json::{self, Json};
+
+/// Batch/seq for the native runs: 128 tokens/step keeps the debug-build
+/// cost sane while `batch*seq % 128 == 0` keeps the grad-weight matmul
+/// on the quantized path.
+const BATCH: usize = 2;
+const SEQ: usize = 64;
+
+/// Train (or load a cached curve for) one native scheme.
+pub fn run_native_scheme(env: &Env, scheme: &str) -> Result<LossCurve> {
+    let run_name = format!(
+        "native_{}_{}_s{}_seed{}",
+        env.preset, scheme, env.steps, env.seed
+    );
+    let cached = env.results_dir.join(format!("{run_name}.json"));
+    if env.resume && cached.exists() {
+        let curve = LossCurve::load(&cached)?;
+        println!(
+            "[cached] {run_name}: val {:.4}",
+            curve.final_val_loss().unwrap_or(f64::NAN)
+        );
+        return Ok(curve);
+    }
+    println!("== native training {run_name} ==");
+    let opts = TrainerOptions {
+        preset: env.preset.clone(),
+        scheme: scheme.to_string(),
+        steps: env.steps,
+        seed: env.seed,
+        eval_every: 25,
+        eval_batches: 2,
+        log_every: 10,
+        verbose: false,
+        batch: BATCH,
+        seq: SEQ,
+    };
+    let mut trainer =
+        Trainer::native(opts).with_context(|| format!("native scheme {scheme}"))?;
+    let outcome = trainer.run()?;
+    let mut curve = outcome.curve;
+    curve.run_name = run_name.clone();
+    println!(
+        "   {} final val {:.4} @ {:.0} tok/s",
+        run_name, outcome.final_val_loss, outcome.tokens_per_sec
+    );
+    curve.save(env.results_dir)?;
+    Ok(curve)
+}
+
+/// The full A/B: f32 vs SR vs MS-EDEN curves + gap table.
+pub fn train_native(env: &Env) -> Result<()> {
+    let base = run_native_scheme(env, "f32")?;
+    let base_loss = base
+        .final_val_loss()
+        .context("f32 baseline produced no eval point")?;
+    println!(
+        "\n=== native engine: quantized-training gaps (preset {}, {} steps, {}x{} tokens/step) ===",
+        env.preset, env.steps, BATCH, SEQ
+    );
+    println!("{:<10} {:>10} {:>12} {:>14}", "scheme", "val loss", "gap vs f32", "tail train");
+    println!(
+        "{:<10} {:>10.4} {:>12} {:>14.4}",
+        "f32",
+        base_loss,
+        "--",
+        base.tail_train_loss(5)
+    );
+    let mut rows = vec![("f32".to_string(), base_loss, 0.0, base.tail_train_loss(5))];
+    for scheme in ["sr", "quartet2"] {
+        let curve = run_native_scheme(env, scheme)?;
+        let loss = curve.final_val_loss().unwrap_or(f64::NAN);
+        let gap = loss - base_loss;
+        let tail = curve.tail_train_loss(5);
+        println!("{:<10} {:>10.4} {:>+12.4} {:>14.4}", scheme, loss, gap, tail);
+        rows.push((scheme.to_string(), loss, gap, tail));
+    }
+    std::fs::create_dir_all(env.results_dir)?;
+    std::fs::write(
+        env.results_dir.join("train_native.json"),
+        json::obj(vec![
+            ("experiment", json::s("train_native")),
+            ("preset", json::s(&env.preset)),
+            ("steps", json::n(env.steps as f64)),
+            ("batch", json::n(BATCH as f64)),
+            ("seq", json::n(SEQ as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(s, l, g, t)| {
+                            json::obj(vec![
+                                ("scheme", json::s(s)),
+                                ("val_loss", json::n(*l)),
+                                ("gap_vs_f32", json::n(*g)),
+                                ("tail_train_loss", json::n(*t)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string(),
+    )?;
+    Ok(())
+}

@@ -5,6 +5,7 @@
 //! Fig 6/10, Table 7) run natively on the Rust mirrors. Every driver
 //! prints the paper-shaped table and persists JSON under `results/`.
 
+pub mod engine_native;
 pub mod fig9;
 pub mod perf;
 pub mod training;
@@ -42,6 +43,7 @@ pub fn run(env: &Env, id: &str) -> Result<()> {
         "fig10" => perf::fig10(env.results_dir),
         "table7" => perf::table7(),
         "serving" => perf::serving(env.results_dir),
+        "train-native" | "train_native" => engine_native::train_native(env),
         "all-numeric" => {
             perf::table1(env.results_dir)?;
             perf::table2()?;
@@ -52,7 +54,8 @@ pub fn run(env: &Env, id: &str) -> Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?}; available: fig1 fig2 fig4 fig5 \
-             fig9 table1 table2 table5 table7 fig6 fig10 serving all-numeric"
+             fig9 table1 table2 table5 table7 fig6 fig10 serving \
+             train-native all-numeric"
         ),
     }
 }

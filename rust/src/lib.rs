@@ -18,6 +18,14 @@
 //!   ([`experiments`]), and the analytical Blackwell performance model
 //!   ([`perfmodel`]).
 //!
+//! L3 also owns the **native training engine** ([`engine`]): a
+//! pure-Rust tensor + reverse-mode autograd subsystem whose linear
+//! layer quantizes all three matmuls (forward, grad-input,
+//! grad-weight) to NVFP4 via MS-EDEN / SR / f32-reference — so the
+//! crate trains end-to-end offline with no XLA (`quartet2
+//! train-native`), behind the same [`coordinator::Backend`] trait the
+//! PJRT path implements.
+//!
 //! L3 additionally owns the **serving layer** ([`serve`]): trained (or
 //! freshly initialized) weights are bit-packed into the real NVFP4
 //! storage container (packed store -> quantized GEMM -> continuous-
@@ -40,6 +48,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod formats;
 pub mod hadamard;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train        train one (preset, scheme) via the PJRT artifacts
+//!   train-native train one (preset, scheme) on the native Rust engine
+//!                (no XLA; exports a packed serving checkpoint)
 //!   experiment   regenerate a paper table/figure (fig1..fig10, table1..7)
 //!   perfmodel    print the analytical Blackwell model report
 //!   generate     one-shot decode from a packed NVFP4 checkpoint
@@ -42,7 +44,15 @@ USAGE:
                       [--seed 42] [--eval-every 50] [--eval-batches 8]
                       [--artifacts-dir artifacts] [--results-dir results]
                       [--config file.toml]
-  quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|all-numeric>
+  quartet2 train-native [--preset tiny] [--scheme quartet2|sr|f32] [--steps 100]
+                      [--batch 4] [--seq 64] [--seed 42] [--eval-every 25]
+                      [--eval-batches 2] [--results-dir results]
+                      [--export-checkpoint checkpoints/serve_<preset>_native]
+                      [--no-export]
+                      pure-Rust Quartet II training (MS-EDEN-quantized
+                      fwd+bwd matmuls); packs the trained weights into a
+                      NVFP4 serving checkpoint on completion
+  quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|train-native|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
   quartet2 generate   [--preset tiny] [--prompt \"The \"] [--max-tokens 32]
@@ -74,6 +84,7 @@ fn real_main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("train-native") => cmd_train_native(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("perfmodel") => {
             let env = numeric_env(&args)?;
@@ -140,6 +151,67 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "done: final val loss {:.4}, {:.0} tokens/s, curve -> {path:?}",
         outcome.final_val_loss, outcome.tokens_per_sec
+    );
+    Ok(())
+}
+
+/// Pure-Rust training on the native engine (no artifacts, no XLA),
+/// then pack + save the trained weights as a NVFP4 serving checkpoint
+/// so `quartet2 generate --checkpoint <dir>` serves them directly.
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "tiny").to_string();
+    let scheme = args.get_or("scheme", "quartet2").to_string();
+    let batch = args.usize_or("batch", 4)?;
+    let seq = args.usize_or("seq", 64)?;
+    let seed = args.u64_or("seed", 42)?;
+    let opts = TrainerOptions {
+        preset: preset.clone(),
+        scheme: scheme.clone(),
+        steps: args.usize_or("steps", 100)?,
+        seed,
+        eval_every: args.usize_or("eval-every", 25)?,
+        eval_batches: args.usize_or("eval-batches", 2)?,
+        log_every: args.usize_or("log-every", 10)?,
+        verbose: true,
+        batch,
+        seq,
+    };
+    // Scheme/shape validation (incl. the batch*seq quantization-grain
+    // requirement) lives in engine::NativeBackend::from_config, which
+    // errors with an actionable message.
+    let mut trainer = Trainer::native(opts)?;
+    println!("{}", trainer.describe());
+    let mut outcome = trainer.run()?;
+    // distinct run_name so a PJRT `train` with the same flags is not
+    // clobbered (matches the experiment driver's `native_` prefix)
+    outcome.curve.run_name = format!("native_{}", outcome.curve.run_name);
+    let results_dir = args.get_or("results-dir", "results");
+    let path = outcome.curve.save(Path::new(results_dir))?;
+    println!(
+        "done: final val loss {:.4}, {:.0} tokens/s, curve -> {path:?}",
+        outcome.final_val_loss, outcome.tokens_per_sec
+    );
+
+    if args.flag("no-export") {
+        return Ok(());
+    }
+    let dir = match args.opt("export-checkpoint") {
+        Some(d) => PathBuf::from(d),
+        None => PathBuf::from(format!("checkpoints/serve_{preset}_native")),
+    };
+    let named = trainer.export_named_tensors()?;
+    let cfg = serve::preset(&preset)?;
+    let weights = serve::ModelWeightsF32::from_named_tensors(&cfg, &named)
+        .context("converting trained state to serving weights")?;
+    let model = PackedModel::pack(&weights, true, seed ^ 0x5e7e)?;
+    model.save(&dir)?;
+    println!(
+        "packed trained weights -> {dir:?} ({} packed bytes)",
+        model.packed_bytes()
+    );
+    println!(
+        "serve them with: quartet2 generate --preset {preset} --checkpoint {}",
+        dir.display()
     );
     Ok(())
 }

@@ -10,7 +10,8 @@
 //!   directories, conversion from trainer state).
 //! * [`qgemm`] — the quantized GEMM engine: f32 activations contracted
 //!   against packed codes through a 16-entry LUT with per-group scale
-//!   fusion; no dequantized weight matrix is ever materialized.
+//!   fusion; no dequantized weight matrix is ever materialized. Large
+//!   contractions split output rows across scoped worker threads.
 //! * [`kvcache`] — per-sequence ring-buffer KV cache (graceful
 //!   sliding-window degradation past capacity).
 //! * [`model`] — the Llama-like forward pass (pre-norm, RoPE, SwiGLU)
@@ -34,5 +35,5 @@ pub mod scheduler;
 pub use kvcache::KvCache;
 pub use model::{preset, ModelConfig, ModelWeightsF32, PackedModel, StepSeq};
 pub use packed::PackedTensor;
-pub use qgemm::{matmul_f32, qgemm};
+pub use qgemm::{matmul_f32, qgemm, qgemm_threads};
 pub use scheduler::{Completion, Request, Scheduler, SchedulerOptions, ServeStats};

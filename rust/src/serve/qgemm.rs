@@ -10,9 +10,22 @@
 //! scale-fused **once**, then reused across all `m` activation rows in
 //! the micro-batch — decode cost amortizes as `1/m`, which is exactly
 //! why the continuous-batching scheduler coalesces decode steps
-//! ([`super::scheduler`]). The f32 reference path ([`matmul_f32`]) is
-//! cache-blocked over output columns and used for parity tests and the
-//! non-quantized baseline.
+//! ([`super::scheduler`]).
+//!
+//! **Parallelism** (ROADMAP open item): large contractions split the
+//! output rows (= weight rows) across scoped worker threads, each
+//! producing a disjoint column tile that is summed into `y` after the
+//! join — the same row decomposition a rayon `par_chunks` would give
+//! (rayon itself is unavailable in the offline build). Row blocks keep
+//! each worker streaming its own slice of the packed weights, so the
+//! split adds no decode duplication. Small GEMMs (single-request
+//! decode) stay on the serial path: below [`PAR_MIN_MACS`] the spawn
+//! overhead would exceed the contraction itself. Per-element results
+//! are bitwise identical to the serial path for a zeroed `y` (same
+//! group accumulation order per output element).
+//!
+//! The f32 reference path ([`matmul_f32`]) is cache-blocked over output
+//! columns and used for parity tests and the non-quantized baseline.
 
 use anyhow::{bail, Result};
 
@@ -31,23 +44,27 @@ pub const FP4_LUT: [f32; 16] = [
 /// partial sums stays in registers/L1.
 const M_TILE: usize = 16;
 
-/// `y[m, n] = x[m, k] @ W^T` with `W` packed NVFP4 `[n, k]`.
-///
-/// `y` must be zeroed (or hold a bias) on entry; results accumulate.
-pub fn qgemm(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()> {
-    let (n, k) = (w.rows, w.cols);
-    if x.len() != m * k {
-        bail!("qgemm: x has {} elems, want {m}x{k}", x.len());
-    }
-    if y.len() != m * n {
-        bail!("qgemm: y has {} elems, want {m}x{n}", y.len());
-    }
+/// Minimum contraction size (`m * n * k` MACs) before worker threads
+/// pay for themselves; below this the GEMM runs serially.
+const PAR_MIN_MACS: usize = 1 << 22;
+
+/// Serial kernel over weight rows `[r0, r1)`: accumulates into the
+/// column tile `y[i * ystride + (row - r0)]`.
+fn qgemm_rows(
+    x: &[f32],
+    m: usize,
+    w: &PackedTensor,
+    r0: usize,
+    r1: usize,
+    y: &mut [f32],
+    ystride: usize,
+) {
+    let k = w.cols;
     let groups_per_row = k / GROUP;
     let mut wtile = [0.0f32; GROUP];
-
     for i0 in (0..m).step_by(M_TILE) {
         let i1 = (i0 + M_TILE).min(m);
-        for row in 0..n {
+        for row in r0..r1 {
             for g in 0..groups_per_row {
                 let gid = row * groups_per_row + g;
                 let s = w.group_scale(gid);
@@ -65,8 +82,99 @@ pub fn qgemm(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()>
                     for (xv, wv) in xrow.iter().zip(&wtile) {
                         acc += xv * wv;
                     }
-                    y[i * n + row] += acc;
+                    y[i * ystride + row - r0] += acc;
                 }
+            }
+        }
+    }
+}
+
+/// `QUARTET2_QGEMM_THREADS` override, read once (this sits on the
+/// per-linear serving hot path; the env cannot change mid-process).
+/// 0/unset/garbage = auto.
+fn thread_override() -> Option<usize> {
+    static OVERRIDE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        std::env::var("QUARTET2_QGEMM_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+    })
+}
+
+/// Worker-thread count for an `m x n x k` contraction: 1 (serial) when
+/// the GEMM is too small, else the machine's parallelism capped by the
+/// row count.
+fn auto_threads(m: usize, n: usize, k: usize) -> usize {
+    if let Some(t) = thread_override() {
+        return t.min(n.max(1));
+    }
+    if m * n * k < PAR_MIN_MACS {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n.max(1))
+}
+
+/// `y[m, n] = x[m, k] @ W^T` with `W` packed NVFP4 `[n, k]`.
+///
+/// `y` must be zeroed (or hold a bias) on entry; results accumulate.
+/// Large contractions run row-parallel (see module docs); with a
+/// non-zero `y` the parallel path adds each element's packed product
+/// as one term, which may round differently from the serial
+/// interleaving (identical for a zeroed `y`).
+pub fn qgemm(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()> {
+    qgemm_threads(x, m, w, y, auto_threads(m, w.rows, w.cols))
+}
+
+/// [`qgemm`] with an explicit worker count (`1` forces the serial
+/// path; the throughput bench uses this for before/after numbers).
+pub fn qgemm_threads(
+    x: &[f32],
+    m: usize,
+    w: &PackedTensor,
+    y: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    let (n, k) = (w.rows, w.cols);
+    if x.len() != m * k {
+        bail!("qgemm: x has {} elems, want {m}x{k}", x.len());
+    }
+    if y.len() != m * n {
+        bail!("qgemm: y has {} elems, want {m}x{n}", y.len());
+    }
+    let threads = threads.clamp(1, n.max(1));
+    if threads < 2 {
+        qgemm_rows(x, m, w, 0, n, y, n);
+        return Ok(());
+    }
+
+    let chunk = n.div_ceil(threads);
+    let tiles: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + chunk).min(n);
+            handles.push(s.spawn(move || {
+                let mut tile = vec![0.0f32; m * (r1 - r0)];
+                qgemm_rows(x, m, w, r0, r1, &mut tile, r1 - r0);
+                (r0, r1, tile)
+            }));
+            r0 = r1;
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("qgemm worker panicked"))
+            .collect()
+    });
+    for (r0, r1, tile) in tiles {
+        let nr = r1 - r0;
+        for i in 0..m {
+            let yrow = &mut y[i * n + r0..i * n + r1];
+            for (yv, tv) in yrow.iter_mut().zip(&tile[i * nr..(i + 1) * nr]) {
+                *yv += tv;
             }
         }
     }
@@ -132,7 +240,8 @@ mod tests {
     // Parity of qgemm vs the dequant reference is covered at the crate
     // boundary: tests/integration.rs (fixed shapes, the acceptance
     // gate) and tests/proptests.rs (randomized shapes). Unit tests here
-    // focus on the LUT, accumulation semantics, and validation.
+    // focus on the LUT, accumulation semantics, threading, and
+    // validation.
 
     #[test]
     fn qgemm_close_to_f32_matmul() {
@@ -154,6 +263,23 @@ mod tests {
         let den: f64 = exact.iter().map(|v| (*v as f64).powi(2)).sum();
         let rel = (num / den.max(1e-30)).sqrt();
         assert!(rel < 0.15, "relative gemm error {rel}");
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        // zeroed y: each output element sees the identical group
+        // accumulation order on both paths
+        let mut rng = Rng::seed_from(77);
+        let (m, n, k) = (5, 67, 128); // deliberately ragged row count
+        let x = rng.normal_vec(m * k);
+        let w = PackedTensor::quantize_pack(&rng.normal_vec(n * k), n, k, true).unwrap();
+        let mut serial = vec![0.0f32; m * n];
+        qgemm_threads(&x, m, &w, &mut serial, 1).unwrap();
+        for threads in [2usize, 3, 4, 16, 200] {
+            let mut par = vec![0.0f32; m * n];
+            qgemm_threads(&x, m, &w, &mut par, threads).unwrap();
+            assert_eq!(serial, par, "threads={threads}");
+        }
     }
 
     #[test]

@@ -357,3 +357,82 @@ fn prop_scheme_mse_ordering() {
         check(eden < sr, || format!("eden {eden} vs sr {sr}"))
     });
 }
+
+// ---------------------------------------------------------------
+// MS-EDEN unbiasedness (paper §3.3 / Table 1) over random tiles —
+// the properties the native engine's quantized backward relies on.
+// ---------------------------------------------------------------
+
+/// Gaussian tile with a random power-of-two-ish scale (no heavy-tail
+/// outliers: these properties are about the estimator's *statistics*,
+/// which the scale cancels out of).
+fn gauss_tile(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let scale = ((rng.uniform_f32() - 0.5) * 8.0).exp2();
+    (0..n).map(|_| rng.normal_f32() * scale).collect()
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[test]
+fn prop_ms_eden_mean_error_vanishes() {
+    // E[estimate] = x: averaging independent draws must shrink the
+    // residual toward zero at the Monte-Carlo rate (~ mse/n), far
+    // below any single draw's quantization error.
+    for_all(PropConfig::new(6), |rng| {
+        let rows = 1 + rng.below(4) as usize;
+        let cols = ROT_BLOCK * (1 + rng.below(3) as usize);
+        let x = gauss_tile(rng, rows * cols);
+        let n_draws = 24u64;
+        let mut acc = vec![0.0f64; x.len()];
+        let mut single = 0.0f64;
+        for d in 0..n_draws {
+            let mut q_rng = rng.fold_in(100 + d);
+            let est = quantize_ms_eden(&x, rows, cols, &mut q_rng)
+                .unwrap()
+                .dequant_unrotated();
+            if d == 0 {
+                single = mse(&est, &x);
+            }
+            for (a, v) in acc.iter_mut().zip(&est) {
+                *a += *v as f64 / n_draws as f64;
+            }
+        }
+        let avg: Vec<f32> = acc.iter().map(|&v| v as f32).collect();
+        let resid = mse(&avg, &x);
+        if single < 1e-30 {
+            return Ok(()); // degenerate all-zero tile
+        }
+        check(resid < 4.0 * single / n_draws as f64, || {
+            format!(
+                "{rows}x{cols}: residual {resid} vs single-draw {single} over {n_draws} draws"
+            )
+        })
+    });
+}
+
+#[test]
+fn prop_ms_eden_beats_sr_mse_by_1p5x() {
+    // Table 1's ~2x MSE advantage of MS-EDEN over stochastic rounding,
+    // asserted at a robust >= 1.5x over random tile shapes and scales.
+    for_all(PropConfig::new(10), |rng| {
+        let rows = 4 + rng.below(8) as usize;
+        let cols = ROT_BLOCK * (2 + rng.below(3) as usize);
+        let x = gauss_tile(rng, rows * cols);
+        let mut sr_rng = rng.fold_in(1);
+        let sr = quantize_sr(&x, rows, cols, &mut sr_rng).unwrap().mse(&x);
+        let mut eden_rng = rng.fold_in(2);
+        let eden_est = quantize_ms_eden(&x, rows, cols, &mut eden_rng)
+            .unwrap()
+            .dequant_unrotated();
+        let eden = mse(&eden_est, &x);
+        check(eden > 0.0 && sr > 1.5 * eden, || {
+            format!("{rows}x{cols}: sr mse {sr} / eden mse {eden} = {}", sr / eden)
+        })
+    });
+}

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI gate: format, lints, then the tier-1 verify (ROADMAP.md).
+# CI gate: format, lints, tier-1 verify (ROADMAP.md), bench compile,
+# and a native-engine training smoke.
 #
 #   scripts/ci.sh          # full gate
 #   scripts/ci.sh --fix    # apply rustfmt instead of checking
@@ -18,3 +19,18 @@ cargo clippy --all-targets -- -D warnings
 # tier-1 (ROADMAP.md)
 cargo build --release
 cargo test -q
+
+# benches must at least compile (they are harness-free binaries)
+cargo bench --no-run
+
+# smoke: the native Quartet II training path end-to-end — two MS-EDEN
+# quantized steps plus packed-checkpoint export, no artifacts needed
+smoke_dir="$(mktemp -d)"
+trap 'rm -rf "$smoke_dir"' EXIT
+cargo run --release --bin quartet2 -- train-native \
+    --preset tiny --scheme quartet2 --steps 2 --batch 2 --seq 64 \
+    --eval-every 0 --log-every 1 \
+    --results-dir "$smoke_dir/results" \
+    --export-checkpoint "$smoke_dir/ckpt"
+test -f "$smoke_dir/ckpt/serve_checkpoint.json"
+echo "ci: ok"
