@@ -1,0 +1,206 @@
+//! Bench: native-engine training-step throughput — steady-state
+//! tokens/sec for a small NativeModel across the f32 / SR / MS-EDEN
+//! schemes, serial vs parallel kernels, plus a pre-PR kernel-cost
+//! emulation so the speedup against the old serial path is recorded
+//! even after that code is gone.
+//!
+//! Two comparisons per scheme:
+//!
+//! * **serial vs parallel** — the same step with the shared GEMM core
+//!   pinned to 1 worker vs the auto thread policy (serial/parallel
+//!   results are bitwise identical; see `kernels::gemm` tests).
+//! * **vs pre-PR serial** — the pre-refactor training path ran every
+//!   GEMM through a serial single-accumulator loop ([`matmul_legacy`]
+//!   below is a faithful copy). We time that kernel and the new serial
+//!   kernel on every GEMM shape of one training step and add the
+//!   measured delta to the serial step time:
+//!   `prepr_est = serial_step + sum(count * (legacy - new_serial))`.
+//!   The quantizer work is identical on both sides, so this isolates
+//!   exactly what the PR changed.
+//!
+//! Results land in `results/train_step.json` (same flat-record shape
+//! as the other bench JSONs); `scripts/bench.sh` copies it to
+//! `BENCH_train_step.json` at the repo root for cross-PR tracking.
+
+use quartet2::bench::header;
+use quartet2::coordinator::Backend;
+use quartet2::data::Batcher;
+use quartet2::engine::{AdamWOptions, NativeBackend};
+use quartet2::kernels::{gemm_abt_threads, set_threads};
+use quartet2::serve::preset;
+use quartet2::util::json::{self, Json};
+use quartet2::util::rng::Rng;
+
+/// 512 tokens/step: multiple of the 128-element rotation block (the
+/// grad-weight matmul quantizes along batch*seq) and large enough that
+/// the step's GEMMs clear the parallel threshold.
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+/// Timed steps per measurement (after one warmup step).
+const STEPS: usize = 4;
+
+/// Verbatim copy of the pre-PR `matmul_f32`: cache-blocked over output
+/// columns, single-accumulator inner dot (a latency-bound add chain).
+fn matmul_legacy(x: &[f32], m: usize, w: &[f32], n: usize, k: usize, y: &mut [f32]) {
+    const N_BLOCK: usize = 64;
+    for j0 in (0..n).step_by(N_BLOCK) {
+        let j1 = (j0 + N_BLOCK).min(n);
+        for i in 0..m {
+            let xrow = &x[i * k..(i + 1) * k];
+            for j in j0..j1 {
+                let wrow = &w[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (xv, wv) in xrow.iter().zip(wrow) {
+                    acc += xv * wv;
+                }
+                y[i * n + j] += acc;
+            }
+        }
+    }
+}
+
+fn median_secs(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+/// Steady-state seconds per training step for `scheme` under the given
+/// worker policy (`0` = auto, `1` = serial).
+fn step_secs(scheme: &str, threads: usize) -> f64 {
+    set_threads(threads);
+    let cfg = preset("tiny").expect("preset");
+    let mut backend = NativeBackend::from_config(
+        &cfg,
+        scheme,
+        BATCH,
+        SEQ,
+        7,
+        AdamWOptions::default(),
+    )
+    .expect("backend");
+    let mut batcher = Batcher::train(9, BATCH, SEQ);
+    let b = batcher.next();
+    // warmup: first step pays one-time costs (scratch pool fill, page
+    // faults); steady state is what serving-scale training sees
+    backend
+        .train_step(0, b.tokens.clone(), b.targets.clone())
+        .expect("warmup step");
+    let secs = median_secs(3, || {
+        for s in 0..STEPS {
+            backend
+                .train_step(1 + s, b.tokens.clone(), b.targets.clone())
+                .expect("train step");
+        }
+    }) / STEPS as f64;
+    set_threads(0);
+    secs
+}
+
+/// Every f32-GEMM shape `(m, n, k, count)` one training step of the
+/// tiny preset runs: forward + grad-input + grad-weight contract the
+/// same `m*n*k` products per linear, so each linear contributes its
+/// shape three times.
+fn step_gemm_shapes() -> Vec<(usize, usize, usize, usize)> {
+    let cfg = preset("tiny").expect("preset");
+    let (t, d, f, v, l) = (BATCH * SEQ, cfg.dim, cfg.ffn, cfg.vocab, cfg.n_layers);
+    vec![
+        (t, d, d, 3 * 4 * l), // wq, wk, wv, wo
+        (t, f, d, 3 * 2 * l), // w_gate, w_up
+        (t, d, f, 3 * l),     // w_down
+        (t, v, d, 3),         // lm_head
+    ]
+}
+
+/// Measured per-step GEMM-kernel delta: `sum(count * (legacy - new))`
+/// over the shapes of one step, both kernels serial.
+fn prepr_kernel_delta() -> f64 {
+    let mut rng = Rng::seed_from(21);
+    let mut delta = 0.0f64;
+    for (m, n, k, count) in step_gemm_shapes() {
+        let x = rng.normal_vec(m * k);
+        let w = rng.normal_vec(n * k);
+        let mut y = vec![0.0f32; m * n];
+        let legacy = median_secs(3, || {
+            y.fill(0.0);
+            matmul_legacy(&x, m, &w, n, k, &mut y);
+        });
+        let new = median_secs(3, || {
+            y.fill(0.0);
+            gemm_abt_threads(&x, m, &w, n, k, &mut y, 1).expect("gemm");
+        });
+        delta += count as f64 * (legacy - new);
+    }
+    delta
+}
+
+fn main() {
+    header("Native engine: training-step throughput (f32 / SR / MS-EDEN)");
+    let auto = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let tokens = (BATCH * SEQ) as f64;
+    println!(
+        "tiny preset, {BATCH}x{SEQ} tokens/step, {STEPS} timed steps, auto = {auto} workers\n"
+    );
+
+    let delta = prepr_kernel_delta();
+    println!(
+        "pre-PR GEMM-kernel delta (legacy serial - new serial, per step): {:+.1} ms\n",
+        delta * 1e3
+    );
+
+    let mut rows = Vec::new();
+    println!(
+        "{:<10} {:>14} {:>14} {:>10} {:>14}",
+        "scheme", "serial tok/s", "parallel tok/s", "par/ser", "vs pre-PR est"
+    );
+    for scheme in ["f32", "sr", "quartet2"] {
+        let serial = step_secs(scheme, 1);
+        let parallel = step_secs(scheme, 0);
+        let prepr_est = serial + delta;
+        let speedup_serial = serial / parallel;
+        let speedup_prepr = prepr_est / parallel;
+        println!(
+            "{:<10} {:>14.0} {:>14.0} {:>9.2}x {:>13.2}x",
+            scheme,
+            tokens / serial,
+            tokens / parallel,
+            speedup_serial,
+            speedup_prepr
+        );
+        for (name, threads, secs) in [
+            ("train_step_serial", 1usize, serial),
+            ("train_step_parallel", auto, parallel),
+            ("train_step_prepr_estimate", 1, prepr_est),
+        ] {
+            rows.push(json::obj(vec![
+                ("name", json::s(name)),
+                ("scheme", json::s(scheme)),
+                ("threads", json::n(threads as f64)),
+                ("secs_per_step", json::n(secs)),
+                ("tok_s", json::n(tokens / secs)),
+                ("speedup_vs_serial", json::n(serial / secs)),
+                ("speedup_vs_prepr_estimate", json::n(prepr_est / secs)),
+            ]));
+        }
+        if scheme != "f32" && speedup_prepr < 2.0 {
+            println!(
+                "WARNING: {scheme} quantized step below the 2x target vs the pre-PR serial path"
+            );
+        }
+    }
+
+    let results = std::path::Path::new("results");
+    std::fs::create_dir_all(results).expect("results dir");
+    std::fs::write(
+        results.join("train_step.json"),
+        Json::Arr(rows).to_string(),
+    )
+    .expect("write results");
+    println!("\nresults -> results/train_step.json");
+}

@@ -7,6 +7,13 @@
 //! steps and layers but exactly reproducible. Evaluation always runs
 //! the exact f32 forward — validation compares what the quantized
 //! *training* produced, uncontaminated by eval-time forward noise.
+//!
+//! Hot path: the per-step graph rebuild is allocation-light — leaf
+//! recording shares the parameter buffers (COW tensors), the tape is
+//! pre-sized to the exact node count, every GEMM runs on the blocked /
+//! threaded [`crate::kernels`] core (`QUARTET2_THREADS` or the
+//! `--threads` CLI flag override the auto policy), and GEMM-sized
+//! temporaries come from the thread-local scratch pool.
 
 use std::collections::BTreeMap;
 
@@ -96,8 +103,17 @@ impl NativeBackend {
 
 impl Backend for NativeBackend {
     fn describe(&self) -> String {
+        let workers = match crate::kernels::pinned_threads() {
+            Some(t) => format!("{t} gemm workers (pinned)"),
+            None => format!(
+                "<= {} gemm workers (auto)",
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+            ),
+        };
         format!(
-            "native engine: {} / {} ({} params, {:?})",
+            "native engine: {} / {} ({} params, {:?}, {workers})",
             self.model.cfg.name,
             self.scheme,
             self.model.n_params(),

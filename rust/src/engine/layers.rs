@@ -117,6 +117,15 @@ impl NativeModel {
         HEADER + i * PER_LAYER
     }
 
+    /// Exact node count of the loss graph built by
+    /// [`NativeModel::loss_graph`]: parameter leaves, the embedding,
+    /// 15 op nodes per block (2 norms, 4 attention linears, 2 RoPEs,
+    /// attention, 3 MLP linears, SwiGLU, 2 residual adds), and the
+    /// final norm + lm_head + loss.
+    fn graph_capacity(&self) -> usize {
+        self.params.len() + 1 + self.cfg.n_layers * 15 + 3
+    }
+
     /// Build the full forward graph for one `[batch, seq]` token block
     /// and return (tape, scalar loss id, param leaf ids aligned with
     /// `self.params`). `rng` seeds the quantizer randomness ω of every
@@ -153,7 +162,9 @@ impl NativeModel {
             tokens.len(),
             targets.len()
         );
-        let mut tape = Tape::new();
+        let mut tape = Tape::with_capacity(self.graph_capacity());
+        // leaf recording shares the parameter buffers (COW handles) —
+        // no per-step payload copies
         let pids: Vec<VarId> = self
             .params
             .iter()
@@ -236,7 +247,7 @@ impl NativeModel {
     pub fn export_named_tensors(&self) -> BTreeMap<String, Vec<f32>> {
         let mut out = BTreeMap::new();
         for (idx, name) in ["embed", "lm_head", "final_norm"].iter().enumerate() {
-            out.insert(name.to_string(), self.params[idx].value.data.clone());
+            out.insert(name.to_string(), self.params[idx].value.data.to_vec());
         }
         let fields = [
             "attn_norm", "mlp_norm", "wq", "wk", "wv", "wo", "w_gate", "w_up",
@@ -346,14 +357,14 @@ mod tests {
         let cfg = crate::serve::preset("tiny").unwrap();
         let m = NativeModel::init(&cfg, QuantMode::F32, 9).unwrap();
         let w = m.to_weights().unwrap();
-        assert_eq!(w.embed, m.params[0].value.data);
-        assert_eq!(w.lm_head, m.params[1].value.data);
-        assert_eq!(w.final_norm, m.params[2].value.data);
+        assert_eq!(w.embed, m.params[0].value.data.to_vec());
+        assert_eq!(w.lm_head, m.params[1].value.data.to_vec());
+        assert_eq!(w.final_norm, m.params[2].value.data.to_vec());
         for i in 0..cfg.n_layers {
             let b = HEADER + i * PER_LAYER;
-            assert_eq!(w.layers[i].attn_norm, m.params[b].value.data);
-            assert_eq!(w.layers[i].wq, m.params[b + 2].value.data);
-            assert_eq!(w.layers[i].w_down, m.params[b + 8].value.data);
+            assert_eq!(w.layers[i].attn_norm, m.params[b].value.data.to_vec());
+            assert_eq!(w.layers[i].wq, m.params[b + 2].value.data.to_vec());
+            assert_eq!(w.layers[i].w_down, m.params[b + 8].value.data.to_vec());
         }
         assert_eq!(m.n_params(), cfg.param_count());
     }

@@ -7,7 +7,9 @@
 //! stubs its executor; this subsystem is the self-contained
 //! counterpart that actually trains:
 //!
-//! * [`tensor`] — dense row-major f32 tensors.
+//! * [`tensor`] — dense row-major f32 tensors over shared
+//!   copy-on-write storage (O(1) clones: parameters are re-recorded on
+//!   the tape every step without copying their payloads).
 //! * [`tape`] — define-by-run reverse-mode autograd over fused ops.
 //! * [`ops`] — the op set; its centerpiece, [`ops::linear`], quantizes
 //!   **all three** matmuls (forward, grad-input, grad-weight) to NVFP4
@@ -41,4 +43,4 @@ pub use layers::{NativeModel, Param};
 pub use ops::QuantMode;
 pub use optim::{AdamW, AdamWOptions};
 pub use tape::{Gradients, Parent, Tape, VarId};
-pub use tensor::Tensor;
+pub use tensor::{Tensor, TensorData};

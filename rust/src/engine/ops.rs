@@ -20,6 +20,21 @@
 //! grain (128 for MS-EDEN's rotation block, 16 for SR groups) fall back
 //! to the f32 path — shapes chosen per the presets never hit this.
 //!
+//! **Hot-path layout** (see [`crate::kernels`]): every GEMM runs on the
+//! shared blocked/threaded core. The backward's `wᵀ`/`gᵀ`/`xᵀ`
+//! operands enter as [`View::Trans`] *views* of the stored buffers —
+//! in f32 mode they dispatch to the transpose-free `A·B` / `Aᵀ·B`
+//! kernels with no materialization at all; in quantized modes the
+//! contiguous gather the quantizer's grouping requires lands in a
+//! pooled scratch buffer, as do both dequantized operand estimates
+//! (quantized once per GEMM — the paper quantizes each GEMM along its
+//! own inner dim, so estimates cannot be shared across the three
+//! matmuls; what this PR eliminated is the per-step buffer cloning and
+//! allocation around them, plus the serial quantize: the two operands
+//! of a large GEMM quantize on concurrent scoped threads). VJP
+//! closures capture O(1) shared [`super::tensor::TensorData`] handles
+//! instead of cloned `Vec`s.
+//!
 //! Everything that is *not* a linear-layer matmul (attention scores,
 //! softmax, norms, embeddings) stays in f32, as in the paper.
 
@@ -30,12 +45,14 @@ use anyhow::{bail, ensure, Result};
 
 use crate::formats::{ms_eden_core, quantize_sr, RTN_CLIP_SCALE};
 use crate::hadamard;
-use crate::serve::matmul_f32;
+use crate::kernels::scratch::{take_uninit, Scratch};
+use crate::kernels::threads::threads_for;
+use crate::kernels::{gemm_ab, gemm_abt, gemm_atb, transpose_into};
 use crate::util::rng::Rng;
 use crate::{GROUP, ROT_BLOCK};
 
 use super::tape::{Parent, Tape, VarId};
-use super::tensor::{transpose, Tensor};
+use super::tensor::Tensor;
 
 /// Which quantizer the three linear-layer matmuls run through.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -86,26 +103,124 @@ impl QuantMode {
     }
 }
 
-/// MS-EDEN estimate of `x` (`rows x k`) in rotated space under shared
-/// `signs`; partner operands quantized with the same signs contract
-/// exactly as if unrotated (orthogonality).
-fn ms_eden_estimate(
-    x: &[f32],
+/// How a GEMM operand relates to its logical `[rows, k]` shape (`k` =
+/// the contraction dim the quantizer groups along).
+#[derive(Clone, Copy)]
+enum View<'a> {
+    /// Stored row-major `[rows, k]`.
+    Rows(&'a [f32]),
+    /// Stored transposed, row-major `[k, rows]` — the backward's
+    /// `wᵀ` / `gᵀ` / `xᵀ` operands, taken directly from the forward
+    /// buffers. Never materialized in f32 mode.
+    Trans(&'a [f32]),
+}
+
+impl View<'_> {
+    fn len(&self) -> usize {
+        match self {
+            View::Rows(s) | View::Trans(s) => s.len(),
+        }
+    }
+}
+
+/// Write the dequantized `mode`-estimate of `view` (logical
+/// `[rows, k]`) into `out`, row-major. For [`View::Trans`] the
+/// contiguous gather the quantizer's grouping requires happens here,
+/// into the same pooled buffer. `signs` are the pair-shared RHT signs
+/// (MS-EDEN only). Never called in f32 mode — [`qmatmul_view`]
+/// dispatches that to the transpose-free kernels first.
+fn quantize_estimate_into(
+    view: View<'_>,
     rows: usize,
     k: usize,
-    signs: &[f32],
-    sr_rng: &mut Rng,
-) -> Result<Vec<f32>> {
-    let mut xr = x.to_vec();
-    hadamard::rht(&mut xr, signs)?;
-    let u = sr_rng.uniform_vec(x.len() / GROUP);
-    Ok(ms_eden_core(&xr, rows, k, RTN_CLIP_SCALE, &u)?.dequant())
+    mode: QuantMode,
+    signs: Option<&[f32]>,
+    mut rng: Rng,
+    out: &mut [f32],
+) -> Result<()> {
+    debug_assert_eq!(out.len(), rows * k);
+    match view {
+        View::Rows(s) => out.copy_from_slice(s),
+        View::Trans(s) => transpose_into(s, k, rows, out),
+    }
+    match mode {
+        QuantMode::F32 => {}
+        QuantMode::Sr => {
+            let q = quantize_sr(out, rows, k, &mut rng)?;
+            q.dequant_into(out);
+        }
+        QuantMode::MsEden => {
+            let signs = signs.expect("MS-EDEN quantization needs shared signs");
+            hadamard::rht(out, signs)?;
+            let u = rng.uniform_vec(out.len() / GROUP);
+            let q = ms_eden_core(out, rows, k, RTN_CLIP_SCALE, &u)?;
+            q.dequant_into(out);
+        }
+    }
+    Ok(())
+}
+
+/// `y[m, n] += A[m, k] @ B[n, k]^T` with both operands quantized along
+/// `k` according to `mode`, each operand entering via a [`View`] of
+/// its stored buffer. The randomness split mirrors the paper's
+/// (ω_RHT, ω_SR): one sign stream shared by the pair (fold 1),
+/// independent SR streams per operand (folds 2 and 3).
+#[allow(clippy::too_many_arguments)]
+fn qmatmul_view(
+    a: View<'_>,
+    m: usize,
+    b: View<'_>,
+    n: usize,
+    k: usize,
+    mode: QuantMode,
+    rng: &Rng,
+    y: &mut [f32],
+) -> Result<()> {
+    ensure!(a.len() == m * k, "qmatmul: a is {} not {m}x{k}", a.len());
+    ensure!(b.len() == n * k, "qmatmul: b is {} not {n}x{k}", b.len());
+    ensure!(y.len() == m * n, "qmatmul: y is {} not {m}x{n}", y.len());
+    let eff = mode.effective(k);
+    if eff == QuantMode::F32 {
+        return match (a, b) {
+            (View::Rows(a), View::Rows(b)) => gemm_abt(a, m, b, n, k, y),
+            (View::Rows(a), View::Trans(bt)) => gemm_ab(a, m, k, bt, n, y),
+            (View::Trans(at), View::Trans(bt)) => gemm_atb(at, k, m, bt, n, y),
+            (View::Trans(at), View::Rows(b)) => {
+                // no hot path lands here; gather A once and reuse A·Bᵀ
+                let mut ar = take_uninit(m * k);
+                transpose_into(at, k, m, &mut ar);
+                gemm_abt(&ar, m, b, n, k, y)
+            }
+        };
+    }
+    let signs = match eff {
+        QuantMode::MsEden => Some(hadamard::rademacher_signs(&mut rng.fold_in(1))),
+        _ => None,
+    };
+    let signs = signs.as_deref();
+    let (rng_a, rng_b) = (rng.fold_in(2), rng.fold_in(3));
+    let mut qa: Scratch = take_uninit(m * k);
+    let mut qb: Scratch = take_uninit(n * k);
+    if threads_for(m * n * k, 2) >= 2 {
+        // the two operands quantize independently (separate rng
+        // streams, shared signs) — overlap them on scoped threads
+        let (qa_s, qb_s) = (&mut qa[..], &mut qb[..]);
+        std::thread::scope(|s| {
+            let ha = s.spawn(move || quantize_estimate_into(a, m, k, eff, signs, rng_a, qa_s));
+            let rb = quantize_estimate_into(b, n, k, eff, signs, rng_b, qb_s);
+            ha.join().expect("quantizer worker panicked").and(rb)
+        })?;
+    } else {
+        quantize_estimate_into(a, m, k, eff, signs, rng_a, &mut qa)?;
+        quantize_estimate_into(b, n, k, eff, signs, rng_b, &mut qb)?;
+    }
+    gemm_abt(&qa, m, &qb, n, k, y)
 }
 
 /// `y[m, n] = a[m, k] @ b[n, k]^T` with both operands quantized along
-/// `k` according to `mode`. The randomness split mirrors the paper's
-/// (ω_RHT, ω_SR): one sign stream shared by the pair, independent SR
-/// streams per operand.
+/// `k` according to `mode` (the row-major entry point; the backward's
+/// transposed operands go through the [`View`] machinery inside
+/// [`linear`] instead).
 pub fn qmatmul(
     a: &[f32],
     m: usize,
@@ -115,23 +230,8 @@ pub fn qmatmul(
     mode: QuantMode,
     rng: &Rng,
 ) -> Result<Vec<f32>> {
-    ensure!(a.len() == m * k, "qmatmul: a is {} not {m}x{k}", a.len());
-    ensure!(b.len() == n * k, "qmatmul: b is {} not {n}x{k}", b.len());
     let mut y = vec![0.0f32; m * n];
-    match mode.effective(k) {
-        QuantMode::F32 => matmul_f32(a, m, b, n, k, &mut y)?,
-        QuantMode::Sr => {
-            let qa = quantize_sr(a, m, k, &mut rng.fold_in(2))?.dequant();
-            let qb = quantize_sr(b, n, k, &mut rng.fold_in(3))?.dequant();
-            matmul_f32(&qa, m, &qb, n, k, &mut y)?;
-        }
-        QuantMode::MsEden => {
-            let signs = hadamard::rademacher_signs(&mut rng.fold_in(1));
-            let qa = ms_eden_estimate(a, m, k, &signs, &mut rng.fold_in(2))?;
-            let qb = ms_eden_estimate(b, n, k, &signs, &mut rng.fold_in(3))?;
-            matmul_f32(&qa, m, &qb, n, k, &mut y)?;
-        }
-    }
+    qmatmul_view(View::Rows(a), m, View::Rows(b), n, k, mode, rng, &mut y)?;
     Ok(y)
 }
 
@@ -140,7 +240,9 @@ pub fn qmatmul(
 /// The backward quantizes its two matmuls along *their* inner dims
 /// (grad-input along `n`, grad-weight along `t`), each with fresh
 /// randomness folded from `rng` — three independently quantized GEMMs
-/// per layer, as on Blackwell hardware.
+/// per layer, as on Blackwell hardware. The transposed operands are
+/// *views* of the forward buffers ([`View::Trans`]); the closures
+/// capture O(1) shared handles, not clones.
 pub fn linear(
     tape: &mut Tape,
     x: VarId,
@@ -152,26 +254,54 @@ pub fn linear(
     let (t, k) = (xv.rows(), xv.cols());
     let (n, wk) = (wv.rows(), wv.cols());
     ensure!(k == wk, "linear: x cols {k} != w cols {wk}");
-    let y = qmatmul(&xv.data, t, &wv.data, n, k, mode, &rng.fold_in(10))?;
+    let mut y = vec![0.0f32; t * n];
+    qmatmul_view(
+        View::Rows(&xv.data),
+        t,
+        View::Rows(&wv.data),
+        n,
+        k,
+        mode,
+        &rng.fold_in(10),
+        &mut y,
+    )?;
 
-    let (x_data, w_data) = (xv.data.clone(), wv.data.clone());
+    let w_shared = wv.data.clone();
+    let x_shared = xv.data.clone();
     let dx_rng = rng.fold_in(11);
     let dw_rng = rng.fold_in(12);
-    let w_for_dx = w_data;
-    let x_for_dw = x_data;
     let vjp_x = Box::new(move |g: &Tensor| {
-        // dx[t, k] = dy[t, n] @ (w^T)[k, n]^T — inner dim n
-        let wt = transpose(&w_for_dx, n, k);
-        let dx = qmatmul(&g.data, t, &wt, k, n, mode, &dx_rng)
-            .expect("shapes validated in forward");
+        // dx[t, k] = dy[t, n] @ w[n, k] — inner dim n; `w` enters as
+        // the `wᵀ` view of its stored buffer
+        let mut dx = vec![0.0f32; t * k];
+        qmatmul_view(
+            View::Rows(&g.data),
+            t,
+            View::Trans(&w_shared),
+            k,
+            n,
+            mode,
+            &dx_rng,
+            &mut dx,
+        )
+        .expect("shapes validated in forward");
         Tensor::new(dx, &[t, k]).expect("dx shape")
     });
     let vjp_w = Box::new(move |g: &Tensor| {
-        // dw[n, k] = (dy^T)[n, t] @ (x^T)[k, t]^T — inner dim t
-        let gt = transpose(&g.data, t, n);
-        let xt = transpose(&x_for_dw, t, k);
-        let dw = qmatmul(&gt, n, &xt, k, t, mode, &dw_rng)
-            .expect("shapes validated in forward");
+        // dw[n, k] = dy^T[n, t] @ x[t, k] — inner dim t; both operands
+        // enter as views of their stored buffers
+        let mut dw = vec![0.0f32; n * k];
+        qmatmul_view(
+            View::Trans(&g.data),
+            n,
+            View::Trans(&x_shared),
+            k,
+            t,
+            mode,
+            &dw_rng,
+            &mut dw,
+        )
+        .expect("shapes validated in forward");
         Tensor::new(dw, &[n, k]).expect("dw shape")
     });
     Ok(tape.push(
@@ -199,10 +329,11 @@ pub fn embedding(tape: &mut Tape, table: VarId, tokens: &[i32]) -> Result<VarId>
     let toks = tokens.to_vec();
     let vjp = Box::new(move |g: &Tensor| {
         let mut dt = Tensor::zeros(&[vocab, d]);
+        let dd = dt.data.make_mut();
         for (r, &tok) in toks.iter().enumerate() {
             let ti = tok as usize;
             for c in 0..d {
-                dt.data[ti * d + c] += g.data[r * d + c];
+                dd[ti * d + c] += g.data[r * d + c];
             }
         }
         dt
@@ -230,11 +361,16 @@ pub fn rmsnorm(tape: &mut Tape, x: VarId, weight: VarId) -> Result<VarId> {
             out[r * d + c] = row[c] * inv[r] * wv.data[c];
         }
     }
-    let (x_data, w_data) = (xv.data.clone(), wv.data.clone());
-    let inv_x = inv.clone();
-    let x_for_dx = x_data.clone();
+    // one shared handle per captured buffer (the pre-PR code cloned
+    // the x payload once per VJP — twice per step)
+    let x_for_dx = xv.data.clone();
+    let x_for_dw = xv.data.clone();
+    let w_data = wv.data.clone();
+    let inv = Rc::new(inv);
+    let inv_x = Rc::clone(&inv);
     let vjp_x = Box::new(move |g: &Tensor| {
         let mut dx = Tensor::zeros(&[t, d]);
+        let dd = dx.data.make_mut();
         for r in 0..t {
             let xr = &x_for_dx[r * d..(r + 1) * d];
             let gr = &g.data[r * d..(r + 1) * d];
@@ -242,7 +378,7 @@ pub fn rmsnorm(tape: &mut Tape, x: VarId, weight: VarId) -> Result<VarId> {
             let s: f32 = (0..d).map(|c| gr[c] * w_data[c] * xr[c]).sum();
             let coef = iv * iv * iv * s / d as f32;
             for c in 0..d {
-                dx.data[r * d + c] = iv * gr[c] * w_data[c] - coef * xr[c];
+                dd[r * d + c] = iv * gr[c] * w_data[c] - coef * xr[c];
             }
         }
         dx
@@ -250,10 +386,11 @@ pub fn rmsnorm(tape: &mut Tape, x: VarId, weight: VarId) -> Result<VarId> {
     let inv_w = inv;
     let vjp_w = Box::new(move |g: &Tensor| {
         let mut dw = Tensor::zeros(&[d]);
+        let dd = dw.data.make_mut();
         for r in 0..t {
             let iv = inv_w[r];
             for c in 0..d {
-                dw.data[c] += g.data[r * d + c] * x_data[r * d + c] * iv;
+                dd[c] += g.data[r * d + c] * x_for_dw[r * d + c] * iv;
             }
         }
         dw
@@ -297,15 +434,16 @@ pub fn rope(
     ensure!(positions.len() == t, "rope: {} positions for {t} rows", positions.len());
     ensure!(d % n_heads == 0 && (d / n_heads) % 2 == 0, "rope: bad head split");
     let hd = d / n_heads;
-    let mut out = xv.data.clone();
+    let mut out = xv.data.to_vec();
     for (r, &pos) in positions.iter().enumerate() {
         rope_row(&mut out[r * d..(r + 1) * d], n_heads, hd, pos, theta, 1.0);
     }
     let pos_v = positions.to_vec();
     let vjp = Box::new(move |g: &Tensor| {
         let mut dx = g.clone();
+        let dd = dx.data.make_mut();
         for (r, &pos) in pos_v.iter().enumerate() {
-            rope_row(&mut dx.data[r * d..(r + 1) * d], n_heads, hd, pos, theta, -1.0);
+            rope_row(&mut dd[r * d..(r + 1) * d], n_heads, hd, pos, theta, -1.0);
         }
         dx
     });
@@ -328,7 +466,7 @@ fn attn_forward(
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     let mut out = vec![0.0f32; batch * seq * d];
     let mut probs = vec![0.0f32; batch * nh * seq * seq];
-    let mut scores = vec![0.0f32; seq];
+    let mut scores = take_uninit(seq);
     for b in 0..batch {
         let r0 = b * seq;
         for h in 0..nh {
@@ -384,7 +522,7 @@ fn attn_backward(
     let mut dq = vec![0.0f32; q.len()];
     let mut dk = vec![0.0f32; k.len()];
     let mut dv = vec![0.0f32; v.len()];
-    let mut dp = vec![0.0f32; seq];
+    let mut dp = take_uninit(seq);
     for b in 0..batch {
         let r0 = b * seq;
         for h in 0..nh {
@@ -442,6 +580,7 @@ pub fn causal_attention(
     ensure!(tape.value(q).rows() == batch * seq, "attention: rows != batch*seq");
     ensure!(d % n_heads == 0, "attention: dim {d} not divisible by {n_heads} heads");
     let hd = d / n_heads;
+    // O(1) shared handles into the recorded q/k/v buffers
     let (qd, kd, vd) = (
         tape.value(q).data.clone(),
         tape.value(k).data.clone(),
@@ -497,18 +636,20 @@ pub fn swiglu(tape: &mut Tape, gate: VarId, up: VarId) -> Result<VarId> {
     let out: Vec<f32> = gv
         .data
         .iter()
-        .zip(&uv.data)
+        .zip(uv.data.iter())
         .map(|(&g, &u)| g * sigmoid(g) * u)
         .collect();
-    let (g_data, u_data) = (gv.data.clone(), uv.data.clone());
-    let g_for_dg = g_data.clone();
+    // the gate buffer feeds both VJPs: two shared handles, no copies
+    let g_for_dg = gv.data.clone();
+    let g_for_du = gv.data.clone();
+    let u_data = uv.data.clone();
     let shape_g = shape.clone();
     let vjp_g = Box::new(move |dy: &Tensor| {
         let dg: Vec<f32> = dy
             .data
             .iter()
-            .zip(&g_for_dg)
-            .zip(&u_data)
+            .zip(g_for_dg.iter())
+            .zip(u_data.iter())
             .map(|((&d, &g), &u)| {
                 let s = sigmoid(g);
                 d * u * s * (1.0 + g * (1.0 - s))
@@ -521,7 +662,7 @@ pub fn swiglu(tape: &mut Tape, gate: VarId, up: VarId) -> Result<VarId> {
         let du: Vec<f32> = dy
             .data
             .iter()
-            .zip(&g_data)
+            .zip(g_for_du.iter())
             .map(|(&d, &g)| d * g * sigmoid(g))
             .collect();
         Tensor::new(du, &shape_u).expect("swiglu du shape")
@@ -582,10 +723,11 @@ pub fn cross_entropy(tape: &mut Tape, logits: VarId, targets: &[i32]) -> Result<
         let scale = g.item() / t as f32;
         // FnOnce: the probs buffer moves straight into the gradient
         let mut dl = Tensor::new(probs, &[t, vocab]).expect("probs shape");
+        let dd = dl.data.make_mut();
         for (r, &tgt) in tgts.iter().enumerate() {
-            dl.data[r * vocab + tgt as usize] -= 1.0;
+            dd[r * vocab + tgt as usize] -= 1.0;
         }
-        for v in &mut dl.data {
+        for v in dd.iter_mut() {
             *v *= scale;
         }
         dl
@@ -596,6 +738,7 @@ pub fn cross_entropy(tape: &mut Tape, logits: VarId, targets: &[i32]) -> Result<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::tensor::transpose;
 
     /// Central-difference gradient check: `build` constructs the graph
     /// from leaf ids and returns the scalar loss id.
@@ -643,11 +786,16 @@ mod tests {
         Tensor::new(Rng::seed_from(seed).normal_vec(n), shape).unwrap()
     }
 
+    /// The fixed per-coordinate weights [`sum_loss`] reduces with (so
+    /// tests can reconstruct the upstream gradient it injects).
+    fn loss_weights(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.25).collect()
+    }
+
     fn sum_loss(tape: &mut Tape, x: VarId) -> VarId {
         // weighted sum -> scalar, via cross-entropy-free path: reuse a
         // fixed linear-like reduction so grads are non-uniform.
-        let n = tape.value(x).numel();
-        let wts: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.25).collect();
+        let wts = loss_weights(tape.value(x).numel());
         let val: f32 = tape
             .value(x)
             .data
@@ -679,6 +827,63 @@ mod tests {
             },
             2e-2,
         );
+    }
+
+    #[test]
+    fn linear_f32_grad_matches_finite_diff_unaligned_dims() {
+        // k = 11 / n = 5: exercises the 8-wide unroll remainders of
+        // all three transpose-free GEMM entry points (A·Bᵀ forward,
+        // A·B grad-input, Aᵀ·B grad-weight)
+        let rng = Rng::seed_from(2);
+        grad_check(
+            &[randn(&[3, 11], 12), randn(&[5, 11], 13)],
+            &move |tape, ids| {
+                let y = linear(tape, ids[0], ids[1], QuantMode::F32, &rng).unwrap();
+                sum_loss(tape, y)
+            },
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn quantized_backward_matches_explicit_transpose_reference() {
+        // The transpose-free backward must be *numerically identical*
+        // to the pre-refactor formulation (materialize wᵀ/gᵀ/xᵀ, then
+        // quantize the contiguous buffers with the same rng folds):
+        // the Trans-view gather produces the same contiguous operand
+        // the old `transpose()` did, and threading never changes bits.
+        let (t, n, k) = (128usize, 128, 128);
+        let x = randn(&[t, k], 100);
+        let w = randn(&[n, k], 101);
+        for mode in [QuantMode::Sr, QuantMode::MsEden] {
+            let rng = Rng::seed_from(7);
+            let mut tape = Tape::new();
+            let (xi, wi) = (tape.leaf(x.clone()), tape.leaf(w.clone()));
+            let y = linear(&mut tape, xi, wi, mode, &rng).unwrap();
+            let loss = sum_loss(&mut tape, y);
+            let mut g = tape.backward(loss).unwrap();
+            let dx = g.take(xi).unwrap();
+            let dw = g.take(wi).unwrap();
+
+            // upstream gradient injected by sum_loss
+            let gy = loss_weights(t * n);
+            let dx_ref = qmatmul(
+                &gy, t, &transpose(&w.data, n, k), k, n, mode, &rng.fold_in(11),
+            )
+            .unwrap();
+            let dw_ref = qmatmul(
+                &transpose(&gy, t, n),
+                n,
+                &transpose(&x.data, t, k),
+                k,
+                t,
+                mode,
+                &rng.fold_in(12),
+            )
+            .unwrap();
+            assert_eq!(dx.data.to_vec(), dx_ref, "{mode:?} dx");
+            assert_eq!(dw.data.to_vec(), dw_ref, "{mode:?} dw");
+        }
     }
 
     #[test]
@@ -821,7 +1026,7 @@ mod tests {
             let mut g = tape.backward(loss).unwrap();
             let dw = g.take(wi).unwrap();
             mean_single_err += rel_l2(&dw.data, &f32_dw.data) / draws as f64;
-            for (a, v) in avg_dw.iter_mut().zip(&dw.data) {
+            for (a, v) in avg_dw.iter_mut().zip(dw.data.iter()) {
                 *a += *v as f64 / draws as f64;
             }
         }

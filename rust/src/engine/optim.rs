@@ -109,13 +109,16 @@ impl AdamW {
                 p.value.numel()
             );
             let wd = if Self::decays(&p.name) { o.weight_decay } else { 0.0 };
+            // by update time the tape has been consumed, so the param
+            // is sole owner and make_mut updates in place (no copy)
+            let pd = p.value.data.make_mut();
             for i in 0..g.numel() {
                 let gi = g.data[i];
                 m[i] = o.beta1 * m[i] + (1.0 - o.beta1) * gi;
                 v[i] = o.beta2 * v[i] + (1.0 - o.beta2) * gi * gi;
                 let mhat = m[i] / bc1;
                 let vhat = v[i] / bc2;
-                let w = &mut p.value.data[i];
+                let w = &mut pd[i];
                 *w -= lr * (mhat / (vhat.sqrt() + o.eps) + wd * *w);
             }
         }

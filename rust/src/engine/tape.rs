@@ -43,6 +43,17 @@ impl Tape {
         Tape::default()
     }
 
+    /// A tape with room for `n` nodes — the training loop rebuilds the
+    /// graph every step with a statically known node count
+    /// (`NativeModel::graph_capacity`), so the node list never regrows
+    /// mid-step. Leaf values are shared [`Tensor`] handles (O(1)
+    /// clones), so re-recording parameters each step copies no data.
+    pub fn with_capacity(n: usize) -> Tape {
+        Tape {
+            nodes: Vec::with_capacity(n),
+        }
+    }
+
     /// Record a leaf (parameter or input): no parents.
     pub fn leaf(&mut self, value: Tensor) -> VarId {
         self.push(value, Vec::new())

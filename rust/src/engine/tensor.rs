@@ -3,13 +3,79 @@
 //! Deliberately minimal: the engine's hot paths are the fused ops in
 //! [`super::ops`], which work on raw `&[f32]` slices; `Tensor` exists to
 //! carry shape metadata through the autograd tape and the optimizer.
+//!
+//! Storage is [`TensorData`]: a shared (`Rc`) copy-on-write buffer.
+//! Cloning a tensor is O(1) — recording the parameter leaves on the
+//! tape and capturing operand buffers in VJP closures no longer copies
+//! the full f32 payload every training step. The first mutation of a
+//! *shared* buffer copies it (`Rc::make_mut`); by the time the
+//! optimizer mutates the parameters the tape has been consumed, so the
+//! params are sole owners again and update in place.
+
+use std::ops::{Deref, DerefMut};
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
+
+/// Shared copy-on-write f32 storage. Derefs to `[f32]`, so element
+/// reads/writes and slicing look exactly like a `Vec<f32>`; writes
+/// through `DerefMut` copy first iff the buffer is shared.
+#[derive(Clone, Debug)]
+pub struct TensorData(Rc<Vec<f32>>);
+
+impl TensorData {
+    pub fn new(data: Vec<f32>) -> TensorData {
+        TensorData(Rc::new(data))
+    }
+
+    /// Copy out as an owned `Vec` (export paths).
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.0.as_ref().clone()
+    }
+
+    /// Mutable view, copying first iff the buffer is shared. Hoist
+    /// this out of element loops so the refcount check runs once.
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        Rc::make_mut(&mut self.0).as_mut_slice()
+    }
+
+    /// Whether this handle is the buffer's only owner (mutation will
+    /// not copy).
+    pub fn is_unique(&self) -> bool {
+        Rc::strong_count(&self.0) == 1
+    }
+}
+
+impl From<Vec<f32>> for TensorData {
+    fn from(v: Vec<f32>) -> TensorData {
+        TensorData::new(v)
+    }
+}
+
+impl Deref for TensorData {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        self.0.as_slice()
+    }
+}
+
+impl DerefMut for TensorData {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.make_mut()
+    }
+}
+
+impl PartialEq for TensorData {
+    fn eq(&self, other: &TensorData) -> bool {
+        // content equality (pointer-equal buffers short-circuit)
+        Rc::ptr_eq(&self.0, &other.0) || self.0 == other.0
+    }
+}
 
 /// A dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
-    pub data: Vec<f32>,
+    pub data: TensorData,
     pub shape: Vec<usize>,
 }
 
@@ -23,21 +89,21 @@ impl Tensor {
             );
         }
         Ok(Tensor {
-            data,
+            data: data.into(),
             shape: shape.to_vec(),
         })
     }
 
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor {
-            data: vec![0.0; shape.iter().product()],
+            data: vec![0.0; shape.iter().product()].into(),
             shape: shape.to_vec(),
         }
     }
 
     pub fn scalar(v: f32) -> Tensor {
         Tensor {
-            data: vec![v],
+            data: vec![v].into(),
             shape: vec![1],
         }
     }
@@ -71,13 +137,9 @@ impl Tensor {
     pub fn transposed(&self) -> Tensor {
         let (r, c) = (self.rows(), self.cols());
         let mut out = vec![0.0f32; r * c];
-        for i in 0..r {
-            for j in 0..c {
-                out[j * r + i] = self.data[i * c + j];
-            }
-        }
+        crate::kernels::transpose_into(&self.data, r, c, &mut out);
         Tensor {
-            data: out,
+            data: out.into(),
             shape: vec![c, r],
         }
     }
@@ -85,7 +147,8 @@ impl Tensor {
     /// Elementwise accumulate (`self += other`); shapes must agree.
     pub fn add_assign(&mut self, other: &Tensor) {
         debug_assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        let data = self.data.make_mut();
+        for (a, b) in data.iter_mut().zip(other.data.iter()) {
             *a += b;
         }
     }
@@ -95,11 +158,7 @@ impl Tensor {
 pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), rows * cols);
     let mut out = vec![0.0f32; rows * cols];
-    for i in 0..rows {
-        for j in 0..cols {
-            out[j * rows + i] = x[i * cols + j];
-        }
-    }
+    crate::kernels::transpose_into(x, rows, cols, &mut out);
     out
 }
 
@@ -122,7 +181,7 @@ mod tests {
         assert_eq!(tt.shape, vec![3, 2]);
         assert_eq!(tt.data[2], t.data[1]);
         assert_eq!(tt.transposed(), t);
-        assert_eq!(transpose(&t.data, 2, 3), tt.data);
+        assert_eq!(transpose(&t.data, 2, 3), tt.data.to_vec());
     }
 
     #[test]
@@ -130,6 +189,20 @@ mod tests {
         let mut a = Tensor::new(vec![1.0, 2.0], &[2]).unwrap();
         let b = Tensor::new(vec![10.0, 20.0], &[2]).unwrap();
         a.add_assign(&b);
-        assert_eq!(a.data, vec![11.0, 22.0]);
+        assert_eq!(a.data.to_vec(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn clone_is_shared_until_written() {
+        // clones share storage (O(1)); the first write un-shares,
+        // leaving the original untouched
+        let a = Tensor::new(vec![1.0, 2.0, 3.0], &[3]).unwrap();
+        let mut b = a.clone();
+        assert!(!b.data.is_unique());
+        assert_eq!(a.data.as_ptr(), b.data.as_ptr());
+        b.data[1] = 9.0;
+        assert!(b.data.is_unique());
+        assert_eq!(a.data.to_vec(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(b.data.to_vec(), vec![1.0, 9.0, 3.0]);
     }
 }

@@ -1,0 +1,400 @@
+//! Cache-blocked, row-parallel f32 GEMM kernels with an 8-wide
+//! unrolled inner loop, in the three orientations a quantized linear
+//! layer needs:
+//!
+//! * [`gemm_abt`] — `y[m,n] += a[m,k] · b[n,k]ᵀ` (forward `x·wᵀ`; both
+//!   operands stream unit-stride along `k`).
+//! * [`gemm_ab`] — `y[m,n] += a[m,k] · b[k,n]` (grad-input `dy·w`
+//!   **without** materializing `wᵀ`).
+//! * [`gemm_atb`] — `y[m,n] += a[k,m]ᵀ · b[k,n]` (grad-weight `dyᵀ·x`
+//!   **without** materializing `dyᵀ` or `xᵀ`).
+//!
+//! Blocking: `gemm_abt` tiles over N and K so the active B panel
+//! ([`NB`]`x`[`KB`] ≈ 64 KiB) stays hot across the rows of a band; the
+//! axpy-style kernels tile over [`MB`] output rows so those rows stay
+//! in L1 while one B row streams. The innermost loops are unrolled
+//! [`UNROLL`]-wide with independent accumulators — the single-
+//! accumulator dot of the old `matmul_f32` was a latency-bound add
+//! chain; eight independent lanes autovectorize and saturate the FMA
+//! pipes (verified by `benches/train_step.rs`).
+//!
+//! Parallelism: output rows are split into contiguous bands via
+//! [`super::threads`]; each element's accumulation order is invariant
+//! to the thread count, so **parallel results are bitwise identical to
+//! serial results** (locked in by the tests below).
+
+use anyhow::{bail, Result};
+
+use super::threads::{par_row_chunks, threads_for};
+
+/// Innermost unroll width: 8 f32 lanes = one AVX2 register (or two
+/// SSE/NEON ops); also the accumulator fan-out that hides FP add
+/// latency in the dot kernel.
+const UNROLL: usize = 8;
+
+/// Column block of [`gemm_abt`]: B-panel rows held hot across a band.
+const NB: usize = 64;
+
+/// K block of [`gemm_abt`]: the `NB x KB` f32 B panel is 64 KiB.
+const KB: usize = 256;
+
+/// Output-row block of the axpy kernels ([`gemm_ab`], [`gemm_atb`]):
+/// `MB` y-rows stay in L1 while one B row streams past them.
+const MB: usize = 8;
+
+/// 8-lane unrolled dot product (tree-reduced tail), the inner kernel
+/// of [`gemm_abt`].
+#[inline]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let ac = a.chunks_exact(UNROLL);
+    let bc = b.chunks_exact(UNROLL);
+    let (ar, br) = (ac.remainder(), bc.remainder());
+    let mut acc = [0.0f32; UNROLL];
+    for (ca, cb) in ac.zip(bc) {
+        for l in 0..UNROLL {
+            acc[l] += ca[l] * cb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ar.iter().zip(br) {
+        tail += x * y;
+    }
+    (((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))) + tail
+}
+
+/// 8-lane unrolled `y += s * x`, the inner kernel of the axpy GEMMs.
+#[inline]
+fn axpy8(s: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n8 = x.len() - x.len() % UNROLL;
+    for (cx, cy) in x[..n8]
+        .chunks_exact(UNROLL)
+        .zip(y[..n8].chunks_exact_mut(UNROLL))
+    {
+        for l in 0..UNROLL {
+            cy[l] += s * cx[l];
+        }
+    }
+    for (cx, cy) in x[n8..].iter().zip(&mut y[n8..]) {
+        *cy += s * cx;
+    }
+}
+
+/// Serial [`gemm_abt`] kernel over the output-row band `[r0, r1)`;
+/// `band` is that band of `y` (width `n`).
+fn abt_band(a: &[f32], r0: usize, r1: usize, b: &[f32], n: usize, k: usize, band: &mut [f32]) {
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for j0 in (0..n).step_by(NB) {
+            let j1 = (j0 + NB).min(n);
+            for i in r0..r1 {
+                let arow = &a[i * k + k0..i * k + k1];
+                let yrow = &mut band[(i - r0) * n..(i - r0 + 1) * n];
+                for j in j0..j1 {
+                    yrow[j] += dot8(arow, &b[j * k + k0..j * k + k1]);
+                }
+            }
+        }
+    }
+}
+
+/// Serial [`gemm_ab`] kernel over the output-row band `[r0, r1)`.
+fn ab_band(a: &[f32], r0: usize, r1: usize, b: &[f32], k: usize, n: usize, band: &mut [f32]) {
+    for i0 in (r0..r1).step_by(MB) {
+        let i1 = (i0 + MB).min(r1);
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            for i in i0..i1 {
+                axpy8(
+                    a[i * k + kk],
+                    brow,
+                    &mut band[(i - r0) * n..(i - r0 + 1) * n],
+                );
+            }
+        }
+    }
+}
+
+/// Serial [`gemm_atb`] kernel over the output-row band `[r0, r1)`
+/// (output rows index the *columns* of `a`).
+#[allow(clippy::too_many_arguments)]
+fn atb_band(
+    a: &[f32],
+    t: usize,
+    m: usize,
+    r0: usize,
+    r1: usize,
+    b: &[f32],
+    n: usize,
+    band: &mut [f32],
+) {
+    for i0 in (r0..r1).step_by(MB) {
+        let i1 = (i0 + MB).min(r1);
+        for tt in 0..t {
+            let brow = &b[tt * n..(tt + 1) * n];
+            let arow = &a[tt * m..(tt + 1) * m];
+            for i in i0..i1 {
+                axpy8(arow[i], brow, &mut band[(i - r0) * n..(i - r0 + 1) * n]);
+            }
+        }
+    }
+}
+
+fn check_shapes(
+    name: &str,
+    alen: usize,
+    blen: usize,
+    ylen: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+) -> Result<()> {
+    if alen != m * k || blen != n * k || ylen != m * n {
+        bail!("{name}: shape mismatch a={alen} b={blen} y={ylen} for m={m} n={n} k={k}");
+    }
+    Ok(())
+}
+
+/// `y[m,n] += a[m,k] · b[n,k]ᵀ` with the auto thread policy.
+pub fn gemm_abt(a: &[f32], m: usize, b: &[f32], n: usize, k: usize, y: &mut [f32]) -> Result<()> {
+    gemm_abt_threads(a, m, b, n, k, y, threads_for(m * n * k, m))
+}
+
+/// [`gemm_abt`] with an explicit worker count (`1` forces serial;
+/// bitwise identical for any count).
+pub fn gemm_abt_threads(
+    a: &[f32],
+    m: usize,
+    b: &[f32],
+    n: usize,
+    k: usize,
+    y: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    check_shapes("gemm_abt", a.len(), b.len(), y.len(), m, n, k)?;
+    par_row_chunks(y, m, n, threads, |r0, r1, band| {
+        abt_band(a, r0, r1, b, n, k, band)
+    });
+    Ok(())
+}
+
+/// `y[m,n] += a[m,k] · b[k,n]` (`b` row-major `[k,n]`; the
+/// transpose-free grad-input form) with the auto thread policy.
+pub fn gemm_ab(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, y: &mut [f32]) -> Result<()> {
+    gemm_ab_threads(a, m, k, b, n, y, threads_for(m * n * k, m))
+}
+
+/// [`gemm_ab`] with an explicit worker count.
+pub fn gemm_ab_threads(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    y: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    check_shapes("gemm_ab", a.len(), b.len(), y.len(), m, n, k)?;
+    par_row_chunks(y, m, n, threads, |r0, r1, band| {
+        ab_band(a, r0, r1, b, k, n, band)
+    });
+    Ok(())
+}
+
+/// `y[m,n] += a[t,m]ᵀ · b[t,n]` (the transpose-free grad-weight form:
+/// neither operand is materialized transposed) with the auto policy.
+pub fn gemm_atb(a: &[f32], t: usize, m: usize, b: &[f32], n: usize, y: &mut [f32]) -> Result<()> {
+    gemm_atb_threads(a, t, m, b, n, y, threads_for(m * n * t, m))
+}
+
+/// [`gemm_atb`] with an explicit worker count.
+pub fn gemm_atb_threads(
+    a: &[f32],
+    t: usize,
+    m: usize,
+    b: &[f32],
+    n: usize,
+    y: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    if a.len() != t * m || b.len() != t * n || y.len() != m * n {
+        bail!(
+            "gemm_atb: shape mismatch a={} b={} y={} for t={t} m={m} n={n}",
+            a.len(),
+            b.len(),
+            y.len()
+        );
+    }
+    par_row_chunks(y, m, n, threads, |r0, r1, band| {
+        atb_band(a, t, m, r0, r1, b, n, band)
+    });
+    Ok(())
+}
+
+/// Blocked 2-D transpose of row-major `x[rows, cols]` into
+/// `out[cols, rows]` (tile-sized for cache-friendly strided reads).
+/// The quantized backward still needs this once per strided operand —
+/// quantization groups must be contiguous along the GEMM inner dim —
+/// but the destination comes from the scratch pool, not a fresh alloc.
+pub fn transpose_into(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    const TB: usize = 32;
+    for i0 in (0..rows).step_by(TB) {
+        let i1 = (i0 + TB).min(rows);
+        for j0 in (0..cols).step_by(TB) {
+            let j1 = (j0 + TB).min(cols);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    out[j * rows + i] = x[i * cols + j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// f64-accumulated reference `y = a · bᵀ`.
+    fn naive_abt(a: &[f32], m: usize, b: &[f32], n: usize, k: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for c in 0..k {
+                    acc += a[i * k + c] as f64 * b[j * k + c] as f64;
+                }
+                y[i * n + j] = acc as f32;
+            }
+        }
+        y
+    }
+
+    fn rel_close(got: &[f32], want: &[f32]) {
+        let ymax = want.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-12);
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-4 * ymax,
+                "elem {i}: {g} vs {w} (scale {ymax})"
+            );
+        }
+    }
+
+    /// Shapes crossing every block boundary: ragged vs `MB`/`NB`/`KB`
+    /// and the 8-wide unroll remainder.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 11),
+        (5, 67, 128),
+        (13, 70, 300),
+        (33, 129, 261),
+    ];
+
+    #[test]
+    fn abt_matches_naive_reference() {
+        let mut rng = Rng::seed_from(11);
+        for &(m, n, k) in SHAPES {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(n * k);
+            let mut y = vec![0.0f32; m * n];
+            gemm_abt_threads(&a, m, &b, n, k, &mut y, 1).unwrap();
+            rel_close(&y, &naive_abt(&a, m, &b, n, k));
+        }
+    }
+
+    #[test]
+    fn ab_matches_abt_on_transposed_operand() {
+        let mut rng = Rng::seed_from(12);
+        for &(m, n, k) in SHAPES {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(n * k); // logical [n, k]
+            let mut bt = vec![0.0f32; n * k]; // stored [k, n]
+            transpose_into(&b, n, k, &mut bt);
+            let mut y = vec![0.0f32; m * n];
+            gemm_ab_threads(&a, m, k, &bt, n, &mut y, 1).unwrap();
+            rel_close(&y, &naive_abt(&a, m, &b, n, k));
+        }
+    }
+
+    #[test]
+    fn atb_matches_naive_reference() {
+        let mut rng = Rng::seed_from(13);
+        for &(m, n, t) in SHAPES {
+            let a = rng.normal_vec(t * m); // logical aᵀ is [m, t]
+            let b = rng.normal_vec(t * n);
+            let mut at = vec![0.0f32; t * m]; // [m, t]
+            transpose_into(&a, t, m, &mut at);
+            let mut bt = vec![0.0f32; t * n]; // [n, t]
+            transpose_into(&b, t, n, &mut bt);
+            let mut y = vec![0.0f32; m * n];
+            gemm_atb_threads(&a, t, m, &b, n, &mut y, 1).unwrap();
+            rel_close(&y, &naive_abt(&at, m, &bt, n, t));
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise_all_orientations() {
+        // The training-path mirror of qgemm's
+        // `parallel_matches_serial_bitwise`: row-banded workers must
+        // reproduce the serial pass exactly, for every orientation.
+        let mut rng = Rng::seed_from(77);
+        let (m, n, k) = (13usize, 67usize, 129usize); // deliberately ragged
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(n * k);
+        let mut bt = vec![0.0f32; n * k];
+        transpose_into(&b, n, k, &mut bt);
+        let at = rng.normal_vec(k * m); // [t=k, m] for atb
+        let btb = rng.normal_vec(k * n);
+
+        let mut s_abt = vec![0.0f32; m * n];
+        gemm_abt_threads(&a, m, &b, n, k, &mut s_abt, 1).unwrap();
+        let mut s_ab = vec![0.0f32; m * n];
+        gemm_ab_threads(&a, m, k, &bt, n, &mut s_ab, 1).unwrap();
+        let mut s_atb = vec![0.0f32; m * n];
+        gemm_atb_threads(&at, k, m, &btb, n, &mut s_atb, 1).unwrap();
+
+        for threads in [2usize, 3, 4, 16, 200] {
+            let mut p = vec![0.0f32; m * n];
+            gemm_abt_threads(&a, m, &b, n, k, &mut p, threads).unwrap();
+            assert_eq!(s_abt, p, "abt threads={threads}");
+            let mut p = vec![0.0f32; m * n];
+            gemm_ab_threads(&a, m, k, &bt, n, &mut p, threads).unwrap();
+            assert_eq!(s_ab, p, "ab threads={threads}");
+            let mut p = vec![0.0f32; m * n];
+            gemm_atb_threads(&at, k, m, &btb, n, &mut p, threads).unwrap();
+            assert_eq!(s_atb, p, "atb threads={threads}");
+        }
+    }
+
+    #[test]
+    fn accumulates_into_y() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let mut y = vec![10.0f32];
+        gemm_abt(&a, 1, &b, 1, 2, &mut y).unwrap();
+        assert_eq!(y[0], 21.0);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let mut y = vec![0.0f32; 2];
+        assert!(gemm_abt(&[0.0; 4], 1, &[0.0; 4], 2, 4, &mut y).is_err());
+        assert!(gemm_ab(&[0.0; 4], 1, 4, &[0.0; 4], 2, &mut y).is_err());
+        assert!(gemm_atb(&[0.0; 4], 4, 1, &[0.0; 4], 2, &mut [0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn transpose_into_roundtrip() {
+        let x: Vec<f32> = (0..6).map(|v| v as f32).collect();
+        let mut t = vec![0.0f32; 6];
+        transpose_into(&x, 2, 3, &mut t);
+        assert_eq!(t, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        let mut back = vec![0.0f32; 6];
+        transpose_into(&t, 3, 2, &mut back);
+        assert_eq!(back, x);
+    }
+}

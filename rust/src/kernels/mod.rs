@@ -1,0 +1,39 @@
+//! Unified high-performance GEMM core shared by the training engine
+//! and the serving stack.
+//!
+//! Before this module existed the crate had *two* matmul stories: the
+//! serving path ([`crate::serve::qgemm`]) was row-parallel over scoped
+//! threads while the training path ([`crate::engine::ops`]) ran every
+//! one of its three per-linear matmuls (forward, grad-input,
+//! grad-weight) through a serial single-accumulator loop, plus a
+//! materialized `transpose()` per backward operand. This module is the
+//! single core both now sit on:
+//!
+//! * [`threads`] — one worker-thread policy (`QUARTET2_THREADS`, with
+//!   the legacy `QUARTET2_QGEMM_THREADS` honored for compatibility),
+//!   one MAC-count threshold below which GEMMs stay serial, and the
+//!   scoped-thread row-partition helpers. Partitioning is always over
+//!   *output rows*, so every output element is produced by exactly one
+//!   worker in the same accumulation order as the serial pass —
+//!   parallel results are **bitwise identical** to serial ones.
+//! * [`gemm`] — cache-blocked f32 kernels with an 8-wide unrolled
+//!   innermost loop (autovectorizes to one AVX2 / two NEON ops) and
+//!   transpose-free entry points for all three orientations a linear
+//!   layer needs: `A·Bᵀ` (forward), `A·B` (grad-input) and `Aᵀ·B`
+//!   (grad-weight). The backward no longer materializes `transpose(w)`
+//!   / `transpose(g)` / `transpose(x)` in f32 mode.
+//! * [`scratch`] — a thread-local buffer pool for GEMM-sized
+//!   temporaries (quantized operand estimates, gather-transposes,
+//!   activation scratch in the serving forward), eliminating the
+//!   per-step allocation churn of the training loop.
+
+pub mod gemm;
+pub mod scratch;
+pub mod threads;
+
+pub use gemm::{
+    gemm_ab, gemm_ab_threads, gemm_abt, gemm_abt_threads, gemm_atb,
+    gemm_atb_threads, transpose_into,
+};
+pub use scratch::{take_uninit, take_zeroed, Scratch};
+pub use threads::{pinned_threads, set_threads, threads_for, PAR_MIN_MACS};

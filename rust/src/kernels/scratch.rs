@@ -1,0 +1,115 @@
+//! Thread-local scratch-buffer pool for GEMM-sized f32 temporaries.
+//!
+//! The training step used to allocate (and drop) fresh `Vec<f32>`s for
+//! every quantized-operand estimate, gather-transpose, and attention
+//! intermediate — several megabytes of churn per step. [`take_zeroed`]
+//! / [`take_copy`] hand out pooled buffers instead; dropping the
+//! [`Scratch`] handle returns the buffer (capacity intact) to the
+//! current thread's pool. Buffers that *escape* their op (tape values,
+//! gradients) stay plain `Vec<f32>`s — the pool is only for values
+//! whose lifetime ends inside the op that took them. ([`take_zeroed`]
+//! is for buffers that accumulate; gather/copy targets use
+//! [`take_uninit`].)
+//!
+//! The pool is thread-local, so scoped GEMM workers never contend on
+//! it; long-lived threads (the training loop, the serving loop) are
+//! the ones that amortize. The pool keeps at most [`MAX_POOLED`]
+//! buffers per thread to bound idle memory.
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+
+/// Retained buffers per thread; beyond this, dropped scratch frees.
+const MAX_POOLED: usize = 32;
+
+thread_local! {
+    static POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A pooled f32 buffer; derefs to `[f32]` and returns to the pool on
+/// drop.
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+fn pop_pooled() -> Vec<f32> {
+    POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default()
+}
+
+/// Take a pooled buffer of length `len`, contents unspecified (callers
+/// must fully overwrite it — gather/copy targets).
+pub fn take_uninit(len: usize) -> Scratch {
+    let mut buf = pop_pooled();
+    // resize alone would keep stale prefix contents *and* zero the
+    // tail; that asymmetry is fine here because the contract is
+    // "unspecified", but keep capacity growth amortized:
+    buf.resize(len.max(buf.len()), 0.0);
+    buf.truncate(len);
+    Scratch { buf }
+}
+
+/// Take a pooled buffer of length `len`, zero-filled.
+pub fn take_zeroed(len: usize) -> Scratch {
+    let mut s = take_uninit(len);
+    s.buf.fill(0.0);
+    s
+}
+
+impl Deref for Scratch {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for Scratch {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        // try_with: harmless leak if the thread's TLS is already gone
+        let _ = POOL.try_with(|p| {
+            let mut pool = p.borrow_mut();
+            if pool.len() < MAX_POOLED {
+                pool.push(buf);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_reused_across_takes() {
+        // drain the pool so the test owns its buffers
+        let warm: Vec<Scratch> = (0..MAX_POOLED).map(|_| take_zeroed(16)).collect();
+        drop(warm);
+        let mut s = take_zeroed(64);
+        s[0] = 7.0;
+        let ptr = s.as_ptr();
+        let cap_before = s.buf.capacity();
+        drop(s);
+        // a same-or-smaller take gets the pooled allocation back
+        let again = take_zeroed(32);
+        assert!(again.buf.capacity() >= 32);
+        // zeroed contract holds even though the buffer is recycled
+        assert!(again.iter().all(|&v| v == 0.0));
+        // the common case reuses the exact allocation (pool is LIFO)
+        if again.buf.capacity() == cap_before {
+            assert_eq!(again.as_ptr(), ptr);
+        }
+    }
+
+    #[test]
+    fn take_uninit_has_requested_len() {
+        for len in [0usize, 1, 17, 1024] {
+            assert_eq!(take_uninit(len).len(), len);
+        }
+    }
+}

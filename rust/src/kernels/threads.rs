@@ -1,0 +1,207 @@
+//! Worker-thread policy + scoped row-partition helpers shared by every
+//! GEMM in the crate (training *and* serving).
+//!
+//! Policy resolution order:
+//!
+//! 1. a programmatic override installed via [`set_threads`] (used by
+//!    the benches to compare serial vs parallel in one process, and by
+//!    the `--threads` CLI flag),
+//! 2. the `QUARTET2_THREADS` environment variable (the legacy
+//!    `QUARTET2_QGEMM_THREADS` name is honored as a fallback so
+//!    existing serving deployments keep working), read once,
+//! 3. auto: serial below [`PAR_MIN_MACS`] multiply-accumulates, else
+//!    the machine's available parallelism.
+//!
+//! The partition helpers split *output rows* into contiguous bands,
+//! one worker per band. Each output element is computed by exactly one
+//! worker with the same per-element accumulation order as the serial
+//! pass, so parallel results are bitwise identical to serial results
+//! for any thread count (locked in by the parity tests here and in
+//! [`super::gemm`] / `serve::qgemm`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Minimum contraction size (`m * n * k` MACs) before worker threads
+/// pay for themselves; below this a GEMM runs serially. Single-request
+/// decode GEMMs and micro-model test graphs stay under it.
+pub const PAR_MIN_MACS: usize = 1 << 22;
+
+/// Sentinel: no programmatic override installed.
+const UNSET: usize = usize::MAX;
+
+/// Programmatic override: `UNSET` = defer to env/auto, `0` = force
+/// auto (ignore env), `n >= 1` = exactly `n` workers.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(UNSET);
+
+/// `QUARTET2_THREADS` / `QUARTET2_QGEMM_THREADS`, read once (the
+/// policy sits on every GEMM dispatch; the env cannot change
+/// mid-process). `None` = unset/garbage = auto.
+fn env_threads() -> Option<usize> {
+    static ENV: OnceLock<Option<usize>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        ["QUARTET2_THREADS", "QUARTET2_QGEMM_THREADS"]
+            .iter()
+            .find_map(|key| {
+                std::env::var(key)
+                    .ok()
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .filter(|&t| t >= 1)
+            })
+    })
+}
+
+/// Install a process-wide worker-count override: `n >= 1` forces
+/// exactly `n` workers for every subsequent GEMM, `0` restores the
+/// auto policy (and shadows any env setting). Intended for benches
+/// and the `--threads` CLI flag; tests use the explicit `*_threads`
+/// kernel entry points instead so they stay race-free.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The pinned worker count (programmatic override or env), if any.
+/// `None` means the auto policy decides per GEMM — used by run
+/// banners to report the policy actually in effect.
+pub fn pinned_threads() -> Option<usize> {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        UNSET => env_threads(),
+        0 => None,
+        t => Some(t),
+    }
+}
+
+/// Worker count for a contraction of `macs` multiply-accumulates whose
+/// output has `rows` partitionable rows.
+pub fn threads_for(macs: usize, rows: usize) -> usize {
+    let cap = rows.max(1);
+    match OVERRIDE.load(Ordering::Relaxed) {
+        UNSET => {
+            if let Some(t) = env_threads() {
+                return t.min(cap);
+            }
+        }
+        0 => {}
+        t => return t.min(cap),
+    }
+    if macs < PAR_MIN_MACS {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(cap)
+}
+
+/// Split `0..rows` into up to `threads` contiguous ranges, run
+/// `f(r0, r1)` per range on scoped threads, and return the
+/// `(r0, r1, result)` triples in range order. Serial (no spawn) when
+/// `threads < 2`.
+pub fn run_ranges<T, F>(rows: usize, threads: usize, f: F) -> Vec<(usize, usize, T)>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, rows.max(1));
+    if threads < 2 {
+        return vec![(0, rows, f(0, rows))];
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(threads);
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + chunk).min(rows);
+            handles.push(s.spawn(move || (r0, r1, f(r0, r1))));
+            r0 = r1;
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("gemm worker panicked"))
+            .collect()
+    })
+}
+
+/// Split the row-major `rows x width` buffer `y` into contiguous row
+/// bands and run `f(r0, r1, band)` per band on scoped threads. Every
+/// output row is written by exactly one worker (bitwise-identical to
+/// the serial pass). Serial when `threads < 2`.
+pub fn par_row_chunks<F>(y: &mut [f32], rows: usize, width: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(y.len(), rows * width);
+    let threads = threads.clamp(1, rows.max(1));
+    if threads < 2 {
+        return f(0, rows, y);
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = y;
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + chunk).min(rows);
+            let (band, tail) = rest.split_at_mut((r1 - r0) * width);
+            rest = tail;
+            // the scope joins (and propagates panics from) every
+            // worker on exit; the handle itself is not needed
+            let _ = s.spawn(move || f(r0, r1, band));
+            r0 = r1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_ranges_partitions_exactly() {
+        for rows in [0usize, 1, 5, 67, 200] {
+            for threads in [1usize, 2, 3, 16, 300] {
+                let got = run_ranges(rows, threads, |r0, r1| r1 - r0);
+                let total: usize = got.iter().map(|(_, _, n)| n).sum();
+                assert_eq!(total, rows, "rows={rows} threads={threads}");
+                // contiguous, in order, non-overlapping
+                let mut expect = 0;
+                for &(r0, r1, _) in &got {
+                    assert_eq!(r0, expect);
+                    assert!(r1 >= r0);
+                    expect = r1;
+                }
+                assert_eq!(expect, rows);
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_covers_every_row_once() {
+        let (rows, width) = (13usize, 7usize);
+        for threads in [1usize, 2, 5, 64] {
+            let mut y = vec![0.0f32; rows * width];
+            par_row_chunks(&mut y, rows, width, threads, |r0, _r1, band| {
+                for (local, row) in band.chunks_exact_mut(width).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (r0 + local) as f32 + 1.0;
+                    }
+                }
+            });
+            for r in 0..rows {
+                for c in 0..width {
+                    assert_eq!(y[r * width + c], r as f32 + 1.0, "threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threads_for_respects_floor_and_cap() {
+        // tiny contraction: serial under the auto policy
+        assert_eq!(threads_for(1, 1024), 1);
+        // never more workers than rows
+        assert!(threads_for(usize::MAX, 3) <= 3);
+        assert_eq!(threads_for(usize::MAX, 0), 1);
+    }
+}

@@ -52,6 +52,10 @@ pub mod engine;
 pub mod experiments;
 pub mod formats;
 pub mod hadamard;
+// The shared GEMM core is held to a zero-warning bar (scripts/ci.sh
+// fails on any regression here even without clippy).
+#[deny(warnings)]
+pub mod kernels;
 pub mod metrics;
 pub mod perfmodel;
 pub mod runtime;

@@ -48,10 +48,12 @@ USAGE:
                       [--batch 4] [--seq 64] [--seed 42] [--eval-every 25]
                       [--eval-batches 2] [--results-dir results]
                       [--export-checkpoint checkpoints/serve_<preset>_native]
-                      [--no-export]
+                      [--no-export] [--threads N]
                       pure-Rust Quartet II training (MS-EDEN-quantized
                       fwd+bwd matmuls); packs the trained weights into a
-                      NVFP4 serving checkpoint on completion
+                      NVFP4 serving checkpoint on completion. GEMMs run
+                      on the shared threaded kernel core (--threads or
+                      QUARTET2_THREADS override the auto policy; 0 = auto)
   quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|train-native|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
@@ -159,6 +161,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// then pack + save the trained weights as a NVFP4 serving checkpoint
 /// so `quartet2 generate --checkpoint <dir>` serves them directly.
 fn cmd_train_native(args: &Args) -> Result<()> {
+    if let Some(t) = args.opt("threads") {
+        let t: usize = t
+            .parse()
+            .with_context(|| format!("--threads must be a number, got {t:?}"))?;
+        quartet2::kernels::set_threads(t);
+    }
     let preset = args.get_or("preset", "tiny").to_string();
     let scheme = args.get_or("scheme", "quartet2").to_string();
     let batch = args.usize_or("batch", 4)?;

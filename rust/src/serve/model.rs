@@ -27,6 +27,7 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::hadamard;
+use crate::kernels::scratch;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 use crate::ROT_BLOCK;
@@ -390,7 +391,7 @@ impl PackedModel {
             last_row[s] = meta.len() - 1;
         }
         let total = meta.len();
-        let mut x = vec![0.0f32; total * d];
+        let mut x = scratch::take_uninit(total * d);
         {
             let mut row = 0;
             for seq in batch.iter() {
@@ -403,18 +404,24 @@ impl PackedModel {
             }
         }
 
-        // ---- scratch buffers reused across layers
-        let mut h = vec![0.0f32; total * d];
+        // ---- scratch buffers reused across layers, drawn from the
+        // thread-local pool (a scheduler step used to allocate ~9
+        // fresh GEMM-sized vectors per call; now steady-state serving
+        // allocates nothing here)
+        let mut h = scratch::take_uninit(total * d);
         // pre-rotated copy of `h`, shared by the grouped linears so
         // the RHT runs once per block instead of once per GEMM
-        let mut hr = vec![0.0f32; total * d];
-        let mut q = vec![0.0f32; total * d];
-        let mut k = vec![0.0f32; total * d];
-        let mut v = vec![0.0f32; total * d];
-        let mut attn = vec![0.0f32; total * d];
-        let mut o = vec![0.0f32; total * d];
-        let mut g = vec![0.0f32; total * f];
-        let mut u = vec![0.0f32; total * f];
+        let mut hr = scratch::take_uninit(total * d);
+        // (take_uninit: q/k/v/attn/g/u are zero-filled right before
+        // their GEMM each layer, and o/logits_flat are zeroed inside
+        // rot_qgemm — pre-zeroing here would just memset twice)
+        let mut q = scratch::take_uninit(total * d);
+        let mut k = scratch::take_uninit(total * d);
+        let mut v = scratch::take_uninit(total * d);
+        let mut attn = scratch::take_uninit(total * d);
+        let mut o = scratch::take_uninit(total * d);
+        let mut g = scratch::take_uninit(total * f);
+        let mut u = scratch::take_uninit(total * f);
         let mut scores: Vec<f32> = Vec::new();
         let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
         // RoPE inverse frequencies depend only on (i, head_dim):
@@ -468,7 +475,7 @@ impl PackedModel {
                 }
             }
             self.rot_qgemm(&attn, total, &layer.wo, &self.signs_dim, &mut o)?;
-            for (xv, ov) in x.iter_mut().zip(&o) {
+            for (xv, ov) in x.iter_mut().zip(o.iter()) {
                 *xv += ov;
             }
 
@@ -479,11 +486,11 @@ impl PackedModel {
             qgemm(&hr, total, &layer.w_gate, &mut g)?;
             u.fill(0.0);
             qgemm(&hr, total, &layer.w_up, &mut u)?;
-            for (gv, uv) in g.iter_mut().zip(&u) {
+            for (gv, uv) in g.iter_mut().zip(u.iter()) {
                 *gv = silu(*gv) * uv;
             }
             self.rot_qgemm(&g, total, &layer.w_down, &self.signs_ffn, &mut o)?;
-            for (xv, ov) in x.iter_mut().zip(&o) {
+            for (xv, ov) in x.iter_mut().zip(o.iter()) {
                 *xv += ov;
             }
         }
@@ -492,13 +499,13 @@ impl PackedModel {
         // through one LM-head GEMM so weight traversal amortizes across
         // sequences exactly like the block linears
         let nseq = batch.len();
-        let mut xlast = vec![0.0f32; nseq * d];
+        let mut xlast = scratch::take_uninit(nseq * d);
         for (s, &r) in last_row.iter().enumerate() {
             xlast[s * d..(s + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
         }
-        let mut hlast = vec![0.0f32; nseq * d];
+        let mut hlast = scratch::take_uninit(nseq * d);
         rmsnorm_rows(&xlast, &self.final_norm, d, &mut hlast);
-        let mut logits_flat = vec![0.0f32; nseq * self.cfg.vocab];
+        let mut logits_flat = scratch::take_uninit(nseq * self.cfg.vocab);
         self.rot_qgemm(&hlast, nseq, &self.lm_head, &self.signs_dim, &mut logits_flat)?;
         let logits_out: Vec<Vec<f32>> = logits_flat
             .chunks_exact(self.cfg.vocab)

@@ -12,23 +12,26 @@
 //! why the continuous-batching scheduler coalesces decode steps
 //! ([`super::scheduler`]).
 //!
-//! **Parallelism** (ROADMAP open item): large contractions split the
-//! output rows (= weight rows) across scoped worker threads, each
-//! producing a disjoint column tile that is summed into `y` after the
-//! join — the same row decomposition a rayon `par_chunks` would give
-//! (rayon itself is unavailable in the offline build). Row blocks keep
-//! each worker streaming its own slice of the packed weights, so the
-//! split adds no decode duplication. Small GEMMs (single-request
-//! decode) stay on the serial path: below [`PAR_MIN_MACS`] the spawn
-//! overhead would exceed the contraction itself. Per-element results
-//! are bitwise identical to the serial path for a zeroed `y` (same
-//! group accumulation order per output element).
+//! **Parallelism** now rides the crate-wide GEMM core
+//! ([`crate::kernels`]): the worker-count policy (`QUARTET2_THREADS`,
+//! with the legacy `QUARTET2_QGEMM_THREADS` honored; auto below
+//! [`crate::kernels::PAR_MIN_MACS`] MACs) and the scoped-thread range
+//! partition are the same ones the training engine's three per-linear
+//! GEMMs use. Output rows (= weight rows) split into disjoint column
+//! tiles summed into `y` after the join; row blocks keep each worker
+//! streaming its own slice of the packed weights, so the split adds no
+//! decode duplication. Per-element results are bitwise identical to
+//! the serial path for a zeroed `y` (same group accumulation order per
+//! output element).
 //!
-//! The f32 reference path ([`matmul_f32`]) is cache-blocked over output
-//! columns and used for parity tests and the non-quantized baseline.
+//! The f32 reference path ([`matmul_f32`]) is the shared blocked +
+//! 8-wide-unrolled [`crate::kernels::gemm_abt`] kernel, used for
+//! parity tests and the non-quantized baseline.
 
 use anyhow::{bail, Result};
 
+use crate::kernels::gemm_abt;
+use crate::kernels::threads::{run_ranges, threads_for};
 use crate::GROUP;
 
 use super::packed::PackedTensor;
@@ -43,10 +46,6 @@ pub const FP4_LUT: [f32; 16] = [
 /// Large enough to amortize unpacking, small enough that the tile of
 /// partial sums stays in registers/L1.
 const M_TILE: usize = 16;
-
-/// Minimum contraction size (`m * n * k` MACs) before worker threads
-/// pay for themselves; below this the GEMM runs serially.
-const PAR_MIN_MACS: usize = 1 << 22;
 
 /// Serial kernel over weight rows `[r0, r1)`: accumulates into the
 /// column tile `y[i * ystride + (row - r0)]`.
@@ -89,35 +88,6 @@ fn qgemm_rows(
     }
 }
 
-/// `QUARTET2_QGEMM_THREADS` override, read once (this sits on the
-/// per-linear serving hot path; the env cannot change mid-process).
-/// 0/unset/garbage = auto.
-fn thread_override() -> Option<usize> {
-    static OVERRIDE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
-    *OVERRIDE.get_or_init(|| {
-        std::env::var("QUARTET2_QGEMM_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-    })
-}
-
-/// Worker-thread count for an `m x n x k` contraction: 1 (serial) when
-/// the GEMM is too small, else the machine's parallelism capped by the
-/// row count.
-fn auto_threads(m: usize, n: usize, k: usize) -> usize {
-    if let Some(t) = thread_override() {
-        return t.min(n.max(1));
-    }
-    if m * n * k < PAR_MIN_MACS {
-        return 1;
-    }
-    std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(n.max(1))
-}
-
 /// `y[m, n] = x[m, k] @ W^T` with `W` packed NVFP4 `[n, k]`.
 ///
 /// `y` must be zeroed (or hold a bias) on entry; results accumulate.
@@ -126,7 +96,7 @@ fn auto_threads(m: usize, n: usize, k: usize) -> usize {
 /// as one term, which may round differently from the serial
 /// interleaving (identical for a zeroed `y`).
 pub fn qgemm(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()> {
-    qgemm_threads(x, m, w, y, auto_threads(m, w.rows, w.cols))
+    qgemm_threads(x, m, w, y, threads_for(m * w.rows * w.cols, w.rows))
 }
 
 /// [`qgemm`] with an explicit worker count (`1` forces the serial
@@ -151,23 +121,12 @@ pub fn qgemm_threads(
         return Ok(());
     }
 
-    let chunk = n.div_ceil(threads);
-    let tiles: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(threads);
-        let mut r0 = 0;
-        while r0 < n {
-            let r1 = (r0 + chunk).min(n);
-            handles.push(s.spawn(move || {
-                let mut tile = vec![0.0f32; m * (r1 - r0)];
-                qgemm_rows(x, m, w, r0, r1, &mut tile, r1 - r0);
-                (r0, r1, tile)
-            }));
-            r0 = r1;
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("qgemm worker panicked"))
-            .collect()
+    // weight-row bands on the shared scoped-thread partition; each
+    // worker produces a disjoint column tile, summed after the join
+    let tiles = run_ranges(n, threads, |r0, r1| {
+        let mut tile = vec![0.0f32; m * (r1 - r0)];
+        qgemm_rows(x, m, w, r0, r1, &mut tile, r1 - r0);
+        tile
     });
     for (r0, r1, tile) in tiles {
         let nr = r1 - r0;
@@ -181,44 +140,18 @@ pub fn qgemm_threads(
     Ok(())
 }
 
-/// Dequantize-then-multiply reference: numerically identical math
-/// (same per-group products, same accumulation order) but through the
-/// materialized f32 weight matrix. Used to cross-check [`qgemm`].
+/// Dequantize-then-multiply reference: the same per-group products
+/// through the materialized f32 weight matrix (partial-sum association
+/// may differ). Used to cross-check [`qgemm`].
 pub fn qgemm_reference(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()> {
     let dense = w.dequant();
     matmul_f32(x, m, &dense, w.rows, w.cols, y)
 }
 
-/// Cache-blocked f32 GEMM: `y[m, n] += x[m, k] @ w[n, k]^T`.
-///
-/// Both `x` rows and `w` rows are contiguous along `k`, so the inner
-/// dot is a unit-stride streaming kernel; blocking over output columns
-/// keeps the active slice of `w` hot across the `m` loop.
+/// f32 GEMM `y[m, n] += x[m, k] @ w[n, k]^T` on the shared blocked /
+/// threaded / 8-wide-unrolled core ([`crate::kernels::gemm_abt`]).
 pub fn matmul_f32(x: &[f32], m: usize, w: &[f32], n: usize, k: usize, y: &mut [f32]) -> Result<()> {
-    if x.len() != m * k || w.len() != n * k || y.len() != m * n {
-        bail!(
-            "matmul_f32: shape mismatch x={} w={} y={} for m={m} n={n} k={k}",
-            x.len(),
-            w.len(),
-            y.len()
-        );
-    }
-    const N_BLOCK: usize = 64;
-    for j0 in (0..n).step_by(N_BLOCK) {
-        let j1 = (j0 + N_BLOCK).min(n);
-        for i in 0..m {
-            let xrow = &x[i * k..(i + 1) * k];
-            for j in j0..j1 {
-                let wrow = &w[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (xv, wv) in xrow.iter().zip(wrow) {
-                    acc += xv * wv;
-                }
-                y[i * n + j] += acc;
-            }
-        }
-    }
-    Ok(())
+    gemm_abt(x, m, w, n, k, y)
 }
 
 #[cfg(test)]

@@ -16,18 +16,23 @@ fi
 
 cargo clippy --all-targets -- -D warnings
 
-# tier-1 (ROADMAP.md)
+# tier-1 (ROADMAP.md); the kernels module carries #[deny(warnings)],
+# so any warning regression in the shared GEMM core fails this build
+# even without clippy
 cargo build --release
 cargo test -q
 
-# benches must at least compile (they are harness-free binaries)
+# benches must at least compile (they are harness-free binaries;
+# includes the new train_step throughput bench)
 cargo bench --no-run
 
 # smoke: the native Quartet II training path end-to-end — two MS-EDEN
-# quantized steps plus packed-checkpoint export, no artifacts needed
+# quantized steps plus packed-checkpoint export, no artifacts needed —
+# pinned to 2 workers so the threaded training-path GEMMs are exercised
+# deterministically regardless of host core count
 smoke_dir="$(mktemp -d)"
 trap 'rm -rf "$smoke_dir"' EXIT
-cargo run --release --bin quartet2 -- train-native \
+QUARTET2_THREADS=2 cargo run --release --bin quartet2 -- train-native \
     --preset tiny --scheme quartet2 --steps 2 --batch 2 --seq 64 \
     --eval-every 0 --log-every 1 \
     --results-dir "$smoke_dir/results" \
