@@ -1,0 +1,231 @@
+//! Bench: the fused quantizer core vs the pre-PR multi-pass library
+//! path — MS-EDEN (naive + post hoc), Q_SR, and the serving RTN-pack,
+//! serial vs banded-parallel vs legacy, with per-element ns and
+//! input-stream GB/s.
+//!
+//! The "legacy" rows reconstruct the pre-fused wrappers verbatim on
+//! top of the retained multi-pass reference seam (`ms_eden_core` /
+//! `ms_eden_posthoc_core` / a copy of the old `quantize_sr` loop /
+//! `quantize_rtn` + `PackedTensor::from_quantized`), allocation
+//! pattern included, so the fused core's speedup stays measurable
+//! after the old wrappers are gone. Results land in
+//! `results/quantize.json`; `scripts/bench.sh` copies that to
+//! `BENCH_quantize.json` at the repo root for cross-PR tracking.
+//!
+//! Acceptance target (ISSUE 4): fused-serial MS-EDEN >= 2x the legacy
+//! path on a >= 1024x4096 operand.
+
+use quartet2::bench::{black_box, header, Bencher};
+use quartet2::formats::{
+    ms_eden_core, ms_eden_posthoc_core, quantize_rtn, rtn_e4m3, sr_fp4,
+    Quantized, FP8_MAX, RTN_CLIP_SCALE, SR_BUDGET,
+};
+use quartet2::hadamard;
+use quartet2::kernels::quant;
+use quartet2::serve::PackedTensor;
+use quartet2::util::json::{self, Json};
+use quartet2::util::rng::Rng;
+use quartet2::GROUP;
+
+/// Operand shape: one grad-weight-sized tensor of the small preset
+/// (and comfortably past the ISSUE 4 floor of 1024x4096).
+const ROWS: usize = 1024;
+const COLS: usize = 4096;
+
+fn safe_div(num: f32, den: f32) -> f32 {
+    num / if den == 0.0 { 1.0 } else { den }
+}
+
+/// Verbatim copy of the pre-PR `formats::quantize_sr` pipeline
+/// (sequential-stream uniforms, fresh buffers and two reduction
+/// passes per call).
+fn legacy_quantize_sr(x: &[f32], rng: &mut Rng) -> (Vec<f32>, Vec<f32>, f32) {
+    let absmax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let gscale = safe_div(absmax, SR_BUDGET * FP8_MAX);
+    let gmax: Vec<f32> = x
+        .chunks_exact(GROUP)
+        .map(|g| g.iter().fold(0.0f32, |m, v| m.max(v.abs())))
+        .collect();
+    let mut values = vec![0.0f32; x.len()];
+    let mut scales = vec![0.0f32; x.len() / GROUP];
+    for (g, chunk) in x.chunks_exact(GROUP).enumerate() {
+        let s = rtn_e4m3(safe_div(gmax[g], gscale * SR_BUDGET));
+        scales[g] = s;
+        let denom = s * gscale;
+        for (i, &v) in chunk.iter().enumerate() {
+            values[g * GROUP + i] = sr_fp4(safe_div(v, denom), rng.uniform_f32());
+        }
+    }
+    (values, scales, gscale)
+}
+
+/// Verbatim pre-PR `quantize_ms_eden` / `_posthoc` pipeline: clone,
+/// rotate, draw the uniform vector, run the retained multi-pass core.
+fn legacy_ms_eden(x: &[f32], posthoc: bool, rng: &Rng) -> Quantized {
+    let mut rot_rng = rng.fold_in(1);
+    let mut sr_rng = rng.fold_in(2);
+    let signs = hadamard::rademacher_signs(&mut rot_rng);
+    let mut x_rot = x.to_vec();
+    hadamard::rht(&mut x_rot, &signs).expect("dims");
+    let u = sr_rng.uniform_vec(x.len() / GROUP);
+    if posthoc {
+        ms_eden_posthoc_core(&x_rot, ROWS, COLS, RTN_CLIP_SCALE, &u).expect("core")
+    } else {
+        ms_eden_core(&x_rot, ROWS, COLS, RTN_CLIP_SCALE, &u).expect("core")
+    }
+}
+
+struct Row {
+    variant: &'static str,
+    path: &'static str,
+    threads: usize,
+    secs: f64,
+}
+
+fn main() {
+    header("Fused quantizer core (MS-EDEN / post hoc / SR / RTN-pack)");
+    let elems = ROWS * COLS;
+    let auto = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!("operand {ROWS}x{COLS} ({elems} elems), parallel = {auto} workers\n");
+
+    let x = Rng::seed_from(1).normal_vec(elems);
+    let rng = Rng::seed_from(2);
+    let mut rot_rng = rng.fold_in(1);
+    let signs = hadamard::rademacher_signs(&mut rot_rng);
+    let sr_stream = rng.fold_in(2);
+
+    let b = Bencher {
+        warmup: std::time::Duration::from_millis(200),
+        target_time: std::time::Duration::from_millis(1200),
+        min_iters: 3,
+    };
+    let mut rows: Vec<Row> = Vec::new();
+    let mut push = |variant, path, threads, r: &quartet2::bench::BenchResult| {
+        r.report();
+        rows.push(Row { variant, path, threads, secs: r.median_secs() });
+    };
+
+    // reusable output buffers: the fused rows measure steady-state
+    // (zero-allocation) behavior, legacy rows allocate per call as the
+    // old wrappers did
+    let mut values = vec![0.0f32; elems];
+    let mut scales = vec![0.0f32; elems / GROUP];
+
+    for (variant, posthoc) in [("ms_eden", false), ("ms_eden_posthoc", true)] {
+        let name = if posthoc { "posthoc" } else { "ms_eden" };
+        let r = b.run(&format!("{name} legacy (multi-pass)"), || {
+            black_box(legacy_ms_eden(black_box(&x), posthoc, &rng));
+        });
+        push(variant, "legacy", 1, &r);
+        for (path, threads) in [("fused_serial", 1usize), ("fused_parallel", auto)] {
+            let r = b.run(&format!("{name} {path} x{threads}"), || {
+                values.copy_from_slice(&x);
+                black_box(
+                    quant::ms_eden_quantize_threads(
+                        &mut values, &mut scales, ROWS, COLS, posthoc, &signs,
+                        &sr_stream, threads,
+                    )
+                    .expect("fused"),
+                );
+            });
+            push(variant, path, threads, &r);
+        }
+    }
+    // the training hot path: in-place dequantized estimate, no
+    // values/scales materialization at all
+    let r = b.run(&format!("ms_eden estimate fused x{auto}"), || {
+        values.copy_from_slice(&x);
+        quant::ms_eden_estimate_threads(&mut values, ROWS, COLS, &signs, &sr_stream, auto)
+            .expect("estimate");
+        black_box(values[0]);
+    });
+    push("ms_eden_estimate", "fused_parallel", auto, &r);
+
+    let mut sr_legacy_rng = Rng::seed_from(3);
+    let r = b.run("sr legacy (multi-pass)", || {
+        black_box(legacy_quantize_sr(black_box(&x), &mut sr_legacy_rng));
+    });
+    push("sr", "legacy", 1, &r);
+    for (path, threads) in [("fused_serial", 1usize), ("fused_parallel", auto)] {
+        let r = b.run(&format!("sr {path} x{threads}"), || {
+            values.copy_from_slice(&x);
+            black_box(
+                quant::sr_quantize_threads(&mut values, &mut scales, ROWS, COLS, &sr_stream, threads)
+                    .expect("fused"),
+            );
+        });
+        push("sr", path, threads, &r);
+    }
+
+    let r = b.run("rtn_pack legacy (grid values + encode scan)", || {
+        let q = quantize_rtn(black_box(&x), ROWS, COLS, true, false).expect("rtn");
+        black_box(PackedTensor::from_quantized(&q).expect("pack"));
+    });
+    push("rtn_pack", "legacy", 1, &r);
+    let mut codes = vec![0u8; elems / 2];
+    let mut scale_bytes = vec![0u8; elems / GROUP];
+    for (path, threads) in [("fused_serial", 1usize), ("fused_parallel", auto)] {
+        let r = b.run(&format!("rtn_pack {path} x{threads}"), || {
+            black_box(
+                quant::rtn_pack_threads(
+                    &x, ROWS, COLS, true, &mut codes, &mut scale_bytes, threads,
+                )
+                .expect("pack"),
+            );
+        });
+        push("rtn_pack", path, threads, &r);
+    }
+
+    // ------------------------------------------------------- report
+    let legacy_secs = |variant: &str| {
+        rows.iter()
+            .find(|r| r.variant == variant && r.path == "legacy")
+            .map(|r| r.secs)
+    };
+    println!(
+        "\n{:<18} {:<16} {:>8} {:>12} {:>10} {:>12}",
+        "variant", "path", "threads", "ns/elem", "GB/s", "vs legacy"
+    );
+    let mut out = Vec::new();
+    for r in &rows {
+        let ns = r.secs * 1e9 / elems as f64;
+        let gbs = (elems * 4) as f64 / r.secs / 1e9;
+        let speedup = legacy_secs(r.variant)
+            .or_else(|| legacy_secs("ms_eden"))
+            .map(|l| l / r.secs)
+            .unwrap_or(1.0);
+        println!(
+            "{:<18} {:<16} {:>8} {:>12.2} {:>10.2} {:>11.2}x",
+            r.variant, r.path, r.threads, ns, gbs, speedup
+        );
+        out.push(json::obj(vec![
+            ("name", json::s(&format!("quantize_{}_{}", r.variant, r.path))),
+            ("variant", json::s(r.variant)),
+            ("path", json::s(r.path)),
+            ("threads", json::n(r.threads as f64)),
+            ("elems", json::n(elems as f64)),
+            ("secs", json::n(r.secs)),
+            ("ns_per_elem", json::n(ns)),
+            ("gb_s", json::n(gbs)),
+            ("speedup_vs_legacy", json::n(speedup)),
+        ]));
+    }
+
+    let fused = rows
+        .iter()
+        .find(|r| r.variant == "ms_eden" && r.path == "fused_serial")
+        .expect("fused row");
+    let legacy = legacy_secs("ms_eden").expect("legacy row");
+    if legacy / fused.secs < 2.0 {
+        println!(
+            "WARNING: fused-serial MS-EDEN below the 2x target vs the pre-PR path ({:.2}x)",
+            legacy / fused.secs
+        );
+    }
+
+    let results = std::path::Path::new("results");
+    std::fs::create_dir_all(results).expect("results dir");
+    std::fs::write(results.join("quantize.json"), Json::Arr(out).to_string())
+        .expect("write results");
+    println!("\nresults -> results/quantize.json");
+}

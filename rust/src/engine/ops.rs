@@ -26,14 +26,18 @@
 //! in f32 mode they dispatch to the transpose-free `A·B` / `Aᵀ·B`
 //! kernels with no materialization at all; in quantized modes the
 //! contiguous gather the quantizer's grouping requires lands in a
-//! pooled scratch buffer, as do both dequantized operand estimates
-//! (quantized once per GEMM — the paper quantizes each GEMM along its
-//! own inner dim, so estimates cannot be shared across the three
-//! matmuls; what this PR eliminated is the per-step buffer cloning and
-//! allocation around them, plus the serial quantize: the two operands
-//! of a large GEMM quantize on concurrent scoped threads). VJP
-//! closures capture O(1) shared [`super::tensor::TensorData`] handles
-//! instead of cloned `Vec`s.
+//! pooled scratch buffer, which the fused quantizer core
+//! ([`crate::kernels::quant`]) then rewrites in place with the
+//! dequantized estimate in two streaming passes (quantized once per
+//! GEMM — the paper quantizes each GEMM along its own inner dim, so
+//! estimates cannot be shared across the three matmuls). The two
+//! operands of a large GEMM quantize on concurrent scoped threads,
+//! and each operand is additionally row-band-parallel inside the
+//! fused core — the band budget splits across the concurrent pair so
+//! the overlap never oversubscribes the machine — with counter-based
+//! per-group randomness, so the step is bitwise independent of the
+//! worker count. VJP closures capture O(1) shared
+//! [`super::tensor::TensorData`] handles instead of cloned `Vec`s.
 //!
 //! Everything that is *not* a linear-layer matmul (attention scores,
 //! softmax, norms, embeddings) stays in f32, as in the paper.
@@ -43,10 +47,10 @@ use std::rc::Rc;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::formats::{ms_eden_core, quantize_sr, RTN_CLIP_SCALE};
 use crate::hadamard;
+use crate::kernels::quant;
 use crate::kernels::scratch::{take_uninit, Scratch};
-use crate::kernels::threads::threads_for;
+use crate::kernels::threads::{threads_for, threads_for_quant};
 use crate::kernels::{gemm_ab, gemm_abt, gemm_atb, transpose_into};
 use crate::util::rng::Rng;
 use crate::{GROUP, ROT_BLOCK};
@@ -129,13 +133,25 @@ impl View<'_> {
 /// into the same pooled buffer. `signs` are the pair-shared RHT signs
 /// (MS-EDEN only). Never called in f32 mode — [`qmatmul_view`]
 /// dispatches that to the transpose-free kernels first.
+///
+/// Quantization runs on the fused row-band-parallel core
+/// ([`crate::kernels::quant`]): two streaming passes rewrite `out` in
+/// place with the dequantized estimate — no `Quantized` value/scale
+/// materialization, no per-call allocation — and each operand is
+/// internally banded with the explicit `threads` budget
+/// [`qmatmul_view`] hands it (halved per operand when the pair
+/// quantizes concurrently, so the overlap never oversubscribes the
+/// machine). Counter-based per-group randomness keeps the result
+/// independent of the worker count.
+#[allow(clippy::too_many_arguments)]
 fn quantize_estimate_into(
     view: View<'_>,
     rows: usize,
     k: usize,
     mode: QuantMode,
     signs: Option<&[f32]>,
-    mut rng: Rng,
+    rng: Rng,
+    threads: usize,
     out: &mut [f32],
 ) -> Result<()> {
     debug_assert_eq!(out.len(), rows * k);
@@ -144,20 +160,13 @@ fn quantize_estimate_into(
         View::Trans(s) => transpose_into(s, k, rows, out),
     }
     match mode {
-        QuantMode::F32 => {}
-        QuantMode::Sr => {
-            let q = quantize_sr(out, rows, k, &mut rng)?;
-            q.dequant_into(out);
-        }
+        QuantMode::F32 => Ok(()),
+        QuantMode::Sr => quant::sr_estimate_threads(out, rows, k, &rng, threads),
         QuantMode::MsEden => {
             let signs = signs.expect("MS-EDEN quantization needs shared signs");
-            hadamard::rht(out, signs)?;
-            let u = rng.uniform_vec(out.len() / GROUP);
-            let q = ms_eden_core(out, rows, k, RTN_CLIP_SCALE, &u)?;
-            q.dequant_into(out);
+            quant::ms_eden_estimate_threads(out, rows, k, signs, &rng, threads)
         }
     }
-    Ok(())
 }
 
 /// `y[m, n] += A[m, k] @ B[n, k]^T` with both operands quantized along
@@ -201,18 +210,32 @@ fn qmatmul_view(
     let (rng_a, rng_b) = (rng.fold_in(2), rng.fold_in(3));
     let mut qa: Scratch = take_uninit(m * k);
     let mut qb: Scratch = take_uninit(n * k);
-    if threads_for(m * n * k, 2) >= 2 {
+    let overlap = threads_for(m * n * k, 2) >= 2;
+    // per-operand band budget: split (ceil for A, floor-but-one for B)
+    // when the pair quantizes concurrently so the overlap stays within
+    // the machine budget even when it is odd (output is
+    // thread-count-invariant, so the split changes no bits)
+    let (ta, tb) = {
+        let (fa, fb) = (threads_for_quant(m * k, m), threads_for_quant(n * k, n));
+        if overlap {
+            (fa.div_ceil(2), (fb / 2).max(1))
+        } else {
+            (fa, fb)
+        }
+    };
+    if overlap {
         // the two operands quantize independently (separate rng
         // streams, shared signs) — overlap them on scoped threads
         let (qa_s, qb_s) = (&mut qa[..], &mut qb[..]);
         std::thread::scope(|s| {
-            let ha = s.spawn(move || quantize_estimate_into(a, m, k, eff, signs, rng_a, qa_s));
-            let rb = quantize_estimate_into(b, n, k, eff, signs, rng_b, qb_s);
+            let ha =
+                s.spawn(move || quantize_estimate_into(a, m, k, eff, signs, rng_a, ta, qa_s));
+            let rb = quantize_estimate_into(b, n, k, eff, signs, rng_b, tb, qb_s);
             ha.join().expect("quantizer worker panicked").and(rb)
         })?;
     } else {
-        quantize_estimate_into(a, m, k, eff, signs, rng_a, &mut qa)?;
-        quantize_estimate_into(b, n, k, eff, signs, rng_b, &mut qb)?;
+        quantize_estimate_into(a, m, k, eff, signs, rng_a, ta, &mut qa)?;
+        quantize_estimate_into(b, n, k, eff, signs, rng_b, tb, &mut qb)?;
     }
     gemm_abt(&qa, m, &qb, n, k, y)
 }

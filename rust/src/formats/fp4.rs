@@ -12,6 +12,31 @@ pub const FP4_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
 /// Largest magnitude representable in E2M1.
 pub const FP4_MAX: f32 = 6.0;
 
+/// Signed E2M1 decode table indexed by the full 4-bit code
+/// (`sign << 3 | grid index`) — [`fp4_decode`] as a flat LUT. The
+/// serving GEMM's `FP4_LUT` and the fused quantizer's code-to-value
+/// load ([`crate::kernels::quant`]) are this table.
+pub const FP4_CODE_LUT: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// Grid index of RTN(|v|): seven midpoint comparisons, branchless.
+/// The ties-to-even direction is baked into the comparison operator
+/// per midpoint (`>` where the tie rounds down onto the even
+/// neighbour, `>=` where it rounds up), and ±6 saturation falls out of
+/// the sum capping at 7. Finite inputs only (quantizer ratios are
+/// guarded by `safe_div`; NaN would index 0).
+#[inline]
+fn rtn_idx(a: f32) -> u8 {
+    (a > 0.25) as u8
+        + (a >= 0.75) as u8
+        + (a > 1.25) as u8
+        + (a >= 1.75) as u8
+        + (a > 2.5) as u8
+        + (a >= 3.5) as u8
+        + (a > 5.0) as u8
+}
+
 /// Round-to-nearest-even onto the E2M1 grid, saturating at ±6.
 ///
 /// Ties land on the grid point with an even mantissa bit
@@ -31,6 +56,16 @@ pub fn rtn_fp4(v: f32) -> f32 {
     } else {
         q
     }
+}
+
+/// Branchless fast path of [`rtn_fp4`] emitting the 4-bit code
+/// directly: the fused quantizer's inner loop is this comparator sum
+/// plus one [`FP4_CODE_LUT`] load — no range branches, no grid scan.
+/// Bitwise-identical to `fp4_encode(rtn_fp4(v))` for finite `v`
+/// (locked in by `fast_paths_match_reference`).
+#[inline]
+pub fn rtn_fp4_code(v: f32) -> u8 {
+    (((v < 0.0) as u8) << 3) | rtn_idx(v.abs())
 }
 
 /// Stochastic rounding onto the E2M1 grid; unbiased within ±6 given
@@ -54,14 +89,38 @@ pub fn sr_fp4(v: f32, u: f32) -> f32 {
     }
 }
 
+/// Branchless fast path of [`sr_fp4`]: the grid segment's (gap,
+/// 1/gap) pair comes from two comparisons into 3-entry LUTs and the
+/// up/down pick is arithmetic. Bitwise-identical to [`sr_fp4`]
+/// (locked in by `fast_paths_match_reference`).
+#[inline]
+pub fn sr_fp4_fast(v: f32, u: f32) -> f32 {
+    const GAP: [f32; 3] = [0.5, 1.0, 2.0];
+    const INV_GAP: [f32; 3] = [2.0, 1.0, 0.5];
+    let a = v.abs().min(FP4_MAX);
+    let seg = (a >= 2.0) as usize + (a >= 4.0) as usize;
+    let (gap, inv) = (GAP[seg], INV_GAP[seg]);
+    let lo = (a * inv).floor() * gap;
+    let p_up = ((a - lo) * inv).min(1.0);
+    let q = (lo + gap * ((u < p_up) as u32 as f32)).min(FP4_MAX);
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
 /// Map an on-grid E2M1 value to its 4-bit code: `sign << 3 | index`.
+/// Direct emission via the midpoint comparator (no grid scan); still
+/// panics on off-grid inputs.
 #[inline]
 pub fn fp4_encode(v: f32) -> u8 {
     let a = v.abs();
-    let idx = FP4_GRID
-        .iter()
-        .position(|&g| g == a)
-        .expect("fp4_encode: value not on the E2M1 grid") as u8;
+    let idx = rtn_idx(a);
+    assert!(
+        FP4_GRID[idx as usize] == a,
+        "fp4_encode: value not on the E2M1 grid"
+    );
     (if v.is_sign_negative() { 8 } else { 0 }) | idx
 }
 
@@ -160,6 +219,50 @@ mod tests {
                 (mean - target as f64).abs() < 0.02,
                 "E[SR({target})] = {mean}"
             );
+        }
+    }
+
+    #[test]
+    fn fast_paths_match_reference() {
+        // the branchless code/SR paths must agree with the branchy
+        // reference bit-for-bit: ties, grid points, saturation, zeros
+        let mut rng = crate::util::rng::Rng::seed_from(21);
+        let mut cases: Vec<f32> = vec![
+            0.0, -0.0, 1e-30, 6.0, 6.5, 100.0, 0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0,
+        ];
+        for &g in &FP4_GRID {
+            cases.push(g);
+        }
+        for _ in 0..20_000 {
+            cases.push(rng.normal_f32() * 3.0);
+        }
+        for &v in &cases {
+            for v in [v, -v] {
+                assert_eq!(
+                    rtn_fp4_code(v),
+                    fp4_encode(rtn_fp4(v)),
+                    "rtn_fp4_code({v})"
+                );
+                assert_eq!(
+                    FP4_CODE_LUT[rtn_fp4_code(v) as usize].to_bits(),
+                    rtn_fp4(v).to_bits(),
+                    "code->value for {v}"
+                );
+                for u in [0.0, 0.3, 0.9999, rng.uniform_f32()] {
+                    assert_eq!(
+                        sr_fp4_fast(v, u).to_bits(),
+                        sr_fp4(v, u).to_bits(),
+                        "sr_fp4_fast({v}, {u})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn code_lut_matches_decoder() {
+        for (code, &v) in FP4_CODE_LUT.iter().enumerate() {
+            assert_eq!(fp4_decode(code as u8).to_bits(), v.to_bits());
         }
     }
 

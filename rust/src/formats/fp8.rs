@@ -49,6 +49,50 @@ pub fn rtn_e4m3(v: f32) -> f32 {
     }
 }
 
+/// Branchless E4M3 binade step: the exponent field is read straight
+/// from the bit pattern (zeros/subnormals read 0 → -127) and clamped
+/// to the E4M3 exponent range, which maps every sub-binade input to
+/// the same -6 the reference's subnormal scan lands on; the step is
+/// then assembled by bit construction instead of `powi`.
+#[inline]
+fn e4m3_step_fast(a: f32) -> f32 {
+    let e = (((a.to_bits() >> 23) & 0xFF) as i32 - 127).clamp(-6, 8);
+    f32::from_bits(((e - 3 + 127) as u32) << 23)
+}
+
+/// Branchless fast path of [`rtn_e4m3`]: exponent clamp by bit
+/// extraction, no subnormal scan, no `powi`. Bitwise-identical to
+/// [`rtn_e4m3`] (locked in by `fast_paths_match_reference`).
+#[inline]
+pub fn rtn_e4m3_fast(v: f32) -> f32 {
+    let a = v.abs().min(FP8_MAX);
+    let step = e4m3_step_fast(a);
+    let q = ((a / step).round_ties_even() * step).min(FP8_MAX);
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
+/// Branchless fast path of [`sr_e4m3`] — the fused quantizer's
+/// scale-SR inner op ([`crate::kernels::quant`]): bit-extracted step,
+/// arithmetic up/down select. Bitwise-identical to [`sr_e4m3`]
+/// (locked in by `fast_paths_match_reference`).
+#[inline]
+pub fn sr_e4m3_fast(v: f32, u: f32) -> f32 {
+    let a = v.abs().min(FP8_MAX);
+    let step = e4m3_step_fast(a);
+    let lo = (a / step).floor() * step;
+    let p_up = (a - lo) / step;
+    let q = (lo + step * ((u < p_up) as u32 as f32)).min(FP8_MAX);
+    if v < 0.0 {
+        -q
+    } else {
+        q
+    }
+}
+
 /// Stochastic rounding onto the E4M3 grid (unbiased within ±448).
 #[inline]
 pub fn sr_e4m3(v: f32, u: f32) -> f32 {
@@ -217,6 +261,44 @@ mod tests {
                 / n as f64;
             let rel = (mean - target as f64).abs() / target as f64;
             assert!(rel < 2e-3, "E[SR({target})]={mean}");
+        }
+    }
+
+    #[test]
+    fn fast_paths_match_reference() {
+        // grid points, random normals across scales, subnormals, zero,
+        // saturation — the fast paths must agree bit-for-bit
+        let mut rng = crate::util::rng::Rng::seed_from(31);
+        let mut cases: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1e9,
+            448.0,
+            460.0,
+            f32::MIN_POSITIVE,
+            f32::from_bits(1),      // smallest subnormal
+            f32::from_bits(0x7FFF), // larger subnormal
+        ];
+        cases.extend(e4m3_grid());
+        for _ in 0..20_000 {
+            let scale = (rng.uniform_f32() * 24.0 - 12.0).exp2();
+            cases.push(rng.normal_f32() * scale);
+        }
+        for &v in &cases {
+            for v in [v, -v] {
+                assert_eq!(
+                    rtn_e4m3_fast(v).to_bits(),
+                    rtn_e4m3(v).to_bits(),
+                    "rtn_e4m3_fast({v})"
+                );
+                for u in [0.0, 0.5, 0.9999, rng.uniform_f32()] {
+                    assert_eq!(
+                        sr_e4m3_fast(v, u).to_bits(),
+                        sr_e4m3(v, u).to_bits(),
+                        "sr_e4m3_fast({v}, {u})"
+                    );
+                }
+            }
         }
     }
 

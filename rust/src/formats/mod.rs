@@ -18,13 +18,19 @@ pub mod fp8;
 pub mod ms_eden;
 pub mod nvfp4;
 
-pub use fp4::{fp4_decode, fp4_encode, rtn_fp4, sr_fp4, FP4_GRID, FP4_MAX};
-pub use fp8::{e4m3_decode, e4m3_encode, rtn_e4m3, rtn_e8m3, sr_e4m3, FP8_MAX};
-pub use ms_eden::{
-    eden_factors, ms_eden_core, quantize_ms_eden, quantize_ms_eden_posthoc,
-    quantize_rtn_clipped,
+pub use fp4::{
+    fp4_decode, fp4_encode, rtn_fp4, rtn_fp4_code, sr_fp4, sr_fp4_fast,
+    FP4_CODE_LUT, FP4_GRID, FP4_MAX,
 };
-pub use nvfp4::{quantize_rtn, quantize_sr, Quantized, ScaleLayout};
+pub use fp8::{
+    e4m3_decode, e4m3_encode, rtn_e4m3, rtn_e4m3_fast, rtn_e8m3, sr_e4m3,
+    sr_e4m3_fast, FP8_MAX,
+};
+pub use ms_eden::{
+    eden_factors, ms_eden_core, ms_eden_posthoc_core, quantize_ms_eden,
+    quantize_ms_eden_posthoc, quantize_rtn_clipped,
+};
+pub use nvfp4::{quantize_rtn, quantize_sr, quantize_sr_with, Quantized, ScaleLayout};
 
 use crate::GROUP;
 

@@ -6,16 +6,26 @@
 //!
 //! Randomness is taken from an explicit [`Rng`] (rotation signs) plus a
 //! second stream for the scale SR, mirroring the paper's
-//! (ω_RHT, ω_SR) split. `quantize_*_with` variants accept materialized
-//! signs/uniforms for cross-language parity tests.
+//! (ω_RHT, ω_SR) split; scale-SR uniforms are derived counter-based
+//! per group index (`sr_rng.fold_in(g)`), the fused core's
+//! thread-count-invariant scheme.
+//!
+//! The public quantizers are thin wrappers over the fused row-band-
+//! parallel core ([`crate::kernels::quant`]). The multi-pass bodies
+//! survive here as the materialized-randomness reference seam —
+//! [`ms_eden_core`] / [`ms_eden_posthoc_core`] accept explicit
+//! signs-already-applied tensors and scale uniforms for cross-language
+//! parity tests and the fused-vs-reference parity suite
+//! (`tests/quant_parity.rs`).
 
 use anyhow::{bail, Result};
 
 use super::{
     abs_max, fp4, fp8, group_max, safe_div, Quantized, ScaleLayout,
-    RTN_CLIP_SCALE, RTN_SCALE_CAP,
+    RTN_SCALE_CAP,
 };
 use crate::hadamard;
+use crate::kernels::quant;
 use crate::util::rng::Rng;
 use crate::{GROUP, ROT_BLOCK};
 
@@ -116,65 +126,46 @@ impl RotatedQuantized {
     }
 }
 
-/// MS-EDEN (Algorithm 1): RHT -> clipped RTN -> EDEN-corrected,
-/// stochastically-rounded FP8 scales. Unbiased in rotated space.
-pub fn quantize_ms_eden(
-    x: &[f32],
+/// Legacy multi-pass reference of the post hoc variant given a
+/// *pre-rotated* tensor and materialized per-group scale uniforms —
+/// the parity seam mirroring [`ms_eden_core`]: one full pass
+/// quantizing against E8M3 pseudo-scales, then a scales-only fix-up
+/// against the power-of-two global scale.
+pub fn ms_eden_posthoc_core(
+    x_rot: &[f32],
     rows: usize,
     cols: usize,
-    rng: &mut Rng,
-) -> Result<RotatedQuantized> {
-    if cols % ROT_BLOCK != 0 {
-        bail!("cols={cols} not a multiple of {ROT_BLOCK}");
+    s: f32,
+    u_scales: &[f32],
+) -> Result<Quantized> {
+    if x_rot.len() != rows * cols {
+        bail!("tensor length {} != {rows}x{cols}", x_rot.len());
     }
-    let mut rot_rng = rng.fold_in(1);
-    let mut sr_rng = rng.fold_in(2);
-    let signs = hadamard::rademacher_signs(&mut rot_rng);
-    let mut x_rot = x.to_vec();
-    hadamard::rht(&mut x_rot, &signs)?;
-    let u = sr_rng.uniform_vec(x.len() / GROUP);
-    let q = ms_eden_core(&x_rot, rows, cols, RTN_CLIP_SCALE, &u)?;
-    Ok(RotatedQuantized { q, signs })
-}
-
-/// MS-EDEN via post hoc range alignment (ER-NVFP4, §7 / Figure 8):
-/// one full pass quantizing against E8M3 pseudo-scales, then a
-/// scales-only fix-up against the power-of-two global scale.
-pub fn quantize_ms_eden_posthoc(
-    x: &[f32],
-    rows: usize,
-    cols: usize,
-    rng: &mut Rng,
-) -> Result<RotatedQuantized> {
-    if cols % ROT_BLOCK != 0 {
-        bail!("cols={cols} not a multiple of {ROT_BLOCK}");
+    if cols % GROUP != 0 {
+        bail!("cols={cols} not a multiple of {GROUP}");
     }
-    let mut rot_rng = rng.fold_in(1);
-    let mut sr_rng = rng.fold_in(2);
-    let signs = hadamard::rademacher_signs(&mut rot_rng);
-    let mut x_rot = x.to_vec();
-    hadamard::rht(&mut x_rot, &signs)?;
-
-    let s = RTN_CLIP_SCALE;
+    if u_scales.len() != x_rot.len() / GROUP {
+        bail!("need {} scale uniforms, got {}", x_rot.len() / GROUP, u_scales.len());
+    }
     // Pass 1 (per tile on hardware): extended-range pseudo-scales, FP4
     // payload, EDEN factors, partial abs-max — no global knowledge.
-    let gmax = group_max(&x_rot, cols);
+    let gmax = group_max(x_rot, cols);
     let pseudo: Vec<f32> = gmax.iter().map(|&m| fp8::rtn_e8m3(m / s)).collect();
-    let mut values = vec![0.0f32; x.len()];
+    let mut values = vec![0.0f32; x_rot.len()];
     for (g, chunk) in x_rot.chunks_exact(GROUP).enumerate() {
         for (i, &v) in chunk.iter().enumerate() {
             values[g * GROUP + i] = fp4::rtn_fp4(safe_div(v, pseudo[g]));
         }
     }
     // EDEN factors against the pseudo-scale dequantization.
-    let mut deq = vec![0.0f32; x.len()];
+    let mut deq = vec![0.0f32; x_rot.len()];
     for (g, chunk) in values.chunks_exact(GROUP).enumerate() {
         for (i, &v) in chunk.iter().enumerate() {
             deq[g * GROUP + i] = v * pseudo[g];
         }
     }
-    let factors = eden_factors(&x_rot, &deq);
-    let absmax = abs_max(&x_rot);
+    let factors = eden_factors(x_rot, &deq);
+    let absmax = abs_max(x_rot);
 
     // Global reduction: next power of two of absmax/(s*256) so the scale
     // shift is an exact exponent move.
@@ -189,11 +180,41 @@ pub fn quantize_ms_eden_posthoc(
     let scales: Vec<f32> = pseudo
         .iter()
         .zip(&factors)
-        .map(|(&p, &f)| {
-            fp8::sr_e4m3(f * safe_div(p, gscale), sr_rng.uniform_f32())
-        })
+        .zip(u_scales)
+        .map(|((&p, &f), &u)| fp8::sr_e4m3(f * safe_div(p, gscale), u))
         .collect();
 
+    Ok(Quantized {
+        values,
+        scales,
+        gscale,
+        rows,
+        cols,
+        layout: ScaleLayout::Vector1x16,
+    })
+}
+
+/// Shared wrapper plumbing: derive the (ω_RHT, ω_SR) streams, run the
+/// fused row-band-parallel core ([`crate::kernels::quant`]) on a copy
+/// of `x`, and assemble the [`RotatedQuantized`].
+fn quantize_ms_eden_fused(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    posthoc: bool,
+    rng: &Rng,
+) -> Result<RotatedQuantized> {
+    if cols % ROT_BLOCK != 0 {
+        bail!("cols={cols} not a multiple of {ROT_BLOCK}");
+    }
+    let mut rot_rng = rng.fold_in(1);
+    let sr_rng = rng.fold_in(2);
+    let signs = hadamard::rademacher_signs(&mut rot_rng);
+    let mut values = x.to_vec();
+    let mut scales = vec![0.0f32; x.len() / GROUP];
+    let gscale = quant::ms_eden_quantize(
+        &mut values, &mut scales, rows, cols, posthoc, &signs, &sr_rng,
+    )?;
     Ok(RotatedQuantized {
         q: Quantized {
             values,
@@ -207,9 +228,34 @@ pub fn quantize_ms_eden_posthoc(
     })
 }
 
+/// MS-EDEN (Algorithm 1): RHT -> clipped RTN -> EDEN-corrected,
+/// stochastically-rounded FP8 scales. Unbiased in rotated space.
+/// Thin wrapper over the fused core.
+pub fn quantize_ms_eden(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &Rng,
+) -> Result<RotatedQuantized> {
+    quantize_ms_eden_fused(x, rows, cols, false, rng)
+}
+
+/// MS-EDEN via post hoc range alignment (ER-NVFP4, §7 / Figure 8):
+/// pseudo-scale quantization with the scales-only power-of-two fix-up.
+/// Thin wrapper over the fused core.
+pub fn quantize_ms_eden_posthoc(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    rng: &Rng,
+) -> Result<RotatedQuantized> {
+    quantize_ms_eden_fused(x, rows, cols, true, rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::RTN_CLIP_SCALE;
 
     fn gauss(n: usize, seed: u64) -> Vec<f32> {
         Rng::seed_from(seed).normal_vec(n)

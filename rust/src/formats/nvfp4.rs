@@ -253,14 +253,46 @@ fn quantize_rtn_square(
 
 /// Unbiased element-wise stochastic rounding to NVFP4 (Q_SR, §3.1).
 ///
-/// The 16/17 guard guarantees SR never clips, hence exact unbiasedness.
+/// The 16/17 guard guarantees SR never clips, hence exact
+/// unbiasedness. Thin wrapper over the fused row-band-parallel core
+/// ([`crate::kernels::quant`]); per-element uniforms are derived
+/// counter-based per group index (`rng.fold_in(g)`), so output is
+/// invariant to the worker count.
 pub fn quantize_sr(
     x: &[f32],
     rows: usize,
     cols: usize,
-    rng: &mut Rng,
+    rng: &Rng,
 ) -> Result<Quantized> {
     check_dims(x, rows, cols, false)?;
+    let mut values = x.to_vec();
+    let mut scales = vec![0.0f32; x.len() / GROUP];
+    let gscale =
+        crate::kernels::quant::sr_quantize(&mut values, &mut scales, rows, cols, rng)?;
+    Ok(Quantized {
+        values,
+        scales,
+        gscale,
+        rows,
+        cols,
+        layout: ScaleLayout::Vector1x16,
+    })
+}
+
+/// Legacy multi-pass Q_SR with materialized per-element uniforms
+/// (`u.len() == x.len()`) — the cross-language parity and
+/// fused-vs-reference seam (`tests/quant_parity.rs`), preserving the
+/// pre-fused pipeline operation-for-operation.
+pub fn quantize_sr_with(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    u: &[f32],
+) -> Result<Quantized> {
+    check_dims(x, rows, cols, false)?;
+    if u.len() != x.len() {
+        bail!("need {} uniforms, got {}", x.len(), u.len());
+    }
     let absmax = abs_max(x);
     let gscale = safe_div(absmax, SR_BUDGET * FP8_MAX);
     let gmax = group_max(x, cols);
@@ -273,7 +305,7 @@ pub fn quantize_sr(
         let denom = s * gscale;
         for (i, &v) in chunk.iter().enumerate() {
             values[g * GROUP + i] =
-                fp4::sr_fp4(safe_div(v, denom), rng.uniform_f32());
+                fp4::sr_fp4(safe_div(v, denom), u[g * GROUP + i]);
         }
     }
     Ok(Quantized {

@@ -56,6 +56,33 @@ pub fn rht(x: &mut [f32], signs: &[f32]) -> Result<()> {
     Ok(())
 }
 
+/// Fused [`rht`] + absolute-max reduction: identical rotation, with
+/// the slice's abs-max folded into the normalization loop so pass 1 of
+/// the fused quantizer ([`crate::kernels::quant`]) reads and writes
+/// each element exactly once. Bitwise-identical to `rht` followed by a
+/// separate abs-max pass (max is exact and order-independent).
+pub fn rht_absmax(x: &mut [f32], signs: &[f32]) -> Result<f32> {
+    if x.len() % ROT_BLOCK != 0 {
+        bail!("length {} not a multiple of {ROT_BLOCK}", x.len());
+    }
+    if signs.len() != ROT_BLOCK {
+        bail!("signs must have length {ROT_BLOCK}");
+    }
+    let norm = 1.0 / (ROT_BLOCK as f32).sqrt();
+    let mut absmax = 0.0f32;
+    for chunk in x.chunks_exact_mut(ROT_BLOCK) {
+        for (v, s) in chunk.iter_mut().zip(signs) {
+            *v *= s;
+        }
+        fwht(chunk);
+        for v in chunk.iter_mut() {
+            *v *= norm;
+            absmax = absmax.max(v.abs());
+        }
+    }
+    Ok(absmax)
+}
+
 /// Inverse of [`rht`]: `x_c = (y_c . H) * signs` (H symmetric orthogonal).
 pub fn rht_inv(x: &mut [f32], signs: &[f32]) -> Result<()> {
     if x.len() % ROT_BLOCK != 0 {
@@ -161,6 +188,21 @@ mod tests {
         rht(&mut ar, &signs).unwrap();
         rht(&mut br, &signs).unwrap();
         assert!((dot(&ar, &br) - exact).abs() < 1e-3 * exact.abs().max(1.0));
+    }
+
+    #[test]
+    fn rht_absmax_matches_split_passes() {
+        let mut rng = Rng::seed_from(5);
+        let orig: Vec<f32> = rng.normal_vec(3 * ROT_BLOCK);
+        let signs = rademacher_signs(&mut rng);
+        let mut split = orig.clone();
+        rht(&mut split, &signs).unwrap();
+        let m_split = split.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let mut fused = orig.clone();
+        let m_fused = rht_absmax(&mut fused, &signs).unwrap();
+        assert_eq!(split, fused);
+        assert_eq!(m_split.to_bits(), m_fused.to_bits());
+        assert!(rht_absmax(&mut vec![0.0f32; 100], &signs).is_err());
     }
 
     #[test]

@@ -26,8 +26,15 @@
 //!   temporaries (quantized operand estimates, gather-transposes,
 //!   activation scratch in the serving forward), eliminating the
 //!   per-step allocation churn of the training loop.
+//! * [`quant`] — the fused, allocation-free, row-band-parallel NVFP4
+//!   quantizer core (MS-EDEN naive + post hoc, Q_SR, deterministic
+//!   RTN + pack): two streaming passes per operand instead of the old
+//!   ~6-pass `formats` chain, counter-based per-group randomness so
+//!   parallel output is bitwise identical to serial, and direct
+//!   packed-code emission for the serving weight path.
 
 pub mod gemm;
+pub mod quant;
 pub mod scratch;
 pub mod threads;
 
@@ -36,4 +43,7 @@ pub use gemm::{
     gemm_atb_threads, transpose_into,
 };
 pub use scratch::{take_uninit, take_zeroed, Scratch};
-pub use threads::{pinned_threads, set_threads, threads_for, PAR_MIN_MACS};
+pub use threads::{
+    pinned_threads, set_threads, threads_for, threads_for_quant,
+    PAR_MIN_MACS, PAR_MIN_QUANT_ELEMS,
+};

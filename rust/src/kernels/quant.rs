@@ -1,0 +1,633 @@
+//! Fused, allocation-free, row-band-parallel NVFP4 quantizer core.
+//!
+//! Before this module existed, quantizing one GEMM operand was a chain
+//! of library passes (`formats::ms_eden`): materialize the rotated
+//! tensor, abs-max, group-max, clipped RTN, dequantize, EDEN factors,
+//! scale SR — ~6 full sweeps with fresh `values`/`scales`/`deq`/
+//! `factors`/uniform `Vec`s per call, and at most 2-way parallelism
+//! (one thread per GEMM operand). Quantization had become the step-time
+//! ceiling once the GEMMs went blocked + threaded (PR 3). This module
+//! is the training-side twin of the shared GEMM core: **one fused
+//! pipeline** that streams each row band exactly twice —
+//!
+//! * **pass 1** — Rademacher sign-multiply + FWHT butterfly + abs-max
+//!   in a single in-place sweep ([`hadamard::rht_absmax`]; the
+//!   unrotated SR / RTN variants fold only the abs-max), producing the
+//!   global scale, and
+//! * **pass 2** — per 16-element group: group max, clipped-RTN FP4
+//!   codes via the branchless [`fp4::rtn_fp4_code`] comparator, EDEN
+//!   correction factor, and the stochastically rounded E4M3 scale via
+//!   [`fp8::sr_e4m3_fast`] — one streaming read that rewrites the band
+//!   in place with either the on-grid values, the dequantized
+//!   estimate (the training hot path), or packed 4-bit codes (the
+//!   serving pack path). The post hoc ER-NVFP4 variant fits the same
+//!   two passes: extended-range pseudo-scales in pass 2, with the
+//!   power-of-two global-scale fix-up fused into the final scale SR.
+//!
+//! Nothing is heap-allocated here: callers own every buffer (the
+//! engine's live in [`super::scratch`], the `formats` wrappers' in
+//! their output `Vec`s) and each group's 16 values stage through a
+//! stack array, so steady-state training steps allocate nothing in the
+//! quantizer.
+//!
+//! **Parallelism** rides the crate-wide worker policy
+//! ([`super::threads`]: `QUARTET2_THREADS`, auto-serial below
+//! [`super::threads::PAR_MIN_QUANT_ELEMS`] elements): rows split into
+//! contiguous bands, one scoped worker per band. All stochastic-
+//! rounding randomness is **counter-based per global group index**
+//! (`sr.fold_in(g)`), so a group's uniforms depend only on the stream
+//! and its index — never on which band or thread processed it — and
+//! parallel output is **bitwise identical** to serial output for any
+//! thread count (the crate's established parity discipline, locked in
+//! by `tests/quant_parity.rs`). The legacy multi-pass entry points
+//! survive as the materialized-randomness reference seam
+//! ([`crate::formats::ms_eden_core`],
+//! [`crate::formats::ms_eden_posthoc_core`],
+//! [`crate::formats::quantize_sr_with`]) for cross-language parity and
+//! the fused-vs-reference tests.
+
+use anyhow::{bail, Result};
+
+use crate::formats::fp4::{rtn_fp4_code, sr_fp4_fast, FP4_CODE_LUT, FP4_MAX};
+use crate::formats::fp8::{e4m3_encode, rtn_e4m3_fast, rtn_e8m3, sr_e4m3_fast};
+use crate::formats::{safe_div, FP8_MAX, RTN_CLIP_SCALE, RTN_SCALE_CAP, SR_BUDGET};
+use crate::hadamard;
+use crate::util::rng::Rng;
+use crate::{GROUP, ROT_BLOCK};
+
+use super::threads::{run_ranges, threads_for_quant};
+
+// ------------------------------------------------------------ banding
+
+/// Split `buf` (row-major, `width` elements per row) into contiguous
+/// row bands and run `f(r0, band)` per band on scoped threads,
+/// collecting the bands' results in row order. Serial (no spawn) when
+/// `threads < 2`.
+fn bands1<E: Send, T: Send>(
+    buf: &mut [E],
+    width: usize,
+    rows: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [E]) -> T + Sync,
+) -> Vec<T> {
+    debug_assert_eq!(buf.len(), rows * width);
+    let threads = threads.clamp(1, rows.max(1));
+    if threads < 2 {
+        return vec![f(0, buf)];
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(threads);
+        let mut rest = buf;
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + chunk).min(rows);
+            let (band, tail) = rest.split_at_mut((r1 - r0) * width);
+            rest = tail;
+            handles.push(s.spawn(move || f(r0, band)));
+            r0 = r1;
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("quantizer worker panicked"))
+            .collect()
+    })
+}
+
+/// [`bands1`] over two parallel row-major buffers (`aw` / `bw`
+/// elements per row) split at the same row boundaries.
+fn bands2<A: Send, B: Send>(
+    a: &mut [A],
+    aw: usize,
+    b: &mut [B],
+    bw: usize,
+    rows: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [A], &mut [B]) + Sync,
+) {
+    debug_assert_eq!(a.len(), rows * aw);
+    debug_assert_eq!(b.len(), rows * bw);
+    let threads = threads.clamp(1, rows.max(1));
+    if threads < 2 {
+        return f(0, a, b);
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        let (mut ra, mut rb) = (a, b);
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + chunk).min(rows);
+            let (ab, at) = ra.split_at_mut((r1 - r0) * aw);
+            let (bb, bt) = rb.split_at_mut((r1 - r0) * bw);
+            (ra, rb) = (at, bt);
+            // the scope joins (and propagates panics from) every
+            // worker on exit
+            let _ = s.spawn(move || f(r0, ab, bb));
+            r0 = r1;
+        }
+    });
+}
+
+/// Banded abs-max over an immutable tensor (max is exact and
+/// order-independent, so the banded reduce equals the serial fold).
+fn absmax_bands(x: &[f32], rows: usize, cols: usize, threads: usize) -> f32 {
+    run_ranges(rows, threads.clamp(1, rows.max(1)), |r0, r1| {
+        x[r0 * cols..r1 * cols]
+            .iter()
+            .fold(0.0f32, |m, v| m.max(v.abs()))
+    })
+    .into_iter()
+    .fold(0.0f32, |m, (_, _, b)| m.max(b))
+}
+
+// ----------------------------------------------------- group kernels
+
+/// Which fused pipeline pass 2 runs per 16-group.
+#[derive(Clone, Copy)]
+enum Variant {
+    /// Clipped RTN + EDEN factor + SR'd E4M3 scale (Algorithm 1).
+    MsEden,
+    /// Extended-range pseudo-scale + power-of-two fix-up (ER-NVFP4 §7).
+    Posthoc,
+    /// Per-element stochastic rounding (Q_SR §3.1).
+    Sr,
+}
+
+#[inline]
+fn group_absmax(xg: &[f32]) -> f32 {
+    xg.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+}
+
+/// One group of the fused naive MS-EDEN pass: returns the final
+/// (EDEN-corrected, stochastically rounded) scale; `q` receives the
+/// on-grid values. Arithmetic mirrors the legacy
+/// `quantize_rtn_clipped` + `eden_factors` + scale-SR chain
+/// operation-for-operation so fused output is bitwise identical.
+#[inline]
+fn ms_eden_group(xg: &[f32], g: usize, gscale: f32, sr: &Rng, q: &mut [f32; GROUP]) -> f32 {
+    let sc = rtn_e4m3_fast(safe_div(group_absmax(xg), gscale * RTN_CLIP_SCALE));
+    let denom = sc * gscale;
+    let (mut num, mut den) = (0.0f32, 0.0f32);
+    for (i, &xr) in xg.iter().enumerate() {
+        let v = FP4_CODE_LUT[rtn_fp4_code(safe_div(xr, denom)) as usize];
+        q[i] = v;
+        num += xr * xr;
+        den += xr * (v * denom);
+    }
+    let f = if den > 0.0 { safe_div(num, den) } else { 1.0 };
+    sr_e4m3_fast(f * sc, sr.fold_in(g as u64).uniform_f32())
+}
+
+/// One group of the fused post hoc (ER-NVFP4) pass: extended-range
+/// pseudo-scale, EDEN factor against the pseudo-scale dequantization,
+/// and the scales-only power-of-two fix-up fused into the final SR.
+#[inline]
+fn posthoc_group(xg: &[f32], g: usize, gscale: f32, sr: &Rng, q: &mut [f32; GROUP]) -> f32 {
+    let pseudo = rtn_e8m3(group_absmax(xg) / RTN_CLIP_SCALE);
+    let (mut num, mut den) = (0.0f32, 0.0f32);
+    for (i, &xr) in xg.iter().enumerate() {
+        let v = FP4_CODE_LUT[rtn_fp4_code(safe_div(xr, pseudo)) as usize];
+        q[i] = v;
+        num += xr * xr;
+        den += xr * (v * pseudo);
+    }
+    let f = if den > 0.0 { safe_div(num, den) } else { 1.0 };
+    sr_e4m3_fast(f * safe_div(pseudo, gscale), sr.fold_in(g as u64).uniform_f32())
+}
+
+/// One group of the fused Q_SR pass: 16/17-guarded scale, per-element
+/// stochastic rounding with the group's counter-based uniform stream.
+#[inline]
+fn sr_group(xg: &[f32], g: usize, gscale: f32, sr: &Rng, q: &mut [f32; GROUP]) -> f32 {
+    let sc = rtn_e4m3_fast(safe_div(group_absmax(xg), gscale * SR_BUDGET));
+    let denom = sc * gscale;
+    let mut u = sr.fold_in(g as u64);
+    for (i, &xr) in xg.iter().enumerate() {
+        q[i] = sr_fp4_fast(safe_div(xr, denom), u.uniform_f32());
+    }
+    sc
+}
+
+/// Pass 2 over one band whose first group has global index `g0`.
+/// With `scales_b` present the band is rewritten with on-grid values
+/// and the scales land in the band's scale slice; without it the band
+/// is rewritten with the dequantized estimate (the training hot path
+/// never materializes values or scales at all).
+fn pass2_band(
+    variant: Variant,
+    xb: &mut [f32],
+    mut scales_b: Option<&mut [f32]>,
+    g0: usize,
+    gscale: f32,
+    sr: &Rng,
+) {
+    let mut q = [0.0f32; GROUP];
+    for (j, xg) in xb.chunks_exact_mut(GROUP).enumerate() {
+        let g = g0 + j;
+        let sc = match variant {
+            Variant::MsEden => ms_eden_group(xg, g, gscale, sr, &mut q),
+            Variant::Posthoc => posthoc_group(xg, g, gscale, sr, &mut q),
+            Variant::Sr => sr_group(xg, g, gscale, sr, &mut q),
+        };
+        match scales_b.as_deref_mut() {
+            Some(sb) => {
+                sb[j] = sc;
+                xg.copy_from_slice(&q);
+            }
+            None => {
+                // same product order as `Quantized::dequant_into`
+                let s = sc * gscale;
+                for (o, &v) in xg.iter_mut().zip(&q) {
+                    *o = v * s;
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------- MS-EDEN entry
+
+fn check_dims(len: usize, rows: usize, cols: usize, grain: usize) -> Result<()> {
+    if len != rows * cols {
+        bail!("tensor length {len} != {rows}x{cols}");
+    }
+    if cols % grain != 0 {
+        bail!("cols={cols} not a multiple of {grain}");
+    }
+    Ok(())
+}
+
+/// Shared MS-EDEN driver: pass 1 (rotate + abs-max, banded, in place),
+/// global scale, pass 2 (banded groups). `scales = None` emits the
+/// dequantized estimate instead of values + scales.
+#[allow(clippy::too_many_arguments)]
+fn ms_eden_run(
+    x: &mut [f32],
+    scales: Option<&mut [f32]>,
+    rows: usize,
+    cols: usize,
+    posthoc: bool,
+    signs: &[f32],
+    sr: &Rng,
+    threads: usize,
+) -> Result<f32> {
+    check_dims(x.len(), rows, cols, ROT_BLOCK)?;
+    if signs.len() != ROT_BLOCK {
+        bail!("signs must have length {ROT_BLOCK}");
+    }
+    if let Some(ref s) = scales {
+        if s.len() != x.len() / GROUP {
+            bail!("need {} scales, got {}", x.len() / GROUP, s.len());
+        }
+    }
+    let absmax = bands1(x, cols, rows, threads, |_, band| {
+        hadamard::rht_absmax(band, signs).expect("dims validated above")
+    })
+    .into_iter()
+    .fold(0.0f32, f32::max);
+    // naive: free global scale; post hoc: next power of two so the
+    // scales-only shift is an exact exponent move (§7)
+    let gscale = if posthoc {
+        if absmax == 0.0 {
+            0.0
+        } else {
+            (absmax / (RTN_CLIP_SCALE * RTN_SCALE_CAP)).log2().ceil().exp2()
+        }
+    } else {
+        safe_div(absmax, RTN_CLIP_SCALE * RTN_SCALE_CAP)
+    };
+    let variant = if posthoc { Variant::Posthoc } else { Variant::MsEden };
+    let gpr = cols / GROUP;
+    match scales {
+        Some(sb) => bands2(x, cols, sb, gpr, rows, threads, |r0, xb, sb| {
+            pass2_band(variant, xb, Some(sb), r0 * gpr, gscale, sr)
+        }),
+        None => {
+            bands1(x, cols, rows, threads, |r0, xb| {
+                pass2_band(variant, xb, None, r0 * gpr, gscale, sr)
+            });
+        }
+    }
+    Ok(gscale)
+}
+
+/// Fused MS-EDEN (Algorithm 1; `posthoc` selects the ER-NVFP4 §7
+/// variant): `x` enters raw and leaves holding the on-grid FP4 values
+/// in rotated space, `scales` receives one E4M3 scale per 16-group,
+/// and the global scale is returned. Explicit worker count (`1`
+/// forces serial; bitwise identical for any count).
+#[allow(clippy::too_many_arguments)]
+pub fn ms_eden_quantize_threads(
+    x: &mut [f32],
+    scales: &mut [f32],
+    rows: usize,
+    cols: usize,
+    posthoc: bool,
+    signs: &[f32],
+    sr: &Rng,
+    threads: usize,
+) -> Result<f32> {
+    ms_eden_run(x, Some(scales), rows, cols, posthoc, signs, sr, threads)
+}
+
+/// [`ms_eden_quantize_threads`] under the auto thread policy.
+pub fn ms_eden_quantize(
+    x: &mut [f32],
+    scales: &mut [f32],
+    rows: usize,
+    cols: usize,
+    posthoc: bool,
+    signs: &[f32],
+    sr: &Rng,
+) -> Result<f32> {
+    let threads = threads_for_quant(x.len(), rows);
+    ms_eden_run(x, Some(scales), rows, cols, posthoc, signs, sr, threads)
+}
+
+/// Fused MS-EDEN *estimate* (the training hot path): rewrites `x` in
+/// place with the dequantized naive-MS-EDEN estimate in rotated space
+/// — partner rotations cancel inside the GEMM — materializing neither
+/// values nor scales. Bitwise identical to quantize-then-
+/// `dequant_into` on the same streams.
+pub fn ms_eden_estimate_threads(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    signs: &[f32],
+    sr: &Rng,
+    threads: usize,
+) -> Result<()> {
+    ms_eden_run(x, None, rows, cols, false, signs, sr, threads).map(|_| ())
+}
+
+/// [`ms_eden_estimate_threads`] under the auto thread policy.
+pub fn ms_eden_estimate(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    signs: &[f32],
+    sr: &Rng,
+) -> Result<()> {
+    let threads = threads_for_quant(x.len(), rows);
+    ms_eden_estimate_threads(x, rows, cols, signs, sr, threads)
+}
+
+// ---------------------------------------------------------- SR entry
+
+/// Shared Q_SR driver: banded abs-max, then banded groups.
+fn sr_run(
+    x: &mut [f32],
+    scales: Option<&mut [f32]>,
+    rows: usize,
+    cols: usize,
+    sr: &Rng,
+    threads: usize,
+) -> Result<f32> {
+    check_dims(x.len(), rows, cols, GROUP)?;
+    if let Some(ref s) = scales {
+        if s.len() != x.len() / GROUP {
+            bail!("need {} scales, got {}", x.len() / GROUP, s.len());
+        }
+    }
+    let absmax = absmax_bands(x, rows, cols, threads);
+    let gscale = safe_div(absmax, SR_BUDGET * FP8_MAX);
+    let gpr = cols / GROUP;
+    match scales {
+        Some(sb) => bands2(x, cols, sb, gpr, rows, threads, |r0, xb, sb| {
+            pass2_band(Variant::Sr, xb, Some(sb), r0 * gpr, gscale, sr)
+        }),
+        None => {
+            bands1(x, cols, rows, threads, |r0, xb| {
+                pass2_band(Variant::Sr, xb, None, r0 * gpr, gscale, sr)
+            });
+        }
+    }
+    Ok(gscale)
+}
+
+/// Fused Q_SR: `x` leaves holding the on-grid values, `scales` the
+/// E4M3 group scales; returns the global scale. Explicit worker count.
+pub fn sr_quantize_threads(
+    x: &mut [f32],
+    scales: &mut [f32],
+    rows: usize,
+    cols: usize,
+    sr: &Rng,
+    threads: usize,
+) -> Result<f32> {
+    sr_run(x, Some(scales), rows, cols, sr, threads)
+}
+
+/// [`sr_quantize_threads`] under the auto thread policy.
+pub fn sr_quantize(
+    x: &mut [f32],
+    scales: &mut [f32],
+    rows: usize,
+    cols: usize,
+    sr: &Rng,
+) -> Result<f32> {
+    let threads = threads_for_quant(x.len(), rows);
+    sr_run(x, Some(scales), rows, cols, sr, threads)
+}
+
+/// Fused Q_SR *estimate*: rewrites `x` in place with the dequantized
+/// estimate (training hot path). Explicit worker count.
+pub fn sr_estimate_threads(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    sr: &Rng,
+    threads: usize,
+) -> Result<()> {
+    sr_run(x, None, rows, cols, sr, threads).map(|_| ())
+}
+
+/// [`sr_estimate_threads`] under the auto thread policy.
+pub fn sr_estimate(x: &mut [f32], rows: usize, cols: usize, sr: &Rng) -> Result<()> {
+    let threads = threads_for_quant(x.len(), rows);
+    sr_estimate_threads(x, rows, cols, sr, threads)
+}
+
+// ---------------------------------------------------- RTN pack entry
+
+/// One group of the fused deterministic-RTN pack pass: evaluate the
+/// 6.0-anchored (and optionally 4.0-anchored) grid, keep the
+/// lower-MSE branch, and emit the eight packed code bytes directly —
+/// no f32 grid values, no per-element grid scan. Mirrors
+/// `formats::quantize_rtn`'s `rtn_branch` + `group_err` arithmetic
+/// operation-for-operation.
+#[inline]
+fn rtn_group(xg: &[f32], gscale: f32, four_six: bool, codes8: &mut [u8]) -> f32 {
+    #[inline]
+    fn branch(xg: &[f32], gmax: f32, gscale: f32, div: f32, c: &mut [u8; GROUP]) -> f32 {
+        let sc = rtn_e4m3_fast(safe_div(gmax, gscale * div));
+        let denom = sc * gscale;
+        for (i, &xr) in xg.iter().enumerate() {
+            c[i] = rtn_fp4_code(safe_div(xr, denom));
+        }
+        sc
+    }
+    #[inline]
+    fn err(xg: &[f32], c: &[u8; GROUP], s: f32) -> f64 {
+        let mut e = 0.0f64;
+        for (i, &xr) in xg.iter().enumerate() {
+            let d = (FP4_CODE_LUT[c[i] as usize] * s - xr) as f64;
+            e += d * d;
+        }
+        e
+    }
+    let gmax = group_absmax(xg);
+    let mut c6 = [0u8; GROUP];
+    let mut sc = branch(xg, gmax, gscale, 6.0, &mut c6);
+    let mut chosen = &c6;
+    let mut c4 = [0u8; GROUP];
+    if four_six {
+        let s4 = branch(xg, gmax, gscale, 4.0, &mut c4);
+        if err(xg, &c4, s4 * gscale) < err(xg, &c6, sc * gscale) {
+            sc = s4;
+            chosen = &c4;
+        }
+    }
+    for (b, pair) in codes8.iter_mut().zip(chosen.chunks_exact(2)) {
+        *b = (pair[0] & 0xF) | (pair[1] << 4);
+    }
+    sc
+}
+
+/// Fused deterministic RTN + pack (the serving weight path): emits
+/// packed 4-bit codes (two per byte, low nibble first) and
+/// E4M3-encoded scale bytes straight from the comparator kernel,
+/// returning the global scale. Bitwise identical to
+/// `quantize_rtn(...)` followed by `fp4_encode`/`e4m3_encode` packing
+/// (locked in by `tests/quant_parity.rs`). Explicit worker count.
+pub fn rtn_pack_threads(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+    codes: &mut [u8],
+    scales: &mut [u8],
+    threads: usize,
+) -> Result<f32> {
+    check_dims(x.len(), rows, cols, GROUP)?;
+    if codes.len() != x.len() / 2 {
+        bail!("need {} code bytes, got {}", x.len() / 2, codes.len());
+    }
+    if scales.len() != x.len() / GROUP {
+        bail!("need {} scale bytes, got {}", x.len() / GROUP, scales.len());
+    }
+    let absmax = absmax_bands(x, rows, cols, threads);
+    let gscale = safe_div(absmax, FP4_MAX * FP8_MAX);
+    let gpr = cols / GROUP;
+    bands2(codes, cols / 2, scales, gpr, rows, threads, |r0, cb, sb| {
+        for (j, sbyte) in sb.iter_mut().enumerate() {
+            let g = r0 * gpr + j;
+            let xg = &x[g * GROUP..(g + 1) * GROUP];
+            let codes8 = &mut cb[j * (GROUP / 2)..(j + 1) * (GROUP / 2)];
+            *sbyte = e4m3_encode(rtn_group(xg, gscale, four_six, codes8));
+        }
+    });
+    Ok(gscale)
+}
+
+/// [`rtn_pack_threads`] under the auto thread policy.
+pub fn rtn_pack(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+    codes: &mut [u8],
+    scales: &mut [u8],
+) -> Result<f32> {
+    let threads = threads_for_quant(x.len(), rows);
+    rtn_pack_threads(x, rows, cols, four_six, codes, scales, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_cover_every_row_once() {
+        let (rows, width) = (13usize, 7usize);
+        for threads in [1usize, 2, 5, 64] {
+            let mut a = vec![0.0f32; rows * width];
+            let mut b = vec![0u8; rows * 2];
+            bands2(&mut a, width, &mut b, 2, rows, threads, |r0, ab, bb| {
+                for (local, row) in ab.chunks_exact_mut(width).enumerate() {
+                    row.fill((r0 + local) as f32);
+                }
+                for (local, row) in bb.chunks_exact_mut(2).enumerate() {
+                    row.fill((r0 + local) as u8);
+                }
+            });
+            for r in 0..rows {
+                assert!(a[r * width..(r + 1) * width].iter().all(|&v| v == r as f32));
+                assert!(b[r * 2..(r + 1) * 2].iter().all(|&v| v == r as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn bands1_collects_in_row_order() {
+        let mut buf = vec![0.0f32; 10 * 3];
+        let got = bands1(&mut buf, 3, 10, 4, |r0, band| (r0, band.len() / 3));
+        let mut expect = 0;
+        for (r0, n) in got {
+            assert_eq!(r0, expect);
+            expect += n;
+        }
+        assert_eq!(expect, 10);
+    }
+
+    #[test]
+    fn absmax_bands_matches_serial_fold() {
+        let x = Rng::seed_from(3).normal_vec(37 * 16);
+        let serial = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for threads in [1usize, 2, 5, 40] {
+            assert_eq!(absmax_bands(&x, 37, 16, threads).to_bits(), serial.to_bits());
+        }
+    }
+
+    #[test]
+    fn dim_validation() {
+        let rng = Rng::seed_from(1);
+        let signs = vec![1.0f32; ROT_BLOCK];
+        let mut x = vec![0.0f32; 2 * 64];
+        let mut s = vec![0.0f32; 8];
+        // cols not a rotation-block multiple
+        assert!(ms_eden_quantize(&mut x, &mut s, 2, 64, false, &signs, &rng).is_err());
+        // bad signs length
+        let mut x2 = vec![0.0f32; 2 * ROT_BLOCK];
+        let mut s2 = vec![0.0f32; 2 * ROT_BLOCK / GROUP];
+        assert!(ms_eden_quantize(&mut x2, &mut s2, 2, ROT_BLOCK, false, &[1.0; 4], &rng).is_err());
+        // wrong scale count
+        assert!(ms_eden_quantize(&mut x2, &mut [0.0f32; 3], 2, ROT_BLOCK, false, &signs, &rng)
+            .is_err());
+        // SR: cols must be a group multiple
+        assert!(sr_quantize(&mut x, &mut s, 2, 64, &rng).is_ok());
+        let mut x3 = vec![0.0f32; 2 * 10];
+        assert!(sr_quantize(&mut x3, &mut [0.0f32; 1], 2, 10, &rng).is_err());
+        // pack: buffer sizing
+        let x4 = vec![0.0f32; 32];
+        assert!(rtn_pack(&x4, 2, 16, false, &mut [0u8; 15], &mut [0u8; 2]).is_err());
+        assert!(rtn_pack(&x4, 2, 16, false, &mut [0u8; 16], &mut [0u8; 1]).is_err());
+        assert!(rtn_pack(&x4, 2, 16, false, &mut [0u8; 16], &mut [0u8; 2]).is_ok());
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_to_zero() {
+        let rng = Rng::seed_from(2);
+        let signs = vec![1.0f32; ROT_BLOCK];
+        let mut x = vec![0.0f32; 2 * ROT_BLOCK];
+        let mut s = vec![0.0f32; 2 * ROT_BLOCK / GROUP];
+        let g = ms_eden_quantize(&mut x, &mut s, 2, ROT_BLOCK, false, &signs, &rng).unwrap();
+        assert_eq!(g, 0.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+        let mut e = vec![0.0f32; 2 * ROT_BLOCK];
+        ms_eden_estimate(&mut e, 2, ROT_BLOCK, &signs, &rng).unwrap();
+        assert!(e.iter().all(|&v| v == 0.0));
+    }
+}

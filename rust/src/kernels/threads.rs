@@ -27,6 +27,13 @@ use std::sync::OnceLock;
 /// decode GEMMs and micro-model test graphs stay under it.
 pub const PAR_MIN_MACS: usize = 1 << 22;
 
+/// Minimum tensor size (elements) before the fused quantizer's
+/// row-band partition pays for itself ([`crate::kernels::quant`]).
+/// Quantization runs a few dozen ops per element (vs the thousands of
+/// MACs behind each GEMM output row), so its bar is element-count
+/// based and far lower than [`PAR_MIN_MACS`].
+pub const PAR_MIN_QUANT_ELEMS: usize = 1 << 16;
+
 /// Sentinel: no programmatic override installed.
 const UNSET: usize = usize::MAX;
 
@@ -71,10 +78,10 @@ pub fn pinned_threads() -> Option<usize> {
     }
 }
 
-/// Worker count for a contraction of `macs` multiply-accumulates whose
-/// output has `rows` partitionable rows.
-pub fn threads_for(macs: usize, rows: usize) -> usize {
-    let cap = rows.max(1);
+/// Shared policy resolution: override/env first, else serial when the
+/// auto policy says the job is too small, else the machine's available
+/// parallelism — always capped at the partitionable row count.
+fn policy_threads(auto_serial: bool, cap: usize) -> usize {
     match OVERRIDE.load(Ordering::Relaxed) {
         UNSET => {
             if let Some(t) = env_threads() {
@@ -84,13 +91,27 @@ pub fn threads_for(macs: usize, rows: usize) -> usize {
         0 => {}
         t => return t.min(cap),
     }
-    if macs < PAR_MIN_MACS {
+    if auto_serial {
         return 1;
     }
     std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(1)
         .min(cap)
+}
+
+/// Worker count for a contraction of `macs` multiply-accumulates whose
+/// output has `rows` partitionable rows.
+pub fn threads_for(macs: usize, rows: usize) -> usize {
+    policy_threads(macs < PAR_MIN_MACS, rows.max(1))
+}
+
+/// Worker count for a quantization sweep over `elems` tensor elements
+/// laid out in `rows` partitionable rows — the same override/env
+/// resolution as [`threads_for`] with the element-count threshold
+/// ([`PAR_MIN_QUANT_ELEMS`]).
+pub fn threads_for_quant(elems: usize, rows: usize) -> usize {
+    policy_threads(elems < PAR_MIN_QUANT_ELEMS, rows.max(1))
 }
 
 /// Split `0..rows` into up to `threads` contiguous ranges, run
@@ -203,5 +224,13 @@ mod tests {
         // never more workers than rows
         assert!(threads_for(usize::MAX, 3) <= 3);
         assert_eq!(threads_for(usize::MAX, 0), 1);
+    }
+
+    #[test]
+    fn threads_for_quant_respects_floor_and_cap() {
+        // small tensors quantize serially under the auto policy
+        assert_eq!(threads_for_quant(PAR_MIN_QUANT_ELEMS - 1, 1024), 1);
+        assert!(threads_for_quant(usize::MAX, 3) <= 3);
+        assert_eq!(threads_for_quant(usize::MAX, 0), 1);
     }
 }

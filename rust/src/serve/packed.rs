@@ -20,7 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::formats::fp4::{self, fp4_decode, fp4_encode};
 use crate::formats::fp8::{e4m3_decode, e4m3_encode};
-use crate::formats::{quantize_rtn, Quantized, ScaleLayout};
+use crate::formats::{Quantized, ScaleLayout};
 use crate::GROUP;
 
 /// Magic bytes of the `.nvf4` container.
@@ -64,9 +64,26 @@ impl PackedTensor {
     }
 
     /// Quantize (RTN, optionally 4/6-branched) and pack in one step.
+    ///
+    /// Runs the fused quantizer core ([`crate::kernels::quant`]):
+    /// packed 4-bit codes and E4M3 scale bytes are emitted directly
+    /// from the branchless comparator kernel, row-band-parallel, with
+    /// no f32 grid-value round trip and no per-element grid scan —
+    /// bitwise identical to `from_quantized(&quantize_rtn(..))`
+    /// (locked in by `tests/quant_parity.rs`).
     pub fn quantize_pack(x: &[f32], rows: usize, cols: usize, four_six: bool) -> Result<PackedTensor> {
-        let q = quantize_rtn(x, rows, cols, four_six, false)?;
-        Self::from_quantized(&q)
+        let mut codes = vec![0u8; x.len() / 2];
+        let mut scales = vec![0u8; x.len() / GROUP];
+        let gscale =
+            crate::kernels::quant::rtn_pack(x, rows, cols, four_six, &mut codes, &mut scales)?;
+        Ok(PackedTensor {
+            rows,
+            cols,
+            codes,
+            scales,
+            gscale,
+            rotated: false,
+        })
     }
 
     pub fn numel(&self) -> usize {
@@ -203,6 +220,7 @@ impl PackedTensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::formats::quantize_rtn;
     use crate::util::rng::Rng;
 
     fn sample(rows: usize, cols: usize, seed: u64) -> PackedTensor {

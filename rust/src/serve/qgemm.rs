@@ -1,7 +1,8 @@
 //! Native quantized GEMM: f32 activations x packed NVFP4 weights.
 //!
 //! Computes `y[m, n] = x[m, k] @ W[n, k]^T` directly on the packed
-//! representation — FP4 codes are looked up in a 16-entry LUT and the
+//! representation — each packed byte is decoded through a 256-entry
+//! byte→pair LUT ([`FP4_PAIR_LUT`]; one lookup per two codes) and the
 //! per-group E4M3 scale is fused into a small decoded tile, so the
 //! full f32 weight matrix is never materialized.
 //!
@@ -38,9 +39,24 @@ use super::packed::PackedTensor;
 
 /// 16-entry FP4 decode LUT indexed by the 4-bit code (sign << 3 |
 /// grid index; mirrors [`crate::formats::fp4::fp4_decode`]).
-pub const FP4_LUT: [f32; 16] = [
-    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
-];
+pub const FP4_LUT: [f32; 16] = crate::formats::fp4::FP4_CODE_LUT;
+
+/// 256-entry byte -> `[low nibble, high nibble]` pair-decode table:
+/// each packed weight byte costs **one** lookup instead of two
+/// [`FP4_LUT`] nibble lookups. Entries are exactly the per-nibble
+/// values, so the widened decode stays bitwise identical to the
+/// per-nibble path (and serial/parallel parity is untouched).
+pub const FP4_PAIR_LUT: [[f32; 2]; 256] = build_pair_lut();
+
+const fn build_pair_lut() -> [[f32; 2]; 256] {
+    let mut t = [[0.0f32; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [FP4_LUT[b & 0xF], FP4_LUT[b >> 4]];
+        b += 1;
+    }
+    t
+}
 
 /// Activation-row tile: rows of `x` processed per weight traversal.
 /// Large enough to amortize unpacking, small enough that the tile of
@@ -67,11 +83,13 @@ fn qgemm_rows(
             for g in 0..groups_per_row {
                 let gid = row * groups_per_row + g;
                 let s = w.group_scale(gid);
-                // unpack + scale-fuse the 16-element group once...
+                // unpack + scale-fuse the 16-element group once (one
+                // pair-decode lookup per packed byte)...
                 let base = gid * (GROUP / 2);
                 for (j, &b) in w.codes[base..base + GROUP / 2].iter().enumerate() {
-                    wtile[2 * j] = FP4_LUT[(b & 0xF) as usize] * s;
-                    wtile[2 * j + 1] = FP4_LUT[(b >> 4) as usize] * s;
+                    let [lo, hi] = FP4_PAIR_LUT[b as usize];
+                    wtile[2 * j] = lo * s;
+                    wtile[2 * j + 1] = hi * s;
                 }
                 // ...then reuse it for every activation row in the tile
                 let col0 = g * GROUP;
@@ -167,6 +185,15 @@ mod tests {
             if v != 0.0 {
                 assert_eq!(fp4_encode(v) as usize, code);
             }
+        }
+    }
+
+    #[test]
+    fn pair_lut_matches_nibble_lut() {
+        for b in 0usize..256 {
+            let [lo, hi] = FP4_PAIR_LUT[b];
+            assert_eq!(lo.to_bits(), FP4_LUT[b & 0xF].to_bits(), "byte {b:#x} lo");
+            assert_eq!(hi.to_bits(), FP4_LUT[b >> 4].to_bits(), "byte {b:#x} hi");
         }
     }
 

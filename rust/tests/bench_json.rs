@@ -1,0 +1,51 @@
+//! Sanity-parse the repo-root `BENCH_*.json` perf-trajectory files
+//! that `scripts/bench.sh` publishes (train step, serving, quantizer).
+//!
+//! Skips with a notice when none exist (benches have not been run in
+//! this checkout); once they exist, a corrupt or schema-less file
+//! fails CI (`scripts/ci.sh` runs this test explicitly).
+
+use std::path::Path;
+
+use quartet2::util::json::Json;
+
+#[test]
+fn bench_jsons_parse_with_expected_schema() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level under the repo root")
+        .to_path_buf();
+    let mut found = 0usize;
+    for entry in std::fs::read_dir(&root).expect("repo root readable") {
+        let path = entry.expect("dir entry").path();
+        let name = match path.file_name().and_then(|n| n.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        let parsed = Json::parse_file(&path)
+            .unwrap_or_else(|e| panic!("{name} does not parse: {e}"));
+        let rows = parsed
+            .as_arr()
+            .unwrap_or_else(|e| panic!("{name} is not a JSON array: {e}"));
+        assert!(!rows.is_empty(), "{name} has no bench rows");
+        for (i, row) in rows.iter().enumerate() {
+            // every trajectory row carries at least a name and one
+            // numeric measurement
+            row.get("name")
+                .and_then(|n| n.as_str().map(str::to_string))
+                .unwrap_or_else(|e| panic!("{name} row {i} missing string name: {e}"));
+            let has_number = matches!(row, Json::Obj(m) if m.values().any(|v| matches!(v, Json::Num(_))));
+            assert!(has_number, "{name} row {i} has no numeric field");
+        }
+        found += 1;
+    }
+    if found == 0 {
+        eprintln!(
+            "bench_json: no BENCH_*.json at {} (run scripts/bench.sh); skipping",
+            root.display()
+        );
+    }
+}

@@ -1,0 +1,285 @@
+//! Parity suite for the fused quantizer core (`kernels::quant`):
+//!
+//! * **serial vs banded-parallel** — bitwise-identical output at
+//!   ragged row counts for every variant and thread count (the
+//!   counter-based per-group randomness guarantee). `scripts/ci.sh`
+//!   additionally runs this file under `QUARTET2_THREADS=2` so the
+//!   auto-policy paths see a real multi-worker partition.
+//! * **fused vs legacy reference** — the fused pipeline reproduces the
+//!   retained multi-pass seam (`ms_eden_core`, `ms_eden_posthoc_core`,
+//!   `quantize_sr_with`, `quantize_rtn` + encode packing) exactly when
+//!   fed the same materialized randomness.
+//! * **Table 1 quality gates re-pointed at the fused path** — MSE
+//!   band, unbiasedness, and the >= 2x-vs-SR advantage through the
+//!   public (now fused) wrappers.
+
+use quartet2::formats::{
+    ms_eden_core, ms_eden_posthoc_core, quantize_ms_eden, quantize_ms_eden_posthoc,
+    quantize_rtn, quantize_sr, quantize_sr_with, RTN_CLIP_SCALE,
+};
+use quartet2::hadamard;
+use quartet2::kernels::quant;
+use quartet2::serve::PackedTensor;
+use quartet2::util::rng::Rng;
+use quartet2::GROUP;
+
+/// Ragged row counts crossing every band boundary for small worker
+/// counts, plus one multi-band bulk shape.
+const RAGGED_ROWS: &[usize] = &[1, 2, 3, 5, 13, 67];
+const THREADS: &[usize] = &[2, 3, 4, 16, 200];
+
+fn gauss(n: usize, seed: u64) -> Vec<f32> {
+    Rng::seed_from(seed).normal_vec(n)
+}
+
+/// The per-group scale uniforms the fused core derives
+/// (`sr.fold_in(g)`), materialized for the legacy reference cores.
+fn group_uniforms(sr: &Rng, ngroups: usize) -> Vec<f32> {
+    (0..ngroups)
+        .map(|g| sr.fold_in(g as u64).uniform_f32())
+        .collect()
+}
+
+/// The per-element SR uniforms (16 sequential draws per group fold).
+fn elem_uniforms(sr: &Rng, ngroups: usize) -> Vec<f32> {
+    let mut u = Vec::with_capacity(ngroups * GROUP);
+    for g in 0..ngroups {
+        let mut r = sr.fold_in(g as u64);
+        for _ in 0..GROUP {
+            u.push(r.uniform_f32());
+        }
+    }
+    u
+}
+
+// ------------------------------------------------- fused vs legacy
+
+#[test]
+fn fused_ms_eden_matches_legacy_reference() {
+    for (rows, cols, seed) in [(1usize, 128usize, 1u64), (13, 256, 2), (64, 512, 3)] {
+        let x = gauss(rows * cols, seed);
+        let rng = Rng::seed_from(100 + seed);
+        let rq = quantize_ms_eden(&x, rows, cols, &rng).unwrap();
+
+        // legacy: rotate with the same signs, quantize with the same
+        // (materialized) per-group uniforms
+        let mut rot_rng = rng.fold_in(1);
+        let signs = hadamard::rademacher_signs(&mut rot_rng);
+        assert_eq!(signs, rq.signs);
+        let mut x_rot = x.clone();
+        hadamard::rht(&mut x_rot, &signs).unwrap();
+        let u = group_uniforms(&rng.fold_in(2), x.len() / GROUP);
+        let legacy = ms_eden_core(&x_rot, rows, cols, RTN_CLIP_SCALE, &u).unwrap();
+
+        assert_eq!(legacy.values, rq.q.values, "{rows}x{cols} values");
+        assert_eq!(legacy.scales, rq.q.scales, "{rows}x{cols} scales");
+        assert_eq!(legacy.gscale, rq.q.gscale, "{rows}x{cols} gscale");
+    }
+}
+
+#[test]
+fn fused_posthoc_matches_legacy_reference() {
+    for (rows, cols, seed) in [(1usize, 128usize, 4u64), (13, 256, 5), (32, 512, 6)] {
+        let x = gauss(rows * cols, seed);
+        let rng = Rng::seed_from(200 + seed);
+        let rq = quantize_ms_eden_posthoc(&x, rows, cols, &rng).unwrap();
+
+        let mut rot_rng = rng.fold_in(1);
+        let signs = hadamard::rademacher_signs(&mut rot_rng);
+        let mut x_rot = x.clone();
+        hadamard::rht(&mut x_rot, &signs).unwrap();
+        let u = group_uniforms(&rng.fold_in(2), x.len() / GROUP);
+        let legacy = ms_eden_posthoc_core(&x_rot, rows, cols, RTN_CLIP_SCALE, &u).unwrap();
+
+        assert_eq!(legacy.values, rq.q.values, "{rows}x{cols} values");
+        assert_eq!(legacy.scales, rq.q.scales, "{rows}x{cols} scales");
+        assert_eq!(legacy.gscale, rq.q.gscale, "{rows}x{cols} gscale");
+    }
+}
+
+#[test]
+fn fused_sr_matches_legacy_reference() {
+    for (rows, cols, seed) in [(1usize, 16usize, 7u64), (5, 80, 8), (64, 256, 9)] {
+        let x = gauss(rows * cols, seed);
+        let rng = Rng::seed_from(300 + seed);
+        let q = quantize_sr(&x, rows, cols, &rng).unwrap();
+        let u = elem_uniforms(&rng, x.len() / GROUP);
+        let legacy = quantize_sr_with(&x, rows, cols, &u).unwrap();
+        assert_eq!(legacy.values, q.values, "{rows}x{cols} values");
+        assert_eq!(legacy.scales, q.scales, "{rows}x{cols} scales");
+        assert_eq!(legacy.gscale, q.gscale, "{rows}x{cols} gscale");
+    }
+}
+
+#[test]
+fn estimate_matches_quantize_then_dequant() {
+    let (rows, cols) = (13usize, 256usize);
+    let x = gauss(rows * cols, 10);
+    let rng = Rng::seed_from(11);
+
+    // MS-EDEN: the in-place estimate equals dequantizing the fused
+    // quantization on the same streams
+    let rq = quantize_ms_eden(&x, rows, cols, &rng).unwrap();
+    let mut est = x.clone();
+    quant::ms_eden_estimate(&mut est, rows, cols, &rq.signs, &rng.fold_in(2)).unwrap();
+    assert_eq!(est, rq.q.dequant(), "ms-eden estimate");
+
+    // SR: same streams, same equality
+    let q = quantize_sr(&x, rows, cols, &rng).unwrap();
+    let mut est = x.clone();
+    quant::sr_estimate(&mut est, rows, cols, &rng).unwrap();
+    assert_eq!(est, q.dequant(), "sr estimate");
+}
+
+#[test]
+fn quantize_pack_matches_unfused_reference() {
+    for four_six in [false, true] {
+        for (rows, cols, seed) in [(1usize, 16usize, 12u64), (5, 80, 13), (24, 128, 14)] {
+            let x = gauss(rows * cols, seed);
+            let fused = PackedTensor::quantize_pack(&x, rows, cols, four_six).unwrap();
+            let q = quantize_rtn(&x, rows, cols, four_six, false).unwrap();
+            let legacy = PackedTensor::from_quantized(&q).unwrap();
+            assert_eq!(legacy, fused, "{rows}x{cols} four_six={four_six}");
+        }
+    }
+}
+
+// ------------------------------------------- serial vs parallel
+
+#[test]
+fn ms_eden_parallel_matches_serial_bitwise() {
+    for &rows in RAGGED_ROWS {
+        let cols = 128usize;
+        let x = gauss(rows * cols, 20 + rows as u64);
+        let rng = Rng::seed_from(21);
+        let mut rot_rng = rng.fold_in(1);
+        let signs = hadamard::rademacher_signs(&mut rot_rng);
+        let sr = rng.fold_in(2);
+        for posthoc in [false, true] {
+            let mut v_ser = x.clone();
+            let mut s_ser = vec![0.0f32; x.len() / GROUP];
+            let g_ser = quant::ms_eden_quantize_threads(
+                &mut v_ser, &mut s_ser, rows, cols, posthoc, &signs, &sr, 1,
+            )
+            .unwrap();
+            for &t in THREADS {
+                let mut v = x.clone();
+                let mut s = vec![0.0f32; x.len() / GROUP];
+                let g = quant::ms_eden_quantize_threads(
+                    &mut v, &mut s, rows, cols, posthoc, &signs, &sr, t,
+                )
+                .unwrap();
+                assert_eq!(v_ser, v, "rows={rows} threads={t} posthoc={posthoc} values");
+                assert_eq!(s_ser, s, "rows={rows} threads={t} posthoc={posthoc} scales");
+                assert_eq!(g_ser.to_bits(), g.to_bits());
+            }
+            // the estimate path too (naive only — the training mode)
+            if !posthoc {
+                let mut e_ser = x.clone();
+                quant::ms_eden_estimate_threads(&mut e_ser, rows, cols, &signs, &sr, 1).unwrap();
+                for &t in THREADS {
+                    let mut e = x.clone();
+                    quant::ms_eden_estimate_threads(&mut e, rows, cols, &signs, &sr, t).unwrap();
+                    assert_eq!(e_ser, e, "rows={rows} threads={t} estimate");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sr_parallel_matches_serial_bitwise() {
+    for &rows in RAGGED_ROWS {
+        let cols = 80usize; // ragged vs the 128 rotation block: SR only needs 16
+        let x = gauss(rows * cols, 40 + rows as u64);
+        let sr = Rng::seed_from(41);
+        let mut v_ser = x.clone();
+        let mut s_ser = vec![0.0f32; x.len() / GROUP];
+        let g_ser =
+            quant::sr_quantize_threads(&mut v_ser, &mut s_ser, rows, cols, &sr, 1).unwrap();
+        for &t in THREADS {
+            let mut v = x.clone();
+            let mut s = vec![0.0f32; x.len() / GROUP];
+            let g = quant::sr_quantize_threads(&mut v, &mut s, rows, cols, &sr, t).unwrap();
+            assert_eq!(v_ser, v, "rows={rows} threads={t} values");
+            assert_eq!(s_ser, s, "rows={rows} threads={t} scales");
+            assert_eq!(g_ser.to_bits(), g.to_bits());
+        }
+    }
+}
+
+#[test]
+fn rtn_pack_parallel_matches_serial_bitwise() {
+    for &rows in RAGGED_ROWS {
+        let cols = 48usize;
+        let x = gauss(rows * cols, 60 + rows as u64);
+        let mut c_ser = vec![0u8; x.len() / 2];
+        let mut s_ser = vec![0u8; x.len() / GROUP];
+        let g_ser =
+            quant::rtn_pack_threads(&x, rows, cols, true, &mut c_ser, &mut s_ser, 1).unwrap();
+        for &t in THREADS {
+            let mut c = vec![0u8; x.len() / 2];
+            let mut s = vec![0u8; x.len() / GROUP];
+            let g = quant::rtn_pack_threads(&x, rows, cols, true, &mut c, &mut s, t).unwrap();
+            assert_eq!(c_ser, c, "rows={rows} threads={t} codes");
+            assert_eq!(s_ser, s, "rows={rows} threads={t} scales");
+            assert_eq!(g_ser.to_bits(), g.to_bits());
+        }
+    }
+}
+
+// ------------------------------------- quality gates (fused path)
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[test]
+fn table1_band_on_fused_path() {
+    // MS-EDEN MSE over N(0,1) ~ 9.4e-3 (paper Table 1), through the
+    // now-fused public wrapper
+    let x = gauss(256 * 512, 70);
+    let rng = Rng::seed_from(71);
+    let rq = quantize_ms_eden(&x, 256, 512, &rng).unwrap();
+    let m = mse(&rq.dequant_unrotated(), &x);
+    assert!((0.0085..0.0105).contains(&m), "mse={m}");
+}
+
+#[test]
+fn fused_beats_sr_by_2x() {
+    let x = gauss(128 * 512, 72);
+    let eden = quantize_ms_eden(&x, 128, 512, &Rng::seed_from(73)).unwrap();
+    let sr = quantize_sr(&x, 128, 512, &Rng::seed_from(74)).unwrap();
+    let me = mse(&eden.dequant_unrotated(), &x);
+    let ms = sr.mse(&x);
+    assert!(ms / me > 2.0, "sr={ms} eden={me}");
+}
+
+#[test]
+fn fused_estimate_unbiased_on_average() {
+    // averaging independent draws of the fused estimator must converge
+    // toward the original tensor at the Monte-Carlo rate
+    let (rows, cols) = (32usize, 256usize);
+    let x = gauss(rows * cols, 75);
+    let n = 48;
+    let mut acc = vec![0.0f64; x.len()];
+    for seed in 0..n {
+        let rng = Rng::seed_from(2000 + seed);
+        let rq = quantize_ms_eden(&x, rows, cols, &rng).unwrap();
+        for (a, v) in acc.iter_mut().zip(rq.dequant_unrotated()) {
+            *a += v as f64;
+        }
+    }
+    let avg: Vec<f32> = acc.iter().map(|a| (a / n as f64) as f32).collect();
+    let resid = mse(&avg, &x);
+    let rng = Rng::seed_from(76);
+    let base = mse(
+        &quantize_ms_eden(&x, rows, cols, &rng).unwrap().dequant_unrotated(),
+        &x,
+    );
+    assert!(resid < 3.0 * base / n as f64, "resid={resid} base={base}");
+}

@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
-# Perf trajectory, machine-readable across PRs: run the training-step
-# and serving benches and publish their JSON at the repo root as
-# BENCH_train_step.json / BENCH_serve.json.
+# Perf trajectory, machine-readable across PRs: run the training-step,
+# serving, and quantizer benches and publish their JSON at the repo
+# root as BENCH_train_step.json / BENCH_serve.json /
+# BENCH_quantize.json.
 #
 #   scripts/bench.sh
 #
 # Thread policy: the benches compare serial vs parallel in-process via
-# kernels::set_threads, so run this without QUARTET2_THREADS set.
+# kernels::set_threads or explicit *_threads entry points, so run this
+# without QUARTET2_THREADS set.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -15,7 +17,9 @@ cd rust
 
 cargo bench --bench train_step
 cargo bench --bench serve_throughput
+cargo bench --bench quantize
 
 cp results/train_step.json "$repo_root/BENCH_train_step.json"
 cp results/serve_throughput.json "$repo_root/BENCH_serve.json"
-echo "bench: wrote BENCH_train_step.json + BENCH_serve.json"
+cp results/quantize.json "$repo_root/BENCH_quantize.json"
+echo "bench: wrote BENCH_train_step.json + BENCH_serve.json + BENCH_quantize.json"

@@ -22,8 +22,18 @@ cargo clippy --all-targets -- -D warnings
 cargo build --release
 cargo test -q
 
+# quantizer parity under a pinned 2-worker policy: the fused core's
+# auto-policy entry points (engine estimates, formats wrappers, pack)
+# see a real multi-worker row-band partition and must stay bitwise
+# identical to serial
+QUARTET2_THREADS=2 cargo test -q --test quant_parity
+
+# sanity-parse any published perf-trajectory JSONs at the repo root
+# (BENCH_train_step / BENCH_serve / BENCH_quantize; skips if absent)
+cargo test -q --test bench_json
+
 # benches must at least compile (they are harness-free binaries;
-# includes the new train_step throughput bench)
+# includes the quantizer micro-bench)
 cargo bench --no-run
 
 # smoke: the native Quartet II training path end-to-end — two MS-EDEN
