@@ -1,0 +1,210 @@
+//! Bench: the packed-operand NVFP4 GEMM core (`kernels::qgemm_pp`)
+//! vs the retained dequantize-to-f32 formulation — per-MAC ns and
+//! operand-stream GB/s, kernel-only and end-to-end (quantize + GEMM).
+//!
+//! Two comparisons per shape:
+//!
+//! * **gemm-only** — contract pre-quantized operands: `qgemm_pp` on
+//!   packed codes + byte scales vs `gemm_abt` on the pre-materialized
+//!   f32 estimates. Both kernels run the identical blocking and inner
+//!   `dot8` (outputs are bitwise equal); the difference is operand
+//!   representation: `0.5625` vs `4` bytes/element (~8x less traffic),
+//!   against the packed path's panel-decode work (~1/64 of the MACs).
+//! * **end-to-end MS-EDEN** — one training-GEMM worth of work:
+//!   quantize both operands (fused `ms_eden_pack` vs fused
+//!   `ms_eden_estimate`) and contract. This is exactly what flipping
+//!   `engine::GemmPath` changes in a train step.
+//!
+//! The packed-vs-dequant delta is a *memory-system* effect: on
+//! cache-resident shapes the FLOP-bound kernels tie, and the packed
+//! win grows with operand working sets (the per-step numbers live in
+//! `benches/train_step.rs`). Results land in
+//! `results/qgemm_packed.json`; `scripts/bench.sh` copies that to
+//! `BENCH_qgemm.json` at the repo root for cross-PR tracking.
+
+use quartet2::bench::{black_box, header, Bencher};
+use quartet2::hadamard;
+use quartet2::kernels::quant;
+use quartet2::kernels::{gemm_abt_threads, qgemm_pp_threads, PackedOp};
+use quartet2::util::json::{self, Json};
+use quartet2::util::rng::Rng;
+use quartet2::GROUP;
+
+/// (m, n, k): a tiny-preset-like cache-resident contraction and a
+/// small-preset grad-weight-scale one whose f32 operands bust L2.
+const SHAPES: &[(usize, usize, usize)] = &[(512, 384, 128), (1024, 768, 512)];
+
+struct Row {
+    name: String,
+    shape: (usize, usize, usize),
+    path: &'static str,
+    secs: f64,
+    operand_bytes: usize,
+}
+
+fn main() {
+    header("Packed-operand NVFP4 GEMM vs dequant-f32 path");
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!("explicit {threads}-worker kernels (auto parallelism)\n");
+
+    let b = Bencher {
+        warmup: std::time::Duration::from_millis(200),
+        target_time: std::time::Duration::from_millis(1200),
+        min_iters: 3,
+    };
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &(m, n, k) in SHAPES {
+        println!("-- {m}x{n}x{k} ({} MMACs)", m * n * k / 1_000_000);
+        let x = Rng::seed_from(1).normal_vec(m * k);
+        let w = Rng::seed_from(2).normal_vec(n * k);
+        let rng = Rng::seed_from(3);
+        let mut rot_rng = rng.fold_in(1);
+        let signs = hadamard::rademacher_signs(&mut rot_rng);
+        let (ra, rb) = (rng.fold_in(2), rng.fold_in(3));
+
+        // pre-quantized operands for the gemm-only rows (same streams
+        // on both sides, so outputs are bitwise comparable)
+        let mut xa = x.clone();
+        let mut ca = vec![0u8; m * k / 2];
+        let mut sa = vec![0u8; m * k / GROUP];
+        let ga = quant::ms_eden_pack_threads(
+            &mut xa, m, k, false, &signs, &ra, &mut ca, &mut sa, threads,
+        )
+        .expect("pack a");
+        let mut xb = w.clone();
+        let mut cb = vec![0u8; n * k / 2];
+        let mut sb = vec![0u8; n * k / GROUP];
+        let gb = quant::ms_eden_pack_threads(
+            &mut xb, n, k, false, &signs, &rb, &mut cb, &mut sb, threads,
+        )
+        .expect("pack b");
+        let aop = PackedOp { codes: &ca, scales: &sa, gscale: ga, rows: m, cols: k };
+        let bop = PackedOp { codes: &cb, scales: &sb, gscale: gb, rows: n, cols: k };
+        let (ea, eb) = (aop.dequant(), bop.dequant());
+
+        let packed_bytes = (m * k + n * k) / 2 + (m * k + n * k) / GROUP + 8;
+        let f32_bytes = (m * k + n * k) * 4;
+        let mut y = vec![0.0f32; m * n];
+
+        let r = b.run("gemm-only dequant-f32 (gemm_abt on estimates)", || {
+            y.fill(0.0);
+            gemm_abt_threads(black_box(&ea), m, black_box(&eb), n, k, &mut y, threads)
+                .expect("gemm");
+        });
+        r.report();
+        rows.push(Row {
+            name: format!("qgemm_only_dequant_{m}x{n}x{k}"),
+            shape: (m, n, k),
+            path: "dequant",
+            secs: r.median_secs(),
+            operand_bytes: f32_bytes,
+        });
+        let r = b.run("gemm-only packed (qgemm_pp on codes+scales)", || {
+            y.fill(0.0);
+            qgemm_pp_threads(black_box(&aop), black_box(&bop), &mut y, threads).expect("qgemm");
+        });
+        r.report();
+        rows.push(Row {
+            name: format!("qgemm_only_packed_{m}x{n}x{k}"),
+            shape: (m, n, k),
+            path: "packed",
+            secs: r.median_secs(),
+            operand_bytes: packed_bytes,
+        });
+
+        // end-to-end: quantize both operands + contract, the per-GEMM
+        // work a quantized training matmul performs under each path
+        let mut qa = vec![0.0f32; m * k];
+        let mut qb = vec![0.0f32; n * k];
+        let r = b.run("e2e ms-eden dequant (estimate + gemm_abt)", || {
+            qa.copy_from_slice(&x);
+            quant::ms_eden_estimate_threads(&mut qa, m, k, &signs, &ra, threads).expect("est a");
+            qb.copy_from_slice(&w);
+            quant::ms_eden_estimate_threads(&mut qb, n, k, &signs, &rb, threads).expect("est b");
+            y.fill(0.0);
+            gemm_abt_threads(&qa, m, &qb, n, k, &mut y, threads).expect("gemm");
+            black_box(y[0]);
+        });
+        r.report();
+        rows.push(Row {
+            name: format!("qgemm_e2e_dequant_{m}x{n}x{k}"),
+            shape: (m, n, k),
+            path: "dequant",
+            secs: r.median_secs(),
+            operand_bytes: f32_bytes,
+        });
+        let mut ca2 = vec![0u8; m * k / 2];
+        let mut sa2 = vec![0u8; m * k / GROUP];
+        let mut cb2 = vec![0u8; n * k / 2];
+        let mut sb2 = vec![0u8; n * k / GROUP];
+        let r = b.run("e2e ms-eden packed (pack + qgemm_pp)", || {
+            qa.copy_from_slice(&x);
+            let ga2 = quant::ms_eden_pack_threads(
+                &mut qa, m, k, false, &signs, &ra, &mut ca2, &mut sa2, threads,
+            )
+            .expect("pack a");
+            qb.copy_from_slice(&w);
+            let gb2 = quant::ms_eden_pack_threads(
+                &mut qb, n, k, false, &signs, &rb, &mut cb2, &mut sb2, threads,
+            )
+            .expect("pack b");
+            let a2 = PackedOp { codes: &ca2, scales: &sa2, gscale: ga2, rows: m, cols: k };
+            let b2 = PackedOp { codes: &cb2, scales: &sb2, gscale: gb2, rows: n, cols: k };
+            y.fill(0.0);
+            qgemm_pp_threads(&a2, &b2, &mut y, threads).expect("qgemm");
+            black_box(y[0]);
+        });
+        r.report();
+        rows.push(Row {
+            name: format!("qgemm_e2e_packed_{m}x{n}x{k}"),
+            shape: (m, n, k),
+            path: "packed",
+            secs: r.median_secs(),
+            operand_bytes: packed_bytes,
+        });
+        println!();
+    }
+
+    // ------------------------------------------------------- report
+    println!(
+        "{:<34} {:>8} {:>12} {:>14} {:>12}",
+        "row", "path", "ns/MAC", "operand GB/s", "vs dequant"
+    );
+    let mut out = Vec::new();
+    for r in &rows {
+        let (m, n, k) = r.shape;
+        let macs = (m * n * k) as f64;
+        let ns_per_mac = r.secs * 1e9 / macs;
+        let gbs = r.operand_bytes as f64 / r.secs / 1e9;
+        // pair each packed row with its dequant twin by name
+        let dequant_secs = rows
+            .iter()
+            .find(|t| t.name == r.name.replace("_packed_", "_dequant_"))
+            .map(|t| t.secs)
+            .unwrap_or(r.secs);
+        let speedup = dequant_secs / r.secs;
+        println!(
+            "{:<34} {:>8} {:>12.4} {:>14.2} {:>11.2}x",
+            r.name, r.path, ns_per_mac, gbs, speedup
+        );
+        out.push(json::obj(vec![
+            ("name", json::s(&r.name)),
+            ("path", json::s(r.path)),
+            ("m", json::n(m as f64)),
+            ("n", json::n(n as f64)),
+            ("k", json::n(k as f64)),
+            ("secs", json::n(r.secs)),
+            ("ns_per_mac", json::n(ns_per_mac)),
+            ("operand_bytes", json::n(r.operand_bytes as f64)),
+            ("operand_gb_s", json::n(gbs)),
+            ("speedup_vs_dequant", json::n(speedup)),
+        ]));
+    }
+
+    let results = std::path::Path::new("results");
+    std::fs::create_dir_all(results).expect("results dir");
+    std::fs::write(results.join("qgemm_packed.json"), Json::Arr(out).to_string())
+        .expect("write results");
+    println!("\nresults -> results/qgemm_packed.json");
+}

@@ -25,7 +25,7 @@
 use quartet2::bench::header;
 use quartet2::coordinator::Backend;
 use quartet2::data::Batcher;
-use quartet2::engine::{AdamWOptions, NativeBackend};
+use quartet2::engine::{set_gemm_path, AdamWOptions, GemmPath, NativeBackend};
 use quartet2::kernels::{gemm_abt_threads, set_threads};
 use quartet2::serve::preset;
 use quartet2::util::json::{self, Json};
@@ -71,21 +71,29 @@ fn median_secs(reps: usize, mut f: impl FnMut()) -> f64 {
     times[times.len() / 2]
 }
 
-/// Steady-state seconds per training step for `scheme` under the given
-/// worker policy (`0` = auto, `1` = serial).
-fn step_secs(scheme: &str, threads: usize) -> f64 {
+/// Steady-state seconds per training step for `scheme` on
+/// `preset_name` at `batch`x`seq`, under the given worker policy
+/// (`0` = auto, `1` = serial), timing `steps` steps per rep.
+fn step_secs_with(
+    preset_name: &str,
+    scheme: &str,
+    threads: usize,
+    batch: usize,
+    seq: usize,
+    steps: usize,
+) -> f64 {
     set_threads(threads);
-    let cfg = preset("tiny").expect("preset");
+    let cfg = preset(preset_name).expect("preset");
     let mut backend = NativeBackend::from_config(
         &cfg,
         scheme,
-        BATCH,
-        SEQ,
+        batch,
+        seq,
         7,
         AdamWOptions::default(),
     )
     .expect("backend");
-    let mut batcher = Batcher::train(9, BATCH, SEQ);
+    let mut batcher = Batcher::train(9, batch, seq);
     let b = batcher.next();
     // warmup: first step pays one-time costs (scratch pool fill, page
     // faults); steady state is what serving-scale training sees
@@ -93,14 +101,19 @@ fn step_secs(scheme: &str, threads: usize) -> f64 {
         .train_step(0, b.tokens.clone(), b.targets.clone())
         .expect("warmup step");
     let secs = median_secs(3, || {
-        for s in 0..STEPS {
+        for s in 0..steps {
             backend
                 .train_step(1 + s, b.tokens.clone(), b.targets.clone())
                 .expect("train step");
         }
-    }) / STEPS as f64;
+    }) / steps as f64;
     set_threads(0);
     secs
+}
+
+/// [`step_secs_with`] at the legacy tiny-preset bench point.
+fn step_secs(scheme: &str, threads: usize) -> f64 {
+    step_secs_with("tiny", scheme, threads, BATCH, SEQ, STEPS)
 }
 
 /// Every f32-GEMM shape `(m, n, k, count)` one training step of the
@@ -191,6 +204,58 @@ fn main() {
         if scheme != "f32" && speedup_prepr < 2.0 {
             println!(
                 "WARNING: {scheme} quantized step below the 2x target vs the pre-PR serial path"
+            );
+        }
+    }
+
+    // ---- packed vs dequant GEMM path (ISSUE 5): same run, same
+    // streams — the two paths are bitwise identical (see
+    // kernels::qgemm), so this isolates exactly what quantize-to-
+    // packed + packed contraction buys. Measured on the small preset
+    // at 8x128 tokens/step, where the per-GEMM f32 operand working
+    // sets outgrow a typical L2 and the 8x packed traffic cut bites.
+    let (pb, ps, psteps) = (8usize, 128usize, 2usize);
+    let ptokens = (pb * ps) as f64;
+    println!(
+        "\npacked vs dequant GEMM path (small preset, {pb}x{ps} tokens/step, auto workers):"
+    );
+    println!(
+        "{:<10} {:>15} {:>15} {:>10}",
+        "scheme", "dequant tok/s", "packed tok/s", "speedup"
+    );
+    for scheme in ["sr", "quartet2"] {
+        set_gemm_path(Some(GemmPath::Dequant));
+        let dequant = step_secs_with("small", scheme, 0, pb, ps, psteps);
+        set_gemm_path(Some(GemmPath::Packed));
+        let packed = step_secs_with("small", scheme, 0, pb, ps, psteps);
+        set_gemm_path(None);
+        let speedup = dequant / packed;
+        println!(
+            "{:<10} {:>15.0} {:>15.0} {:>9.2}x",
+            scheme,
+            ptokens / dequant,
+            ptokens / packed,
+            speedup
+        );
+        for (name, path, secs) in [
+            ("train_step_path_dequant", "dequant", dequant),
+            ("train_step_path_packed", "packed", packed),
+        ] {
+            rows.push(json::obj(vec![
+                ("name", json::s(name)),
+                ("scheme", json::s(scheme)),
+                ("gemm_path", json::s(path)),
+                ("preset", json::s("small")),
+                ("threads", json::n(auto as f64)),
+                ("secs_per_step", json::n(secs)),
+                ("tok_s", json::n(ptokens / secs)),
+                ("speedup_vs_dequant", json::n(dequant / secs)),
+            ]));
+        }
+        if scheme == "quartet2" && speedup < 1.25 {
+            println!(
+                "WARNING: MS-EDEN packed path below the 1.25x target vs the dequant path \
+                 ({speedup:.2}x) — the delta is memory-hierarchy-bound; see BENCH_qgemm.json"
             );
         }
     }

@@ -113,11 +113,12 @@ impl Backend for NativeBackend {
             ),
         };
         format!(
-            "native engine: {} / {} ({} params, {:?}, {workers})",
+            "native engine: {} / {} ({} params, {:?}, {:?} gemm path, {workers})",
             self.model.cfg.name,
             self.scheme,
             self.model.n_params(),
-            self.model.mode
+            self.model.mode,
+            super::ops::gemm_path()
         )
     }
 

@@ -14,8 +14,15 @@
 //! * [`ops`] — the op set; its centerpiece, [`ops::linear`], quantizes
 //!   **all three** matmuls (forward, grad-input, grad-weight) to NVFP4
 //!   via MS-EDEN (RHT + EDEN-corrected clipped RTN, unbiased), SR (the
-//!   prior-work baseline), or an exact f32 reference — the paper's §4
-//!   scheme, selectable per run for A/B loss-curve comparison.
+//!   prior-work baseline), the square-scale-weight NVIDIA-recipe
+//!   variant (`nvidia_square`), or an exact f32 reference — the
+//!   paper's §4 scheme, selectable per run for A/B loss-curve
+//!   comparison. Quantized GEMMs contract packed 4-bit codes + byte
+//!   scales directly ([`ops::GemmPath::Packed`], the default); the
+//!   dequantize-to-f32 formulation survives behind
+//!   [`ops::GemmPath::Dequant`] as a parity seam — bitwise identical
+//!   for SR / MS-EDEN, within one f32 rounding per weight element for
+//!   `nvidia_square` (see [`ops::GemmPath`]).
 //! * [`layers`] — the Llama-like model (embedding, RMSNorm, RoPE
 //!   causal attention, SwiGLU, cross-entropy) with trainer-compatible
 //!   parameter naming.
@@ -40,7 +47,7 @@ pub mod tensor;
 
 pub use backend::NativeBackend;
 pub use layers::{NativeModel, Param};
-pub use ops::QuantMode;
+pub use ops::{gemm_path, set_gemm_path, GemmPath, QuantMode};
 pub use optim::{AdamW, AdamWOptions};
 pub use tape::{Gradients, Parent, Tape, VarId};
 pub use tensor::{Tensor, TensorData};

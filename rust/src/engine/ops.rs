@@ -14,6 +14,10 @@
 //! * [`QuantMode::Sr`] — per-element stochastic rounding (`Q_SR`, the
 //!   "FP4 All the Way"/NVIDIA-recipe baseline). Unbiased but ~2x the
 //!   MSE of MS-EDEN (Table 1).
+//! * [`QuantMode::SrSquareW`] — the NVIDIA-recipe square-block
+//!   variant: deterministic 16x16-square-scale RTN on the *weight*
+//!   operand (transpose-reusable — forward and grad-input see the same
+//!   weight estimate), Q_SR on activations and gradients.
 //! * [`QuantMode::F32`] — exact reference path for A/B comparison.
 //!
 //! Matmuls whose inner dimension is not aligned to the quantization
@@ -24,13 +28,23 @@
 //! shared blocked/threaded core. The backward's `wᵀ`/`gᵀ`/`xᵀ`
 //! operands enter as [`View::Trans`] *views* of the stored buffers —
 //! in f32 mode they dispatch to the transpose-free `A·B` / `Aᵀ·B`
-//! kernels with no materialization at all; in quantized modes the
-//! contiguous gather the quantizer's grouping requires lands in a
-//! pooled scratch buffer, which the fused quantizer core
-//! ([`crate::kernels::quant`]) then rewrites in place with the
-//! dequantized estimate in two streaming passes (quantized once per
-//! GEMM — the paper quantizes each GEMM along its own inner dim, so
-//! estimates cannot be shared across the three matmuls). The two
+//! kernels with no materialization at all. In quantized modes, both
+//! operands of each GEMM quantize **straight to the packed NVFP4
+//! representation** — 4-bit code pairs + E4M3 scale bytes in pooled
+//! byte scratch, emitted directly by the fused quantizer core
+//! ([`crate::kernels::quant`]; the contiguous gather a transposed view
+//! requires lands in pooled f32 staging first, and SR row-major
+//! operands skip staging entirely) — and the GEMM contracts the packed
+//! operands on [`crate::kernels::qgemm`], so the dequantized f32
+//! estimates are never materialized and steady-state GEMM operand
+//! traffic drops ~7x. The pre-packed formulation survives behind
+//! [`GemmPath::Dequant`] (`QUARTET2_GEMM_PATH=dequant` or
+//! [`set_gemm_path`]) as the parity reference: for SR / MS-EDEN the
+//! two paths are **bitwise identical** (packed decode reproduces the
+//! estimate exactly and the packed kernel replicates the f32 kernel's
+//! accumulation order), so the flag is a pure perf switch. Each GEMM
+//! quantizes along its own inner dim, as the paper prescribes, so
+//! operands cannot be shared across the three matmuls. The two
 //! operands of a large GEMM quantize on concurrent scoped threads,
 //! and each operand is additionally row-band-parallel inside the
 //! fused core — the band budget splits across the concurrent pair so
@@ -44,14 +58,16 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use anyhow::{bail, ensure, Result};
 
 use crate::hadamard;
 use crate::kernels::quant;
-use crate::kernels::scratch::{take_uninit, Scratch};
+use crate::kernels::scratch::{take_bytes_uninit, take_uninit, Scratch, ScratchBytes};
 use crate::kernels::threads::{threads_for, threads_for_quant};
-use crate::kernels::{gemm_ab, gemm_abt, gemm_atb, transpose_into};
+use crate::kernels::{gemm_ab, gemm_abt, gemm_atb, qgemm_pp, transpose_into, PackedOp};
 use crate::util::rng::Rng;
 use crate::{GROUP, ROT_BLOCK};
 
@@ -67,6 +83,10 @@ pub enum QuantMode {
     Sr,
     /// RHT + MS-EDEN on both operands of every matmul (Quartet II).
     MsEden,
+    /// NVIDIA-recipe square-block weights: deterministic 16x16
+    /// square-scale RTN on the weight operand (forward and grad-input
+    /// reuse the same transposable estimate), Q_SR elsewhere.
+    SrSquareW,
 }
 
 impl QuantMode {
@@ -77,8 +97,9 @@ impl QuantMode {
             "f32" | "fp32" | "bf16" => QuantMode::F32,
             "sr" | "nvfp4_sr" | "nvidia" => QuantMode::Sr,
             "quartet2" | "mseden" | "ms_eden" => QuantMode::MsEden,
+            "nvidia_square" | "sr_square" | "square" => QuantMode::SrSquareW,
             other => bail!(
-                "unknown native scheme {other:?} (available: f32 sr quartet2)"
+                "unknown native scheme {other:?} (available: f32 sr quartet2 nvidia_square)"
             ),
         })
     }
@@ -86,11 +107,12 @@ impl QuantMode {
     /// Quantization grain of the GEMM inner dimension: matmuls whose
     /// inner dim is not a multiple of this fall back to the f32 path
     /// (0 = unconstrained). MS-EDEN needs whole rotation blocks, SR
+    /// (and the square-weight variant, whose activations are SR)
     /// whole scale groups.
     pub fn grain(self) -> usize {
         match self {
             QuantMode::F32 => 0,
-            QuantMode::Sr => GROUP,
+            QuantMode::Sr | QuantMode::SrSquareW => GROUP,
             QuantMode::MsEden => ROT_BLOCK,
         }
     }
@@ -104,6 +126,75 @@ impl QuantMode {
         } else {
             self
         }
+    }
+}
+
+/// Which execution path the quantized GEMMs take.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmPath {
+    /// Quantize each operand straight to packed NVFP4 (4-bit code
+    /// pairs + E4M3 scale bytes in pooled byte scratch) and contract
+    /// the packed operands on [`crate::kernels::qgemm`] — the default
+    /// hot path; no dequantized estimate is ever materialized.
+    Packed,
+    /// Materialize both dequantized f32 estimates in pooled scratch
+    /// and run the f32 GEMM — the retained parity reference. Bitwise
+    /// identical to [`GemmPath::Packed`] for SR / MS-EDEN (see
+    /// [`crate::kernels::qgemm`] docs), so for those modes flipping
+    /// the path changes performance, not numerics. The square-RTN
+    /// weight estimate of [`QuantMode::SrSquareW`] agrees only up to
+    /// one f32 rounding per element (its estimate mirrors
+    /// `quantize_rtn(square).dequant()`'s `(v * sc) * gscale` product
+    /// order, while packed decode shares the standard
+    /// `v * (sc * gscale)` order).
+    Dequant,
+}
+
+/// Programmatic [`GemmPath`] override: 0 = defer to env/default,
+/// 1 = packed, 2 = dequant.
+static GEMM_PATH_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// `QUARTET2_GEMM_PATH` (`packed` / `dequant`), read once. An
+/// unrecognized value falls back to the default like the thread-policy
+/// envs do, but loudly — a silent fallback would corrupt packed-vs-
+/// dequant A/B runs.
+fn env_gemm_path() -> Option<GemmPath> {
+    static ENV: OnceLock<Option<GemmPath>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        match std::env::var("QUARTET2_GEMM_PATH").ok().as_deref() {
+            Some("dequant") => Some(GemmPath::Dequant),
+            Some("packed") => Some(GemmPath::Packed),
+            Some(other) => {
+                eprintln!(
+                    "warning: QUARTET2_GEMM_PATH={other:?} not recognized \
+                     (want packed|dequant); using the default"
+                );
+                None
+            }
+            None => None,
+        }
+    })
+}
+
+/// Install a process-wide [`GemmPath`] override (`None` restores the
+/// env/default resolution). Intended for the benches' packed-vs-
+/// dequant A/B and the `--gemm-path` CLI flag.
+pub fn set_gemm_path(path: Option<GemmPath>) {
+    let v = match path {
+        None => 0,
+        Some(GemmPath::Packed) => 1,
+        Some(GemmPath::Dequant) => 2,
+    };
+    GEMM_PATH_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The [`GemmPath`] in effect: programmatic override, else
+/// `QUARTET2_GEMM_PATH`, else [`GemmPath::Packed`].
+pub fn gemm_path() -> GemmPath {
+    match GEMM_PATH_OVERRIDE.load(Ordering::Relaxed) {
+        1 => GemmPath::Packed,
+        2 => GemmPath::Dequant,
+        _ => env_gemm_path().unwrap_or(GemmPath::Packed),
     }
 }
 
@@ -127,12 +218,54 @@ impl View<'_> {
     }
 }
 
-/// Write the dequantized `mode`-estimate of `view` (logical
-/// `[rows, k]`) into `out`, row-major. For [`View::Trans`] the
-/// contiguous gather the quantizer's grouping requires happens here,
-/// into the same pooled buffer. `signs` are the pair-shared RHT signs
-/// (MS-EDEN only). Never called in f32 mode — [`qmatmul_view`]
-/// dispatches that to the transpose-free kernels first.
+/// How one GEMM operand quantizes under the effective mode: the
+/// stochastic per-operand variants, or the deterministic square-scale
+/// RTN the [`QuantMode::SrSquareW`] *weight* operand takes.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum OpQuant {
+    F32,
+    Sr,
+    MsEden,
+    /// 16x16 square-scale RTN (transpose-reusable: the gathered `wᵀ`
+    /// quantizes to exactly the transposed estimate of `w`, block
+    /// scales included, so forward and grad-input agree on the weight).
+    SquareRtn,
+}
+
+/// Per-operand quantizer for the effective mode. `is_weight` marks the
+/// linear layer's weight-side operand; square blocks additionally need
+/// a 16-aligned row count (misaligned weight operands fall back to SR,
+/// keeping the GEMM fully quantized).
+fn operand_quant(eff: QuantMode, is_weight: bool, rows: usize) -> OpQuant {
+    match eff {
+        QuantMode::F32 => OpQuant::F32,
+        QuantMode::Sr => OpQuant::Sr,
+        QuantMode::MsEden => OpQuant::MsEden,
+        QuantMode::SrSquareW => {
+            if is_weight && rows % GROUP == 0 {
+                OpQuant::SquareRtn
+            } else {
+                OpQuant::Sr
+            }
+        }
+    }
+}
+
+/// Whether quantizing `view` needs the pooled f32 staging buffer:
+/// transposed views gather into it, and MS-EDEN rotates in place. SR
+/// and square-RTN row-major operands quantize (or pack) straight from
+/// the stored buffer.
+fn needs_stage(view: View<'_>, q: OpQuant) -> bool {
+    matches!(view, View::Trans(_)) || q == OpQuant::MsEden
+}
+
+/// Write the dequantized estimate of `view` (logical `[rows, k]`)
+/// into `out`, row-major — the [`GemmPath::Dequant`] parity-reference
+/// formulation. For [`View::Trans`] the contiguous gather the
+/// quantizer's grouping requires happens here, into the same pooled
+/// buffer. `signs` are the pair-shared RHT signs (MS-EDEN only).
+/// Never called in f32 mode — [`qmatmul_view`] dispatches that to the
+/// transpose-free kernels first.
 ///
 /// Quantization runs on the fused row-band-parallel core
 /// ([`crate::kernels::quant`]): two streaming passes rewrite `out` in
@@ -148,7 +281,7 @@ fn quantize_estimate_into(
     view: View<'_>,
     rows: usize,
     k: usize,
-    mode: QuantMode,
+    q: OpQuant,
     signs: Option<&[f32]>,
     rng: Rng,
     threads: usize,
@@ -159,21 +292,82 @@ fn quantize_estimate_into(
         View::Rows(s) => out.copy_from_slice(s),
         View::Trans(s) => transpose_into(s, k, rows, out),
     }
-    match mode {
-        QuantMode::F32 => Ok(()),
-        QuantMode::Sr => quant::sr_estimate_threads(out, rows, k, &rng, threads),
-        QuantMode::MsEden => {
+    match q {
+        OpQuant::F32 => Ok(()),
+        OpQuant::Sr => quant::sr_estimate_threads(out, rows, k, &rng, threads),
+        OpQuant::MsEden => {
             let signs = signs.expect("MS-EDEN quantization needs shared signs");
             quant::ms_eden_estimate_threads(out, rows, k, signs, &rng, threads)
+        }
+        OpQuant::SquareRtn => {
+            quant::rtn_square_estimate_threads(out, rows, k, false, threads)
+        }
+    }
+}
+
+/// Quantize `view` (logical `[rows, k]`) **straight to the packed
+/// representation**: 4-bit code pairs into `codes`, E4M3 scale bytes
+/// into `scales`, returning the per-tensor global scale — the
+/// [`GemmPath::Packed`] hot path. `stage` is the pooled f32 staging a
+/// transposed gather or the MS-EDEN rotation needs (sized 0 when
+/// [`needs_stage`] says neither applies — SR / square row-major
+/// operands pack with zero f32 staging). Packed output decodes to the
+/// estimate [`quantize_estimate_into`] writes bit-for-bit (SR /
+/// MS-EDEN; square agrees up to one f32 rounding in the scale
+/// product), with the same worker-count invariance.
+#[allow(clippy::too_many_arguments)]
+fn quantize_pack_into(
+    view: View<'_>,
+    rows: usize,
+    k: usize,
+    q: OpQuant,
+    signs: Option<&[f32]>,
+    rng: Rng,
+    threads: usize,
+    stage: &mut [f32],
+    codes: &mut [u8],
+    scales: &mut [u8],
+) -> Result<f32> {
+    match q {
+        OpQuant::F32 => unreachable!("packed path never quantizes f32 operands"),
+        OpQuant::MsEden => {
+            let stage = &mut stage[..rows * k];
+            match view {
+                View::Rows(s) => stage.copy_from_slice(s),
+                View::Trans(s) => transpose_into(s, k, rows, stage),
+            }
+            let signs = signs.expect("MS-EDEN quantization needs shared signs");
+            quant::ms_eden_pack_threads(
+                stage, rows, k, false, signs, &rng, codes, scales, threads,
+            )
+        }
+        OpQuant::Sr | OpQuant::SquareRtn => {
+            let src: &[f32] = match view {
+                View::Rows(s) => s,
+                View::Trans(s) => {
+                    let stage = &mut stage[..rows * k];
+                    transpose_into(s, k, rows, stage);
+                    stage
+                }
+            };
+            if q == OpQuant::Sr {
+                quant::sr_pack_threads(src, rows, k, &rng, codes, scales, threads)
+            } else {
+                quant::rtn_square_pack_threads(src, rows, k, false, codes, scales, threads)
+            }
         }
     }
 }
 
 /// `y[m, n] += A[m, k] @ B[n, k]^T` with both operands quantized along
 /// `k` according to `mode`, each operand entering via a [`View`] of
-/// its stored buffer. The randomness split mirrors the paper's
-/// (ω_RHT, ω_SR): one sign stream shared by the pair (fold 1),
-/// independent SR streams per operand (folds 2 and 3).
+/// its stored buffer; `b_weight` marks B as the linear layer's weight
+/// operand (only [`QuantMode::SrSquareW`] distinguishes it). The
+/// randomness split mirrors the paper's (ω_RHT, ω_SR): one sign stream
+/// shared by the pair (fold 1), independent SR streams per operand
+/// (folds 2 and 3). The GEMM itself runs per [`gemm_path`]: packed
+/// contraction by default, the dequant-f32 formulation as the retained
+/// parity reference.
 #[allow(clippy::too_many_arguments)]
 fn qmatmul_view(
     a: View<'_>,
@@ -182,6 +376,7 @@ fn qmatmul_view(
     n: usize,
     k: usize,
     mode: QuantMode,
+    b_weight: bool,
     rng: &Rng,
     y: &mut [f32],
 ) -> Result<()> {
@@ -208,8 +403,8 @@ fn qmatmul_view(
     };
     let signs = signs.as_deref();
     let (rng_a, rng_b) = (rng.fold_in(2), rng.fold_in(3));
-    let mut qa: Scratch = take_uninit(m * k);
-    let mut qb: Scratch = take_uninit(n * k);
+    let qa_kind = operand_quant(eff, false, m);
+    let qb_kind = operand_quant(eff, b_weight, n);
     let overlap = threads_for(m * n * k, 2) >= 2;
     // per-operand band budget: split (ceil for A, floor-but-one for B)
     // when the pair quantizes concurrently so the overlap stays within
@@ -223,27 +418,63 @@ fn qmatmul_view(
             (fa, fb)
         }
     };
-    if overlap {
-        // the two operands quantize independently (separate rng
-        // streams, shared signs) — overlap them on scoped threads
-        let (qa_s, qb_s) = (&mut qa[..], &mut qb[..]);
-        std::thread::scope(|s| {
-            let ha =
-                s.spawn(move || quantize_estimate_into(a, m, k, eff, signs, rng_a, ta, qa_s));
-            let rb = quantize_estimate_into(b, n, k, eff, signs, rng_b, tb, qb_s);
-            ha.join().expect("quantizer worker panicked").and(rb)
-        })?;
-    } else {
-        quantize_estimate_into(a, m, k, eff, signs, rng_a, ta, &mut qa)?;
-        quantize_estimate_into(b, n, k, eff, signs, rng_b, tb, &mut qb)?;
+    if gemm_path() == GemmPath::Dequant {
+        let mut qa: Scratch = take_uninit(m * k);
+        let mut qb: Scratch = take_uninit(n * k);
+        if overlap {
+            // the two operands quantize independently (separate rng
+            // streams, shared signs) — overlap them on scoped threads
+            let (qa_s, qb_s) = (&mut qa[..], &mut qb[..]);
+            std::thread::scope(|s| {
+                let ha = s.spawn(move || {
+                    quantize_estimate_into(a, m, k, qa_kind, signs, rng_a, ta, qa_s)
+                });
+                let rb = quantize_estimate_into(b, n, k, qb_kind, signs, rng_b, tb, qb_s);
+                ha.join().expect("quantizer worker panicked").and(rb)
+            })?;
+        } else {
+            quantize_estimate_into(a, m, k, qa_kind, signs, rng_a, ta, &mut qa)?;
+            quantize_estimate_into(b, n, k, qb_kind, signs, rng_b, tb, &mut qb)?;
+        }
+        return gemm_abt(&qa, m, &qb, n, k, y);
     }
-    gemm_abt(&qa, m, &qb, n, k, y)
+
+    // packed hot path: quantize-to-packed into pooled byte scratch
+    // (f32 staging only where the gather/rotation demands it), then
+    // contract the 4-bit codes + byte scales directly
+    let mut sa: Scratch = take_uninit(if needs_stage(a, qa_kind) { m * k } else { 0 });
+    let mut sb: Scratch = take_uninit(if needs_stage(b, qb_kind) { n * k } else { 0 });
+    let mut ca: ScratchBytes = take_bytes_uninit(m * k / 2);
+    let mut sca: ScratchBytes = take_bytes_uninit(m * k / GROUP);
+    let mut cb: ScratchBytes = take_bytes_uninit(n * k / 2);
+    let mut scb: ScratchBytes = take_bytes_uninit(n * k / GROUP);
+    let (ga, gb) = if overlap {
+        let (sa_s, ca_s, sca_s) = (&mut sa[..], &mut ca[..], &mut sca[..]);
+        let (sb_s, cb_s, scb_s) = (&mut sb[..], &mut cb[..], &mut scb[..]);
+        let (ra, rb) = std::thread::scope(|s| {
+            let ha = s.spawn(move || {
+                quantize_pack_into(a, m, k, qa_kind, signs, rng_a, ta, sa_s, ca_s, sca_s)
+            });
+            let rb = quantize_pack_into(b, n, k, qb_kind, signs, rng_b, tb, sb_s, cb_s, scb_s);
+            (ha.join().expect("quantizer worker panicked"), rb)
+        });
+        (ra?, rb?)
+    } else {
+        (
+            quantize_pack_into(a, m, k, qa_kind, signs, rng_a, ta, &mut sa, &mut ca, &mut sca)?,
+            quantize_pack_into(b, n, k, qb_kind, signs, rng_b, tb, &mut sb, &mut cb, &mut scb)?,
+        )
+    };
+    let aop = PackedOp { codes: &ca[..], scales: &sca[..], gscale: ga, rows: m, cols: k };
+    let bop = PackedOp { codes: &cb[..], scales: &scb[..], gscale: gb, rows: n, cols: k };
+    qgemm_pp(&aop, &bop, y)
 }
 
 /// `y[m, n] = a[m, k] @ b[n, k]^T` with both operands quantized along
 /// `k` according to `mode` (the row-major entry point; the backward's
 /// transposed operands go through the [`View`] machinery inside
-/// [`linear`] instead).
+/// [`linear`] instead). `b` is treated as the weight-side operand, as
+/// in the forward pass.
 pub fn qmatmul(
     a: &[f32],
     m: usize,
@@ -254,7 +485,7 @@ pub fn qmatmul(
     rng: &Rng,
 ) -> Result<Vec<f32>> {
     let mut y = vec![0.0f32; m * n];
-    qmatmul_view(View::Rows(a), m, View::Rows(b), n, k, mode, rng, &mut y)?;
+    qmatmul_view(View::Rows(a), m, View::Rows(b), n, k, mode, true, rng, &mut y)?;
     Ok(y)
 }
 
@@ -285,6 +516,7 @@ pub fn linear(
         n,
         k,
         mode,
+        true,
         &rng.fold_in(10),
         &mut y,
     )?;
@@ -304,6 +536,7 @@ pub fn linear(
             k,
             n,
             mode,
+            true,
             &dx_rng,
             &mut dx,
         )
@@ -312,7 +545,9 @@ pub fn linear(
     });
     let vjp_w = Box::new(move |g: &Tensor| {
         // dw[n, k] = dy^T[n, t] @ x[t, k] — inner dim t; both operands
-        // enter as views of their stored buffers
+        // enter as views of their stored buffers (neither is the
+        // weight: SrSquareW quantizes both with SR, as the recipe
+        // prescribes for gradients and activations)
         let mut dw = vec![0.0f32; n * k];
         qmatmul_view(
             View::Trans(&g.data),
@@ -321,6 +556,7 @@ pub fn linear(
             k,
             t,
             mode,
+            false,
             &dw_rng,
             &mut dw,
         )
@@ -1019,6 +1255,31 @@ mod tests {
         let q = qmatmul(&a2, 4, &b2, 8, 24, QuantMode::MsEden, &rng).unwrap();
         let e = qmatmul(&a2, 4, &b2, 8, 24, QuantMode::F32, &rng).unwrap();
         assert_eq!(q, e);
+    }
+
+    #[test]
+    fn sr_square_mode_quantizes_and_trains() {
+        // 32-dim everywhere: aligned to the 16-grain, so the weight
+        // takes the square-scale RTN path and activations take SR
+        let x = randn(&[32, 32], 200);
+        let w = randn(&[32, 32], 201);
+        let rng = Rng::seed_from(202);
+        let exact = qmatmul(&x.data, 32, &w.data, 32, 32, QuantMode::F32, &rng).unwrap();
+        let q = qmatmul(&x.data, 32, &w.data, 32, 32, QuantMode::SrSquareW, &rng).unwrap();
+        let rel = rel_l2(&q, &exact);
+        assert!(rel > 0.0 && rel < 0.6, "SrSquareW rel err {rel}");
+        // full linear backward: runs on all three matmuls, finite grads
+        let mut tape = Tape::new();
+        let (xi, wi) = (tape.leaf(x.clone()), tape.leaf(w.clone()));
+        let y = linear(&mut tape, xi, wi, QuantMode::SrSquareW, &rng).unwrap();
+        let loss = sum_loss(&mut tape, y);
+        let mut g = tape.backward(loss).unwrap();
+        let dx = g.take(xi).unwrap();
+        let dw = g.take(wi).unwrap();
+        assert!(dx.data.iter().chain(dw.data.iter()).all(|v| v.is_finite()));
+        // scheme-name wiring
+        assert_eq!(QuantMode::parse("nvidia_square").unwrap(), QuantMode::SrSquareW);
+        assert_eq!(QuantMode::SrSquareW.grain(), GROUP);
     }
 
     #[test]

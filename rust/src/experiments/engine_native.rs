@@ -1,7 +1,9 @@
 //! `train-native` experiment: the paper's central A/B on the native
 //! engine — identical runs (preset, seed, data order) under the f32
-//! reference, SR-quantized (prior-work baseline), and MS-EDEN-quantized
-//! (Quartet II) training schemes, reporting final-loss gaps vs f32.
+//! reference, SR-quantized (prior-work baseline), square-scale-weight
+//! `nvidia_square` (NVIDIA-recipe 16x16-block weights), and
+//! MS-EDEN-quantized (Quartet II) training schemes, reporting
+//! final-loss gaps vs f32.
 //!
 //! This is the Figure 4 story without XLA: if MS-EDEN's lower-MSE
 //! unbiased gradient estimator is doing its job, its gap to the f32
@@ -64,7 +66,8 @@ pub fn run_native_scheme(env: &Env, scheme: &str) -> Result<LossCurve> {
     Ok(curve)
 }
 
-/// The full A/B: f32 vs SR vs MS-EDEN curves + gap table.
+/// The full A/B: f32 vs SR vs square-weight vs MS-EDEN curves + gap
+/// table.
 pub fn train_native(env: &Env) -> Result<()> {
     let base = run_native_scheme(env, "f32")?;
     let base_loss = base
@@ -83,7 +86,7 @@ pub fn train_native(env: &Env) -> Result<()> {
         base.tail_train_loss(5)
     );
     let mut rows = vec![("f32".to_string(), base_loss, 0.0, base.tail_train_loss(5))];
-    for scheme in ["sr", "quartet2"] {
+    for scheme in ["sr", "nvidia_square", "quartet2"] {
         let curve = run_native_scheme(env, scheme)?;
         let loss = curve.final_val_loss().unwrap_or(f64::NAN);
         let gap = loss - base_loss;

@@ -33,19 +33,25 @@ use super::threads::{par_row_chunks, threads_for};
 const UNROLL: usize = 8;
 
 /// Column block of [`gemm_abt`]: B-panel rows held hot across a band.
-const NB: usize = 64;
+/// Shared with the packed-operand kernel ([`super::qgemm`]), whose
+/// per-element accumulation order must match this kernel's exactly.
+pub(crate) const NB: usize = 64;
 
 /// K block of [`gemm_abt`]: the `NB x KB` f32 B panel is 64 KiB.
-const KB: usize = 256;
+/// Shared with [`super::qgemm`] for the same order-parity reason.
+pub(crate) const KB: usize = 256;
 
 /// Output-row block of the axpy kernels ([`gemm_ab`], [`gemm_atb`]):
 /// `MB` y-rows stay in L1 while one B row streams past them.
 const MB: usize = 8;
 
 /// 8-lane unrolled dot product (tree-reduced tail), the inner kernel
-/// of [`gemm_abt`].
+/// of [`gemm_abt`] — also the inner kernel of the packed-operand GEMM
+/// ([`super::qgemm`]), which contracts decoded panels through this
+/// exact function so packed output is bitwise identical to the
+/// dequantize-then-[`gemm_abt`] reference.
 #[inline]
-fn dot8(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dot8(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let ac = a.chunks_exact(UNROLL);
     let bc = b.chunks_exact(UNROLL);

@@ -28,12 +28,22 @@
 //!   per-step allocation churn of the training loop.
 //! * [`quant`] — the fused, allocation-free, row-band-parallel NVFP4
 //!   quantizer core (MS-EDEN naive + post hoc, Q_SR, deterministic
-//!   RTN + pack): two streaming passes per operand instead of the old
-//!   ~6-pass `formats` chain, counter-based per-group randomness so
-//!   parallel output is bitwise identical to serial, and direct
-//!   packed-code emission for the serving weight path.
+//!   RTN 1x16 and 16x16-square): two streaming passes per operand
+//!   instead of the old ~6-pass `formats` chain, counter-based
+//!   per-group randomness so parallel output is bitwise identical to
+//!   serial, and direct packed-code + E4M3-scale-byte emission for
+//!   **every** variant — the packed-GEMM training path and the serving
+//!   weight path quantize straight into pooled byte scratch.
+//! * [`qgemm`] — the packed-operand NVFP4 GEMM family: packed x packed
+//!   (`qgemm_pp`, the training kernel behind all three linear-layer
+//!   orientations, bitwise identical to dequantize-then-`gemm_abt`)
+//!   and f32 x packed (`qgemm_fp`, the serving specialization), both
+//!   contracting `(sa·sb) · dot16(codesA, codesB)` per 16-group
+//!   through the shared byte→pair LUT with no f32 operand
+//!   materialization.
 
 pub mod gemm;
+pub mod qgemm;
 pub mod quant;
 pub mod scratch;
 pub mod threads;
@@ -42,7 +52,11 @@ pub use gemm::{
     gemm_ab, gemm_ab_threads, gemm_abt, gemm_abt_threads, gemm_atb,
     gemm_atb_threads, transpose_into,
 };
-pub use scratch::{take_uninit, take_zeroed, Scratch};
+pub use qgemm::{
+    qgemm_fp, qgemm_fp_reference, qgemm_fp_threads, qgemm_pp,
+    qgemm_pp_reference, qgemm_pp_threads, PackedOp, FP4_PAIR_LUT,
+};
+pub use scratch::{take_bytes_uninit, take_uninit, take_zeroed, Scratch, ScratchBytes};
 pub use threads::{
     pinned_threads, set_threads, threads_for, threads_for_quant,
     PAR_MIN_MACS, PAR_MIN_QUANT_ELEMS,

@@ -1,0 +1,506 @@
+//! Packed-operand NVFP4 GEMM core: contract 4-bit code pairs + E4M3
+//! byte scales directly, shared by training and serving.
+//!
+//! Until this module existed the crate had the packed *format* (the
+//! fused quantizer emits codes + scale bytes, `serve::packed` stores
+//! them) but only one consumer that computed on it — the serving
+//! weight path. Training quantized both operands of every GEMM and
+//! then **dequantized them into full f32 scratch** so the f32 kernels
+//! could run, moving 8x the bytes the format requires. This module is
+//! the GEMM family that consumes the packed representation on both
+//! sides:
+//!
+//! * [`qgemm_pp_threads`] — packed x packed `y[m,n] += A · Bᵀ`, the
+//!   training kernel behind all three linear-layer matmuls (forward
+//!   `x·wᵀ`, grad-input `dy·w`, grad-weight `dyᵀ·x`: each GEMM
+//!   quantizes along its own inner dimension, so after
+//!   quantize-to-packed every orientation contracts as `A[m,K]·B[n,K]ᵀ`
+//!   over group-aligned K — the backward's transposed views gather
+//!   once into pooled scratch inside `engine::ops`, exactly as the
+//!   dequant path did, and then stay packed).
+//! * [`qgemm_fp_threads`] — f32 activations x packed weights, the
+//!   serving specialization (`serve::qgemm` is now a thin wrapper).
+//!
+//! **Contraction scheme** (both kernels): each 16-element group
+//! contributes `(sa · sb) · dot16(codesA, codesB)` with the E4M3 group
+//! scales folded into small decoded panels — one [`FP4_PAIR_LUT`]
+//! lookup per packed byte, one `e4m3_decode` per group — accumulating
+//! in f32. The full f32 operand matrices are never materialized: the
+//! packed kernel stages at most a [`NB`]`x`[`KB`] B panel and an
+//! [`MBQ`]`x`[`KB`] A tile (L1/L2-resident, from the thread-local
+//! scratch pool), so steady-state operand traffic is the packed bytes
+//! (`0.5625`/element vs `4` for the dequant path, ~7x less).
+//!
+//! **Bitwise parity.** The packed kernel deliberately replicates
+//! [`super::gemm::gemm_abt`]'s blocking ([`KB`]/[`NB`]) and inner
+//! [`dot8`] kernel, and panel decode reproduces the dequantized
+//! estimate bit-for-bit (`FP4_CODE_LUT[code] * (e4m3_decode(scale) *
+//! gscale)` — the exact product the fused quantizer's estimate mode
+//! writes). Every output element therefore sees the identical
+//! accumulation order, and `qgemm_pp` output is **bitwise identical**
+//! to dequantize-then-`gemm_abt` — which keeps the engine's retained
+//! dequant path (`QUARTET2_GEMM_PATH=dequant`) a true parity seam
+//! rather than an approximate reference (locked in by
+//! `tests/qgemm_packed.rs`).
+//!
+//! **Parallelism** rides the crate-wide policy ([`super::threads`]):
+//! the packed kernel splits *output rows* into contiguous bands
+//! (parallel bitwise identical to serial, any worker count); the mixed
+//! serving kernel keeps its weight-row partition with disjoint column
+//! tiles summed after the join (bitwise identical for a zeroed `y`),
+//! because decode-time micro-batches have too few activation rows to
+//! split.
+
+use anyhow::{bail, Result};
+
+use crate::formats::fp4::FP4_CODE_LUT;
+use crate::formats::fp8::e4m3_decode;
+use crate::GROUP;
+
+use super::gemm::{dot8, gemm_abt, KB, NB};
+use super::scratch::take_uninit;
+use super::threads::{run_ranges, threads_for};
+
+/// 256-entry byte -> `[low nibble, high nibble]` FP4 pair-decode
+/// table: each packed byte costs **one** lookup instead of two
+/// [`FP4_CODE_LUT`] nibble lookups. Entries are exactly the per-nibble
+/// values, so the widened decode stays bitwise identical to the
+/// per-nibble path. Promoted here from `serve::qgemm` so serving and
+/// training share one table.
+pub const FP4_PAIR_LUT: [[f32; 2]; 256] = build_pair_lut();
+
+/// Builds [`FP4_PAIR_LUT`] (const-evaluated).
+pub const fn build_pair_lut() -> [[f32; 2]; 256] {
+    let mut t = [[0.0f32; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [FP4_CODE_LUT[b & 0xF], FP4_CODE_LUT[b >> 4]];
+        b += 1;
+    }
+    t
+}
+
+/// Decoded-A-tile rows of the packed kernel: bounds the only f32
+/// staging the A operand ever gets (an `MBQ x KB` tile, 32 KiB).
+const MBQ: usize = 32;
+
+/// Activation-row tile of the mixed (serving) kernel: rows of `x`
+/// processed per weight traversal, so each weight group is unpacked
+/// once per tile.
+const M_TILE: usize = 16;
+
+/// A borrowed packed-NVFP4 GEMM operand: logical `[rows, cols]`
+/// row-major, FP4 codes two per byte (low nibble first), one
+/// E4M3-encoded scale byte per [`GROUP`]-element group along `cols`
+/// (the contraction dimension), and a global f32 scale.
+///
+/// This is a *view*: training stages operands in pooled scratch
+/// buffers, serving borrows from a [`crate::serve::PackedTensor`]
+/// (`as_op`). Square-16x16-scale weights fit the same layout with
+/// their block scale byte replicated across the 16 rows it covers.
+#[derive(Clone, Copy)]
+pub struct PackedOp<'a> {
+    pub codes: &'a [u8],
+    pub scales: &'a [u8],
+    pub gscale: f32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl PackedOp<'_> {
+    fn validate(&self, name: &str) -> Result<()> {
+        let numel = self.rows * self.cols;
+        if self.cols == 0 || self.cols % GROUP != 0 {
+            bail!("{name}: cols={} not a positive multiple of {GROUP}", self.cols);
+        }
+        if self.codes.len() != numel / 2 {
+            bail!("{name}: {} code bytes, want {}", self.codes.len(), numel / 2);
+        }
+        if self.scales.len() != numel / GROUP {
+            bail!(
+                "{name}: {} scale bytes, want {}",
+                self.scales.len(),
+                numel / GROUP
+            );
+        }
+        Ok(())
+    }
+
+    /// Dequantized scale of group `g` (E4M3 byte x global scale).
+    #[inline]
+    pub fn group_scale(&self, g: usize) -> f32 {
+        e4m3_decode(self.scales[g]) * self.gscale
+    }
+
+    /// Decode rows `[r0, r1)`, columns `[k0, k1)` (group-aligned) into
+    /// `out` (row-major, `k1 - k0` wide). Per-element arithmetic is
+    /// exactly the dequantized-estimate product (`value * (scale *
+    /// gscale)`), so decoded panels equal the corresponding slices of
+    /// [`PackedOp::dequant`] bit-for-bit.
+    fn decode_panel(&self, r0: usize, r1: usize, k0: usize, k1: usize, out: &mut [f32]) {
+        debug_assert!(k0 % GROUP == 0 && k1 % GROUP == 0);
+        let gpr = self.cols / GROUP;
+        let (g0, g1) = (k0 / GROUP, k1 / GROUP);
+        let kw = k1 - k0;
+        debug_assert_eq!(out.len(), (r1 - r0) * kw);
+        for r in r0..r1 {
+            let orow = &mut out[(r - r0) * kw..(r - r0 + 1) * kw];
+            for g in g0..g1 {
+                let gid = r * gpr + g;
+                let s = self.group_scale(gid);
+                let base = gid * (GROUP / 2);
+                let og = &mut orow[(g - g0) * GROUP..(g - g0 + 1) * GROUP];
+                for (pair, &byte) in og
+                    .chunks_exact_mut(2)
+                    .zip(&self.codes[base..base + GROUP / 2])
+                {
+                    let [lo, hi] = FP4_PAIR_LUT[byte as usize];
+                    pair[0] = lo * s;
+                    pair[1] = hi * s;
+                }
+            }
+        }
+    }
+
+    /// Reconstruct the full f32 operand (reference/test path — the
+    /// GEMM kernels never materialize this).
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        self.decode_panel(0, self.rows, 0, self.cols, &mut out);
+        out
+    }
+}
+
+// ------------------------------------------------ packed x packed
+
+/// Serial packed x packed kernel over the output-row band `[r0, r1)`;
+/// `band` is that band of `y` (width `n`), `bpanel` / `atile` the
+/// caller-provided [`NB`]`*`[`KB`] / [`MBQ`]`*`[`KB`] decode panels.
+/// Blocking mirrors `gemm::abt_band` — k-blocks of [`KB`] outermost,
+/// [`NB`]-row B panels, one [`dot8`] per `(i, j, k-block)` — so each
+/// output element's accumulation order is identical to the f32
+/// kernel's on the dequantized operands. B panels decode once per
+/// `(k0, j0)` and serve the whole band; A tiles decode once per
+/// `(k0, j0, i0)` ([`MBQ`] rows), a `1/NB` fraction of the MAC count.
+#[allow(clippy::too_many_arguments)]
+fn pp_band(
+    a: &PackedOp,
+    r0: usize,
+    r1: usize,
+    b: &PackedOp,
+    n: usize,
+    k: usize,
+    band: &mut [f32],
+    bpanel: &mut [f32],
+    atile: &mut [f32],
+) {
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        let kw = k1 - k0;
+        for j0 in (0..n).step_by(NB) {
+            let j1 = (j0 + NB).min(n);
+            b.decode_panel(j0, j1, k0, k1, &mut bpanel[..(j1 - j0) * kw]);
+            for i0 in (r0..r1).step_by(MBQ) {
+                let i1 = (i0 + MBQ).min(r1);
+                a.decode_panel(i0, i1, k0, k1, &mut atile[..(i1 - i0) * kw]);
+                for i in i0..i1 {
+                    let arow = &atile[(i - i0) * kw..(i - i0 + 1) * kw];
+                    let yrow = &mut band[(i - r0) * n..(i - r0 + 1) * n];
+                    for j in j0..j1 {
+                        yrow[j] += dot8(arow, &bpanel[(j - j0) * kw..(j - j0 + 1) * kw]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `y[m,n] += A[m,k] · B[n,k]ᵀ` with **both** operands packed NVFP4,
+/// contracted per 16-group as `(sa·sb) · dot16(codesA, codesB)` in
+/// f32, under the auto thread policy. Output is bitwise identical to
+/// `gemm_abt(A.dequant(), B.dequant())` and invariant to the worker
+/// count.
+pub fn qgemm_pp(a: &PackedOp, b: &PackedOp, y: &mut [f32]) -> Result<()> {
+    qgemm_pp_threads(a, b, y, threads_for(a.rows * b.rows * a.cols, a.rows))
+}
+
+/// [`qgemm_pp`] with an explicit worker count (`1` forces serial;
+/// bitwise identical for any count). The row-band partition mirrors
+/// [`super::threads::par_row_chunks`]; panel scratch is taken from
+/// (and, after the join, returned to) the **calling** thread's pool —
+/// scoped workers are short-lived, so per-worker thread-local pools
+/// would never amortize.
+pub fn qgemm_pp_threads(a: &PackedOp, b: &PackedOp, y: &mut [f32], threads: usize) -> Result<()> {
+    a.validate("qgemm_pp: a")?;
+    b.validate("qgemm_pp: b")?;
+    let (m, n, k) = (a.rows, b.rows, a.cols);
+    if b.cols != k {
+        bail!("qgemm_pp: inner dims disagree ({k} vs {})", b.cols);
+    }
+    if y.len() != m * n {
+        bail!("qgemm_pp: y has {} elems, want {m}x{n}", y.len());
+    }
+    let threads = threads.clamp(1, m.max(1));
+    if threads < 2 {
+        let mut bpanel = take_uninit(NB * KB);
+        let mut atile = take_uninit(MBQ * KB);
+        pp_band(a, 0, m, b, n, k, y, &mut bpanel, &mut atile);
+        return Ok(());
+    }
+    let chunk = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        let mut rest = y;
+        let mut r0 = 0;
+        while r0 < m {
+            let r1 = (r0 + chunk).min(m);
+            let (band, tail) = rest.split_at_mut((r1 - r0) * n);
+            rest = tail;
+            let mut bpanel = take_uninit(NB * KB);
+            let mut atile = take_uninit(MBQ * KB);
+            handles.push(s.spawn(move || {
+                pp_band(a, r0, r1, b, n, k, band, &mut bpanel, &mut atile);
+                (bpanel, atile)
+            }));
+            r0 = r1;
+        }
+        // joining on the calling thread drops the returned panels
+        // here, handing the buffers back to this thread's pool
+        for h in handles {
+            let _ = h.join().expect("qgemm worker panicked");
+        }
+    });
+    Ok(())
+}
+
+/// Dequantize-both-then-[`gemm_abt`] reference for [`qgemm_pp`]
+/// (bitwise equal to it — the packed kernel replicates the f32
+/// kernel's accumulation order; see module docs).
+pub fn qgemm_pp_reference(a: &PackedOp, b: &PackedOp, y: &mut [f32]) -> Result<()> {
+    a.validate("qgemm_pp_reference: a")?;
+    b.validate("qgemm_pp_reference: b")?;
+    gemm_abt(&a.dequant(), a.rows, &b.dequant(), b.rows, a.cols, y)
+}
+
+// ------------------------------------------------- f32 x packed
+
+/// Serial mixed kernel over weight rows `[r0, r1)`: accumulates into
+/// the column tile `y[i * ystride + (row - r0)]`. Each 16-element
+/// weight group is unpacked and scale-fused **once**, then reused
+/// across all [`M_TILE`] activation rows in the tile (the serving
+/// decode-amortization story; moved here verbatim from
+/// `serve::qgemm`).
+fn fp_rows(
+    x: &[f32],
+    m: usize,
+    w: &PackedOp,
+    r0: usize,
+    r1: usize,
+    y: &mut [f32],
+    ystride: usize,
+) {
+    let k = w.cols;
+    let groups_per_row = k / GROUP;
+    let mut wtile = [0.0f32; GROUP];
+    for i0 in (0..m).step_by(M_TILE) {
+        let i1 = (i0 + M_TILE).min(m);
+        for row in r0..r1 {
+            for g in 0..groups_per_row {
+                let gid = row * groups_per_row + g;
+                let s = w.group_scale(gid);
+                let base = gid * (GROUP / 2);
+                for (j, &b) in w.codes[base..base + GROUP / 2].iter().enumerate() {
+                    let [lo, hi] = FP4_PAIR_LUT[b as usize];
+                    wtile[2 * j] = lo * s;
+                    wtile[2 * j + 1] = hi * s;
+                }
+                let col0 = g * GROUP;
+                for i in i0..i1 {
+                    let xrow = &x[i * k + col0..i * k + col0 + GROUP];
+                    let mut acc = 0.0f32;
+                    for (xv, wv) in xrow.iter().zip(&wtile) {
+                        acc += xv * wv;
+                    }
+                    y[i * ystride + row - r0] += acc;
+                }
+            }
+        }
+    }
+}
+
+/// `y[m, n] += x[m, k] @ Wᵀ` with f32 activations and a packed NVFP4
+/// weight — the mixed-operand specialization serving runs
+/// (`serve::qgemm::qgemm` is a thin wrapper). `y` must be zeroed (or
+/// hold a bias) on entry. Auto thread policy.
+pub fn qgemm_fp(x: &[f32], m: usize, w: &PackedOp, y: &mut [f32]) -> Result<()> {
+    qgemm_fp_threads(x, m, w, y, threads_for(m * w.rows * w.cols, w.rows))
+}
+
+/// [`qgemm_fp`] with an explicit worker count. Large contractions run
+/// parallel over *weight rows* (activation-row counts are tiny at
+/// decode time): each worker produces a disjoint column tile, summed
+/// into `y` after the join — bitwise identical to serial for a zeroed
+/// `y` (same group accumulation order per output element); with a
+/// non-zero `y` the parallel path adds each element's packed product
+/// as one term, which may round differently from the serial
+/// interleaving.
+pub fn qgemm_fp_threads(
+    x: &[f32],
+    m: usize,
+    w: &PackedOp,
+    y: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    w.validate("qgemm_fp: w")?;
+    let (n, k) = (w.rows, w.cols);
+    if x.len() != m * k {
+        bail!("qgemm_fp: x has {} elems, want {m}x{k}", x.len());
+    }
+    if y.len() != m * n {
+        bail!("qgemm_fp: y has {} elems, want {m}x{n}", y.len());
+    }
+    let threads = threads.clamp(1, n.max(1));
+    if threads < 2 {
+        fp_rows(x, m, w, 0, n, y, n);
+        return Ok(());
+    }
+    let tiles = run_ranges(n, threads, |r0, r1| {
+        let mut tile = vec![0.0f32; m * (r1 - r0)];
+        fp_rows(x, m, w, r0, r1, &mut tile, r1 - r0);
+        tile
+    });
+    for (r0, r1, tile) in tiles {
+        let nr = r1 - r0;
+        for i in 0..m {
+            let yrow = &mut y[i * n + r0..i * n + r1];
+            for (yv, tv) in yrow.iter_mut().zip(&tile[i * nr..(i + 1) * nr]) {
+                *yv += tv;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dequantize-then-multiply reference for the mixed kernel: the same
+/// per-group products through the materialized f32 weight matrix
+/// (partial-sum association may differ). The single shared reference
+/// path — `serve::qgemm::qgemm_reference` delegates here.
+pub fn qgemm_fp_reference(x: &[f32], m: usize, w: &PackedOp, y: &mut [f32]) -> Result<()> {
+    w.validate("qgemm_fp_reference: w")?;
+    gemm_abt(x, m, &w.dequant(), w.rows, w.cols, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::fp4::{fp4_decode, fp4_encode};
+    use crate::kernels::quant::rtn_pack;
+    use crate::util::rng::Rng;
+
+    fn pack(rows: usize, cols: usize, seed: u64) -> (Vec<u8>, Vec<u8>, f32) {
+        let x = Rng::seed_from(seed).normal_vec(rows * cols);
+        let mut codes = vec![0u8; rows * cols / 2];
+        let mut scales = vec![0u8; rows * cols / GROUP];
+        let g = rtn_pack(&x, rows, cols, true, &mut codes, &mut scales).unwrap();
+        (codes, scales, g)
+    }
+
+    #[test]
+    fn pair_lut_matches_nibble_lut() {
+        for b in 0usize..256 {
+            let [lo, hi] = FP4_PAIR_LUT[b];
+            assert_eq!(lo.to_bits(), FP4_CODE_LUT[b & 0xF].to_bits(), "byte {b:#x} lo");
+            assert_eq!(hi.to_bits(), FP4_CODE_LUT[b >> 4].to_bits(), "byte {b:#x} hi");
+            assert_eq!(fp4_decode((b & 0xF) as u8).to_bits(), lo.to_bits());
+            if lo != 0.0 {
+                assert_eq!(fp4_encode(lo) as usize, b & 0xF);
+            }
+        }
+    }
+
+    #[test]
+    fn pp_bitwise_matches_dequant_reference() {
+        // the tentpole parity property: packed x packed == dequantize
+        // both + f32 blocked GEMM, bit for bit, across block-boundary
+        // and ragged shapes
+        for (m, n, k, seed) in [
+            (1usize, 1usize, 16usize, 1u64),
+            (5, 13, 48, 2),
+            (13, 67, 128, 3),
+            (33, 65, 272, 4), // crosses the KB=256 k-block boundary
+            (70, 40, 512, 5),
+        ] {
+            let (ac, asb, ag) = pack(m, k, seed * 10);
+            let (bc, bsb, bg) = pack(n, k, seed * 10 + 1);
+            let a = PackedOp { codes: &ac, scales: &asb, gscale: ag, rows: m, cols: k };
+            let b = PackedOp { codes: &bc, scales: &bsb, gscale: bg, rows: n, cols: k };
+            let mut y = vec![0.0f32; m * n];
+            qgemm_pp_threads(&a, &b, &mut y, 1).unwrap();
+            let mut yref = vec![0.0f32; m * n];
+            qgemm_pp_reference(&a, &b, &mut yref).unwrap();
+            assert_eq!(y, yref, "{m}x{n}x{k}");
+        }
+    }
+
+    #[test]
+    fn pp_parallel_matches_serial_bitwise() {
+        let (m, n, k) = (37usize, 67, 272); // ragged rows, k-block tail
+        let (ac, asb, ag) = pack(m, k, 70);
+        let (bc, bsb, bg) = pack(n, k, 71);
+        let a = PackedOp { codes: &ac, scales: &asb, gscale: ag, rows: m, cols: k };
+        let b = PackedOp { codes: &bc, scales: &bsb, gscale: bg, rows: n, cols: k };
+        let mut serial = vec![0.0f32; m * n];
+        qgemm_pp_threads(&a, &b, &mut serial, 1).unwrap();
+        for threads in [2usize, 3, 4, 16, 200] {
+            let mut par = vec![0.0f32; m * n];
+            qgemm_pp_threads(&a, &b, &mut par, threads).unwrap();
+            assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pp_accumulates_into_y() {
+        let (ac, asb, ag) = pack(1, 16, 80);
+        let a = PackedOp { codes: &ac, scales: &asb, gscale: ag, rows: 1, cols: 16 };
+        let mut y = vec![10.0f32];
+        qgemm_pp(&a, &a, &mut y).unwrap();
+        let deq = a.dequant();
+        let want: f32 = 10.0 + deq.iter().map(|v| v * v).sum::<f32>();
+        assert!((y[0] - want).abs() < 1e-3, "y={} want~{want}", y[0]);
+    }
+
+    #[test]
+    fn fp_matches_shared_reference_within_rounding() {
+        let mut rng = Rng::seed_from(90);
+        let (m, n, k) = (5usize, 24, 64);
+        let x = rng.normal_vec(m * k);
+        let (wc, wsb, wg) = pack(n, k, 91);
+        let w = PackedOp { codes: &wc, scales: &wsb, gscale: wg, rows: n, cols: k };
+        let mut y = vec![0.0f32; m * n];
+        qgemm_fp(&x, m, &w, &mut y).unwrap();
+        let mut yref = vec![0.0f32; m * n];
+        qgemm_fp_reference(&x, m, &w, &mut yref).unwrap();
+        let ymax = yref.iter().fold(0.0f32, |a, v| a.max(v.abs())).max(1e-12);
+        for (i, (g, r)) in y.iter().zip(&yref).enumerate() {
+            assert!((g - r).abs() <= 1e-4 * ymax, "elem {i}: {g} vs {r}");
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let (ac, asb, ag) = pack(2, 16, 95);
+        let a = PackedOp { codes: &ac, scales: &asb, gscale: ag, rows: 2, cols: 16 };
+        let mut y = vec![0.0f32; 4];
+        // inner-dim mismatch
+        let b_bad = PackedOp { codes: &ac, scales: &asb, gscale: ag, rows: 1, cols: 32 };
+        assert!(qgemm_pp(&a, &b_bad, &mut y).is_err());
+        // bad y size
+        assert!(qgemm_pp(&a, &a, &mut y[..3]).is_err());
+        // bad x size for the mixed kernel
+        assert!(qgemm_fp(&[0.0; 15], 1, &a, &mut y[..2]).is_err());
+        // inconsistent packed buffers
+        let c_short = &ac[..ac.len() - 1];
+        let bad = PackedOp { codes: c_short, scales: &asb, gscale: ag, rows: 2, cols: 16 };
+        assert!(qgemm_pp(&bad, &a, &mut y).is_err());
+    }
+}

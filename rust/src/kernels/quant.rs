@@ -18,11 +18,22 @@
 //!   codes via the branchless [`fp4::rtn_fp4_code`] comparator, EDEN
 //!   correction factor, and the stochastically rounded E4M3 scale via
 //!   [`fp8::sr_e4m3_fast`] — one streaming read that rewrites the band
-//!   in place with either the on-grid values, the dequantized
-//!   estimate (the training hot path), or packed 4-bit codes (the
-//!   serving pack path). The post hoc ER-NVFP4 variant fits the same
-//!   two passes: extended-range pseudo-scales in pass 2, with the
+//!   in place with either the on-grid values or the dequantized
+//!   estimate, **or emits packed 4-bit code pairs + E4M3 scale bytes**
+//!   (`*_pack_threads`: the packed-GEMM training hot path and the
+//!   serving pack path — every variant can now quantize straight into
+//!   pooled byte scratch, and packed decode reproduces the estimate
+//!   bit-for-bit). The post hoc ER-NVFP4 variant fits the same two
+//!   passes: extended-range pseudo-scales in pass 2, with the
 //!   power-of-two global-scale fix-up fused into the final scale SR.
+//!
+//! Deterministic RTN additionally comes in the 16x16 **square-scale**
+//! flavor ([`rtn_square_pack_threads`] / [`rtn_square_estimate_threads`],
+//! the fused counterpart of `formats::quantize_rtn(square)` — the
+//! NVIDIA-recipe weight path): one E4M3 scale per 16x16 block, banded
+//! over whole block-rows, with the block scale byte replicated across
+//! its 16 rows on packed emission so square weights flow through the
+//! standard packed-GEMM layout unchanged.
 //!
 //! Nothing is heap-allocated here: callers own every buffer (the
 //! engine's live in [`super::scratch`], the `formats` wrappers' in
@@ -48,7 +59,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::formats::fp4::{rtn_fp4_code, sr_fp4_fast, FP4_CODE_LUT, FP4_MAX};
+use crate::formats::fp4::{fp4_encode, rtn_fp4_code, sr_fp4_fast, FP4_CODE_LUT, FP4_MAX};
 use crate::formats::fp8::{e4m3_encode, rtn_e4m3_fast, rtn_e8m3, sr_e4m3_fast};
 use crate::formats::{safe_div, FP8_MAX, RTN_CLIP_SCALE, RTN_SCALE_CAP, SR_BUDGET};
 use crate::hadamard;
@@ -259,6 +270,76 @@ fn check_dims(len: usize, rows: usize, cols: usize, grain: usize) -> Result<()> 
     Ok(())
 }
 
+fn check_pack_bufs(len: usize, codes: &[u8], scales: &[u8]) -> Result<()> {
+    if codes.len() != len / 2 {
+        bail!("need {} code bytes, got {}", len / 2, codes.len());
+    }
+    if scales.len() != len / GROUP {
+        bail!("need {} scale bytes, got {}", len / GROUP, scales.len());
+    }
+    Ok(())
+}
+
+/// MS-EDEN global scale. Naive: free scale; post hoc: next power of
+/// two so the scales-only shift is an exact exponent move (§7).
+fn ms_eden_gscale(absmax: f32, posthoc: bool) -> f32 {
+    if posthoc {
+        if absmax == 0.0 {
+            0.0
+        } else {
+            (absmax / (RTN_CLIP_SCALE * RTN_SCALE_CAP)).log2().ceil().exp2()
+        }
+    } else {
+        safe_div(absmax, RTN_CLIP_SCALE * RTN_SCALE_CAP)
+    }
+}
+
+/// Pack one group's 16 on-grid values into 8 code bytes (low nibble
+/// first). [`fp4_encode`] maps each value to its exact code —
+/// including the sign of zero — so packed-decode reproduces the value
+/// (and hence the dequantized estimate) bit for bit.
+#[inline]
+fn pack_q(q: &[f32; GROUP], out: &mut [u8]) {
+    for (b, pair) in out.iter_mut().zip(q.chunks_exact(2)) {
+        *b = (fp4_encode(pair[0]) & 0xF) | (fp4_encode(pair[1]) << 4);
+    }
+}
+
+/// Packed-emission pass 2 shared by the MS-EDEN / post hoc / Q_SR
+/// variants: per group, run the variant kernel, E4M3-encode the scale
+/// into its byte, and pack the 16 codes into 8 bytes — banded over
+/// rows with the same counter-based randomness as the in-place pass,
+/// so packed output is bitwise identical to quantize-then-encode for
+/// any worker count.
+#[allow(clippy::too_many_arguments)]
+fn pack_pass2(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    variant: Variant,
+    gscale: f32,
+    sr: &Rng,
+    codes: &mut [u8],
+    scales: &mut [u8],
+    threads: usize,
+) {
+    let gpr = cols / GROUP;
+    bands2(codes, cols / 2, scales, gpr, rows, threads, |r0, cb, sb| {
+        let mut q = [0.0f32; GROUP];
+        for (j, sbyte) in sb.iter_mut().enumerate() {
+            let g = r0 * gpr + j;
+            let xg = &x[g * GROUP..(g + 1) * GROUP];
+            let sc = match variant {
+                Variant::MsEden => ms_eden_group(xg, g, gscale, sr, &mut q),
+                Variant::Posthoc => posthoc_group(xg, g, gscale, sr, &mut q),
+                Variant::Sr => sr_group(xg, g, gscale, sr, &mut q),
+            };
+            *sbyte = e4m3_encode(sc);
+            pack_q(&q, &mut cb[j * (GROUP / 2)..(j + 1) * (GROUP / 2)]);
+        }
+    });
+}
+
 /// Shared MS-EDEN driver: pass 1 (rotate + abs-max, banded, in place),
 /// global scale, pass 2 (banded groups). `scales = None` emits the
 /// dequantized estimate instead of values + scales.
@@ -287,17 +368,7 @@ fn ms_eden_run(
     })
     .into_iter()
     .fold(0.0f32, f32::max);
-    // naive: free global scale; post hoc: next power of two so the
-    // scales-only shift is an exact exponent move (§7)
-    let gscale = if posthoc {
-        if absmax == 0.0 {
-            0.0
-        } else {
-            (absmax / (RTN_CLIP_SCALE * RTN_SCALE_CAP)).log2().ceil().exp2()
-        }
-    } else {
-        safe_div(absmax, RTN_CLIP_SCALE * RTN_SCALE_CAP)
-    };
+    let gscale = ms_eden_gscale(absmax, posthoc);
     let variant = if posthoc { Variant::Posthoc } else { Variant::MsEden };
     let gpr = cols / GROUP;
     match scales {
@@ -372,6 +443,59 @@ pub fn ms_eden_estimate(
 ) -> Result<()> {
     let threads = threads_for_quant(x.len(), rows);
     ms_eden_estimate_threads(x, rows, cols, signs, sr, threads)
+}
+
+/// Fused MS-EDEN straight to the packed representation (the
+/// packed-GEMM training hot path): `x` is rotated in place (pass 1),
+/// then pass 2 emits packed 4-bit code pairs into `codes` and
+/// E4M3-encoded scale bytes into `scales` — no on-grid values, no
+/// estimate, no f32 scale materialization. Returns the global scale.
+/// Decoding the packed output (`value_LUT[code] * (e4m3_decode(scale)
+/// * gscale)`) reproduces [`ms_eden_estimate_threads`] on the same
+/// streams **bitwise**, and output is invariant to the worker count.
+/// `posthoc` selects the ER-NVFP4 §7 variant.
+#[allow(clippy::too_many_arguments)]
+pub fn ms_eden_pack_threads(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    posthoc: bool,
+    signs: &[f32],
+    sr: &Rng,
+    codes: &mut [u8],
+    scales: &mut [u8],
+    threads: usize,
+) -> Result<f32> {
+    check_dims(x.len(), rows, cols, ROT_BLOCK)?;
+    if signs.len() != ROT_BLOCK {
+        bail!("signs must have length {ROT_BLOCK}");
+    }
+    check_pack_bufs(x.len(), codes, scales)?;
+    let absmax = bands1(x, cols, rows, threads, |_, band| {
+        hadamard::rht_absmax(band, signs).expect("dims validated above")
+    })
+    .into_iter()
+    .fold(0.0f32, f32::max);
+    let gscale = ms_eden_gscale(absmax, posthoc);
+    let variant = if posthoc { Variant::Posthoc } else { Variant::MsEden };
+    pack_pass2(x, rows, cols, variant, gscale, sr, codes, scales, threads);
+    Ok(gscale)
+}
+
+/// [`ms_eden_pack_threads`] under the auto thread policy.
+#[allow(clippy::too_many_arguments)]
+pub fn ms_eden_pack(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    posthoc: bool,
+    signs: &[f32],
+    sr: &Rng,
+    codes: &mut [u8],
+    scales: &mut [u8],
+) -> Result<f32> {
+    let threads = threads_for_quant(x.len(), rows);
+    ms_eden_pack_threads(x, rows, cols, posthoc, signs, sr, codes, scales, threads)
 }
 
 // ---------------------------------------------------------- SR entry
@@ -450,6 +574,41 @@ pub fn sr_estimate(x: &mut [f32], rows: usize, cols: usize, sr: &Rng) -> Result<
     sr_estimate_threads(x, rows, cols, sr, threads)
 }
 
+/// Fused Q_SR straight to the packed representation. `x` is read-only
+/// (SR has no rotation pass), so row-major operands quantize to
+/// packed with **zero** f32 staging. Packed decode reproduces
+/// [`sr_estimate_threads`] on the same streams bitwise; output is
+/// invariant to the worker count. Returns the global scale.
+pub fn sr_pack_threads(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    sr: &Rng,
+    codes: &mut [u8],
+    scales: &mut [u8],
+    threads: usize,
+) -> Result<f32> {
+    check_dims(x.len(), rows, cols, GROUP)?;
+    check_pack_bufs(x.len(), codes, scales)?;
+    let absmax = absmax_bands(x, rows, cols, threads);
+    let gscale = safe_div(absmax, SR_BUDGET * FP8_MAX);
+    pack_pass2(x, rows, cols, Variant::Sr, gscale, sr, codes, scales, threads);
+    Ok(gscale)
+}
+
+/// [`sr_pack_threads`] under the auto thread policy.
+pub fn sr_pack(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    sr: &Rng,
+    codes: &mut [u8],
+    scales: &mut [u8],
+) -> Result<f32> {
+    let threads = threads_for_quant(x.len(), rows);
+    sr_pack_threads(x, rows, cols, sr, codes, scales, threads)
+}
+
 // ---------------------------------------------------- RTN pack entry
 
 /// One group of the fused deterministic-RTN pack pass: evaluate the
@@ -512,12 +671,7 @@ pub fn rtn_pack_threads(
     threads: usize,
 ) -> Result<f32> {
     check_dims(x.len(), rows, cols, GROUP)?;
-    if codes.len() != x.len() / 2 {
-        bail!("need {} code bytes, got {}", x.len() / 2, codes.len());
-    }
-    if scales.len() != x.len() / GROUP {
-        bail!("need {} scale bytes, got {}", x.len() / GROUP, scales.len());
-    }
+    check_pack_bufs(x.len(), codes, scales)?;
     let absmax = absmax_bands(x, rows, cols, threads);
     let gscale = safe_div(absmax, FP4_MAX * FP8_MAX);
     let gpr = cols / GROUP;
@@ -543,6 +697,183 @@ pub fn rtn_pack(
 ) -> Result<f32> {
     let threads = threads_for_quant(x.len(), rows);
     rtn_pack_threads(x, rows, cols, four_six, codes, scales, threads)
+}
+
+// -------------------------------------------- square-scale RTN entry
+
+/// One 16x16 block of the fused square-scale RTN pass: block abs-max,
+/// the 6.0-anchored (and optionally 4.0-anchored) grid, keep the
+/// lower-MSE branch, emit the 256 codes row-major within the block.
+/// Mirrors `formats::quantize_rtn(square)`'s arithmetic — including
+/// the f64 error-sum order and the `(value * scale) * gscale` product
+/// order — operation-for-operation, so the fused estimate is bitwise
+/// identical to `quantize_rtn(.., square).dequant()`.
+fn rtn_square_block(
+    xb: &[f32],
+    cols: usize,
+    c0: usize,
+    gscale: f32,
+    four_six: bool,
+    codes: &mut [u8; GROUP * GROUP],
+) -> f32 {
+    let mut bmax = 0.0f32;
+    for r in 0..GROUP {
+        for c in 0..GROUP {
+            bmax = bmax.max(xb[r * cols + c0 + c].abs());
+        }
+    }
+    let branch = |div: f32, out: &mut [u8; GROUP * GROUP]| -> f32 {
+        let sc = rtn_e4m3_fast(safe_div(bmax, gscale * div));
+        let denom = sc * gscale;
+        for r in 0..GROUP {
+            for c in 0..GROUP {
+                out[r * GROUP + c] = rtn_fp4_code(safe_div(xb[r * cols + c0 + c], denom));
+            }
+        }
+        sc
+    };
+    let err = |out: &[u8; GROUP * GROUP], sc: f32| -> f64 {
+        let mut e = 0.0f64;
+        for r in 0..GROUP {
+            for c in 0..GROUP {
+                let d = (FP4_CODE_LUT[out[r * GROUP + c] as usize] * sc * gscale
+                    - xb[r * cols + c0 + c]) as f64;
+                e += d * d;
+            }
+        }
+        e
+    };
+    let mut sc = branch(6.0, codes);
+    if four_six {
+        let mut c4 = [0u8; GROUP * GROUP];
+        let s4 = branch(4.0, &mut c4);
+        if err(&c4, s4) < err(codes, sc) {
+            *codes = c4;
+            sc = s4;
+        }
+    }
+    sc
+}
+
+/// Fused 16x16 square-scale RTN + pack — the fused-kernel counterpart
+/// of `formats::quantize_rtn(.., square)` (NVIDIA-recipe weight path;
+/// closes the ROADMAP open item). Emits standard packed layout: 4-bit
+/// code pairs plus one E4M3 scale byte per 16-group, with each block's
+/// scale byte **replicated across the 16 rows it covers**, so square
+/// weights flow through [`super::qgemm`] unchanged. Banded over whole
+/// block-rows (deterministic — parallel is trivially bitwise identical
+/// to serial). Requires `rows % 16 == 0`. Returns the global scale.
+#[allow(clippy::too_many_arguments)]
+pub fn rtn_square_pack_threads(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+    codes: &mut [u8],
+    scales: &mut [u8],
+    threads: usize,
+) -> Result<f32> {
+    check_dims(x.len(), rows, cols, GROUP)?;
+    if rows % GROUP != 0 {
+        bail!("square blocks need rows % {GROUP} == 0, got rows={rows}");
+    }
+    check_pack_bufs(x.len(), codes, scales)?;
+    let absmax = absmax_bands(x, rows, cols, threads);
+    let gscale = safe_div(absmax, FP4_MAX * FP8_MAX);
+    let (brows, gpr) = (rows / GROUP, cols / GROUP);
+    bands2(
+        codes,
+        GROUP * cols / 2,
+        scales,
+        GROUP * gpr,
+        brows,
+        threads,
+        |b0, cb, sb| {
+            let mut bc = [0u8; GROUP * GROUP];
+            let nb = sb.len() / (GROUP * gpr);
+            for lb in 0..nb {
+                let xb = &x[(b0 + lb) * GROUP * cols..(b0 + lb + 1) * GROUP * cols];
+                for jb in 0..gpr {
+                    let sc = rtn_square_block(xb, cols, jb * GROUP, gscale, four_six, &mut bc);
+                    let sbyte = e4m3_encode(sc);
+                    for r in 0..GROUP {
+                        sb[lb * GROUP * gpr + r * gpr + jb] = sbyte;
+                        let crow = &bc[r * GROUP..(r + 1) * GROUP];
+                        let base = (lb * GROUP + r) * (cols / 2) + jb * (GROUP / 2);
+                        for (o, pair) in cb[base..base + GROUP / 2]
+                            .iter_mut()
+                            .zip(crow.chunks_exact(2))
+                        {
+                            *o = (pair[0] & 0xF) | (pair[1] << 4);
+                        }
+                    }
+                }
+            }
+        },
+    );
+    Ok(gscale)
+}
+
+/// [`rtn_square_pack_threads`] under the auto thread policy.
+pub fn rtn_square_pack(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+    codes: &mut [u8],
+    scales: &mut [u8],
+) -> Result<f32> {
+    let threads = threads_for_quant(x.len(), rows);
+    rtn_square_pack_threads(x, rows, cols, four_six, codes, scales, threads)
+}
+
+/// Fused 16x16 square-scale RTN *estimate*: rewrites `x` in place with
+/// the dequantized square-scale reconstruction — bitwise identical to
+/// `formats::quantize_rtn(.., square).dequant()` (the dequant-path
+/// twin of [`rtn_square_pack_threads`] for the retained parity
+/// reference). Requires `rows % 16 == 0`.
+pub fn rtn_square_estimate_threads(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+    threads: usize,
+) -> Result<()> {
+    check_dims(x.len(), rows, cols, GROUP)?;
+    if rows % GROUP != 0 {
+        bail!("square blocks need rows % {GROUP} == 0, got rows={rows}");
+    }
+    let absmax = absmax_bands(x, rows, cols, threads);
+    let gscale = safe_div(absmax, FP4_MAX * FP8_MAX);
+    let (brows, gpr) = (rows / GROUP, cols / GROUP);
+    bands1(x, GROUP * cols, brows, threads, |_, xband| {
+        let mut bc = [0u8; GROUP * GROUP];
+        let nb = xband.len() / (GROUP * cols);
+        for lb in 0..nb {
+            let xb = &mut xband[lb * GROUP * cols..(lb + 1) * GROUP * cols];
+            for jb in 0..gpr {
+                let sc = rtn_square_block(xb, cols, jb * GROUP, gscale, four_six, &mut bc);
+                for r in 0..GROUP {
+                    for c in 0..GROUP {
+                        xb[r * cols + jb * GROUP + c] =
+                            FP4_CODE_LUT[bc[r * GROUP + c] as usize] * sc * gscale;
+                    }
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+/// [`rtn_square_estimate_threads`] under the auto thread policy.
+pub fn rtn_square_estimate(
+    x: &mut [f32],
+    rows: usize,
+    cols: usize,
+    four_six: bool,
+) -> Result<()> {
+    let threads = threads_for_quant(x.len(), rows);
+    rtn_square_estimate_threads(x, rows, cols, four_six, threads)
 }
 
 #[cfg(test)]
@@ -615,6 +946,28 @@ mod tests {
         assert!(rtn_pack(&x4, 2, 16, false, &mut [0u8; 15], &mut [0u8; 2]).is_err());
         assert!(rtn_pack(&x4, 2, 16, false, &mut [0u8; 16], &mut [0u8; 1]).is_err());
         assert!(rtn_pack(&x4, 2, 16, false, &mut [0u8; 16], &mut [0u8; 2]).is_ok());
+        // square: rows must be a whole number of 16-row blocks
+        assert!(rtn_square_pack(&x4, 2, 16, false, &mut [0u8; 16], &mut [0u8; 2]).is_err());
+        let xs = vec![0.0f32; 16 * 16];
+        assert!(rtn_square_pack(&xs, 16, 16, false, &mut [0u8; 128], &mut [0u8; 16]).is_ok());
+        let mut xe = vec![0.0f32; 2 * 16];
+        assert!(rtn_square_estimate(&mut xe, 2, 16, false).is_err());
+        // packed emission: buffer sizing on the stochastic variants
+        let sr_rng = Rng::seed_from(9);
+        assert!(sr_pack(&x4, 2, 16, &sr_rng, &mut [0u8; 15], &mut [0u8; 2]).is_err());
+        assert!(sr_pack(&x4, 2, 16, &sr_rng, &mut [0u8; 16], &mut [0u8; 2]).is_ok());
+        let signs2 = vec![1.0f32; ROT_BLOCK];
+        let mut xm = vec![0.0f32; 2 * ROT_BLOCK];
+        assert!(ms_eden_pack(
+            &mut xm, 2, ROT_BLOCK, false, &signs2, &sr_rng,
+            &mut [0u8; ROT_BLOCK], &mut vec![0u8; 2 * ROT_BLOCK / GROUP],
+        )
+        .is_ok());
+        assert!(ms_eden_pack(
+            &mut xm, 2, ROT_BLOCK, false, &signs2, &sr_rng,
+            &mut [0u8; ROT_BLOCK - 1], &mut vec![0u8; 2 * ROT_BLOCK / GROUP],
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,9 +1,9 @@
-//! Thread-local scratch-buffer pool for GEMM-sized f32 temporaries.
+//! Thread-local scratch-buffer pools for GEMM-sized temporaries.
 //!
 //! The training step used to allocate (and drop) fresh `Vec<f32>`s for
 //! every quantized-operand estimate, gather-transpose, and attention
 //! intermediate — several megabytes of churn per step. [`take_zeroed`]
-//! / [`take_copy`] hand out pooled buffers instead; dropping the
+//! / [`take_uninit`] hand out pooled buffers instead; dropping the
 //! [`Scratch`] handle returns the buffer (capacity intact) to the
 //! current thread's pool. Buffers that *escape* their op (tape values,
 //! gradients) stay plain `Vec<f32>`s — the pool is only for values
@@ -11,9 +11,15 @@
 //! is for buffers that accumulate; gather/copy targets use
 //! [`take_uninit`].)
 //!
-//! The pool is thread-local, so scoped GEMM workers never contend on
-//! it; long-lived threads (the training loop, the serving loop) are
-//! the ones that amortize. The pool keeps at most [`MAX_POOLED`]
+//! The packed-GEMM training path ([`super::qgemm`]) stages quantized
+//! operands as 4-bit code pairs + E4M3 scale bytes instead of f32
+//! estimates; [`take_bytes_uninit`] is the byte-buffer twin backing
+//! those packed temporaries ([`ScratchBytes`] has the same
+//! return-on-drop contract, from a separate per-thread pool).
+//!
+//! The pools are thread-local, so scoped GEMM workers never contend on
+//! them; long-lived threads (the training loop, the serving loop) are
+//! the ones that amortize. Each pool keeps at most [`MAX_POOLED`]
 //! buffers per thread to bound idle memory.
 
 use std::cell::RefCell;
@@ -81,6 +87,52 @@ impl Drop for Scratch {
     }
 }
 
+thread_local! {
+    static BYTE_POOL: RefCell<Vec<Vec<u8>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A pooled byte buffer (packed FP4 codes / E4M3 scale bytes); derefs
+/// to `[u8]` and returns to the byte pool on drop.
+pub struct ScratchBytes {
+    buf: Vec<u8>,
+}
+
+/// Take a pooled byte buffer of length `len`, contents unspecified
+/// (callers must fully overwrite it — packed-code emission targets).
+pub fn take_bytes_uninit(len: usize) -> ScratchBytes {
+    let mut buf = BYTE_POOL
+        .with(|p| p.borrow_mut().pop())
+        .unwrap_or_default();
+    buf.resize(len.max(buf.len()), 0);
+    buf.truncate(len);
+    ScratchBytes { buf }
+}
+
+impl Deref for ScratchBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl DerefMut for ScratchBytes {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        &mut self.buf
+    }
+}
+
+impl Drop for ScratchBytes {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        let _ = BYTE_POOL.try_with(|p| {
+            let mut pool = p.borrow_mut();
+            if pool.len() < MAX_POOLED {
+                pool.push(buf);
+            }
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +162,27 @@ mod tests {
     fn take_uninit_has_requested_len() {
         for len in [0usize, 1, 17, 1024] {
             assert_eq!(take_uninit(len).len(), len);
+        }
+    }
+
+    #[test]
+    fn byte_buffers_are_reused_across_takes() {
+        let warm: Vec<ScratchBytes> =
+            (0..MAX_POOLED).map(|_| take_bytes_uninit(16)).collect();
+        drop(warm);
+        let mut s = take_bytes_uninit(64);
+        s[0] = 7;
+        let ptr = s.as_ptr();
+        let cap_before = s.buf.capacity();
+        drop(s);
+        let again = take_bytes_uninit(32);
+        assert_eq!(again.len(), 32);
+        // the common case reuses the exact allocation (pool is LIFO)
+        if again.buf.capacity() == cap_before {
+            assert_eq!(again.as_ptr(), ptr);
+        }
+        for len in [0usize, 1, 17, 1024] {
+            assert_eq!(take_bytes_uninit(len).len(), len);
         }
     }
 }

@@ -44,16 +44,19 @@ USAGE:
                       [--seed 42] [--eval-every 50] [--eval-batches 8]
                       [--artifacts-dir artifacts] [--results-dir results]
                       [--config file.toml]
-  quartet2 train-native [--preset tiny] [--scheme quartet2|sr|f32] [--steps 100]
-                      [--batch 4] [--seq 64] [--seed 42] [--eval-every 25]
-                      [--eval-batches 2] [--results-dir results]
+  quartet2 train-native [--preset tiny] [--scheme quartet2|sr|nvidia_square|f32]
+                      [--steps 100] [--batch 4] [--seq 64] [--seed 42]
+                      [--eval-every 25] [--eval-batches 2] [--results-dir results]
                       [--export-checkpoint checkpoints/serve_<preset>_native]
-                      [--no-export] [--threads N]
+                      [--no-export] [--threads N] [--gemm-path packed|dequant]
                       pure-Rust Quartet II training (MS-EDEN-quantized
                       fwd+bwd matmuls); packs the trained weights into a
                       NVFP4 serving checkpoint on completion. GEMMs run
                       on the shared threaded kernel core (--threads or
                       QUARTET2_THREADS override the auto policy; 0 = auto)
+                      and contract packed NVFP4 operands directly
+                      (--gemm-path dequant or QUARTET2_GEMM_PATH=dequant
+                      select the f32 parity formulation)
   quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|train-native|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
@@ -166,6 +169,14 @@ fn cmd_train_native(args: &Args) -> Result<()> {
             .parse()
             .with_context(|| format!("--threads must be a number, got {t:?}"))?;
         quartet2::kernels::set_threads(t);
+    }
+    if let Some(p) = args.opt("gemm-path") {
+        let path = match p {
+            "packed" => quartet2::engine::GemmPath::Packed,
+            "dequant" => quartet2::engine::GemmPath::Dequant,
+            other => bail!("--gemm-path must be packed or dequant, got {other:?}"),
+        };
+        quartet2::engine::set_gemm_path(Some(path));
     }
     let preset = args.get_or("preset", "tiny").to_string();
     let scheme = args.get_or("scheme", "quartet2").to_string();

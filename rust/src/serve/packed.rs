@@ -86,6 +86,19 @@ impl PackedTensor {
         })
     }
 
+    /// Borrow this tensor as a [`crate::kernels::PackedOp`] GEMM
+    /// operand for the shared packed-operand kernels
+    /// ([`crate::kernels::qgemm`]).
+    pub fn as_op(&self) -> crate::kernels::PackedOp<'_> {
+        crate::kernels::PackedOp {
+            codes: &self.codes,
+            scales: &self.scales,
+            gscale: self.gscale,
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
     pub fn numel(&self) -> usize {
         self.rows * self.cols
     }
@@ -108,17 +121,12 @@ impl PackedTensor {
     }
 
     /// Reconstruct the full f32 tensor (test/reference path — the
-    /// serving GEMM never materializes this).
+    /// serving GEMM never materializes this). One decode
+    /// implementation crate-wide: delegates to the shared
+    /// [`crate::kernels::PackedOp::dequant`] (bitwise identical to the
+    /// old per-nibble loop, without the intermediate code `Vec`).
     pub fn dequant(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.numel()];
-        let codes = fp4::unpack_codes(&self.codes, self.numel());
-        for (g, chunk) in codes.chunks_exact(GROUP).enumerate() {
-            let s = self.group_scale(g);
-            for (o, &c) in out[g * GROUP..(g + 1) * GROUP].iter_mut().zip(chunk) {
-                *o = fp4_decode(c) * s;
-            }
-        }
-        out
+        self.as_op().dequant()
     }
 
     /// Round-trip the packed representation back into an unpacked

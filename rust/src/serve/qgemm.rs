@@ -1,10 +1,17 @@
-//! Native quantized GEMM: f32 activations x packed NVFP4 weights.
+//! Native quantized GEMM: f32 activations x packed NVFP4 weights —
+//! now a thin serving facade over the crate-wide packed-operand GEMM
+//! core ([`crate::kernels::qgemm`]).
 //!
 //! Computes `y[m, n] = x[m, k] @ W[n, k]^T` directly on the packed
-//! representation — each packed byte is decoded through a 256-entry
-//! byte→pair LUT ([`FP4_PAIR_LUT`]; one lookup per two codes) and the
-//! per-group E4M3 scale is fused into a small decoded tile, so the
-//! full f32 weight matrix is never materialized.
+//! representation — each packed byte is decoded through the shared
+//! 256-entry byte→pair LUT ([`crate::kernels::FP4_PAIR_LUT`]; one
+//! lookup per two codes) and the per-group E4M3 scale is fused into a
+//! small decoded tile, so the full f32 weight matrix is never
+//! materialized. The kernel itself lives in the kernels layer
+//! (`qgemm_fp_*`), where it is the mixed-operand (f32 x packed)
+//! specialization of the same family whose packed x packed member
+//! drives quantized *training* — one decode scheme, one LUT, one
+//! thread policy for both stacks.
 //!
 //! Loop order is the serving-throughput story: weight groups are outer,
 //! activation rows inner. Each 16-element weight group is unpacked and
@@ -13,27 +20,23 @@
 //! why the continuous-batching scheduler coalesces decode steps
 //! ([`super::scheduler`]).
 //!
-//! **Parallelism** now rides the crate-wide GEMM core
-//! ([`crate::kernels`]): the worker-count policy (`QUARTET2_THREADS`,
-//! with the legacy `QUARTET2_QGEMM_THREADS` honored; auto below
+//! **Parallelism** rides the crate-wide policy ([`crate::kernels`]):
+//! the worker-count resolution (`QUARTET2_THREADS`, with the legacy
+//! `QUARTET2_QGEMM_THREADS` honored; auto below
 //! [`crate::kernels::PAR_MIN_MACS`] MACs) and the scoped-thread range
 //! partition are the same ones the training engine's three per-linear
 //! GEMMs use. Output rows (= weight rows) split into disjoint column
-//! tiles summed into `y` after the join; row blocks keep each worker
-//! streaming its own slice of the packed weights, so the split adds no
-//! decode duplication. Per-element results are bitwise identical to
-//! the serial path for a zeroed `y` (same group accumulation order per
-//! output element).
+//! tiles summed into `y` after the join; per-element results are
+//! bitwise identical to the serial path for a zeroed `y` (same group
+//! accumulation order per output element).
 //!
 //! The f32 reference path ([`matmul_f32`]) is the shared blocked +
 //! 8-wide-unrolled [`crate::kernels::gemm_abt`] kernel, used for
 //! parity tests and the non-quantized baseline.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::kernels::gemm_abt;
-use crate::kernels::threads::{run_ranges, threads_for};
-use crate::GROUP;
+use crate::kernels::{gemm_abt, qgemm_fp_reference, qgemm_fp_threads, threads_for};
 
 use super::packed::PackedTensor;
 
@@ -41,70 +44,11 @@ use super::packed::PackedTensor;
 /// grid index; mirrors [`crate::formats::fp4::fp4_decode`]).
 pub const FP4_LUT: [f32; 16] = crate::formats::fp4::FP4_CODE_LUT;
 
-/// 256-entry byte -> `[low nibble, high nibble]` pair-decode table:
-/// each packed weight byte costs **one** lookup instead of two
-/// [`FP4_LUT`] nibble lookups. Entries are exactly the per-nibble
-/// values, so the widened decode stays bitwise identical to the
-/// per-nibble path (and serial/parallel parity is untouched).
-pub const FP4_PAIR_LUT: [[f32; 2]; 256] = build_pair_lut();
-
-const fn build_pair_lut() -> [[f32; 2]; 256] {
-    let mut t = [[0.0f32; 2]; 256];
-    let mut b = 0usize;
-    while b < 256 {
-        t[b] = [FP4_LUT[b & 0xF], FP4_LUT[b >> 4]];
-        b += 1;
-    }
-    t
-}
-
-/// Activation-row tile: rows of `x` processed per weight traversal.
-/// Large enough to amortize unpacking, small enough that the tile of
-/// partial sums stays in registers/L1.
-const M_TILE: usize = 16;
-
-/// Serial kernel over weight rows `[r0, r1)`: accumulates into the
-/// column tile `y[i * ystride + (row - r0)]`.
-fn qgemm_rows(
-    x: &[f32],
-    m: usize,
-    w: &PackedTensor,
-    r0: usize,
-    r1: usize,
-    y: &mut [f32],
-    ystride: usize,
-) {
-    let k = w.cols;
-    let groups_per_row = k / GROUP;
-    let mut wtile = [0.0f32; GROUP];
-    for i0 in (0..m).step_by(M_TILE) {
-        let i1 = (i0 + M_TILE).min(m);
-        for row in r0..r1 {
-            for g in 0..groups_per_row {
-                let gid = row * groups_per_row + g;
-                let s = w.group_scale(gid);
-                // unpack + scale-fuse the 16-element group once (one
-                // pair-decode lookup per packed byte)...
-                let base = gid * (GROUP / 2);
-                for (j, &b) in w.codes[base..base + GROUP / 2].iter().enumerate() {
-                    let [lo, hi] = FP4_PAIR_LUT[b as usize];
-                    wtile[2 * j] = lo * s;
-                    wtile[2 * j + 1] = hi * s;
-                }
-                // ...then reuse it for every activation row in the tile
-                let col0 = g * GROUP;
-                for i in i0..i1 {
-                    let xrow = &x[i * k + col0..i * k + col0 + GROUP];
-                    let mut acc = 0.0f32;
-                    for (xv, wv) in xrow.iter().zip(&wtile) {
-                        acc += xv * wv;
-                    }
-                    y[i * ystride + row - r0] += acc;
-                }
-            }
-        }
-    }
-}
+/// The shared 256-entry byte -> `[low nibble, high nibble]`
+/// pair-decode table, re-exported from its home in the kernels layer
+/// ([`crate::kernels::qgemm`]) where serving and training both read
+/// it.
+pub use crate::kernels::FP4_PAIR_LUT;
 
 /// `y[m, n] = x[m, k] @ W^T` with `W` packed NVFP4 `[n, k]`.
 ///
@@ -126,44 +70,16 @@ pub fn qgemm_threads(
     y: &mut [f32],
     threads: usize,
 ) -> Result<()> {
-    let (n, k) = (w.rows, w.cols);
-    if x.len() != m * k {
-        bail!("qgemm: x has {} elems, want {m}x{k}", x.len());
-    }
-    if y.len() != m * n {
-        bail!("qgemm: y has {} elems, want {m}x{n}", y.len());
-    }
-    let threads = threads.clamp(1, n.max(1));
-    if threads < 2 {
-        qgemm_rows(x, m, w, 0, n, y, n);
-        return Ok(());
-    }
-
-    // weight-row bands on the shared scoped-thread partition; each
-    // worker produces a disjoint column tile, summed after the join
-    let tiles = run_ranges(n, threads, |r0, r1| {
-        let mut tile = vec![0.0f32; m * (r1 - r0)];
-        qgemm_rows(x, m, w, r0, r1, &mut tile, r1 - r0);
-        tile
-    });
-    for (r0, r1, tile) in tiles {
-        let nr = r1 - r0;
-        for i in 0..m {
-            let yrow = &mut y[i * n + r0..i * n + r1];
-            for (yv, tv) in yrow.iter_mut().zip(&tile[i * nr..(i + 1) * nr]) {
-                *yv += tv;
-            }
-        }
-    }
-    Ok(())
+    qgemm_fp_threads(x, m, &w.as_op(), y, threads)
 }
 
 /// Dequantize-then-multiply reference: the same per-group products
 /// through the materialized f32 weight matrix (partial-sum association
-/// may differ). Used to cross-check [`qgemm`].
+/// may differ). Delegates to the single shared reference path
+/// ([`crate::kernels::qgemm_fp_reference`]); used to cross-check
+/// [`qgemm`].
 pub fn qgemm_reference(x: &[f32], m: usize, w: &PackedTensor, y: &mut [f32]) -> Result<()> {
-    let dense = w.dequant();
-    matmul_f32(x, m, &dense, w.rows, w.cols, y)
+    qgemm_fp_reference(x, m, &w.as_op(), y)
 }
 
 /// f32 GEMM `y[m, n] += x[m, k] @ w[n, k]^T` on the shared blocked /
@@ -188,20 +104,11 @@ mod tests {
         }
     }
 
-    #[test]
-    fn pair_lut_matches_nibble_lut() {
-        for b in 0usize..256 {
-            let [lo, hi] = FP4_PAIR_LUT[b];
-            assert_eq!(lo.to_bits(), FP4_LUT[b & 0xF].to_bits(), "byte {b:#x} lo");
-            assert_eq!(hi.to_bits(), FP4_LUT[b >> 4].to_bits(), "byte {b:#x} hi");
-        }
-    }
-
     // Parity of qgemm vs the dequant reference is covered at the crate
     // boundary: tests/integration.rs (fixed shapes, the acceptance
-    // gate) and tests/proptests.rs (randomized shapes). Unit tests here
-    // focus on the LUT, accumulation semantics, threading, and
-    // validation.
+    // gate) and tests/proptests.rs (randomized shapes); the shared
+    // kernel's own unit tests live in kernels::qgemm. Tests here focus
+    // on the facade: accumulation semantics, threading, validation.
 
     #[test]
     fn qgemm_close_to_f32_matmul() {

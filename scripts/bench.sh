@@ -1,14 +1,15 @@
 #!/usr/bin/env bash
 # Perf trajectory, machine-readable across PRs: run the training-step,
-# serving, and quantizer benches and publish their JSON at the repo
-# root as BENCH_train_step.json / BENCH_serve.json /
-# BENCH_quantize.json.
+# serving, quantizer, and packed-GEMM benches and publish their JSON at
+# the repo root as BENCH_train_step.json / BENCH_serve.json /
+# BENCH_quantize.json / BENCH_qgemm.json.
 #
 #   scripts/bench.sh
 #
-# Thread policy: the benches compare serial vs parallel in-process via
-# kernels::set_threads or explicit *_threads entry points, so run this
-# without QUARTET2_THREADS set.
+# Thread policy: the benches compare serial vs parallel (and packed vs
+# dequant GEMM paths) in-process via kernels::set_threads /
+# engine::set_gemm_path or explicit *_threads entry points, so run
+# this without QUARTET2_THREADS or QUARTET2_GEMM_PATH set.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -18,8 +19,10 @@ cd rust
 cargo bench --bench train_step
 cargo bench --bench serve_throughput
 cargo bench --bench quantize
+cargo bench --bench qgemm_packed
 
 cp results/train_step.json "$repo_root/BENCH_train_step.json"
 cp results/serve_throughput.json "$repo_root/BENCH_serve.json"
 cp results/quantize.json "$repo_root/BENCH_quantize.json"
-echo "bench: wrote BENCH_train_step.json + BENCH_serve.json + BENCH_quantize.json"
+cp results/qgemm_packed.json "$repo_root/BENCH_qgemm.json"
+echo "bench: wrote BENCH_train_step.json + BENCH_serve.json + BENCH_quantize.json + BENCH_qgemm.json"

@@ -28,6 +28,11 @@ cargo test -q
 # identical to serial
 QUARTET2_THREADS=2 cargo test -q --test quant_parity
 
+# packed-GEMM parity under the same pinned policy: packed contraction
+# must stay bitwise identical to the dequant-f32 reference (and to
+# serial) when every auto-policy kernel sees real worker bands
+QUARTET2_THREADS=2 cargo test -q --test qgemm_packed
+
 # sanity-parse any published perf-trajectory JSONs at the repo root
 # (BENCH_train_step / BENCH_serve / BENCH_quantize; skips if absent)
 cargo test -q --test bench_json
