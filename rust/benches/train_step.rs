@@ -260,6 +260,70 @@ fn main() {
         }
     }
 
+    // ---- per-phase step breakdown (obs spans): where one quantized
+    // training step spends its wall time. The throughput sections
+    // above run with observability at its ambient level; this block
+    // opts into span timing explicitly and restores the level after,
+    // so the breakdown rides along in the same results file without
+    // perturbing the headline numbers.
+    quartet2::obs::set_level(Some(quartet2::obs::ObsLevel::Spans));
+    const PHASES: [(&str, &str); 5] = [
+        ("engine.step", "step_ns"),
+        ("engine.forward", "forward_ns"),
+        ("engine.backward", "backward_ns"),
+        ("engine.optimizer", "optimizer_ns"),
+        ("engine.quantize", "quantize_ns"),
+    ];
+    {
+        let cfg = preset("tiny").expect("preset");
+        let mut backend = NativeBackend::from_config(
+            &cfg,
+            "quartet2",
+            BATCH,
+            SEQ,
+            7,
+            AdamWOptions::default(),
+        )
+        .expect("backend");
+        let mut batcher = Batcher::train(9, BATCH, SEQ);
+        let b = batcher.next();
+        backend
+            .train_step(0, b.tokens.clone(), b.targets.clone())
+            .expect("warmup step");
+        let before: Vec<u64> = PHASES
+            .iter()
+            .map(|(n, _)| quartet2::obs::span_totals(n).1)
+            .collect();
+        for s in 0..STEPS {
+            backend
+                .train_step(1 + s, b.tokens.clone(), b.targets.clone())
+                .expect("train step");
+        }
+        let deltas: Vec<u64> = PHASES
+            .iter()
+            .zip(&before)
+            .map(|((n, _), &b0)| quartet2::obs::span_totals(n).1 - b0)
+            .collect();
+        let step_ns = deltas[0].max(1);
+        println!("\nper-phase step breakdown (quartet2 scheme, auto workers, spans on):");
+        let mut fields = vec![
+            ("name", json::s("train_step_phase_breakdown")),
+            ("scheme", json::s("quartet2")),
+            ("steps", json::n(STEPS as f64)),
+        ];
+        for (&(name, key), &d) in PHASES.iter().zip(&deltas) {
+            println!(
+                "  {:<18} {:>9.2} ms/step  ({:>5.1}% of step)",
+                name,
+                d as f64 / STEPS as f64 / 1e6,
+                d as f64 / step_ns as f64 * 100.0
+            );
+            fields.push((key, json::n(d as f64 / STEPS as f64)));
+        }
+        rows.push(json::obj(fields));
+    }
+    quartet2::obs::set_level(None);
+
     let results = std::path::Path::new("results");
     std::fs::create_dir_all(results).expect("results dir");
     std::fs::write(

@@ -20,6 +20,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::{Batcher, PrefetchBatcher};
 use crate::metrics::{CurvePoint, LossCurve};
+use crate::obs::{self, export::JsonlSink};
+use crate::util::json;
 use crate::runtime::executor::{Engine, HostTensor, LoadedArtifact};
 
 /// One training execution backend: owns model/optimizer state and the
@@ -61,6 +63,10 @@ pub struct TrainerOptions {
     pub batch: usize,
     /// sequence length (native backend; PJRT takes it from artifact meta)
     pub seq: usize,
+    /// JSON-lines trace stream (`--trace-out`): one `train_step` event
+    /// per step with loss, wall time, the per-phase span breakdown,
+    /// and — on health-sampled steps — the `quant.*` gauge snapshot.
+    pub trace_out: Option<String>,
 }
 
 impl Default for TrainerOptions {
@@ -76,6 +82,7 @@ impl Default for TrainerOptions {
             verbose: true,
             batch: 4,
             seq: 128,
+            trace_out: None,
         }
     }
 }
@@ -318,12 +325,64 @@ impl Trainer {
         let train_feed = PrefetchBatcher::new(Batcher::train(opts.seed, batch, seq), 2);
         let mut val_feed = Batcher::val(opts.seed, batch, seq);
 
+        // --trace-out sink: one JSONL event per step, with the engine
+        // phase breakdown read as per-step deltas of the obs span
+        // aggregates (all-zero unless QUARTET2_OBS=spans / --obs spans)
+        let mut sink = match &opts.trace_out {
+            Some(p) => Some(JsonlSink::create(Path::new(p))?),
+            None => None,
+        };
+        const PHASES: [(&str, &str); 5] = [
+            ("engine.step", "step_span_ns"),
+            ("engine.forward", "forward_ns"),
+            ("engine.backward", "backward_ns"),
+            ("engine.optimizer", "optimizer_ns"),
+            ("engine.quantize", "quantize_ns"),
+        ];
+        let mut prev_ns = [0u64; PHASES.len()];
+        for (i, (name, _)) in PHASES.iter().enumerate() {
+            prev_ns[i] = obs::span_totals(name).1;
+        }
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&json::obj(vec![
+                ("event", json::s("run_start")),
+                ("run", json::s(&run_name)),
+                ("scheme", json::s(&opts.scheme)),
+                ("preset", json::s(&opts.preset)),
+                ("steps", json::n(opts.steps as f64)),
+                ("batch", json::n(batch as f64)),
+                ("seq", json::n(seq as f64)),
+                ("obs_level", json::s(obs::level().as_str())),
+            ]))?;
+        }
+
         let t0 = Instant::now();
         let tokens_per_step = batch * seq;
         let mut last_eval = f64::NAN;
         for s in 0..opts.steps {
             let b = train_feed.next();
+            let ts = Instant::now();
             let loss = self.step(s, b.tokens, b.targets)?;
+            let step_ns = ts.elapsed().as_nanos() as u64;
+            if let Some(sink) = sink.as_mut() {
+                let mut fields = vec![
+                    ("event", json::s("train_step")),
+                    ("step", json::n(s as f64)),
+                    ("loss", json::n(loss)),
+                    ("step_ns", json::n(step_ns as f64)),
+                ];
+                let mut phases = Vec::with_capacity(PHASES.len());
+                for (i, (name, key)) in PHASES.iter().enumerate() {
+                    let total = obs::span_totals(name).1;
+                    phases.push((*key, json::n((total - prev_ns[i]) as f64)));
+                    prev_ns[i] = total;
+                }
+                fields.push(("phases", json::obj(phases)));
+                if obs::health::sampled_step(s as u64) {
+                    fields.push(("health", obs::export::snapshot_json("quant.")));
+                }
+                sink.event(&json::obj(fields))?;
+            }
             let is_last = s + 1 == opts.steps;
             let do_eval = should_eval(s, opts.steps, opts.eval_every, opts.eval_batches);
             let val_loss = if do_eval {
@@ -354,8 +413,28 @@ impl Trainer {
         }
 
         let secs = t0.elapsed().as_secs_f64();
+        let tokens_per_sec =
+            crate::metrics::safe_rate((opts.steps * tokens_per_step) as f64, secs);
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&json::obj(vec![
+                ("event", json::s("run_end")),
+                ("run", json::s(&run_name)),
+                ("wall_secs", json::n(secs)),
+                ("tokens_per_sec", json::n(tokens_per_sec)),
+                (
+                    "final_val_loss",
+                    // no-eval runs leave this NaN, which is not JSON
+                    if last_eval.is_finite() {
+                        json::n(last_eval)
+                    } else {
+                        json::Json::Null
+                    },
+                ),
+            ]))?;
+            sink.flush()?;
+        }
         Ok(TrainOutcome {
-            tokens_per_sec: (opts.steps * tokens_per_step) as f64 / secs,
+            tokens_per_sec,
             final_val_loss: last_eval,
             curve,
         })
@@ -438,6 +517,7 @@ mod tests {
             batch: 2,
             seq: 8,
             seed: 3,
+            trace_out: None,
         };
         let mut t = Trainer::from_backend(Box::new(backend), opts);
         assert_eq!(t.batch_shape(), (2, 8));

@@ -127,14 +127,26 @@ impl Backend for NativeBackend {
     }
 
     fn train_step(&mut self, step_idx: usize, tokens: Vec<i32>, targets: Vec<i32>) -> Result<f64> {
+        // stamp the step so the engine's GEMM internals can gate
+        // quantization-health sampling without plumbing it through
+        crate::obs::health::set_step(step_idx as u64);
+        let _step = crate::obs::span!("engine.step");
         let rng = Rng::seed_from(self.seed ^ 0x7121_7e72).fold_in(step_idx as u64 + 1);
-        let (tape, loss_id, pids) =
+        let (tape, loss_id, pids) = {
+            let _s = crate::obs::span!("engine.forward");
             self.model
-                .loss_graph(&tokens, &targets, self.batch, self.seq, &rng)?;
+                .loss_graph(&tokens, &targets, self.batch, self.seq, &rng)?
+        };
         let loss = tape.value(loss_id).item() as f64;
-        let grads = tape.backward(loss_id)?;
+        let grads = {
+            let _s = crate::obs::span!("engine.backward");
+            tape.backward(loss_id)?
+        };
         let aligned = AdamW::align(&grads, &pids);
-        self.opt.step(&mut self.model.params, &aligned)?;
+        {
+            let _s = crate::obs::span!("engine.optimizer");
+            self.opt.step(&mut self.model.params, &aligned)?;
+        }
         Ok(loss)
     }
 

@@ -68,6 +68,7 @@ use crate::kernels::quant;
 use crate::kernels::scratch::{take_bytes_uninit, take_uninit, Scratch, ScratchBytes};
 use crate::kernels::threads::{threads_for, threads_for_quant};
 use crate::kernels::{gemm_ab, gemm_abt, gemm_atb, qgemm_pp, transpose_into, PackedOp};
+use crate::obs::health::{self, TensorRole};
 use crate::util::rng::Rng;
 use crate::{GROUP, ROT_BLOCK};
 
@@ -259,6 +260,48 @@ fn needs_stage(view: View<'_>, q: OpQuant) -> bool {
     matches!(view, View::Trans(_)) || q == OpQuant::MsEden
 }
 
+/// The quantizer label a packed operand's health gauges are keyed by
+/// (`quant.<signal>.<label>.<role>`; see [`crate::obs::health`]).
+fn health_label(q: OpQuant) -> &'static str {
+    match q {
+        OpQuant::F32 => "f32",
+        OpQuant::Sr => "sr",
+        OpQuant::MsEden => "mseden",
+        OpQuant::SquareRtn => "square",
+    }
+}
+
+/// On a health-sampling step, record clip-rate / scale-saturation /
+/// relative-MSE gauges for one freshly packed operand. The
+/// quantizer-space source is the staging buffer when one was used
+/// (after [`quantize_pack_into`] it holds the gathered operand, and
+/// for MS-EDEN the *rotated* operand — exactly what the codes
+/// approximate); otherwise the operand packed straight from its
+/// row-major storage. Only the [`GemmPath::Packed`] hot path samples —
+/// the dequant path is a parity seam, not a production path.
+#[allow(clippy::too_many_arguments)]
+fn health_sample(
+    q: OpQuant,
+    role: TensorRole,
+    view: View<'_>,
+    stage: &[f32],
+    rows: usize,
+    k: usize,
+    codes: &[u8],
+    scales: &[u8],
+    gscale: f32,
+) {
+    let src: &[f32] = if needs_stage(view, q) {
+        &stage[..rows * k]
+    } else {
+        match view {
+            View::Rows(s) => s,
+            View::Trans(s) => s, // unreachable: Trans always stages
+        }
+    };
+    health::record_packed(health_label(q), role, src, codes, scales, gscale);
+}
+
 /// Write the dequantized estimate of `view` (logical `[rows, k]`)
 /// into `out`, row-major — the [`GemmPath::Dequant`] parity-reference
 /// formulation. For [`View::Trans`] the contiguous gather the
@@ -367,7 +410,9 @@ fn quantize_pack_into(
 /// shared by the pair (fold 1), independent SR streams per operand
 /// (folds 2 and 3). The GEMM itself runs per [`gemm_path`]: packed
 /// contraction by default, the dequant-f32 formulation as the retained
-/// parity reference.
+/// parity reference. `roles` names the `(a, b)` operands for the
+/// quantization-health gauges ([`crate::obs::health`]) — observation
+/// only, never part of the computation.
 #[allow(clippy::too_many_arguments)]
 fn qmatmul_view(
     a: View<'_>,
@@ -377,6 +422,7 @@ fn qmatmul_view(
     k: usize,
     mode: QuantMode,
     b_weight: bool,
+    roles: (TensorRole, TensorRole),
     rng: &Rng,
     y: &mut [f32],
 ) -> Result<()> {
@@ -419,22 +465,28 @@ fn qmatmul_view(
         }
     };
     if gemm_path() == GemmPath::Dequant {
+        // parity seam: no health sampling here — the packed hot path
+        // owns the gauges, and the two paths quantize identically
         let mut qa: Scratch = take_uninit(m * k);
         let mut qb: Scratch = take_uninit(n * k);
-        if overlap {
-            // the two operands quantize independently (separate rng
-            // streams, shared signs) — overlap them on scoped threads
-            let (qa_s, qb_s) = (&mut qa[..], &mut qb[..]);
-            std::thread::scope(|s| {
-                let ha = s.spawn(move || {
-                    quantize_estimate_into(a, m, k, qa_kind, signs, rng_a, ta, qa_s)
-                });
-                let rb = quantize_estimate_into(b, n, k, qb_kind, signs, rng_b, tb, qb_s);
-                ha.join().expect("quantizer worker panicked").and(rb)
-            })?;
-        } else {
-            quantize_estimate_into(a, m, k, qa_kind, signs, rng_a, ta, &mut qa)?;
-            quantize_estimate_into(b, n, k, qb_kind, signs, rng_b, tb, &mut qb)?;
+        {
+            let _q = crate::obs::span!("engine.quantize");
+            if overlap {
+                // the two operands quantize independently (separate rng
+                // streams, shared signs) — overlap them on scoped threads
+                let (qa_s, qb_s) = (&mut qa[..], &mut qb[..]);
+                std::thread::scope(|s| {
+                    let ha = s.spawn(move || {
+                        quantize_estimate_into(a, m, k, qa_kind, signs, rng_a, ta, qa_s)
+                    });
+                    let rb =
+                        quantize_estimate_into(b, n, k, qb_kind, signs, rng_b, tb, qb_s);
+                    ha.join().expect("quantizer worker panicked").and(rb)
+                })?;
+            } else {
+                quantize_estimate_into(a, m, k, qa_kind, signs, rng_a, ta, &mut qa)?;
+                quantize_estimate_into(b, n, k, qb_kind, signs, rng_b, tb, &mut qb)?;
+            }
         }
         return gemm_abt(&qa, m, &qb, n, k, y);
     }
@@ -448,23 +500,31 @@ fn qmatmul_view(
     let mut sca: ScratchBytes = take_bytes_uninit(m * k / GROUP);
     let mut cb: ScratchBytes = take_bytes_uninit(n * k / 2);
     let mut scb: ScratchBytes = take_bytes_uninit(n * k / GROUP);
-    let (ga, gb) = if overlap {
-        let (sa_s, ca_s, sca_s) = (&mut sa[..], &mut ca[..], &mut sca[..]);
-        let (sb_s, cb_s, scb_s) = (&mut sb[..], &mut cb[..], &mut scb[..]);
-        let (ra, rb) = std::thread::scope(|s| {
-            let ha = s.spawn(move || {
-                quantize_pack_into(a, m, k, qa_kind, signs, rng_a, ta, sa_s, ca_s, sca_s)
+    let (ga, gb) = {
+        let _q = crate::obs::span!("engine.quantize");
+        if overlap {
+            let (sa_s, ca_s, sca_s) = (&mut sa[..], &mut ca[..], &mut sca[..]);
+            let (sb_s, cb_s, scb_s) = (&mut sb[..], &mut cb[..], &mut scb[..]);
+            let (ra, rb) = std::thread::scope(|s| {
+                let ha = s.spawn(move || {
+                    quantize_pack_into(a, m, k, qa_kind, signs, rng_a, ta, sa_s, ca_s, sca_s)
+                });
+                let rb =
+                    quantize_pack_into(b, n, k, qb_kind, signs, rng_b, tb, sb_s, cb_s, scb_s);
+                (ha.join().expect("quantizer worker panicked"), rb)
             });
-            let rb = quantize_pack_into(b, n, k, qb_kind, signs, rng_b, tb, sb_s, cb_s, scb_s);
-            (ha.join().expect("quantizer worker panicked"), rb)
-        });
-        (ra?, rb?)
-    } else {
-        (
-            quantize_pack_into(a, m, k, qa_kind, signs, rng_a, ta, &mut sa, &mut ca, &mut sca)?,
-            quantize_pack_into(b, n, k, qb_kind, signs, rng_b, tb, &mut sb, &mut cb, &mut scb)?,
-        )
+            (ra?, rb?)
+        } else {
+            (
+                quantize_pack_into(a, m, k, qa_kind, signs, rng_a, ta, &mut sa, &mut ca, &mut sca)?,
+                quantize_pack_into(b, n, k, qb_kind, signs, rng_b, tb, &mut sb, &mut cb, &mut scb)?,
+            )
+        }
     };
+    if health::sample_active() {
+        health_sample(qa_kind, roles.0, a, &sa, m, k, &ca, &sca, ga);
+        health_sample(qb_kind, roles.1, b, &sb, n, k, &cb, &scb, gb);
+    }
     let aop = PackedOp { codes: &ca[..], scales: &sca[..], gscale: ga, rows: m, cols: k };
     let bop = PackedOp { codes: &cb[..], scales: &scb[..], gscale: gb, rows: n, cols: k };
     qgemm_pp(&aop, &bop, y)
@@ -485,7 +545,18 @@ pub fn qmatmul(
     rng: &Rng,
 ) -> Result<Vec<f32>> {
     let mut y = vec![0.0f32; m * n];
-    qmatmul_view(View::Rows(a), m, View::Rows(b), n, k, mode, true, rng, &mut y)?;
+    qmatmul_view(
+        View::Rows(a),
+        m,
+        View::Rows(b),
+        n,
+        k,
+        mode,
+        true,
+        (TensorRole::Act, TensorRole::Wgt),
+        rng,
+        &mut y,
+    )?;
     Ok(y)
 }
 
@@ -517,6 +588,7 @@ pub fn linear(
         k,
         mode,
         true,
+        (TensorRole::Act, TensorRole::Wgt),
         &rng.fold_in(10),
         &mut y,
     )?;
@@ -537,6 +609,7 @@ pub fn linear(
             n,
             mode,
             true,
+            (TensorRole::Grad, TensorRole::Wgt),
             &dx_rng,
             &mut dx,
         )
@@ -557,6 +630,7 @@ pub fn linear(
             t,
             mode,
             false,
+            (TensorRole::Grad, TensorRole::Act),
             &dw_rng,
             &mut dw,
         )

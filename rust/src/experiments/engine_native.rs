@@ -52,6 +52,7 @@ pub fn run_native_scheme(env: &Env, scheme: &str) -> Result<LossCurve> {
         verbose: false,
         batch: BATCH,
         seq: SEQ,
+        trace_out: None,
     };
     let mut trainer =
         Trainer::native(opts).with_context(|| format!("native scheme {scheme}"))?;

@@ -179,6 +179,8 @@ pub fn gemm_abt_threads(
     threads: usize,
 ) -> Result<()> {
     check_shapes("gemm_abt", a.len(), b.len(), y.len(), m, n, k)?;
+    crate::obs::count!("kernels.gemm.abt_calls", 1);
+    crate::obs::count!("kernels.gemm.abt_macs", m * n * k);
     par_row_chunks(y, m, n, threads, |r0, r1, band| {
         abt_band(a, r0, r1, b, n, k, band)
     });
@@ -202,6 +204,8 @@ pub fn gemm_ab_threads(
     threads: usize,
 ) -> Result<()> {
     check_shapes("gemm_ab", a.len(), b.len(), y.len(), m, n, k)?;
+    crate::obs::count!("kernels.gemm.ab_calls", 1);
+    crate::obs::count!("kernels.gemm.ab_macs", m * n * k);
     par_row_chunks(y, m, n, threads, |r0, r1, band| {
         ab_band(a, r0, r1, b, k, n, band)
     });
@@ -232,6 +236,8 @@ pub fn gemm_atb_threads(
             y.len()
         );
     }
+    crate::obs::count!("kernels.gemm.atb_calls", 1);
+    crate::obs::count!("kernels.gemm.atb_macs", m * n * t);
     par_row_chunks(y, m, n, threads, |r0, r1, band| {
         atb_band(a, t, m, r0, r1, b, n, band)
     });

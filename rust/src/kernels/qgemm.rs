@@ -240,6 +240,8 @@ pub fn qgemm_pp_threads(a: &PackedOp, b: &PackedOp, y: &mut [f32], threads: usiz
     if y.len() != m * n {
         bail!("qgemm_pp: y has {} elems, want {m}x{n}", y.len());
     }
+    crate::obs::count!("kernels.qgemm.pp_calls", 1);
+    crate::obs::count!("kernels.qgemm.pp_macs", m * n * k);
     let threads = threads.clamp(1, m.max(1));
     if threads < 2 {
         let mut bpanel = take_uninit(NB * KB);
@@ -359,6 +361,8 @@ pub fn qgemm_fp_threads(
     if y.len() != m * n {
         bail!("qgemm_fp: y has {} elems, want {m}x{n}", y.len());
     }
+    crate::obs::count!("kernels.qgemm.fp_calls", 1);
+    crate::obs::count!("kernels.qgemm.fp_macs", m * n * k);
     let threads = threads.clamp(1, n.max(1));
     if threads < 2 {
         fp_rows(x, m, w, 0, n, y, n);

@@ -363,6 +363,7 @@ fn ms_eden_run(
             bail!("need {} scales, got {}", x.len() / GROUP, s.len());
         }
     }
+    crate::obs::count!("kernels.quant.mseden_elems", x.len());
     let absmax = bands1(x, cols, rows, threads, |_, band| {
         hadamard::rht_absmax(band, signs).expect("dims validated above")
     })
@@ -471,6 +472,7 @@ pub fn ms_eden_pack_threads(
         bail!("signs must have length {ROT_BLOCK}");
     }
     check_pack_bufs(x.len(), codes, scales)?;
+    crate::obs::count!("kernels.quant.mseden_elems", x.len());
     let absmax = bands1(x, cols, rows, threads, |_, band| {
         hadamard::rht_absmax(band, signs).expect("dims validated above")
     })
@@ -515,6 +517,7 @@ fn sr_run(
             bail!("need {} scales, got {}", x.len() / GROUP, s.len());
         }
     }
+    crate::obs::count!("kernels.quant.sr_elems", x.len());
     let absmax = absmax_bands(x, rows, cols, threads);
     let gscale = safe_div(absmax, SR_BUDGET * FP8_MAX);
     let gpr = cols / GROUP;
@@ -590,6 +593,7 @@ pub fn sr_pack_threads(
 ) -> Result<f32> {
     check_dims(x.len(), rows, cols, GROUP)?;
     check_pack_bufs(x.len(), codes, scales)?;
+    crate::obs::count!("kernels.quant.sr_elems", x.len());
     let absmax = absmax_bands(x, rows, cols, threads);
     let gscale = safe_div(absmax, SR_BUDGET * FP8_MAX);
     pack_pass2(x, rows, cols, Variant::Sr, gscale, sr, codes, scales, threads);
@@ -672,6 +676,7 @@ pub fn rtn_pack_threads(
 ) -> Result<f32> {
     check_dims(x.len(), rows, cols, GROUP)?;
     check_pack_bufs(x.len(), codes, scales)?;
+    crate::obs::count!("kernels.quant.rtn_elems", x.len());
     let absmax = absmax_bands(x, rows, cols, threads);
     let gscale = safe_div(absmax, FP4_MAX * FP8_MAX);
     let gpr = cols / GROUP;
@@ -778,6 +783,7 @@ pub fn rtn_square_pack_threads(
         bail!("square blocks need rows % {GROUP} == 0, got rows={rows}");
     }
     check_pack_bufs(x.len(), codes, scales)?;
+    crate::obs::count!("kernels.quant.square_elems", x.len());
     let absmax = absmax_bands(x, rows, cols, threads);
     let gscale = safe_div(absmax, FP4_MAX * FP8_MAX);
     let (brows, gpr) = (rows / GROUP, cols / GROUP);
@@ -843,6 +849,7 @@ pub fn rtn_square_estimate_threads(
     if rows % GROUP != 0 {
         bail!("square blocks need rows % {GROUP} == 0, got rows={rows}");
     }
+    crate::obs::count!("kernels.quant.square_elems", x.len());
     let absmax = absmax_bands(x, rows, cols, threads);
     let gscale = safe_div(absmax, FP4_MAX * FP8_MAX);
     let (brows, gpr) = (rows / GROUP, cols / GROUP);

@@ -39,7 +39,16 @@ pub struct Scratch {
 }
 
 fn pop_pooled() -> Vec<f32> {
-    POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default()
+    match POOL.with(|p| p.borrow_mut().pop()) {
+        Some(buf) => {
+            crate::obs::count!("kernels.scratch.f32_hits", 1);
+            buf
+        }
+        None => {
+            crate::obs::count!("kernels.scratch.f32_misses", 1);
+            Vec::new()
+        }
+    }
 }
 
 /// Take a pooled buffer of length `len`, contents unspecified (callers
@@ -100,9 +109,16 @@ pub struct ScratchBytes {
 /// Take a pooled byte buffer of length `len`, contents unspecified
 /// (callers must fully overwrite it — packed-code emission targets).
 pub fn take_bytes_uninit(len: usize) -> ScratchBytes {
-    let mut buf = BYTE_POOL
-        .with(|p| p.borrow_mut().pop())
-        .unwrap_or_default();
+    let mut buf = match BYTE_POOL.with(|p| p.borrow_mut().pop()) {
+        Some(buf) => {
+            crate::obs::count!("kernels.scratch.byte_hits", 1);
+            buf
+        }
+        None => {
+            crate::obs::count!("kernels.scratch.byte_misses", 1);
+            Vec::new()
+        }
+    };
     buf.resize(len.max(buf.len()), 0);
     buf.truncate(len);
     ScratchBytes { buf }

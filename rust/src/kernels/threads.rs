@@ -125,8 +125,11 @@ where
 {
     let threads = threads.clamp(1, rows.max(1));
     if threads < 2 {
+        crate::obs::count!("kernels.threads.serial_jobs", 1);
         return vec![(0, rows, f(0, rows))];
     }
+    crate::obs::count!("kernels.threads.parallel_jobs", 1);
+    crate::obs::count!("kernels.threads.bands", rows.div_ceil(rows.div_ceil(threads)));
     let chunk = rows.div_ceil(threads);
     std::thread::scope(|s| {
         let f = &f;
@@ -155,8 +158,11 @@ where
     debug_assert_eq!(y.len(), rows * width);
     let threads = threads.clamp(1, rows.max(1));
     if threads < 2 {
+        crate::obs::count!("kernels.threads.serial_jobs", 1);
         return f(0, rows, y);
     }
+    crate::obs::count!("kernels.threads.parallel_jobs", 1);
+    crate::obs::count!("kernels.threads.bands", rows.div_ceil(rows.div_ceil(threads)));
     let chunk = rows.div_ceil(threads);
     std::thread::scope(|s| {
         let f = &f;

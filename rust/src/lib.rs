@@ -57,6 +57,7 @@ pub mod hadamard;
 #[deny(warnings)]
 pub mod kernels;
 pub mod metrics;
+pub mod obs;
 pub mod perfmodel;
 pub mod runtime;
 pub mod serve;

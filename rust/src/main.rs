@@ -10,6 +10,8 @@
 //!   serve        continuous-batching JSON-lines request loop (stdin)
 //!   data         inspect the synthetic corpus / batcher
 //!   info         list available artifacts and their contracts
+//!   obs-validate check emitted observability artifacts (JSONL traces,
+//!                Prometheus snapshots, Chrome trace JSON) parse
 //!
 //! Examples:
 //!   quartet2 train --preset tiny --scheme quartet2 --steps 300
@@ -49,6 +51,8 @@ USAGE:
                       [--eval-every 25] [--eval-batches 2] [--results-dir results]
                       [--export-checkpoint checkpoints/serve_<preset>_native]
                       [--no-export] [--threads N] [--gemm-path packed|dequant]
+                      [--obs off|counters|spans] [--trace-out steps.jsonl]
+                      [--chrome-trace trace.json] [--prometheus metrics.prom]
                       pure-Rust Quartet II training (MS-EDEN-quantized
                       fwd+bwd matmuls); packs the trained weights into a
                       NVFP4 serving checkpoint on completion. GEMMs run
@@ -56,23 +60,36 @@ USAGE:
                       QUARTET2_THREADS override the auto policy; 0 = auto)
                       and contract packed NVFP4 operands directly
                       (--gemm-path dequant or QUARTET2_GEMM_PATH=dequant
-                      select the f32 parity formulation)
+                      select the f32 parity formulation). --obs (or
+                      QUARTET2_OBS) turns on the observability core;
+                      --trace-out streams per-step JSONL events,
+                      --chrome-trace / --prometheus write a Chrome
+                      trace-event file / Prometheus text snapshot at exit
   quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|train-native|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
   quartet2 generate   [--preset tiny] [--prompt \"The \"] [--max-tokens 32]
                       [--checkpoint checkpoints/serve_<preset>] [--temperature 0]
-                      [--kv-capacity 256] [--seed 42]
+                      [--kv-capacity 256] [--seed 42] [--obs off|counters|spans]
                       one-shot decode; packs + saves a NVFP4 checkpoint on
                       first use, then serves from the packed container
   quartet2 serve      [--preset tiny] [--checkpoint ...] [--max-batch 8]
                       [--prefill-chunk 32] [--kv-capacity 256]
                       [--temperature 0] [--seed 42]
+                      [--obs off|counters|spans] [--trace-out steps.jsonl]
+                      [--chrome-trace trace.json] [--prometheus metrics.prom]
                       JSON-lines loop on stdin: {\"id\": 1, \"prompt\": \"...\",
                       \"max_tokens\": 16} per line; completions + a final
-                      stats record are emitted as JSON lines on stdout
+                      stats record are emitted as JSON lines on stdout.
+                      A {\"cmd\": \"metrics\"} line emits a metrics event
+                      carrying the live Prometheus text snapshot;
+                      --prometheus / --chrome-trace also write files at exit
   quartet2 data       [--seed 42] [--batch 4] [--seq 128] [--n 2]
   quartet2 info       [--artifacts-dir artifacts]
+  quartet2 obs-validate <file.jsonl|file.prom|trace.json> ...
+                      validate observability artifacts: every JSONL line
+                      parses, every Prometheus sample line is `name value`,
+                      Chrome traces are JSON with a traceEvents array
 ";
 
 fn main() -> ExitCode {
@@ -99,6 +116,7 @@ fn real_main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("data") => cmd_data(&args),
         Some("info") => cmd_info(&args),
+        Some("obs-validate") => cmd_obs_validate(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
             print!("{USAGE}");
@@ -160,10 +178,34 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply `--obs off|counters|spans` (overrides `QUARTET2_OBS`).
+fn apply_obs_flag(args: &Args) -> Result<()> {
+    if let Some(v) = args.opt("obs") {
+        let level = quartet2::obs::ObsLevel::parse(v)
+            .with_context(|| format!("--obs must be off|counters|spans, got {v:?}"))?;
+        quartet2::obs::set_level(Some(level));
+    }
+    Ok(())
+}
+
+/// Write the `--chrome-trace` / `--prometheus` export files, if asked.
+fn write_obs_exports(args: &Args) -> Result<()> {
+    if let Some(p) = args.opt("chrome-trace") {
+        quartet2::obs::export::write_chrome_trace(Path::new(p))?;
+        eprintln!("chrome trace -> {p} (open via chrome://tracing or ui.perfetto.dev)");
+    }
+    if let Some(p) = args.opt("prometheus") {
+        quartet2::obs::export::write_prometheus(Path::new(p))?;
+        eprintln!("prometheus snapshot -> {p}");
+    }
+    Ok(())
+}
+
 /// Pure-Rust training on the native engine (no artifacts, no XLA),
 /// then pack + save the trained weights as a NVFP4 serving checkpoint
 /// so `quartet2 generate --checkpoint <dir>` serves them directly.
 fn cmd_train_native(args: &Args) -> Result<()> {
+    apply_obs_flag(args)?;
     if let Some(t) = args.opt("threads") {
         let t: usize = t
             .parse()
@@ -194,6 +236,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         verbose: true,
         batch,
         seq,
+        trace_out: args.opt("trace-out").map(String::from),
     };
     // Scheme/shape validation (incl. the batch*seq quantization-grain
     // requirement) lives in engine::NativeBackend::from_config, which
@@ -210,6 +253,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         "done: final val loss {:.4}, {:.0} tokens/s, curve -> {path:?}",
         outcome.final_val_loss, outcome.tokens_per_sec
     );
+    write_obs_exports(args)?;
 
     if args.flag("no-export") {
         return Ok(());
@@ -318,6 +362,7 @@ fn scheduler_options(args: &Args, model: &PackedModel) -> Result<SchedulerOption
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
+    apply_obs_flag(args)?;
     let (model, dir) = load_or_init_model(args)?;
     let prompt = args.get_or("prompt", "The ");
     let max_tokens = args.usize_or("max-tokens", 32)?;
@@ -383,9 +428,14 @@ fn completion_json(c: &serve::Completion, tok: &ByteTokenizer) -> Json {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    apply_obs_flag(args)?;
     let (model, dir) = load_or_init_model(args)?;
     let tok = ByteTokenizer;
     let opts = scheduler_options(args, &model)?;
+    let mut trace = match args.opt("trace-out") {
+        Some(p) => Some(quartet2::obs::export::JsonlSink::create(Path::new(p))?),
+        None => None,
+    };
     eprintln!(
         "serving {} from {dir:?}: max_batch {}, prefill_chunk {}, kv {}",
         model.cfg.name, opts.max_batch, opts.prefill_chunk, opts.kv_capacity
@@ -423,10 +473,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
             };
             match recv {
                 Ok(line) => {
-                    if line.trim().is_empty() {
+                    let line = line.trim();
+                    if line.is_empty() {
                         continue;
                     }
-                    match parse_request(line.trim(), next_id, &tok)
+                    // control lines: {"cmd": "metrics"} emits the live
+                    // Prometheus snapshot without touching the queue
+                    if let Ok(v) = Json::parse(line) {
+                        if let Some(c) = v.opt("cmd") {
+                            match c.as_str() {
+                                Ok("metrics") => {
+                                    let m = json::obj(vec![
+                                        ("event", json::s("metrics")),
+                                        (
+                                            "prometheus",
+                                            json::s(&quartet2::obs::export::prometheus_text()),
+                                        ),
+                                    ]);
+                                    println!("{}", m.to_string());
+                                }
+                                _ => emit_error(&anyhow::anyhow!(
+                                    "unknown control line {line:?} (want {{\"cmd\": \"metrics\"}})"
+                                )),
+                            }
+                            continue;
+                        }
+                    }
+                    match parse_request(line, next_id, &tok)
                         .and_then(|req| {
                             next_id = next_id.max(req.id) + 1;
                             sched.submit(req)
@@ -443,7 +516,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
         if sched.outstanding() > 0 {
-            for c in sched.step()? {
+            let done = sched.step()?;
+            if let Some(t) = trace.as_mut() {
+                let s = sched.stats();
+                t.event(&json::obj(vec![
+                    ("event", json::s("serve_step")),
+                    ("step", json::n(s.steps as f64)),
+                    ("outstanding", json::n(sched.outstanding() as f64)),
+                    ("finished_this_step", json::n(done.len() as f64)),
+                    ("prefill_tokens", json::n(s.prefill_tokens as f64)),
+                    ("decode_tokens", json::n(s.decode_tokens as f64)),
+                ]))?;
+            }
+            for c in done {
                 println!("{}", completion_json(&c, &tok).to_string());
             }
         }
@@ -455,6 +540,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     stats.insert("event".into(), json::s("stats"));
     println!("{}", Json::Obj(stats).to_string());
+    if let Some(t) = trace.as_mut() {
+        t.flush()?;
+    }
+    write_obs_exports(args)?;
     Ok(())
 }
 
@@ -506,4 +595,83 @@ fn cmd_info(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Structural validation of observability artifacts (what the CI smoke
+/// runs over the files a traced train/serve emitted). The file type is
+/// picked by extension: `.jsonl` event streams, `.prom` Prometheus
+/// text snapshots, `.json` Chrome trace-event files.
+fn cmd_obs_validate(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        !args.positional.is_empty(),
+        "obs-validate needs at least one file, e.g. \
+         `quartet2 obs-validate steps.jsonl metrics.prom trace.json`"
+    );
+    for path in &args.positional {
+        let p = Path::new(path);
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading {path}"))?;
+        let verdict = match p.extension().and_then(|e| e.to_str()) {
+            Some("jsonl") => validate_jsonl(&text),
+            Some("prom") => validate_prometheus(&text),
+            Some("json") => validate_chrome_trace(&text),
+            other => bail!(
+                "{path}: unsupported extension {other:?} (want .jsonl, .prom or .json)"
+            ),
+        }
+        .with_context(|| format!("validating {path}"))?;
+        println!("{path}: ok ({verdict})");
+    }
+    Ok(())
+}
+
+/// Every non-empty line must parse as one JSON value.
+fn validate_jsonl(text: &str) -> Result<String> {
+    let mut events = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        Json::parse(line).with_context(|| format!("line {}", i + 1))?;
+        events += 1;
+    }
+    anyhow::ensure!(events > 0, "no events");
+    Ok(format!("{events} events"))
+}
+
+/// Every sample line must be `name value` with a numeric value
+/// (`#`-prefixed comment/metadata lines are skipped).
+fn validate_prometheus(text: &str) -> Result<String> {
+    let mut samples = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (name, value) = (parts.next(), parts.next());
+        anyhow::ensure!(
+            name.is_some() && value.is_some() && parts.next().is_none(),
+            "line {}: want `name value`, got {line:?}",
+            i + 1
+        );
+        let v = value.unwrap();
+        anyhow::ensure!(
+            v.parse::<f64>().is_ok(),
+            "line {}: value {v:?} is not a number",
+            i + 1
+        );
+        samples += 1;
+    }
+    anyhow::ensure!(samples > 0, "no samples");
+    Ok(format!("{samples} samples"))
+}
+
+/// The whole file must be JSON with a `traceEvents` array.
+fn validate_chrome_trace(text: &str) -> Result<String> {
+    let v = Json::parse(text)?;
+    match v.get("traceEvents")? {
+        Json::Arr(events) => Ok(format!("{} trace events", events.len())),
+        other => bail!("traceEvents is {other:?}, not an array"),
+    }
 }

@@ -12,6 +12,33 @@ pub fn bpb(loss_nats: f64, tokens_per_byte: f64) -> f64 {
     loss_nats / std::f64::consts::LN_2 * tokens_per_byte
 }
 
+/// `num / secs` guarded against zero/near-zero wall time: short smoke
+/// runs (or timer resolution collapse) report `0.0` instead of
+/// `inf`/NaN leaking into JSON output. Every throughput computed in
+/// this crate goes through here.
+pub fn safe_rate(num: f64, secs: f64) -> f64 {
+    if secs > 1e-9 && num.is_finite() {
+        num / secs
+    } else {
+        0.0
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (`q` in
+/// [0, 1]); `None` when empty, the sole sample when there is one —
+/// the 0-/1-sample cases are explicit, not an artifact of index
+/// arithmetic.
+fn nearest_rank(sorted: &[f64], q: f64) -> Option<f64> {
+    match sorted.len() {
+        0 => None,
+        1 => Some(sorted[0]),
+        n => {
+            let rank = (q.clamp(0.0, 1.0) * (n - 1) as f64).round() as usize;
+            Some(sorted[rank.min(n - 1)])
+        }
+    }
+}
+
 /// One logged training point.
 #[derive(Clone, Copy, Debug)]
 pub struct CurvePoint {
@@ -57,11 +84,11 @@ impl LossCurve {
         tail.iter().map(|p| p.train_loss).sum::<f64>() / tail.len().max(1) as f64
     }
 
-    /// Tokens/sec over the whole run.
+    /// Tokens/sec over the whole run (`0.0` for degenerate spans).
     pub fn throughput(&self) -> f64 {
         match (self.points.first(), self.points.last()) {
-            (Some(a), Some(b)) if b.wall_secs > a.wall_secs => {
-                (b.tokens - a.tokens) as f64 / (b.wall_secs - a.wall_secs)
+            (Some(a), Some(b)) => {
+                safe_rate((b.tokens.saturating_sub(a.tokens)) as f64, b.wall_secs - a.wall_secs)
             }
             _ => 0.0,
         }
@@ -211,15 +238,12 @@ impl LatencyRecorder {
         self.samples.len()
     }
 
-    /// Nearest-rank percentile (`q` in [0, 1]); `None` when empty.
+    /// Nearest-rank percentile (`q` in [0, 1]); `None` when empty, the
+    /// sole sample for a 1-sample history.
     pub fn percentile(&self, q: f64) -> Option<f64> {
-        if self.samples.is_empty() {
-            return None;
-        }
         let mut sorted = self.samples.clone();
         sorted.sort_by(f64::total_cmp);
-        let rank = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
-        Some(sorted[rank])
+        nearest_rank(&sorted, q)
     }
 
     pub fn p50(&self) -> Option<f64> {
@@ -243,12 +267,7 @@ impl LatencyRecorder {
         let mut sorted = self.samples.clone();
         sorted.sort_by(f64::total_cmp);
         let rank = |q: f64| -> Json {
-            if sorted.is_empty() {
-                Json::Null
-            } else {
-                let i = (q * (sorted.len() - 1) as f64).round() as usize;
-                json::n(sorted[i] * 1e3)
-            }
+            nearest_rank(&sorted, q).map(|s| json::n(s * 1e3)).unwrap_or(Json::Null)
         };
         json::obj(vec![
             ("count", json::n(self.count() as f64)),
@@ -346,6 +365,57 @@ mod tests {
         assert!((r.p99().unwrap() - 0.099).abs() < 2e-3);
         assert!((r.mean().unwrap() - 0.0505).abs() < 1e-6);
         assert!(r.p99().unwrap() >= r.p50().unwrap());
+    }
+
+    #[test]
+    fn safe_rate_degenerate_time() {
+        assert_eq!(safe_rate(1000.0, 0.0), 0.0);
+        assert_eq!(safe_rate(1000.0, 1e-12), 0.0);
+        assert_eq!(safe_rate(1000.0, -1.0), 0.0);
+        assert_eq!(safe_rate(f64::NAN, 1.0), 0.0);
+        assert!((safe_rate(1000.0, 2.0) - 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_small_histories() {
+        // 0 samples: every readout is None / Null, never a panic
+        let r = LatencyRecorder::default();
+        assert_eq!(r.percentile(0.5), None);
+        assert_eq!(r.p99(), None);
+        let j = r.to_json();
+        assert_eq!(j.get("p50_ms").unwrap(), &Json::Null);
+        assert_eq!(j.get("p99_ms").unwrap(), &Json::Null);
+        // 1 sample: every percentile is that sample
+        let mut r = LatencyRecorder::default();
+        r.push(0.25);
+        assert_eq!(r.percentile(0.0), Some(0.25));
+        assert_eq!(r.p50(), Some(0.25));
+        assert_eq!(r.p99(), Some(0.25));
+        assert_eq!(r.percentile(1.0), Some(0.25));
+        let j = r.to_json();
+        assert!((j.get("p99_ms").unwrap().as_f64().unwrap() - 250.0).abs() < 1e-9);
+        // out-of-range q clamps instead of indexing out of bounds
+        let mut r = LatencyRecorder::default();
+        r.push(1.0);
+        r.push(2.0);
+        assert_eq!(r.percentile(7.0), Some(2.0));
+        assert_eq!(r.percentile(-1.0), Some(1.0));
+    }
+
+    #[test]
+    fn throughput_zero_wall_time_is_zero() {
+        let mut c = LossCurve::new("t0", "bf16", "tiny");
+        for step in 0..2 {
+            c.push(CurvePoint {
+                step,
+                tokens: step * 100,
+                train_loss: 1.0,
+                val_loss: None,
+                wall_secs: 0.0,
+            });
+        }
+        assert_eq!(c.throughput(), 0.0);
+        assert!(c.throughput().is_finite());
     }
 
     #[test]

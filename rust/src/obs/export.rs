@@ -1,0 +1,238 @@
+//! Observability sinks: Prometheus text exposition, Chrome trace-event
+//! JSON, and a JSON-lines event stream.
+//!
+//! * [`prometheus_text`] — a text-format snapshot of every registered
+//!   metric (`quartet2_*` series; dot-separated names sanitized to
+//!   underscores). Dumped by `quartet2 serve` on a
+//!   `{"cmd": "metrics"}` control line and at exit, and by
+//!   `train-native --prometheus FILE`.
+//! * [`chrome_trace_json`] / [`write_chrome_trace`] — the buffered
+//!   span timeline as a Chrome trace-event file (`chrome://tracing` /
+//!   <https://ui.perfetto.dev>): complete (`"ph": "X"`) events with
+//!   microsecond timestamps relative to the process time origin, one
+//!   track per recording thread.
+//! * [`JsonlSink`] — a line-buffered JSON-lines event writer behind
+//!   `--trace-out` (the trainer emits one event per step, the serve
+//!   loop one per scheduler step).
+//!
+//! Everything here renders through the in-tree JSON layer
+//! ([`crate::util::json`]), so `quartet2 obs-validate` can re-parse
+//! all three artifact kinds without external tooling.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+use super::{snapshot, trace_events, SnapValue};
+
+/// Prometheus metric-name sanitization: `[a-zA-Z0-9_]`, everything
+/// else (the dots of the registry naming scheme) becomes `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// Render every registered metric in the Prometheus text exposition
+/// format. Counters and gauges map directly; a span aggregate exports
+/// as two counters, `*_count` (invocations) and `*_seconds_total`.
+pub fn prometheus_text() -> String {
+    let mut out = String::new();
+    for (name, value) in snapshot() {
+        let base = format!("quartet2_{}", sanitize(&name));
+        match value {
+            SnapValue::Counter(c) => {
+                out.push_str(&format!("# TYPE {base} counter\n{base} {c}\n"));
+            }
+            SnapValue::Gauge(g) => {
+                out.push_str(&format!("# TYPE {base} gauge\n{base} {g}\n"));
+            }
+            SnapValue::Span { count, total_ns } => {
+                let secs = total_ns as f64 * 1e-9;
+                out.push_str(&format!(
+                    "# TYPE {base}_count counter\n{base}_count {count}\n\
+                     # TYPE {base}_seconds_total counter\n{base}_seconds_total {secs}\n"
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Write [`prometheus_text`] to `path`.
+pub fn write_prometheus(path: &Path) -> Result<()> {
+    std::fs::write(path, prometheus_text())
+        .with_context(|| format!("writing Prometheus snapshot {path:?}"))
+}
+
+/// The buffered span timeline as a Chrome trace-event JSON value:
+/// `{"traceEvents": [{"ph": "X", "ts": ..., "dur": ..., ...}, ...]}`.
+pub fn chrome_trace_json() -> Json {
+    let events: Vec<Json> = trace_events()
+        .iter()
+        .map(|e| {
+            json::obj(vec![
+                ("name", json::s(e.name)),
+                ("cat", json::s("quartet2")),
+                ("ph", json::s("X")),
+                ("ts", json::n(e.ts_ns as f64 * 1e-3)),
+                ("dur", json::n(e.dur_ns as f64 * 1e-3)),
+                ("pid", json::n(1.0)),
+                ("tid", json::n(e.tid as f64)),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
+/// Write [`chrome_trace_json`] to `path`.
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    std::fs::write(path, chrome_trace_json().to_string())
+        .with_context(|| format!("writing Chrome trace {path:?}"))
+}
+
+/// Registered metrics as a JSON object (`name -> value`), for
+/// embedding snapshots inside JSON-lines events. `prefix` filters by
+/// metric-name prefix (`""` keeps everything); span aggregates render
+/// as `{count, total_ns}` objects.
+pub fn snapshot_json(prefix: &str) -> Json {
+    let fields: Vec<(String, Json)> = snapshot()
+        .into_iter()
+        .filter(|(name, _)| name.starts_with(prefix))
+        .map(|(name, value)| {
+            let v = match value {
+                SnapValue::Counter(c) => json::n(c as f64),
+                SnapValue::Gauge(g) => json::n(g),
+                SnapValue::Span { count, total_ns } => json::obj(vec![
+                    ("count", json::n(count as f64)),
+                    ("total_ns", json::n(total_ns as f64)),
+                ]),
+            };
+            (name, v)
+        })
+        .collect();
+    Json::Obj(fields.into_iter().collect())
+}
+
+/// Line-buffered JSON-lines event writer (the `--trace-out` sink).
+pub struct JsonlSink {
+    w: BufWriter<File>,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> Result<JsonlSink> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {dir:?}"))?;
+        }
+        let file = File::create(path)
+            .with_context(|| format!("creating trace stream {path:?}"))?;
+        Ok(JsonlSink { w: BufWriter::new(file) })
+    }
+
+    /// Append one event as a single JSON line.
+    pub fn event(&mut self, v: &Json) -> Result<()> {
+        writeln!(self.w, "{}", v.to_string()).context("writing trace event")
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush().context("flushing trace stream")
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_maps_dots_to_underscores() {
+        assert_eq!(sanitize("kernels.gemm.abt_macs"), "kernels_gemm_abt_macs");
+        assert_eq!(sanitize("a-b c"), "a_b_c");
+    }
+
+    #[test]
+    fn prometheus_text_covers_all_metric_kinds() {
+        crate::obs::counter("obs.test.prom_counter").add(2);
+        crate::obs::gauge("obs.test.prom_gauge").set(0.5);
+        crate::obs::span_stat("obs.test.prom_span").record_ns(1_500_000);
+        let text = prometheus_text();
+        assert!(text.contains("quartet2_obs_test_prom_counter"));
+        assert!(text.contains("quartet2_obs_test_prom_gauge 0.5"));
+        assert!(text.contains("quartet2_obs_test_prom_span_count"));
+        assert!(text.contains("quartet2_obs_test_prom_span_seconds_total"));
+        // every line is `# TYPE name kind` or `name value`
+        for line in text.lines().filter(|l| !l.is_empty()) {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                assert!(it.next().is_some(), "TYPE line missing name: {line}");
+                assert!(
+                    matches!(it.next(), Some("counter" | "gauge")),
+                    "bad TYPE kind: {line}"
+                );
+            } else {
+                let mut it = line.split_whitespace();
+                let name = it.next().expect("metric name");
+                assert!(name.starts_with("quartet2_"), "bad series name: {line}");
+                let val = it.next().expect("metric value");
+                assert!(val.parse::<f64>().is_ok(), "bad value in: {line}");
+                assert_eq!(it.next(), None, "trailing tokens in: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_trace_json_shape() {
+        let v = chrome_trace_json();
+        let events = v.get("traceEvents").unwrap();
+        assert!(matches!(events, Json::Arr(_)));
+        // round-trips through the in-tree parser
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert!(matches!(back.get("traceEvents").unwrap(), Json::Arr(_)));
+    }
+
+    #[test]
+    fn snapshot_json_filters_by_prefix() {
+        crate::obs::gauge("obs.test.snapjson").set(2.0);
+        let v = snapshot_json("obs.test.snapjson");
+        match v {
+            Json::Obj(m) => {
+                assert!(m.keys().all(|k| k.starts_with("obs.test.snapjson")));
+                assert!(!m.is_empty());
+            }
+            other => panic!("expected object, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let dir = std::env::temp_dir().join("q2_obs_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            sink.event(&json::obj(vec![("event", json::s("a")), ("n", json::n(1.0))]))
+                .unwrap();
+            sink.event(&json::obj(vec![("event", json::s("b"))])).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            Json::parse(line).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

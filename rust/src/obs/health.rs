@@ -1,0 +1,177 @@
+//! Quantization-health telemetry: per-tensor-role FP4 clip rate, E4M3
+//! scale-saturation rate, and relative quantization MSE of the packed
+//! estimate, sampled every N training steps.
+//!
+//! The paper's central claim is a quantization-*error* claim (MS-EDEN
+//! has well under half the MSE of Q_SR, Table 1), and the NVFP4
+//! pre-training literature stresses that low-precision runs live or
+//! die on monitoring exactly these signals live. The engine's packed
+//! GEMM path ([`crate::engine`]) already holds everything needed —
+//! the pre-quantization source (in quantizer space: the *rotated*
+//! tensor for MS-EDEN, whose staging buffer holds the RHT output after
+//! packing) next to the emitted FP4 codes, E4M3 scale bytes and global
+//! scale — so on sampled steps it calls [`record_packed`] per GEMM
+//! operand and the health gauges cost nothing on the other steps.
+//!
+//! Gauges are keyed `quant.<signal>.<quantizer>.<role>` (for example
+//! `quant.mse_rel.mseden.grad`), so one process quantizing the same
+//! tensors under SR and MS-EDEN exposes the paper's error gap as two
+//! live gauge families:
+//!
+//! * `quant.clip_rate.*` — fraction of elements whose source magnitude
+//!   exceeds the largest representable value of their group
+//!   (`FP4_MAX * scale`), i.e. elements the FP4 grid clamped.
+//! * `quant.scale_saturation.*` — fraction of E4M3 group-scale bytes
+//!   at the maximum finite encoding (|byte & 0x7F| == 0x7E ⇒ ±448):
+//!   groups with no scale headroom left.
+//! * `quant.mse_rel.*` — `Σ(est − src)² / Σ src²` of the decoded
+//!   packed estimate vs the quantizer-space source.
+//!
+//! Sampling cadence: every [`health_every`] steps (the
+//! `QUARTET2_OBS_HEALTH_EVERY` env, default 10, 0 disables), gated on
+//! [`super::counters_on`]. The trainer stamps the current step via
+//! [`set_step`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::formats::fp4::FP4_MAX;
+use crate::formats::fp8::e4m3_decode;
+use crate::kernels::FP4_PAIR_LUT;
+use crate::GROUP;
+
+use super::{count, counters_on, gauge};
+
+/// Which linear-layer operand a health sample describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorRole {
+    /// Activations (forward `x`, and `x` re-entering the grad-weight
+    /// matmul).
+    Act,
+    /// Weights (forward `w` and the grad-input `wᵀ` view).
+    Wgt,
+    /// Output gradients (`dy` in both backward matmuls).
+    Grad,
+}
+
+impl TensorRole {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TensorRole::Act => "act",
+            TensorRole::Wgt => "wgt",
+            TensorRole::Grad => "grad",
+        }
+    }
+}
+
+/// Sampling cadence in steps (`QUARTET2_OBS_HEALTH_EVERY`, read once;
+/// default 10, `0` disables health sampling entirely).
+pub fn health_every() -> u64 {
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("QUARTET2_OBS_HEALTH_EVERY")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(10)
+    })
+}
+
+/// Current training step, stamped by the trainer/backend each step so
+/// the engine's GEMM internals can gate sampling without plumbing the
+/// step index through every call.
+static STEP: AtomicU64 = AtomicU64::new(0);
+
+pub fn set_step(step: u64) {
+    STEP.store(step, Ordering::Relaxed);
+}
+
+/// Whether step `step` is a health-sampling step (counters enabled and
+/// the cadence divides it — step 0 always samples, so even a 2-step
+/// smoke run produces health gauges).
+pub fn sampled_step(step: u64) -> bool {
+    let every = health_every();
+    counters_on() && every > 0 && step % every == 0
+}
+
+/// Whether the *current* step (per [`set_step`]) samples health.
+pub fn sample_active() -> bool {
+    sampled_step(STEP.load(Ordering::Relaxed))
+}
+
+/// Record health gauges for one packed operand: `src` is the
+/// pre-quantization tensor in quantizer space (the rotated staging for
+/// MS-EDEN, the raw operand for SR / square-RTN), `codes`/`scales`/
+/// `gscale` the packed NVFP4 output, `quant` the per-operand quantizer
+/// label (`"sr"` / `"mseden"` / `"square"`).
+pub fn record_packed(
+    quant: &'static str,
+    role: TensorRole,
+    src: &[f32],
+    codes: &[u8],
+    scales: &[u8],
+    gscale: f32,
+) {
+    let n = src.len();
+    debug_assert_eq!(codes.len() * 2, n);
+    debug_assert_eq!(scales.len() * GROUP, n);
+    if n == 0 || codes.len() * 2 != n || scales.len() * GROUP != n {
+        return;
+    }
+    let mut clipped = 0usize;
+    let mut saturated = 0usize;
+    let mut err = 0.0f64;
+    let mut den = 0.0f64;
+    for (g, &sb) in scales.iter().enumerate() {
+        if (sb & 0x7F) == 0x7E {
+            saturated += 1;
+        }
+        let s = e4m3_decode(sb) * gscale;
+        let clip_at = FP4_MAX * s;
+        let src_g = &src[g * GROUP..(g + 1) * GROUP];
+        let codes_g = &codes[g * (GROUP / 2)..(g + 1) * (GROUP / 2)];
+        for (pair_idx, &byte) in codes_g.iter().enumerate() {
+            let pair = FP4_PAIR_LUT[byte as usize];
+            for j in 0..2 {
+                let v = src_g[pair_idx * 2 + j];
+                if v.abs() > clip_at {
+                    clipped += 1;
+                }
+                let e = (pair[j] * s - v) as f64;
+                err += e * e;
+                den += (v as f64) * (v as f64);
+            }
+        }
+    }
+    let groups = scales.len();
+    let role_s = role.as_str();
+    gauge(&format!("quant.clip_rate.{quant}.{role_s}")).set(clipped as f64 / n as f64);
+    gauge(&format!("quant.scale_saturation.{quant}.{role_s}"))
+        .set(saturated as f64 / groups as f64);
+    gauge(&format!("quant.mse_rel.{quant}.{role_s}")).set(err / den.max(1e-30));
+    gauge("quant.health_step").set(STEP.load(Ordering::Relaxed) as f64);
+    count!("quant.health_samples", 1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn role_labels() {
+        assert_eq!(TensorRole::Act.as_str(), "act");
+        assert_eq!(TensorRole::Wgt.as_str(), "wgt");
+        assert_eq!(TensorRole::Grad.as_str(), "grad");
+    }
+
+    #[test]
+    fn sampled_step_cadence() {
+        // default cadence (no env override in the test process) is on
+        let every = health_every();
+        assert!(every > 0);
+        assert_eq!(0 % every, 0, "step 0 always lands on the cadence");
+        // the level gate closes sampling whenever counters are off
+        if !counters_on() {
+            assert!(!sampled_step(0));
+        }
+    }
+}

@@ -1,0 +1,525 @@
+//! Always-on observability core shared by training, serving and the
+//! kernels layer: a process-global registry of sharded atomic counters
+//! and gauges, a scoped-span timer API, quantization-health telemetry
+//! ([`health`]) and three export sinks ([`export`]: JSON-lines events,
+//! Prometheus text, Chrome trace-event JSON).
+//!
+//! Detail level resolves like the crate's other process-global knobs
+//! ([`crate::engine::ops::gemm_path`], [`crate::kernels::threads`]):
+//!
+//! 1. a programmatic override installed via [`set_level`] (the `--obs`
+//!    CLI flag and tests),
+//! 2. the `QUARTET2_OBS` environment variable (`off` / `counters` /
+//!    `spans`), read once,
+//! 3. default: [`ObsLevel::Off`].
+//!
+//! Cost model — the reason instrumentation can live inside
+//! `#[deny(warnings)]` hot kernels permanently:
+//!
+//! * **off** — every [`count!`] / [`span!`] site is one relaxed atomic
+//!   load and a branch; no clock reads, no locks, no allocation, and
+//!   (by construction: observation never touches operand data) results
+//!   stay bitwise identical.
+//! * **counters** — counter sites additionally do one relaxed
+//!   `fetch_add` on a cache-line-padded shard indexed by a small
+//!   per-thread id, so concurrent GEMM workers do not bounce one hot
+//!   line; aggregation over shards is exact.
+//! * **spans** — span sites additionally read the monotonic clock
+//!   twice and append one bounded Chrome-trace event.
+//!
+//! Metric names are dot-separated (`kernels.gemm.abt_macs`,
+//! `engine.backward`, `serve.queue_wait`); the Prometheus sink
+//! sanitizes them to `quartet2_*` series. Registering the same name as
+//! two different metric types is a programming error and panics.
+
+pub mod export;
+pub mod health;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Re-exported instrumentation macros, so call sites read
+/// `obs::span!("engine.backward")` / `obs::count!("...", n)`.
+pub use crate::{obs_count as count, obs_span as span};
+
+/// How much the observability core records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    /// Instrumentation compiled in but dormant (one atomic load per
+    /// site); the default.
+    Off,
+    /// Counters and gauges record; span timing stays off.
+    Counters,
+    /// Everything: counters, gauges, span timings, trace events.
+    Spans,
+}
+
+impl ObsLevel {
+    /// Parse a `QUARTET2_OBS` / `--obs` value.
+    pub fn parse(s: &str) -> Option<ObsLevel> {
+        match s {
+            "off" | "0" | "none" => Some(ObsLevel::Off),
+            "counters" | "1" => Some(ObsLevel::Counters),
+            "spans" | "2" | "full" => Some(ObsLevel::Spans),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::Counters => "counters",
+            ObsLevel::Spans => "spans",
+        }
+    }
+}
+
+/// Programmatic level override: 255 = defer to env/default.
+static LEVEL_OVERRIDE: AtomicU8 = AtomicU8::new(255);
+
+/// `QUARTET2_OBS`, read once (the check sits on every kernel call; the
+/// env cannot change mid-process). Unrecognized values warn loudly —
+/// a silent fallback would make a mistyped `QUARTET2_OBS=span` run
+/// look like an instrumented one.
+fn env_level() -> Option<ObsLevel> {
+    static ENV: OnceLock<Option<ObsLevel>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("QUARTET2_OBS").ok() {
+        Some(v) => match ObsLevel::parse(&v) {
+            Some(l) => Some(l),
+            None => {
+                eprintln!(
+                    "warning: QUARTET2_OBS={v:?} not recognized \
+                     (want off|counters|spans); observability stays off"
+                );
+                None
+            }
+        },
+        None => None,
+    })
+}
+
+/// Install a process-wide [`ObsLevel`] override (`None` restores the
+/// env/default resolution). Intended for the `--obs` CLI flag, benches
+/// and tests.
+pub fn set_level(level: Option<ObsLevel>) {
+    let v = match level {
+        None => 255,
+        Some(ObsLevel::Off) => 0,
+        Some(ObsLevel::Counters) => 1,
+        Some(ObsLevel::Spans) => 2,
+    };
+    LEVEL_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The [`ObsLevel`] in effect.
+#[inline]
+pub fn level() -> ObsLevel {
+    match LEVEL_OVERRIDE.load(Ordering::Relaxed) {
+        0 => ObsLevel::Off,
+        1 => ObsLevel::Counters,
+        2 => ObsLevel::Spans,
+        _ => env_level().unwrap_or(ObsLevel::Off),
+    }
+}
+
+/// Whether counter/gauge sites record (counters or spans level).
+#[inline]
+pub fn counters_on() -> bool {
+    level() >= ObsLevel::Counters
+}
+
+/// Whether span-timing sites record (spans level only).
+#[inline]
+pub fn spans_on() -> bool {
+    level() >= ObsLevel::Spans
+}
+
+// ---------------------------------------------------------------- shards
+
+/// Counter shard count. Scoped GEMM/quantizer workers land on
+/// different shards (per-thread id mod [`SHARDS`]), so concurrent
+/// `fetch_add`s do not bounce a single cache line.
+const SHARDS: usize = 16;
+
+/// One cache-line-padded shard.
+#[repr(align(64))]
+#[derive(Default)]
+struct Shard(AtomicU64);
+
+/// Small dense per-thread id (assigned on first use, never reused
+/// within a process; shard index is `id % SHARDS`).
+fn thread_id() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static ID: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|id| *id)
+}
+
+/// A sharded monotonic counter. [`Counter::add`] is unconditional —
+/// the [`count!`] macro owns the level check so dormant sites never
+/// reach the atomic RMW.
+#[derive(Default)]
+pub struct Counter {
+    shards: [Shard; SHARDS],
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.shards[thread_id() % SHARDS].0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Exact total across shards.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// A last-value-wins f64 gauge (bits in one atomic; no shard needed —
+/// gauges are *set*, not accumulated, and only from sampled paths).
+#[derive(Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Aggregated timing of one span name: invocation count + total
+/// nanoseconds, both sharded so concurrent guards (e.g. per-band
+/// kernel spans) aggregate exactly without contention.
+#[derive(Default)]
+pub struct SpanStat {
+    count: Counter,
+    total_ns: Counter,
+}
+
+impl SpanStat {
+    /// Record one externally measured duration (the scheduler's
+    /// request-lifecycle metrics span multiple steps, so they cannot
+    /// use a scope guard).
+    pub fn record_ns(&self, ns: u64) {
+        self.count.add(1);
+        self.total_ns.add(ns);
+    }
+
+    /// `(invocations, total nanoseconds)` so far.
+    pub fn totals(&self) -> (u64, u64) {
+        (self.count.get(), self.total_ns.get())
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Span(&'static SpanStat),
+}
+
+fn registry() -> MutexGuard<'static, BTreeMap<String, Metric>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    REGISTRY
+        .get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .expect("obs registry poisoned")
+}
+
+/// The counter named `name`, registered on first use. Hot call sites
+/// go through [`count!`], which caches this lookup per site; the
+/// registry lock is only ever taken on the first hit (or for dynamic
+/// names on sampled paths). Panics if `name` is already registered as
+/// a different metric type.
+pub fn counter(name: &str) -> &'static Counter {
+    // resolve under the lock, panic (type confusion) only after
+    // releasing it — a poisoned registry would take down every site
+    let found = {
+        let mut reg = registry();
+        match reg
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Box::leak(Box::default())))
+        {
+            Metric::Counter(c) => Some(*c),
+            _ => None,
+        }
+    };
+    found.unwrap_or_else(|| panic!("obs metric {name:?} is not a counter"))
+}
+
+/// The gauge named `name`, registered on first use.
+pub fn gauge(name: &str) -> &'static Gauge {
+    let found = {
+        let mut reg = registry();
+        match reg
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Box::leak(Box::default())))
+        {
+            Metric::Gauge(g) => Some(*g),
+            _ => None,
+        }
+    };
+    found.unwrap_or_else(|| panic!("obs metric {name:?} is not a gauge"))
+}
+
+/// The span aggregate named `name`, registered on first use.
+pub fn span_stat(name: &str) -> &'static SpanStat {
+    let found = {
+        let mut reg = registry();
+        match reg
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Span(Box::leak(Box::default())))
+        {
+            Metric::Span(s) => Some(*s),
+            _ => None,
+        }
+    };
+    found.unwrap_or_else(|| panic!("obs metric {name:?} is not a span"))
+}
+
+/// `(invocations, total nanoseconds)` of span `name` so far — `(0, 0)`
+/// if the span never fired. The trainer reads per-step phase
+/// breakdowns as deltas of this.
+pub fn span_totals(name: &str) -> (u64, u64) {
+    match registry().get(name) {
+        Some(Metric::Span(s)) => s.totals(),
+        _ => (0, 0),
+    }
+}
+
+/// Record one externally measured duration under span `name` (gated on
+/// [`spans_on`], like guard-based spans).
+pub fn record_ns(name: &str, ns: u64) {
+    if spans_on() {
+        span_stat(name).record_ns(ns);
+    }
+}
+
+/// One registry entry's current value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SnapValue {
+    Counter(u64),
+    Gauge(f64),
+    Span { count: u64, total_ns: u64 },
+}
+
+/// Snapshot every registered metric (name-sorted). Counters and span
+/// totals are exact; gauges are last-written values.
+pub fn snapshot() -> Vec<(String, SnapValue)> {
+    registry()
+        .iter()
+        .map(|(name, m)| {
+            let v = match m {
+                Metric::Counter(c) => SnapValue::Counter(c.get()),
+                Metric::Gauge(g) => SnapValue::Gauge(g.get()),
+                Metric::Span(s) => {
+                    let (count, total_ns) = s.totals();
+                    SnapValue::Span { count, total_ns }
+                }
+            };
+            (name.clone(), v)
+        })
+        .collect()
+}
+
+// ----------------------------------------------------------------- spans
+
+/// Process time origin for trace timestamps (first span wins).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// One completed span occurrence, for the Chrome trace sink.
+#[derive(Clone, Debug)]
+pub(crate) struct TraceEvent {
+    pub(crate) name: &'static str,
+    /// nanoseconds since [`epoch`]
+    pub(crate) ts_ns: u64,
+    pub(crate) dur_ns: u64,
+    pub(crate) tid: usize,
+}
+
+/// Bounded trace-event buffer: beyond [`TRACE_CAP`] events, new spans
+/// still aggregate into their [`SpanStat`] but drop out of the
+/// timeline (counted in `obs.trace_dropped`), so long runs cannot grow
+/// memory without bound.
+const TRACE_CAP: usize = 1 << 16;
+
+fn trace_buf() -> &'static Mutex<Vec<TraceEvent>> {
+    static TRACE: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
+    TRACE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn trace_push(name: &'static str, start: Instant, dur_ns: u64) {
+    let ts_ns = start.duration_since(epoch()).as_nanos() as u64;
+    let mut buf = trace_buf().lock().expect("obs trace buffer poisoned");
+    if buf.len() < TRACE_CAP {
+        buf.push(TraceEvent { name, ts_ns, dur_ns, tid: thread_id() });
+    } else {
+        drop(buf);
+        count!("obs.trace_dropped", 1);
+    }
+}
+
+pub(crate) fn trace_events() -> Vec<TraceEvent> {
+    trace_buf().lock().expect("obs trace buffer poisoned").clone()
+}
+
+/// Drop all buffered trace events (between independent runs sharing a
+/// process — benches, tests).
+pub fn clear_trace() {
+    trace_buf().lock().expect("obs trace buffer poisoned").clear();
+}
+
+/// RAII span: records duration into its [`SpanStat`] (and the trace
+/// buffer) on drop. Construct via [`span!`], which caches the registry
+/// lookup per call site and hands out the no-op form when spans are
+/// off.
+pub struct SpanGuard {
+    active: Option<(&'static SpanStat, &'static str, Instant)>,
+}
+
+impl SpanGuard {
+    pub fn enter(stat: &'static SpanStat, name: &'static str) -> SpanGuard {
+        epoch(); // pin the time origin at or before the first start
+        SpanGuard { active: Some((stat, name, Instant::now())) }
+    }
+
+    pub fn noop() -> SpanGuard {
+        SpanGuard { active: None }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((stat, name, start)) = self.active.take() {
+            let dur_ns = start.elapsed().as_nanos() as u64;
+            stat.record_ns(dur_ns);
+            trace_push(name, start, dur_ns);
+        }
+    }
+}
+
+/// Scoped span timer: `let _s = obs::span!("engine.backward");` times
+/// the enclosing scope. One relaxed load when spans are off; the
+/// registry lookup happens once per call site (cached in a
+/// `OnceLock`). The name must be a `'static` literal.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {{
+        if $crate::obs::spans_on() {
+            static STAT: ::std::sync::OnceLock<&'static $crate::obs::SpanStat> =
+                ::std::sync::OnceLock::new();
+            $crate::obs::SpanGuard::enter(
+                STAT.get_or_init(|| $crate::obs::span_stat($name)),
+                $name,
+            )
+        } else {
+            $crate::obs::SpanGuard::noop()
+        }
+    }};
+}
+
+/// Counter increment: `obs::count!("kernels.gemm.abt_macs", m * n * k);`.
+/// One relaxed load when observability is off; the registry lookup
+/// happens once per call site. The name must be a `'static` literal.
+#[macro_export]
+macro_rules! obs_count {
+    ($name:expr, $v:expr) => {{
+        if $crate::obs::counters_on() {
+            static C: ::std::sync::OnceLock<&'static $crate::obs::Counter> =
+                ::std::sync::OnceLock::new();
+            C.get_or_init(|| $crate::obs::counter($name)).add($v as u64);
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests here never touch the global level (integration tests
+    // own that; see rust/tests/obs.rs) — they drive the primitives
+    // directly.
+
+    #[test]
+    fn counter_aggregates_exactly_across_threads() {
+        let c = counter("obs.test.unit_counter");
+        let before = c.get();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.add(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get() - before, 4 * 1000 * 3);
+    }
+
+    #[test]
+    fn gauge_round_trips_f64() {
+        let g = gauge("obs.test.unit_gauge");
+        g.set(0.1252);
+        assert_eq!(g.get(), 0.1252);
+        g.set(-3.5);
+        assert_eq!(g.get(), -3.5);
+    }
+
+    #[test]
+    fn span_stat_records_and_totals() {
+        let s = span_stat("obs.test.unit_span");
+        let (c0, n0) = s.totals();
+        s.record_ns(40);
+        s.record_ns(60);
+        let (c1, n1) = s.totals();
+        assert_eq!(c1 - c0, 2);
+        assert_eq!(n1 - n0, 100);
+        assert_eq!(span_totals("obs.test.unit_span"), (c1, n1));
+        assert_eq!(span_totals("obs.test.never_registered"), (0, 0));
+    }
+
+    #[test]
+    fn registry_rejects_type_confusion() {
+        counter("obs.test.typed");
+        let r = std::panic::catch_unwind(|| gauge("obs.test.typed"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn snapshot_contains_registered_names() {
+        counter("obs.test.snap_counter").add(0);
+        gauge("obs.test.snap_gauge").set(1.5);
+        let snap = snapshot();
+        assert!(snap.iter().any(|(n, _)| n == "obs.test.snap_counter"));
+        assert!(snap
+            .iter()
+            .any(|(n, v)| n == "obs.test.snap_gauge" && *v == SnapValue::Gauge(1.5)));
+        // name-sorted (BTreeMap order)
+        let names: Vec<&String> = snap.iter().map(|(n, _)| n).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn level_parse_vocabulary() {
+        assert_eq!(ObsLevel::parse("off"), Some(ObsLevel::Off));
+        assert_eq!(ObsLevel::parse("counters"), Some(ObsLevel::Counters));
+        assert_eq!(ObsLevel::parse("spans"), Some(ObsLevel::Spans));
+        assert_eq!(ObsLevel::parse("verbose"), None);
+        assert!(ObsLevel::Spans > ObsLevel::Counters);
+        assert_eq!(ObsLevel::Spans.as_str(), "spans");
+    }
+}

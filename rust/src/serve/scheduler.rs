@@ -15,9 +15,13 @@
 //! of 8 times. `benches/serve_throughput.rs` measures the resulting
 //! batched-vs-single decode speedup.
 //!
-//! Telemetry goes through [`crate::metrics`]: tokens/sec split by
-//! prefill/decode, and p50/p99 for time-to-first-token and request
-//! latency.
+//! Telemetry lands in two places: per-scheduler [`ServeStats`] (built
+//! on [`crate::metrics`]: tokens/sec split by prefill/decode, p50/p99
+//! for time-to-first-token and request latency) and the process-global
+//! [`crate::obs`] registry — request-lifecycle spans (queue wait,
+//! prefill vs decode step time, TTFT, end-to-end latency) plus batch
+//! occupancy / KV-fill gauges, exported via Prometheus text or Chrome
+//! traces when `QUARTET2_OBS` enables them.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -128,22 +132,19 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    /// Decode throughput over pure-decode steps (tokens/sec).
+    /// Decode throughput over pure-decode steps (tokens/sec); 0.0 when
+    /// no decode time has accumulated (never inf/NaN).
     pub fn decode_tokens_per_sec(&self) -> f64 {
-        if self.decode_secs > 0.0 {
-            self.decode_tokens as f64 / self.decode_secs
-        } else {
-            0.0
-        }
+        crate::metrics::safe_rate(self.decode_tokens as f64, self.decode_secs)
     }
 
-    /// Overall throughput including prefill work.
+    /// Overall throughput including prefill work; 0.0 on zero or
+    /// degenerate wall time (never inf/NaN).
     pub fn total_tokens_per_sec(&self) -> f64 {
-        if self.total_secs > 0.0 {
-            (self.prefill_tokens + self.decode_tokens) as f64 / self.total_secs
-        } else {
-            0.0
-        }
+        crate::metrics::safe_rate(
+            (self.prefill_tokens + self.decode_tokens) as f64,
+            self.total_secs,
+        )
     }
 
     pub fn to_json(&self) -> Json {
@@ -235,6 +236,8 @@ impl<'m> Scheduler<'m> {
             let Some((req, submitted)) = self.queue.pop_front() else {
                 break;
             };
+            // queue wait = submit -> admission into the batch
+            crate::obs::record_ns("serve.queue_wait", submitted.elapsed().as_nanos() as u64);
             let cache = self
                 .model
                 .new_cache(self.opts.kv_capacity)?;
@@ -272,6 +275,7 @@ impl<'m> Scheduler<'m> {
 
         let t0 = Instant::now();
         let logits = {
+            let _s = crate::obs::span!("serve.forward");
             let mut batch: Vec<StepSeq<'_>> = self
                 .active
                 .iter_mut()
@@ -284,10 +288,31 @@ impl<'m> Scheduler<'m> {
             self.model.forward_batch(&mut batch)?
         };
         let dt = t0.elapsed().as_secs_f64();
+        // classify the step so prefill and decode time aggregate into
+        // separate span stats (the obs-level analogue of decode_secs)
+        crate::obs::record_ns(
+            if decode_only {
+                "serve.step.decode"
+            } else {
+                "serve.step.prefill"
+            },
+            (dt * 1e9) as u64,
+        );
 
         // ---- account + sample + retire
         self.stats.steps += 1;
         self.stats.total_secs += dt;
+        crate::obs::count!("serve.steps", 1);
+        if crate::obs::counters_on() {
+            crate::obs::gauge("serve.batch_occupancy").set(self.active.len() as f64);
+            let fill: f64 = self
+                .active
+                .iter()
+                .map(|a| a.cache.resident() as f64 / a.cache.capacity() as f64)
+                .sum::<f64>()
+                / self.active.len() as f64;
+            crate::obs::gauge("serve.kv_fill").set(fill);
+        }
         let mut n_decode = 0usize;
         let mut n_prefill = 0usize;
         let mut done = Vec::new();
@@ -319,6 +344,10 @@ impl<'m> Scheduler<'m> {
             self.stats.decode_tokens += n_decode;
         }
         self.stats.prefill_tokens += n_prefill;
+        // obs counters track all fed tokens (unlike the throughput
+        // numerator above, which drops mixed-step decode tokens)
+        crate::obs::count!("serve.prefill_tokens", n_prefill);
+        crate::obs::count!("serve.decode_tokens", n_decode);
 
         let mut i = 0;
         while i < self.active.len() {
@@ -335,6 +364,9 @@ impl<'m> Scheduler<'m> {
                 self.stats.ttft.push(ttft);
                 self.stats.latency.push(latency);
                 self.stats.completed += 1;
+                crate::obs::count!("serve.completed", 1);
+                crate::obs::record_ns("serve.ttft", (ttft * 1e9) as u64);
+                crate::obs::record_ns("serve.request", (latency * 1e9) as u64);
                 done.push(Completion {
                     id: a.id,
                     prompt_len: a.prompt.len(),

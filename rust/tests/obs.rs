@@ -1,0 +1,250 @@
+//! Integration tests for the observability core that need to move the
+//! *process-global* obs level (the unit tests inside `src/obs/` never
+//! touch it). Every test that changes the level takes `level_lock()`
+//! first and restores `set_level(None)` before releasing it, so the
+//! tests compose under the default multi-threaded test harness.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use quartet2::coordinator::Backend;
+use quartet2::engine::{AdamWOptions, NativeBackend};
+use quartet2::hadamard::rademacher_signs;
+use quartet2::kernels::quant::{ms_eden_pack_threads, sr_pack_threads};
+use quartet2::kernels::set_threads;
+use quartet2::obs::{self, ObsLevel};
+use quartet2::serve::ModelConfig;
+use quartet2::util::json::Json;
+use quartet2::util::rng::Rng;
+
+/// Serializes tests that mutate the global obs level.
+fn level_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+/// A 1-layer model big enough to exercise the quantized GEMM path
+/// (dim = 128 = one full RHT rotation block along every contraction).
+fn quant_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "obs-test".into(),
+        vocab: 256,
+        dim: 128,
+        n_layers: 1,
+        n_heads: 2,
+        ffn: 128,
+        max_seq: 64,
+        rope_theta: 10000.0,
+    }
+}
+
+fn run_losses(scheme: &str, steps: usize) -> Vec<f64> {
+    let mut b = NativeBackend::from_config(
+        &quant_cfg(),
+        scheme,
+        2,
+        64,
+        11,
+        AdamWOptions::default(),
+    )
+    .unwrap();
+    let tokens: Vec<i32> = (0..128).map(|i| (i * 7) % 256).collect();
+    let targets: Vec<i32> = (0..128).map(|i| (i * 11 + 3) % 256).collect();
+    (0..steps)
+        .map(|s| b.train_step(s, tokens.clone(), targets.clone()).unwrap())
+        .collect()
+}
+
+#[test]
+fn counter_aggregation_is_exact_across_threads() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Counters));
+    let c = obs::counter("test.obs.parallel_adds");
+    let before = c.get();
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            s.spawn(move || {
+                for _ in 0..1000 {
+                    obs::counter("test.obs.parallel_adds").add(t as u64 + 1);
+                }
+            });
+        }
+    });
+    // 1000 * (1 + 2 + 3 + 4): sharded counters lose nothing
+    assert_eq!(c.get() - before, 10_000);
+    obs::set_level(None);
+}
+
+#[test]
+fn kernel_counters_are_exact_under_two_workers() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Counters));
+    set_threads(2);
+    let (m, n, k) = (8usize, 6usize, 32usize);
+    let a = vec![1.0f32; m * k];
+    let w = vec![0.5f32; n * k];
+    let mut y = vec![0.0f32; m * n];
+    let calls0 = obs::counter("kernels.gemm.abt_calls").get();
+    let macs0 = obs::counter("kernels.gemm.abt_macs").get();
+    quartet2::kernels::gemm_abt_threads(&a, m, &w, n, k, &mut y, 2).unwrap();
+    assert_eq!(obs::counter("kernels.gemm.abt_calls").get() - calls0, 1);
+    assert_eq!(
+        obs::counter("kernels.gemm.abt_macs").get() - macs0,
+        (m * n * k) as u64
+    );
+    set_threads(0);
+    obs::set_level(None);
+}
+
+#[test]
+fn span_totals_accumulate_when_enabled() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Spans));
+    let (c0, ns0) = obs::span_totals("test.obs.span");
+    for _ in 0..3 {
+        let _s = obs::span!("test.obs.span");
+        std::hint::black_box(0u64);
+    }
+    let (c1, ns1) = obs::span_totals("test.obs.span");
+    assert_eq!(c1 - c0, 3);
+    assert!(ns1 >= ns0);
+    // dormant level: the same site records nothing
+    obs::set_level(Some(ObsLevel::Off));
+    let (c2, _) = obs::span_totals("test.obs.span");
+    {
+        let _s = obs::span!("test.obs.span");
+    }
+    assert_eq!(obs::span_totals("test.obs.span").0, c2);
+    obs::set_level(None);
+}
+
+#[test]
+fn prometheus_text_parses_line_by_line() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Spans));
+    obs::count!("test.obs.prom_counter", 7);
+    obs::gauge("test.obs.prom_gauge").set(0.25);
+    {
+        let _s = obs::span!("test.obs.prom_span");
+    }
+    let text = obs::export::prometheus_text();
+    obs::set_level(None);
+    let mut samples = 0;
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        assert_eq!(parts.len(), 2, "bad sample line {line:?}");
+        assert!(parts[0].starts_with("quartet2_"), "bad name in {line:?}");
+        parts[1]
+            .parse::<f64>()
+            .unwrap_or_else(|_| panic!("bad value in {line:?}"));
+        samples += 1;
+    }
+    assert!(samples >= 3);
+    assert!(text.contains("quartet2_test_obs_prom_counter 7")
+        || text.contains("quartet2_test_obs_prom_counter"));
+    // span stats export as _count + _seconds_total pairs
+    assert!(text.contains("quartet2_test_obs_prom_span_count"));
+    assert!(text.contains("quartet2_test_obs_prom_span_seconds_total"));
+}
+
+#[test]
+fn chrome_trace_exports_valid_json() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Spans));
+    {
+        let _s = obs::span!("test.obs.trace_span");
+    }
+    let text = obs::export::chrome_trace_json();
+    obs::set_level(None);
+    let v = Json::parse(&text).expect("chrome trace must be valid JSON");
+    match v.get("traceEvents").unwrap() {
+        Json::Arr(events) => assert!(!events.is_empty()),
+        other => panic!("traceEvents should be an array, got {other:?}"),
+    }
+}
+
+#[test]
+fn off_level_leaves_training_bitwise_unchanged() {
+    let _g = level_lock();
+    // same seeds, same batches: the only difference is the obs level
+    obs::set_level(Some(ObsLevel::Off));
+    let off = run_losses("quartet2", 2);
+    obs::set_level(Some(ObsLevel::Spans));
+    let on = run_losses("quartet2", 2);
+    obs::set_level(None);
+    assert_eq!(off, on, "observability must never perturb results");
+    assert!(off.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn health_gauges_show_mseden_beating_sr() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Counters));
+    obs::health::set_step(0); // step 0 always lands on the cadence
+    assert!(obs::health::sample_active());
+
+    let (rows, cols) = (4usize, 128usize);
+    let n = rows * cols;
+    let src = Rng::seed_from(33).normal_vec(n);
+    let sr_rng = Rng::seed_from(5);
+    let mut codes = vec![0u8; n / 2];
+    let mut scales = vec![0u8; n / quartet2::GROUP];
+
+    let g = sr_pack_threads(&src, rows, cols, &sr_rng, &mut codes, &mut scales, 1).unwrap();
+    obs::health::record_packed(
+        "sr",
+        obs::health::TensorRole::Act,
+        &src,
+        &codes,
+        &scales,
+        g,
+    );
+
+    // MS-EDEN rotates in place; the mutated buffer *is* the
+    // quantizer-space source the packed codes estimate
+    let mut rotated = src.clone();
+    let signs = rademacher_signs(&mut Rng::seed_from(7));
+    let g = ms_eden_pack_threads(
+        &mut rotated,
+        rows,
+        cols,
+        false,
+        &signs,
+        &sr_rng,
+        &mut codes,
+        &mut scales,
+        1,
+    )
+    .unwrap();
+    obs::health::record_packed(
+        "mseden",
+        obs::health::TensorRole::Act,
+        &rotated,
+        &codes,
+        &scales,
+        g,
+    );
+
+    let sr_mse = obs::gauge("quant.mse_rel.sr.act").get();
+    let ms_mse = obs::gauge("quant.mse_rel.mseden.act").get();
+    obs::set_level(None);
+    assert!(sr_mse > 0.0 && ms_mse > 0.0, "sr {sr_mse} mseden {ms_mse}");
+    assert!(
+        ms_mse < sr_mse,
+        "MS-EDEN should quantize with lower relative MSE (got {ms_mse} vs SR {sr_mse})"
+    );
+    // rate gauges exist and are sane fractions
+    for name in [
+        "quant.clip_rate.sr.act",
+        "quant.clip_rate.mseden.act",
+        "quant.scale_saturation.sr.act",
+        "quant.scale_saturation.mseden.act",
+    ] {
+        let v = obs::gauge(name).get();
+        assert!((0.0..=1.0).contains(&v), "{name} = {v}");
+    }
+}

@@ -4,6 +4,11 @@
 # the repo root as BENCH_train_step.json / BENCH_serve.json /
 # BENCH_quantize.json / BENCH_qgemm.json.
 #
+# BENCH_train_step.json also carries a `train_step_phase_breakdown`
+# record (per-phase ns/step from the obs span timers: forward /
+# backward / optimizer / quantize) emitted by the train_step bench
+# itself — no extra step here.
+#
 #   scripts/bench.sh
 #
 # Thread policy: the benches compare serial vs parallel (and packed vs

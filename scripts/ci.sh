@@ -53,4 +53,41 @@ QUARTET2_THREADS=2 cargo run --release --bin quartet2 -- train-native \
     --results-dir "$smoke_dir/results" \
     --export-checkpoint "$smoke_dir/ckpt"
 test -f "$smoke_dir/ckpt/serve_checkpoint.json"
+
+# observability smoke: the same two steps with full tracing on — the
+# JSONL step stream, Prometheus snapshot, and Chrome trace must all be
+# emitted and must parse (obs-validate does line-level checks)
+QUARTET2_THREADS=2 QUARTET2_OBS=spans cargo run --release --bin quartet2 -- \
+    train-native \
+    --preset tiny --scheme quartet2 --steps 2 --batch 2 --seq 64 \
+    --eval-every 0 --log-every 1 --no-export \
+    --results-dir "$smoke_dir/results_obs" \
+    --trace-out "$smoke_dir/obs/steps.jsonl" \
+    --chrome-trace "$smoke_dir/obs/trace.json" \
+    --prometheus "$smoke_dir/obs/metrics.prom"
+grep -q '"event": *"train_step"' "$smoke_dir/obs/steps.jsonl" \
+    || grep -q '"event":"train_step"' "$smoke_dir/obs/steps.jsonl"
+grep -q 'quartet2_engine_step_count' "$smoke_dir/obs/metrics.prom"
+grep -q 'quartet2_quant_mse_rel_mseden' "$smoke_dir/obs/metrics.prom"
+
+# serving smoke with request-lifecycle telemetry: two requests plus a
+# {"cmd": "metrics"} control line through the JSON-lines loop
+printf '%s\n' \
+    '{"id": 1, "prompt": "Hello", "max_tokens": 4}' \
+    '{"cmd": "metrics"}' \
+    '{"id": 2, "prompt": "World", "max_tokens": 4}' \
+  | QUARTET2_THREADS=2 QUARTET2_OBS=spans cargo run --release --bin quartet2 -- \
+    serve --preset tiny --checkpoint "$smoke_dir/ckpt" \
+    --trace-out "$smoke_dir/obs/serve.jsonl" \
+    --prometheus "$smoke_dir/obs/serve.prom" \
+    > "$smoke_dir/obs/serve_out.jsonl"
+grep -q 'quartet2_serve_completed' "$smoke_dir/obs/serve.prom"
+
+cargo run --release --bin quartet2 -- obs-validate \
+    "$smoke_dir/obs/steps.jsonl" \
+    "$smoke_dir/obs/metrics.prom" \
+    "$smoke_dir/obs/trace.json" \
+    "$smoke_dir/obs/serve.jsonl" \
+    "$smoke_dir/obs/serve.prom" \
+    "$smoke_dir/obs/serve_out.jsonl"
 echo "ci: ok"
