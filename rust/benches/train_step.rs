@@ -320,6 +320,25 @@ fn main() {
             );
             fields.push((key, json::n(d as f64 / STEPS as f64)));
         }
+        // step-latency quantiles from the engine.step span histogram —
+        // the same log2-bucketed HDR sketch the Prometheus endpoint
+        // serves, read inline (covers warmup + timed steps)
+        if let Some(h) = quartet2::obs::span_hist("engine.step") {
+            println!(
+                "  {:<18} p50 {:>7.2} ms | p95 {:>7.2} ms | p99 {:>7.2} ms",
+                "step quantiles",
+                h.quantile(0.50) / 1e6,
+                h.quantile(0.95) / 1e6,
+                h.quantile(0.99) / 1e6
+            );
+            for (key, q) in [
+                ("step_p50_ns", 0.50),
+                ("step_p95_ns", 0.95),
+                ("step_p99_ns", 0.99),
+            ] {
+                fields.push((key, json::n(h.quantile(q))));
+            }
+        }
         rows.push(json::obj(fields));
     }
     quartet2::obs::set_level(None);

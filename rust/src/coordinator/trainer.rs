@@ -65,8 +65,14 @@ pub struct TrainerOptions {
     pub seq: usize,
     /// JSON-lines trace stream (`--trace-out`): one `train_step` event
     /// per step with loss, wall time, the per-phase span breakdown,
-    /// and — on health-sampled steps — the `quant.*` gauge snapshot.
+    /// and — on health-sampled steps — the `quant.*` gauge snapshot
+    /// plus the `dyn.*` training-dynamics snapshot and loss EWMA.
     pub trace_out: Option<String>,
+    /// `--on-anomaly` policy when the anomaly detector trips.
+    pub on_anomaly: obs::anomaly::AnomalyAction,
+    /// `--anomaly-dir`: where `--on-anomaly=snapshot` drops forensic
+    /// bundles (default `anomalies/`).
+    pub anomaly_dir: Option<String>,
 }
 
 impl Default for TrainerOptions {
@@ -83,6 +89,8 @@ impl Default for TrainerOptions {
             batch: 4,
             seq: 128,
             trace_out: None,
+            on_anomaly: obs::anomaly::AnomalyAction::Log,
+            anomaly_dir: None,
         }
     }
 }
@@ -359,11 +367,23 @@ impl Trainer {
         let t0 = Instant::now();
         let tokens_per_step = batch * seq;
         let mut last_eval = f64::NAN;
+        // anomaly forensics: the loss guard runs every step (pure
+        // arithmetic on the loss scalar — no obs/clock access, so the
+        // QUARTET2_OBS=off bitwise invariant holds); the gauge scan
+        // only on health-sampled steps, right after the engine
+        // refreshed the quant/dyn gauges
+        let mut detector = obs::anomaly::AnomalyDetector::new();
+        let mut anomaly_total = 0usize;
         for s in 0..opts.steps {
             let b = train_feed.next();
             let ts = Instant::now();
             let loss = self.step(s, b.tokens, b.targets)?;
             let step_ns = ts.elapsed().as_nanos() as u64;
+            let sampled = obs::health::sampled_step(s as u64);
+            let mut anomalies = detector.check_loss(s as u64, loss);
+            if sampled {
+                anomalies.extend(detector.check_gauges(s as u64));
+            }
             if let Some(sink) = sink.as_mut() {
                 let mut fields = vec![
                     ("event", json::s("train_step")),
@@ -378,10 +398,45 @@ impl Trainer {
                     prev_ns[i] = total;
                 }
                 fields.push(("phases", json::obj(phases)));
-                if obs::health::sampled_step(s as u64) {
+                if sampled {
                     fields.push(("health", obs::export::snapshot_json("quant.")));
+                    fields.push(("dynamics", obs::export::snapshot_json("dyn.")));
+                    fields.push(("loss_ewma", json::n(detector.loss_ewma())));
                 }
                 sink.event(&json::obj(fields))?;
+            }
+            if !anomalies.is_empty() {
+                anomaly_total += anomalies.len();
+                for a in &anomalies {
+                    eprintln!("anomaly [{}]: {}", a.kind, a.message);
+                    if let Some(sink) = sink.as_mut() {
+                        sink.event(&a.to_json_event())?;
+                    }
+                }
+                match opts.on_anomaly {
+                    obs::anomaly::AnomalyAction::Log => {}
+                    obs::anomaly::AnomalyAction::Snapshot => {
+                        let dir = opts.anomaly_dir.clone().unwrap_or_else(|| "anomalies".into());
+                        let path = obs::anomaly::write_forensic_bundle(
+                            Path::new(&dir),
+                            s as u64,
+                            &anomalies,
+                        )?;
+                        eprintln!("anomaly: forensic bundle -> {}", path.display());
+                    }
+                    obs::anomaly::AnomalyAction::Halt => {
+                        if let Some(sink) = sink.as_mut() {
+                            sink.flush()?;
+                        }
+                        let a = &anomalies[0];
+                        bail!(
+                            "halted on anomaly at step {s}: {} ({} = {})",
+                            a.kind,
+                            a.metric,
+                            a.value
+                        );
+                    }
+                }
             }
             let is_last = s + 1 == opts.steps;
             let do_eval = should_eval(s, opts.steps, opts.eval_every, opts.eval_batches);
@@ -421,6 +476,7 @@ impl Trainer {
                 ("run", json::s(&run_name)),
                 ("wall_secs", json::n(secs)),
                 ("tokens_per_sec", json::n(tokens_per_sec)),
+                ("anomalies", json::n(anomaly_total as f64)),
                 (
                     "final_val_loss",
                     // no-eval runs leave this NaN, which is not JSON
@@ -517,7 +573,7 @@ mod tests {
             batch: 2,
             seq: 8,
             seed: 3,
-            trace_out: None,
+            ..Default::default()
         };
         let mut t = Trainer::from_backend(Box::new(backend), opts);
         assert_eq!(t.batch_shape(), (2, 8));

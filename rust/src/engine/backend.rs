@@ -143,6 +143,18 @@ impl Backend for NativeBackend {
             tape.backward(loss_id)?
         };
         let aligned = AdamW::align(&grads, &pids);
+        if crate::obs::health::sample_active() {
+            // training-dynamics telemetry: per-param + global gradient
+            // norms, read-only over the aligned grads (f64 accumulate)
+            let mut global_sq = 0.0f64;
+            for (p, g) in self.model.params.iter().zip(&aligned) {
+                let Some(g) = g else { continue };
+                let sq: f64 = g.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                global_sq += sq;
+                crate::obs::gauge(&format!("dyn.grad_norm.{}", p.name)).set(sq.sqrt());
+            }
+            crate::obs::gauge("dyn.grad_norm.global").set(global_sq.sqrt());
+        }
         {
             let _s = crate::obs::span!("engine.optimizer");
             self.opt.step(&mut self.model.params, &aligned)?;

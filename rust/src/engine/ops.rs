@@ -579,6 +579,16 @@ pub fn linear(
     let (t, k) = (xv.rows(), xv.cols());
     let (n, wk) = (wv.rows(), wv.cols());
     ensure!(k == wk, "linear: x cols {k} != w cols {wk}");
+    if mode.effective(k) != QuantMode::F32 && crate::obs::health::sample_active() {
+        // training-dynamics telemetry: per-layer activation absmax,
+        // keyed by this step's quantized-linear ordinal (the k-th
+        // quantized linear of every step is the same layer, so `l<k>`
+        // is a stable identity; the F32 gate keeps the exact eval
+        // forward from claiming ordinals mid-step)
+        let idx = crate::obs::health::next_linear_index();
+        let absmax = xv.data.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+        crate::obs::gauge(&format!("dyn.act_absmax.l{idx}")).set(absmax as f64);
+    }
     let mut y = vec![0.0f32; t * n];
     qmatmul_view(
         View::Rows(&xv.data),

@@ -95,6 +95,9 @@ impl AdamW {
         let o = self.opts;
         let bc1 = 1.0 - o.beta1.powi(self.t as i32);
         let bc2 = 1.0 - o.beta2.powi(self.t as i32);
+        // training-dynamics telemetry (`dyn.update_ratio.*`): resolved
+        // once per optimizer step, off every non-sampled step
+        let telemetry = crate::obs::health::sample_active();
         for ((p, g), (m, v)) in params
             .iter_mut()
             .zip(grads)
@@ -112,14 +115,36 @@ impl AdamW {
             // by update time the tape has been consumed, so the param
             // is sole owner and make_mut updates in place (no copy)
             let pd = p.value.data.make_mut();
-            for i in 0..g.numel() {
-                let gi = g.data[i];
-                m[i] = o.beta1 * m[i] + (1.0 - o.beta1) * gi;
-                v[i] = o.beta2 * v[i] + (1.0 - o.beta2) * gi * gi;
-                let mhat = m[i] / bc1;
-                let vhat = v[i] / bc2;
-                let w = &mut pd[i];
-                *w -= lr * (mhat / (vhat.sqrt() + o.eps) + wd * *w);
+            if telemetry {
+                // same f32 update expression as the plain loop (binding
+                // the update first is bit-identical), plus f64 norm
+                // accumulation for the update-to-weight ratio gauge
+                let mut upd_sq = 0.0f64;
+                let mut w_sq = 0.0f64;
+                for i in 0..g.numel() {
+                    let gi = g.data[i];
+                    m[i] = o.beta1 * m[i] + (1.0 - o.beta1) * gi;
+                    v[i] = o.beta2 * v[i] + (1.0 - o.beta2) * gi * gi;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    let w = &mut pd[i];
+                    let upd = lr * (mhat / (vhat.sqrt() + o.eps) + wd * *w);
+                    *w -= upd;
+                    upd_sq += (upd as f64) * (upd as f64);
+                    w_sq += (*w as f64) * (*w as f64);
+                }
+                crate::obs::gauge(&format!("dyn.update_ratio.{}", p.name))
+                    .set(upd_sq.sqrt() / w_sq.sqrt().max(1e-30));
+            } else {
+                for i in 0..g.numel() {
+                    let gi = g.data[i];
+                    m[i] = o.beta1 * m[i] + (1.0 - o.beta1) * gi;
+                    v[i] = o.beta2 * v[i] + (1.0 - o.beta2) * gi * gi;
+                    let mhat = m[i] / bc1;
+                    let vhat = v[i] / bc2;
+                    let w = &mut pd[i];
+                    *w -= lr * (mhat / (vhat.sqrt() + o.eps) + wd * *w);
+                }
             }
         }
         Ok(())

@@ -52,7 +52,7 @@ pub fn run_native_scheme(env: &Env, scheme: &str) -> Result<LossCurve> {
         verbose: false,
         batch: BATCH,
         seq: SEQ,
-        trace_out: None,
+        ..Default::default()
     };
     let mut trainer =
         Trainer::native(opts).with_context(|| format!("native scheme {scheme}"))?;

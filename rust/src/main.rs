@@ -12,6 +12,8 @@
 //!   info         list available artifacts and their contracts
 //!   obs-validate check emitted observability artifacts (JSONL traces,
 //!                Prometheus snapshots, Chrome trace JSON) parse
+//!   obs-report   per-phase/loss/anomaly report over one --trace-out
+//!                stream, or an A/B diff over two (CI regression gate)
 //!
 //! Examples:
 //!   quartet2 train --preset tiny --scheme quartet2 --steps 300
@@ -53,6 +55,7 @@ USAGE:
                       [--no-export] [--threads N] [--gemm-path packed|dequant]
                       [--obs off|counters|spans] [--trace-out steps.jsonl]
                       [--chrome-trace trace.json] [--prometheus metrics.prom]
+                      [--on-anomaly log|snapshot|halt] [--anomaly-dir anomalies]
                       pure-Rust Quartet II training (MS-EDEN-quantized
                       fwd+bwd matmuls); packs the trained weights into a
                       NVFP4 serving checkpoint on completion. GEMMs run
@@ -64,7 +67,13 @@ USAGE:
                       QUARTET2_OBS) turns on the observability core;
                       --trace-out streams per-step JSONL events,
                       --chrome-trace / --prometheus write a Chrome
-                      trace-event file / Prometheus text snapshot at exit
+                      trace-event file / Prometheus text snapshot at
+                      exit. --on-anomaly picks what a detector trip
+                      (NaN/Inf loss, z-score loss spike, clip-rate /
+                      scale-saturation alarms) does: log and keep
+                      training, also dump a forensic bundle (full obs
+                      snapshot + recent trace ring) to --anomaly-dir,
+                      or halt the run with an error
   quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|train-native|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
@@ -88,8 +97,18 @@ USAGE:
   quartet2 info       [--artifacts-dir artifacts]
   quartet2 obs-validate <file.jsonl|file.prom|trace.json> ...
                       validate observability artifacts: every JSONL line
-                      parses, every Prometheus sample line is `name value`,
-                      Chrome traces are JSON with a traceEvents array
+                      parses (line-numbered errors on truncation, every
+                      run_start paired with a run_end), every Prometheus
+                      sample line is `name value`, Chrome traces (and
+                      anomaly forensic bundles) are JSON with a
+                      traceEvents array
+  quartet2 obs-report <a.jsonl> [b.jsonl] [--max-step-regression PCT]
+                      [--max-loss-diff X]
+                      one file: per-phase time table, loss/tokens-per-sec
+                      trend, health/dynamics trends, anomaly list. Two
+                      files: A/B diff table; with --max-step-regression /
+                      --max-loss-diff it exits nonzero when B regresses
+                      past the bound (the scripts/ci.sh smoke gate)
 ";
 
 fn main() -> ExitCode {
@@ -117,6 +136,7 @@ fn real_main() -> Result<()> {
         Some("data") => cmd_data(&args),
         Some("info") => cmd_info(&args),
         Some("obs-validate") => cmd_obs_validate(&args),
+        Some("obs-report") => cmd_obs_report(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
             print!("{USAGE}");
@@ -237,6 +257,12 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         batch,
         seq,
         trace_out: args.opt("trace-out").map(String::from),
+        on_anomaly: match args.opt("on-anomaly") {
+            None => quartet2::obs::anomaly::AnomalyAction::Log,
+            Some(v) => quartet2::obs::anomaly::AnomalyAction::parse(v)
+                .with_context(|| format!("--on-anomaly wants log|snapshot|halt, got {v:?}"))?,
+        },
+        anomaly_dir: args.opt("anomaly-dir").map(String::from),
     };
     // Scheme/shape validation (incl. the batch*seq quantization-grain
     // requirement) lives in engine::NativeBackend::from_config, which
@@ -598,9 +624,11 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 /// Structural validation of observability artifacts (what the CI smoke
-/// runs over the files a traced train/serve emitted). The file type is
-/// picked by extension: `.jsonl` event streams, `.prom` Prometheus
-/// text snapshots, `.json` Chrome trace-event files.
+/// runs over the files a traced train/serve emitted). The validators
+/// live in [`quartet2::obs::report`]; file type is picked by
+/// extension: `.jsonl` event streams, `.prom` Prometheus text
+/// snapshots, `.json` Chrome trace-event files (incl. anomaly
+/// forensic bundles).
 fn cmd_obs_validate(args: &Args) -> Result<()> {
     anyhow::ensure!(
         !args.positional.is_empty(),
@@ -608,70 +636,49 @@ fn cmd_obs_validate(args: &Args) -> Result<()> {
          `quartet2 obs-validate steps.jsonl metrics.prom trace.json`"
     );
     for path in &args.positional {
-        let p = Path::new(path);
-        let text =
-            std::fs::read_to_string(p).with_context(|| format!("reading {path}"))?;
-        let verdict = match p.extension().and_then(|e| e.to_str()) {
-            Some("jsonl") => validate_jsonl(&text),
-            Some("prom") => validate_prometheus(&text),
-            Some("json") => validate_chrome_trace(&text),
-            other => bail!(
-                "{path}: unsupported extension {other:?} (want .jsonl, .prom or .json)"
-            ),
-        }
-        .with_context(|| format!("validating {path}"))?;
+        let verdict = quartet2::obs::report::validate_path(Path::new(path))
+            .with_context(|| format!("validating {path}"))?;
         println!("{path}: ok ({verdict})");
     }
     Ok(())
 }
 
-/// Every non-empty line must parse as one JSON value.
-fn validate_jsonl(text: &str) -> Result<String> {
-    let mut events = 0usize;
-    for (i, line) in text.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        Json::parse(line).with_context(|| format!("line {}", i + 1))?;
-        events += 1;
-    }
-    anyhow::ensure!(events > 0, "no events");
-    Ok(format!("{events} events"))
-}
-
-/// Every sample line must be `name value` with a numeric value
-/// (`#`-prefixed comment/metadata lines are skipped).
-fn validate_prometheus(text: &str) -> Result<String> {
-    let mut samples = 0usize;
-    for (i, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut parts = line.split_whitespace();
-        let (name, value) = (parts.next(), parts.next());
+/// `obs-report`: single-run forensics view over one `--trace-out`
+/// JSONL stream, or an A/B diff over two — with optional regression
+/// bounds that turn the diff into a CI gate.
+fn cmd_obs_report(args: &Args) -> Result<()> {
+    use quartet2::obs::report::{self, RunReport};
+    anyhow::ensure!(
+        !args.positional.is_empty() && args.positional.len() <= 2,
+        "obs-report takes one or two --trace-out JSONL files, e.g. \
+         `quartet2 obs-report a.jsonl b.jsonl --max-step-regression 100`"
+    );
+    let a = RunReport::parse_file(Path::new(&args.positional[0]))?;
+    let Some(b_path) = args.positional.get(1) else {
+        print!("{}", a.render());
+        return Ok(());
+    };
+    let b = RunReport::parse_file(Path::new(b_path))?;
+    print!("{}", report::render_diff(&a, &b));
+    if let Some(max) = args.opt("max-step-regression") {
+        let max: f64 = max
+            .parse()
+            .with_context(|| format!("--max-step-regression wants a percentage, got {max:?}"))?;
+        let got = report::step_regression_pct(&a, &b);
         anyhow::ensure!(
-            name.is_some() && value.is_some() && parts.next().is_none(),
-            "line {}: want `name value`, got {line:?}",
-            i + 1
+            got <= max,
+            "mean step time regressed {got:+.1}% (bound {max}%)"
         );
-        let v = value.unwrap();
+    }
+    if let Some(bound) = args.opt("max-loss-diff") {
+        let bound: f64 = bound
+            .parse()
+            .with_context(|| format!("--max-loss-diff wants a number, got {bound:?}"))?;
+        let got = report::final_loss_diff(&a, &b);
         anyhow::ensure!(
-            v.parse::<f64>().is_ok(),
-            "line {}: value {v:?} is not a number",
-            i + 1
+            got <= bound,
+            "final train loss differs by {got:.3e} (bound {bound:e})"
         );
-        samples += 1;
     }
-    anyhow::ensure!(samples > 0, "no samples");
-    Ok(format!("{samples} samples"))
-}
-
-/// The whole file must be JSON with a `traceEvents` array.
-fn validate_chrome_trace(text: &str) -> Result<String> {
-    let v = Json::parse(text)?;
-    match v.get("traceEvents")? {
-        Json::Arr(events) => Ok(format!("{} trace events", events.len())),
-        other => bail!("traceEvents is {other:?}, not an array"),
-    }
+    Ok(())
 }

@@ -250,6 +250,10 @@ impl LatencyRecorder {
         self.percentile(0.50)
     }
 
+    pub fn p95(&self) -> Option<f64> {
+        self.percentile(0.95)
+    }
+
     pub fn p99(&self) -> Option<f64> {
         self.percentile(0.99)
     }
@@ -276,6 +280,7 @@ impl LatencyRecorder {
                 self.mean().map(|s| json::n(s * 1e3)).unwrap_or(Json::Null),
             ),
             ("p50_ms", rank(0.50)),
+            ("p95_ms", rank(0.95)),
             ("p99_ms", rank(0.99)),
         ])
     }
@@ -362,9 +367,13 @@ mod tests {
         }
         assert_eq!(r.count(), 100);
         assert!((r.p50().unwrap() - 0.050).abs() < 2e-3);
+        assert!((r.p95().unwrap() - 0.095).abs() < 2e-3);
         assert!((r.p99().unwrap() - 0.099).abs() < 2e-3);
         assert!((r.mean().unwrap() - 0.0505).abs() < 1e-6);
-        assert!(r.p99().unwrap() >= r.p50().unwrap());
+        assert!(r.p99().unwrap() >= r.p95().unwrap());
+        assert!(r.p95().unwrap() >= r.p50().unwrap());
+        let j = r.to_json();
+        assert!(j.get("p95_ms").unwrap().as_f64().unwrap() >= j.get("p50_ms").unwrap().as_f64().unwrap());
     }
 
     #[test]

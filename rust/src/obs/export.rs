@@ -27,7 +27,7 @@ use anyhow::{Context, Result};
 
 use crate::util::json::{self, Json};
 
-use super::{snapshot, trace_events, SnapValue};
+use super::{recent_trace_events, snapshot, trace_events, HistSnapshot, SnapValue, TraceEvent};
 
 /// Prometheus metric-name sanitization: `[a-zA-Z0-9_]`, everything
 /// else (the dots of the registry naming scheme) becomes `_`.
@@ -37,9 +37,41 @@ fn sanitize(name: &str) -> String {
         .collect()
 }
 
+/// Append one Prometheus histogram exposition (`*_bucket{le="..."}`
+/// cumulative counts, `*_sum`, `*_count`) plus p50/p95/p99 quantile
+/// gauges for a merged [`HistSnapshot`]. `scale` converts the recorded
+/// integer unit to the exported one (1e-9 turns span nanoseconds into
+/// seconds; 1.0 leaves standalone histograms in their native unit).
+/// Buckets above the highest occupied one are folded into `+Inf`.
+fn push_histogram(out: &mut String, base: &str, hist: &HistSnapshot, scale: f64) {
+    out.push_str(&format!("# TYPE {base} histogram\n"));
+    let last = hist
+        .buckets
+        .iter()
+        .rposition(|&c| c > 0)
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let mut cum = 0u64;
+    for (i, &c) in hist.buckets.iter().take(last).enumerate() {
+        cum += c;
+        let le = HistSnapshot::bucket_le(i) * scale;
+        out.push_str(&format!("{base}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{base}_bucket{{le=\"+Inf\"}} {}\n", hist.count));
+    out.push_str(&format!("{base}_sum {}\n", hist.sum as f64 * scale));
+    out.push_str(&format!("{base}_count {}\n", hist.count));
+    for (q, tag) in [(0.50, "p50"), (0.95, "p95"), (0.99, "p99")] {
+        let v = hist.quantile(q) * scale;
+        out.push_str(&format!("# TYPE {base}_{tag} gauge\n{base}_{tag} {v}\n"));
+    }
+}
+
 /// Render every registered metric in the Prometheus text exposition
 /// format. Counters and gauges map directly; a span aggregate exports
-/// as two counters, `*_count` (invocations) and `*_seconds_total`.
+/// as two counters, `*_count` (invocations) and `*_seconds_total`,
+/// plus a `*_seconds` histogram (log2 buckets) with live p50/p95/p99
+/// quantile gauges; standalone histograms export the same shape in
+/// their native unit.
 pub fn prometheus_text() -> String {
     let mut out = String::new();
     for (name, value) in snapshot() {
@@ -51,12 +83,16 @@ pub fn prometheus_text() -> String {
             SnapValue::Gauge(g) => {
                 out.push_str(&format!("# TYPE {base} gauge\n{base} {g}\n"));
             }
-            SnapValue::Span { count, total_ns } => {
+            SnapValue::Span { count, total_ns, hist } => {
                 let secs = total_ns as f64 * 1e-9;
                 out.push_str(&format!(
                     "# TYPE {base}_count counter\n{base}_count {count}\n\
                      # TYPE {base}_seconds_total counter\n{base}_seconds_total {secs}\n"
                 ));
+                push_histogram(&mut out, &format!("{base}_seconds"), &hist, 1e-9);
+            }
+            SnapValue::Hist(hist) => {
+                push_histogram(&mut out, &base, &hist, 1.0);
             }
         }
     }
@@ -69,27 +105,35 @@ pub fn write_prometheus(path: &Path) -> Result<()> {
         .with_context(|| format!("writing Prometheus snapshot {path:?}"))
 }
 
+/// One completed span as a Chrome complete (`"ph": "X"`) event.
+fn chrome_event(e: &TraceEvent) -> Json {
+    json::obj(vec![
+        ("name", json::s(e.name)),
+        ("cat", json::s("quartet2")),
+        ("ph", json::s("X")),
+        ("ts", json::n(e.ts_ns as f64 * 1e-3)),
+        ("dur", json::n(e.dur_ns as f64 * 1e-3)),
+        ("pid", json::n(1.0)),
+        ("tid", json::n(e.tid as f64)),
+    ])
+}
+
 /// The buffered span timeline as a Chrome trace-event JSON value:
 /// `{"traceEvents": [{"ph": "X", "ts": ..., "dur": ..., ...}, ...]}`.
 pub fn chrome_trace_json() -> Json {
-    let events: Vec<Json> = trace_events()
-        .iter()
-        .map(|e| {
-            json::obj(vec![
-                ("name", json::s(e.name)),
-                ("cat", json::s("quartet2")),
-                ("ph", json::s("X")),
-                ("ts", json::n(e.ts_ns as f64 * 1e-3)),
-                ("dur", json::n(e.dur_ns as f64 * 1e-3)),
-                ("pid", json::n(1.0)),
-                ("tid", json::n(e.tid as f64)),
-            ])
-        })
-        .collect();
+    let events: Vec<Json> = trace_events().iter().map(chrome_event).collect();
     json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", json::s("ms")),
     ])
+}
+
+/// The bounded last-N span window as a Chrome trace-event array —
+/// embedded in anomaly forensic bundles, which stay loadable by
+/// `chrome://tracing` / `quartet2 obs-validate` because `traceEvents`
+/// keeps the standard shape.
+pub(crate) fn recent_chrome_events() -> Json {
+    Json::Arr(recent_trace_events().iter().map(chrome_event).collect())
 }
 
 /// Write [`chrome_trace_json`] to `path`.
@@ -110,9 +154,16 @@ pub fn snapshot_json(prefix: &str) -> Json {
             let v = match value {
                 SnapValue::Counter(c) => json::n(c as f64),
                 SnapValue::Gauge(g) => json::n(g),
-                SnapValue::Span { count, total_ns } => json::obj(vec![
+                SnapValue::Span { count, total_ns, .. } => json::obj(vec![
                     ("count", json::n(count as f64)),
                     ("total_ns", json::n(total_ns as f64)),
+                ]),
+                SnapValue::Hist(h) => json::obj(vec![
+                    ("count", json::n(h.count as f64)),
+                    ("sum", json::n(h.sum as f64)),
+                    ("p50", json::n(h.quantile(0.50))),
+                    ("p95", json::n(h.quantile(0.95))),
+                    ("p99", json::n(h.quantile(0.99))),
                 ]),
             };
             (name, v)
@@ -173,13 +224,19 @@ mod tests {
         assert!(text.contains("quartet2_obs_test_prom_gauge 0.5"));
         assert!(text.contains("quartet2_obs_test_prom_span_count"));
         assert!(text.contains("quartet2_obs_test_prom_span_seconds_total"));
-        // every line is `# TYPE name kind` or `name value`
+        // spans now also carry a histogram + quantile gauges
+        assert!(text.contains("quartet2_obs_test_prom_span_seconds_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("quartet2_obs_test_prom_span_seconds_p99"));
+        // the trace drop counter is always present, even when zero
+        assert!(text.contains("quartet2_obs_trace_dropped"));
+        // every line is `# TYPE name kind` or `name value` (bucket
+        // sample names contain the `{le="..."}` label but no spaces)
         for line in text.lines().filter(|l| !l.is_empty()) {
             if let Some(rest) = line.strip_prefix("# TYPE ") {
                 let mut it = rest.split_whitespace();
                 assert!(it.next().is_some(), "TYPE line missing name: {line}");
                 assert!(
-                    matches!(it.next(), Some("counter" | "gauge")),
+                    matches!(it.next(), Some("counter" | "gauge" | "histogram")),
                     "bad TYPE kind: {line}"
                 );
             } else {
@@ -191,6 +248,32 @@ mod tests {
                 assert_eq!(it.next(), None, "trailing tokens in: {line}");
             }
         }
+    }
+
+    #[test]
+    fn histogram_exposition_has_cumulative_buckets() {
+        let h = crate::obs::histogram("obs.test.export_hist");
+        for v in [1u64, 2, 3, 100] {
+            h.record(v);
+        }
+        let text = prometheus_text();
+        let base = "quartet2_obs_test_export_hist";
+        // cumulative bucket counts: parse every bucket line in order
+        // and check monotonicity + the +Inf total
+        let mut cum = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix(&format!("{base}_bucket{{le=\"")) {
+                let (le, count) = rest.split_once("\"} ").expect("bucket line shape");
+                cum.push((le.to_string(), count.parse::<u64>().unwrap()));
+            }
+        }
+        assert!(cum.len() >= 2, "want bucket lines, got {cum:?}");
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1), "not cumulative: {cum:?}");
+        assert_eq!(cum.last().unwrap().0, "+Inf");
+        assert_eq!(cum.last().unwrap().1, 4);
+        assert!(text.contains(&format!("{base}_sum 106")));
+        assert!(text.contains(&format!("{base}_count 4")));
+        assert!(text.contains(&format!("{base}_p50")));
     }
 
     #[test]

@@ -64,16 +64,33 @@ impl TensorRole {
     }
 }
 
-/// Sampling cadence in steps (`QUARTET2_OBS_HEALTH_EVERY`, read once;
-/// default 10, `0` disables health sampling entirely).
+/// Programmatic cadence override (tests and future CLI flags);
+/// `u64::MAX` = defer to the env/default, mirroring
+/// [`super::set_level`]'s resolution order.
+static EVERY_OVERRIDE: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Install a process-wide sampling-cadence override (`None` restores
+/// the `QUARTET2_OBS_HEALTH_EVERY` / default-10 resolution).
+pub fn set_health_every(every: Option<u64>) {
+    EVERY_OVERRIDE.store(every.unwrap_or(u64::MAX), Ordering::Relaxed);
+}
+
+/// Sampling cadence in steps: a [`set_health_every`] override if one
+/// is installed, else `QUARTET2_OBS_HEALTH_EVERY` (read once; default
+/// 10, `0` disables health sampling entirely).
 pub fn health_every() -> u64 {
-    static ENV: OnceLock<u64> = OnceLock::new();
-    *ENV.get_or_init(|| {
-        std::env::var("QUARTET2_OBS_HEALTH_EVERY")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .unwrap_or(10)
-    })
+    match EVERY_OVERRIDE.load(Ordering::Relaxed) {
+        u64::MAX => {
+            static ENV: OnceLock<u64> = OnceLock::new();
+            *ENV.get_or_init(|| {
+                std::env::var("QUARTET2_OBS_HEALTH_EVERY")
+                    .ok()
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .unwrap_or(10)
+            })
+        }
+        v => v,
+    }
 }
 
 /// Current training step, stamped by the trainer/backend each step so
@@ -81,8 +98,21 @@ pub fn health_every() -> u64 {
 /// step index through every call.
 static STEP: AtomicU64 = AtomicU64::new(0);
 
+/// Per-step ordinal of quantized linear-layer calls, reset by
+/// [`set_step`]: the k-th quantized linear of a step keys its
+/// activation-absmax dynamics gauge as `dyn.act_absmax.l<k>`, giving a
+/// stable per-layer identity without threading layer names through the
+/// engine's op layer.
+static LINEAR_IDX: AtomicU64 = AtomicU64::new(0);
+
 pub fn set_step(step: u64) {
     STEP.store(step, Ordering::Relaxed);
+    LINEAR_IDX.store(0, Ordering::Relaxed);
+}
+
+/// Claim the next quantized-linear ordinal of the current step.
+pub fn next_linear_index() -> u64 {
+    LINEAR_IDX.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Whether step `step` is a health-sampling step (counters enabled and
@@ -161,6 +191,24 @@ mod tests {
         assert_eq!(TensorRole::Act.as_str(), "act");
         assert_eq!(TensorRole::Wgt.as_str(), "wgt");
         assert_eq!(TensorRole::Grad.as_str(), "grad");
+    }
+
+    #[test]
+    fn cadence_override_and_linear_index() {
+        // nonzero override so the concurrently running cadence test
+        // (which only asserts every > 0) composes with this one
+        set_health_every(Some(3));
+        assert_eq!(health_every(), 3);
+        set_health_every(None);
+        assert!(health_every() > 0);
+        // set_step resets the per-step linear ordinal
+        set_step(7);
+        let a = next_linear_index();
+        let b = next_linear_index();
+        assert_eq!(b, a + 1);
+        set_step(8);
+        assert_eq!(next_linear_index(), 0);
+        set_step(0);
     }
 
     #[test]

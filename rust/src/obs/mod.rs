@@ -32,10 +32,12 @@
 //! sanitizes them to `quartet2_*` series. Registering the same name as
 //! two different metric types is a programming error and panics.
 
+pub mod anomaly;
 pub mod export;
 pub mod health;
+pub mod report;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
@@ -111,6 +113,16 @@ pub fn set_level(level: Option<ObsLevel>) {
         Some(ObsLevel::Spans) => 2,
     };
     LEVEL_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Serializes unit tests that flip the process-global level via
+/// [`set_level`] (they run concurrently in one test binary; an
+/// unsynchronized restore-to-`None` would race another test's
+/// override window).
+#[cfg(test)]
+pub(crate) fn test_level_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// The [`ObsLevel`] in effect.
@@ -195,13 +207,128 @@ impl Gauge {
     }
 }
 
-/// Aggregated timing of one span name: invocation count + total
-/// nanoseconds, both sharded so concurrent guards (e.g. per-band
-/// kernel spans) aggregate exactly without contention.
+/// Number of HDR-style base-2 histogram buckets: bucket 0 holds the
+/// value 0, bucket `i` (1..=64) holds values with bit length `i`, i.e.
+/// the half-open range `[2^(i-1), 2^i)`.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Log2 bucket index of a recorded value.
+#[inline]
+fn hist_bucket(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// One cache-line-aligned histogram shard: 65 bucket counters plus the
+/// running sum (so the merged snapshot exposes an exact `_sum`).
+#[repr(align(64))]
+struct HistShard {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for HistShard {
+    fn default() -> Self {
+        HistShard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A sharded, log-bucketed (HDR-style, base-2) histogram. Recording is
+/// one relaxed `fetch_add` per bucket + one for the sum, on a
+/// cache-line-padded shard picked by the small per-thread id — the
+/// same contention model as [`Counter`], so concurrent recorders merge
+/// exactly: the merged bucket counts equal what a serial run would
+/// have produced. Like [`Counter::add`], [`Histogram::record`] is
+/// unconditional; level gating is the call site's job.
+#[derive(Default)]
+pub struct Histogram {
+    shards: [HistShard; SHARDS],
+}
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let shard = &self.shards[thread_id() % SHARDS];
+        shard.buckets[hist_bucket(v)].fetch_add(1, Ordering::Relaxed);
+        shard.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Exact merge across shards.
+    pub fn merged(&self) -> HistSnapshot {
+        let mut snap = HistSnapshot::default();
+        for shard in &self.shards {
+            for (i, b) in shard.buckets.iter().enumerate() {
+                snap.buckets[i] += b.load(Ordering::Relaxed);
+            }
+            snap.sum += shard.sum.load(Ordering::Relaxed);
+        }
+        snap.count = snap.buckets.iter().sum();
+        snap
+    }
+}
+
+/// A merged point-in-time view of a [`Histogram`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Largest value bucket `i` can hold (the Prometheus `le` bound):
+    /// `0` for bucket 0, `2^i - 1` for the others.
+    pub fn bucket_le(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            ((1u128 << i) - 1) as f64
+        }
+    }
+
+    /// Quantile estimate (`q` in [0, 1]): nearest-rank bucket search
+    /// plus linear interpolation inside the winning bucket. `0.0` when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 && cum + c > target {
+                let lo = if i == 0 { 0.0 } else { (1u128 << (i - 1)) as f64 };
+                let hi = Self::bucket_le(i);
+                let frac = if c > 1 {
+                    (target - cum) as f64 / (c - 1) as f64
+                } else {
+                    0.5
+                };
+                return lo + (hi - lo) * frac;
+            }
+            cum += c;
+        }
+        0.0
+    }
+}
+
+/// Aggregated timing of one span name, now backed entirely by a
+/// sharded [`Histogram`] of nanosecond durations: invocation count and
+/// total nanoseconds read off the merged snapshot (exactly, like the
+/// old counter pair), and the bucket distribution gives live p50/p95/
+/// p99 for every span — the engine phase timers and the serve
+/// scheduler's TTFT / request-latency / step-time paths included.
 #[derive(Default)]
 pub struct SpanStat {
-    count: Counter,
-    total_ns: Counter,
+    hist: Histogram,
 }
 
 impl SpanStat {
@@ -209,13 +336,18 @@ impl SpanStat {
     /// request-lifecycle metrics span multiple steps, so they cannot
     /// use a scope guard).
     pub fn record_ns(&self, ns: u64) {
-        self.count.add(1);
-        self.total_ns.add(ns);
+        self.hist.record(ns);
     }
 
     /// `(invocations, total nanoseconds)` so far.
     pub fn totals(&self) -> (u64, u64) {
-        (self.count.get(), self.total_ns.get())
+        let snap = self.hist.merged();
+        (snap.count, snap.sum)
+    }
+
+    /// The merged nanosecond distribution.
+    pub fn hist(&self) -> HistSnapshot {
+        self.hist.merged()
     }
 }
 
@@ -225,6 +357,7 @@ enum Metric {
     Counter(&'static Counter),
     Gauge(&'static Gauge),
     Span(&'static SpanStat),
+    Hist(&'static Histogram),
 }
 
 fn registry() -> MutexGuard<'static, BTreeMap<String, Metric>> {
@@ -286,6 +419,21 @@ pub fn span_stat(name: &str) -> &'static SpanStat {
     found.unwrap_or_else(|| panic!("obs metric {name:?} is not a span"))
 }
 
+/// The standalone histogram named `name`, registered on first use.
+pub fn histogram(name: &str) -> &'static Histogram {
+    let found = {
+        let mut reg = registry();
+        match reg
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Hist(Box::leak(Box::default())))
+        {
+            Metric::Hist(h) => Some(*h),
+            _ => None,
+        }
+    };
+    found.unwrap_or_else(|| panic!("obs metric {name:?} is not a histogram"))
+}
+
 /// `(invocations, total nanoseconds)` of span `name` so far — `(0, 0)`
 /// if the span never fired. The trainer reads per-step phase
 /// breakdowns as deltas of this.
@@ -293,6 +441,15 @@ pub fn span_totals(name: &str) -> (u64, u64) {
     match registry().get(name) {
         Some(Metric::Span(s)) => s.totals(),
         _ => (0, 0),
+    }
+}
+
+/// The nanosecond distribution of span `name`, `None` if it never
+/// fired (benches read step-time quantiles off this).
+pub fn span_hist(name: &str) -> Option<HistSnapshot> {
+    match registry().get(name) {
+        Some(Metric::Span(s)) => Some(s.hist()),
+        _ => None,
     }
 }
 
@@ -309,12 +466,22 @@ pub fn record_ns(name: &str, ns: u64) {
 pub enum SnapValue {
     Counter(u64),
     Gauge(f64),
-    Span { count: u64, total_ns: u64 },
+    Span {
+        count: u64,
+        total_ns: u64,
+        hist: HistSnapshot,
+    },
+    Hist(HistSnapshot),
 }
 
-/// Snapshot every registered metric (name-sorted). Counters and span
-/// totals are exact; gauges are last-written values.
+/// Snapshot every registered metric (name-sorted). Counters, span
+/// totals and histogram buckets are exact; gauges are last-written
+/// values.
 pub fn snapshot() -> Vec<(String, SnapValue)> {
+    // the trace drop counter must exist (as 0) in every export so a
+    // clean run *proves* nothing was dropped; register it before
+    // taking the registry lock below (counter() locks too)
+    counter("obs.trace.dropped");
     registry()
         .iter()
         .map(|(name, m)| {
@@ -322,9 +489,10 @@ pub fn snapshot() -> Vec<(String, SnapValue)> {
                 Metric::Counter(c) => SnapValue::Counter(c.get()),
                 Metric::Gauge(g) => SnapValue::Gauge(g.get()),
                 Metric::Span(s) => {
-                    let (count, total_ns) = s.totals();
-                    SnapValue::Span { count, total_ns }
+                    let hist = s.hist();
+                    SnapValue::Span { count: hist.count, total_ns: hist.sum, hist }
                 }
+                Metric::Hist(h) => SnapValue::Hist(h.merged()),
             };
             (name.clone(), v)
         })
@@ -349,36 +517,79 @@ pub(crate) struct TraceEvent {
     pub(crate) tid: usize,
 }
 
-/// Bounded trace-event buffer: beyond [`TRACE_CAP`] events, new spans
-/// still aggregate into their [`SpanStat`] but drop out of the
-/// timeline (counted in `obs.trace_dropped`), so long runs cannot grow
-/// memory without bound.
+/// Bounded trace-event timeline: beyond [`TRACE_CAP`] events, new
+/// spans still aggregate into their [`SpanStat`] but drop out of the
+/// timeline (counted in `obs.trace.dropped` and asserted zero by the
+/// CI smoke), so long runs cannot grow memory without bound.
 const TRACE_CAP: usize = 1 << 16;
 
-fn trace_buf() -> &'static Mutex<Vec<TraceEvent>> {
-    static TRACE: OnceLock<Mutex<Vec<TraceEvent>>> = OnceLock::new();
-    TRACE.get_or_init(|| Mutex::new(Vec::new()))
+/// Last-N ring of completed spans, kept alongside the timeline and
+/// *always* updated (even once the timeline is full) — this is the
+/// "what just happened" window the anomaly forensic bundle dumps.
+const RECENT_CAP: usize = 256;
+
+struct TraceStore {
+    timeline: Vec<TraceEvent>,
+    recent: VecDeque<TraceEvent>,
+}
+
+fn trace_store() -> &'static Mutex<TraceStore> {
+    static TRACE: OnceLock<Mutex<TraceStore>> = OnceLock::new();
+    TRACE.get_or_init(|| {
+        Mutex::new(TraceStore {
+            timeline: Vec::new(),
+            recent: VecDeque::with_capacity(RECENT_CAP),
+        })
+    })
 }
 
 fn trace_push(name: &'static str, start: Instant, dur_ns: u64) {
     let ts_ns = start.duration_since(epoch()).as_nanos() as u64;
-    let mut buf = trace_buf().lock().expect("obs trace buffer poisoned");
-    if buf.len() < TRACE_CAP {
-        buf.push(TraceEvent { name, ts_ns, dur_ns, tid: thread_id() });
-    } else {
-        drop(buf);
-        count!("obs.trace_dropped", 1);
+    let ev = TraceEvent { name, ts_ns, dur_ns, tid: thread_id() };
+    let dropped = {
+        let mut st = trace_store().lock().expect("obs trace buffer poisoned");
+        if st.recent.len() == RECENT_CAP {
+            st.recent.pop_front();
+        }
+        st.recent.push_back(ev.clone());
+        if st.timeline.len() < TRACE_CAP {
+            st.timeline.push(ev);
+            false
+        } else {
+            true
+        }
+    };
+    if dropped {
+        count!("obs.trace.dropped", 1);
     }
 }
 
 pub(crate) fn trace_events() -> Vec<TraceEvent> {
-    trace_buf().lock().expect("obs trace buffer poisoned").clone()
+    trace_store()
+        .lock()
+        .expect("obs trace buffer poisoned")
+        .timeline
+        .clone()
+}
+
+/// The bounded last-N window of completed spans, oldest first.
+pub(crate) fn recent_trace_events() -> Vec<TraceEvent> {
+    trace_store()
+        .lock()
+        .expect("obs trace buffer poisoned")
+        .recent
+        .iter()
+        .cloned()
+        .collect()
 }
 
 /// Drop all buffered trace events (between independent runs sharing a
-/// process — benches, tests).
+/// process — benches, tests). Clears both the timeline and the
+/// recent-events ring.
 pub fn clear_trace() {
-    trace_buf().lock().expect("obs trace buffer poisoned").clear();
+    let mut st = trace_store().lock().expect("obs trace buffer poisoned");
+    st.timeline.clear();
+    st.recent.clear();
 }
 
 /// RAII span: records duration into its [`SpanStat`] (and the trace
@@ -511,6 +722,59 @@ mod tests {
         let mut sorted = names.clone();
         sorted.sort();
         assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn hist_bucket_boundaries() {
+        assert_eq!(hist_bucket(0), 0);
+        assert_eq!(hist_bucket(1), 1);
+        assert_eq!(hist_bucket(2), 2);
+        assert_eq!(hist_bucket(3), 2);
+        assert_eq!(hist_bucket(4), 3);
+        assert_eq!(hist_bucket(255), 8);
+        assert_eq!(hist_bucket(256), 9);
+        assert_eq!(hist_bucket(u64::MAX), 64);
+        // le bound of bucket i covers everything the bucket holds
+        assert_eq!(HistSnapshot::bucket_le(0), 0.0);
+        assert_eq!(HistSnapshot::bucket_le(8), 255.0);
+    }
+
+    #[test]
+    fn hist_records_and_quantiles() {
+        let h = Histogram::default();
+        for v in [0u64, 1, 2, 3, 100, 100, 100, 5000] {
+            h.record(v);
+        }
+        let snap = h.merged();
+        assert_eq!(snap.count, 8);
+        assert_eq!(snap.sum, 5306);
+        assert_eq!(snap.buckets[0], 1); // the zero
+        assert_eq!(snap.buckets[1], 1); // 1
+        assert_eq!(snap.buckets[2], 2); // 2, 3
+        assert_eq!(snap.buckets[7], 3); // 100 x3 in [64, 128)
+        assert_eq!(snap.buckets[13], 1); // 5000 in [4096, 8192)
+        // quantiles are monotone and land in the right binade
+        let p50 = snap.quantile(0.5);
+        assert!((64.0..128.0).contains(&p50), "p50 {p50}");
+        let p99 = snap.quantile(0.99);
+        assert!((4096.0..8192.0).contains(&p99), "p99 {p99}");
+        assert!(snap.quantile(0.0) <= p50 && p50 <= p99);
+        // empty histogram: everything 0, no panic
+        let empty = HistSnapshot::default();
+        assert_eq!(empty.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn span_stat_exposes_its_distribution() {
+        let s = span_stat("obs.test.span_hist");
+        s.record_ns(10);
+        s.record_ns(1000);
+        let snap = s.hist();
+        assert_eq!(snap.count, 2);
+        assert_eq!(snap.sum, 1010);
+        assert_eq!(span_totals("obs.test.span_hist"), (2, 1010));
+        assert_eq!(span_hist("obs.test.span_hist"), Some(snap));
+        assert_eq!(span_hist("obs.test.no_such_span"), None);
     }
 
     #[test]

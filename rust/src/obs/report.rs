@@ -1,0 +1,491 @@
+//! `quartet2 obs-report`: post-hoc analysis and A/B diffing of
+//! `--trace-out` JSONL streams, plus the structural validators behind
+//! `quartet2 obs-validate`.
+//!
+//! A `--trace-out` file is the run's flight recorder: `run_start`,
+//! one `train_step` per step (loss, wall time, per-phase span deltas,
+//! and on health-sampled steps the `quant.*`/`dyn.*` snapshots),
+//! interleaved `anomaly` events, `run_end`. [`RunReport`] folds that
+//! stream into per-run aggregates; [`RunReport::render`] prints the
+//! single-run forensics view (per-phase time table, loss trend,
+//! tokens/sec, dynamics, anomalies) and [`render_diff`] the two-run
+//! A/B comparison that `scripts/ci.sh` uses as a regression gate.
+//!
+//! The validators ([`validate_path`] and friends) are deliberately
+//! *structural*, not semantic: they answer "is this artifact
+//! well-formed enough that dashboards and this report module will not
+//! choke on it", with line-numbered errors on the first defect.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// obs-validate: structural validators
+// ---------------------------------------------------------------------
+
+/// Validate one observability artifact, dispatching on extension:
+/// `.jsonl` event streams, `.prom` Prometheus text, `.json` Chrome
+/// trace-event files (forensic anomaly bundles are a superset of the
+/// latter and pass the same check).
+pub fn validate_path(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("jsonl") => validate_jsonl(&text),
+        Some("prom") => validate_prometheus(&text),
+        Some("json") => validate_chrome_trace(&text),
+        other => bail!(
+            "{}: unsupported extension {other:?} (want .jsonl, .prom or .json)",
+            path.display()
+        ),
+    }
+}
+
+/// Every non-empty line must parse as one JSON value (truncated tail
+/// lines fail with their line number), the stream must contain at
+/// least one event, and every `run_start` event must be closed by a
+/// matching `run_end` (nesting is allowed; an unmatched side of either
+/// kind is an error naming the offending line).
+pub fn validate_jsonl(text: &str) -> Result<String> {
+    let mut events = 0usize;
+    let mut open_runs: Vec<usize> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).with_context(|| format!("line {}", i + 1))?;
+        match v.opt("event").and_then(|e| e.as_str().ok()) {
+            Some("run_start") => open_runs.push(i + 1),
+            Some("run_end") => {
+                if open_runs.pop().is_none() {
+                    bail!("line {}: run_end without a matching run_start", i + 1);
+                }
+            }
+            _ => {}
+        }
+        events += 1;
+    }
+    anyhow::ensure!(events > 0, "no events");
+    if let Some(line) = open_runs.first() {
+        bail!(
+            "line {line}: run_start without a matching run_end \
+             (truncated run?)"
+        );
+    }
+    Ok(format!("{events} events"))
+}
+
+/// Every sample line must be `name value` with a numeric value
+/// (`#`-prefixed comment/metadata lines are skipped; histogram bucket
+/// labels like `x_bucket{{le="255"}}` contain no internal whitespace,
+/// so they are ordinary `name value` lines here).
+pub fn validate_prometheus(text: &str) -> Result<String> {
+    let mut samples = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (name, value) = (parts.next(), parts.next());
+        anyhow::ensure!(
+            name.is_some() && value.is_some() && parts.next().is_none(),
+            "line {}: want `name value`, got {line:?}",
+            i + 1
+        );
+        let v = value.unwrap();
+        anyhow::ensure!(
+            v.parse::<f64>().is_ok(),
+            "line {}: value {v:?} is not a number",
+            i + 1
+        );
+        samples += 1;
+    }
+    anyhow::ensure!(samples > 0, "no samples");
+    Ok(format!("{samples} samples"))
+}
+
+/// The whole file must be JSON with a `traceEvents` array.
+pub fn validate_chrome_trace(text: &str) -> Result<String> {
+    let v = Json::parse(text)?;
+    match v.get("traceEvents")? {
+        Json::Arr(events) => Ok(format!("{} trace events", events.len())),
+        other => bail!("traceEvents is {other:?}, not an array"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// obs-report: run aggregation
+// ---------------------------------------------------------------------
+
+/// Aggregated view of one `--trace-out` run stream.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub run: String,
+    pub scheme: String,
+    pub preset: String,
+    /// per-step training losses, in step order
+    pub losses: Vec<f64>,
+    /// per-step wall times (ns), in step order
+    pub step_ns: Vec<u64>,
+    /// per-phase span nanoseconds summed over the run, keyed by the
+    /// trace field name (`forward_ns`, ...)
+    pub phase_ns: BTreeMap<String, u64>,
+    /// steps that carried a `health` (`quant.*`) snapshot
+    pub health_steps: usize,
+    /// steps that carried a `dynamics` (`dyn.*`) snapshot
+    pub dynamics_steps: usize,
+    /// rendered anomaly events, in stream order
+    pub anomalies: Vec<String>,
+    /// last `dyn.*` gauge snapshot seen (layer dynamics at end of run)
+    pub dynamics_last: BTreeMap<String, f64>,
+    /// last loss EWMA the trainer recorded
+    pub loss_ewma_last: Option<f64>,
+    pub tokens_per_sec: f64,
+    pub wall_secs: f64,
+    pub final_val_loss: Option<f64>,
+}
+
+impl RunReport {
+    /// Parse a `--trace-out` JSONL stream. Errors carry line numbers;
+    /// a stream with no `train_step` events is an error (there is
+    /// nothing to report on).
+    pub fn parse(text: &str) -> Result<RunReport> {
+        let mut r = RunReport::default();
+        let mut steps_seen = 0usize;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).with_context(|| format!("line {}", i + 1))?;
+            let Some(event) = v.opt("event").and_then(|e| e.as_str().ok()) else {
+                continue;
+            };
+            match event {
+                "run_start" => {
+                    r.run = v.opt("run").and_then(|x| x.as_str().ok()).unwrap_or("").into();
+                    r.scheme =
+                        v.opt("scheme").and_then(|x| x.as_str().ok()).unwrap_or("").into();
+                    r.preset =
+                        v.opt("preset").and_then(|x| x.as_str().ok()).unwrap_or("").into();
+                }
+                "train_step" => {
+                    steps_seen += 1;
+                    if let Some(l) = v.opt("loss").and_then(|x| x.as_f64().ok()) {
+                        r.losses.push(l);
+                    }
+                    if let Some(ns) = v.opt("step_ns").and_then(|x| x.as_f64().ok()) {
+                        r.step_ns.push(ns as u64);
+                    }
+                    if let Some(Json::Obj(phases)) = v.opt("phases") {
+                        for (k, pv) in phases {
+                            if let Ok(ns) = pv.as_f64() {
+                                *r.phase_ns.entry(k.clone()).or_insert(0) += ns as u64;
+                            }
+                        }
+                    }
+                    if v.opt("health").is_some() {
+                        r.health_steps += 1;
+                    }
+                    if let Some(Json::Obj(dynamics)) = v.opt("dynamics") {
+                        r.dynamics_steps += 1;
+                        r.dynamics_last = dynamics
+                            .iter()
+                            .filter_map(|(k, dv)| Some((k.clone(), dv.as_f64().ok()?)))
+                            .collect();
+                    }
+                    if let Some(e) = v.opt("loss_ewma").and_then(|x| x.as_f64().ok()) {
+                        r.loss_ewma_last = Some(e);
+                    }
+                }
+                "anomaly" => {
+                    let step = v.opt("step").and_then(|x| x.as_f64().ok()).unwrap_or(-1.0);
+                    let kind =
+                        v.opt("kind").and_then(|x| x.as_str().ok()).unwrap_or("?");
+                    let metric =
+                        v.opt("metric").and_then(|x| x.as_str().ok()).unwrap_or("?");
+                    r.anomalies.push(format!("step {step:>5}  {kind:<20} {metric}"));
+                }
+                "run_end" => {
+                    r.wall_secs = v
+                        .opt("wall_secs")
+                        .and_then(|x| x.as_f64().ok())
+                        .unwrap_or(0.0);
+                    r.tokens_per_sec = v
+                        .opt("tokens_per_sec")
+                        .and_then(|x| x.as_f64().ok())
+                        .unwrap_or(0.0);
+                    r.final_val_loss =
+                        v.opt("final_val_loss").and_then(|x| x.as_f64().ok());
+                }
+                _ => {}
+            }
+        }
+        anyhow::ensure!(
+            steps_seen > 0,
+            "no train_step events (is this a --trace-out stream?)"
+        );
+        Ok(r)
+    }
+
+    pub fn parse_file(path: &Path) -> Result<RunReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        RunReport::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn steps(&self) -> usize {
+        self.losses.len().max(self.step_ns.len())
+    }
+
+    /// Mean per-step wall time in nanoseconds (0 when unrecorded).
+    pub fn mean_step_ns(&self) -> f64 {
+        if self.step_ns.is_empty() {
+            return 0.0;
+        }
+        self.step_ns.iter().map(|&n| n as f64).sum::<f64>() / self.step_ns.len() as f64
+    }
+
+    fn loss_span(&self) -> (f64, f64) {
+        (
+            self.losses.first().copied().unwrap_or(f64::NAN),
+            self.losses.last().copied().unwrap_or(f64::NAN),
+        )
+    }
+
+    /// Single-run forensics view.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let steps = self.steps();
+        out.push_str(&format!(
+            "run {} (preset {}, scheme {}): {} steps, {:.1}s wall, {:.0} tokens/sec\n",
+            self.run, self.preset, self.scheme, steps, self.wall_secs, self.tokens_per_sec
+        ));
+        let (l0, l1) = self.loss_span();
+        out.push_str(&format!("loss: first {l0:.4} -> last {l1:.4}"));
+        if let Some(e) = self.loss_ewma_last {
+            out.push_str(&format!(" (ewma {e:.4})"));
+        }
+        if let Some(v) = self.final_val_loss {
+            out.push_str(&format!(", final val {v:.4}"));
+        }
+        out.push('\n');
+        out.push_str(&format!(
+            "mean step: {:.3} ms | health snapshots: {} | dynamics snapshots: {}\n",
+            self.mean_step_ns() / 1e6,
+            self.health_steps,
+            self.dynamics_steps
+        ));
+        out.push_str(&render_phase_table(&[self]));
+        if !self.dynamics_last.is_empty() {
+            out.push_str("final dynamics:\n");
+            for (k, v) in &self.dynamics_last {
+                out.push_str(&format!("  {k:<40} {v:>12.5e}\n"));
+            }
+        }
+        out.push_str(&render_anomalies(self));
+        out
+    }
+}
+
+fn render_anomalies(r: &RunReport) -> String {
+    if r.anomalies.is_empty() {
+        return "anomalies: none\n".into();
+    }
+    let mut out = format!("anomalies: {}\n", r.anomalies.len());
+    for a in &r.anomalies {
+        out.push_str(&format!("  {a}\n"));
+    }
+    out
+}
+
+/// Per-phase time table over one or two runs. Phase keys are the union
+/// across runs; per-step milliseconds plus share of the step span.
+fn render_phase_table(runs: &[&RunReport]) -> String {
+    let mut keys: Vec<&str> = Vec::new();
+    for r in runs {
+        for k in r.phase_ns.keys() {
+            if !keys.contains(&k.as_str()) {
+                keys.push(k);
+            }
+        }
+    }
+    if keys.is_empty() {
+        return "phases: none recorded (run with --obs spans)\n".into();
+    }
+    let mut out = String::new();
+    match runs {
+        [r] => {
+            out.push_str(&format!("{:<16} {:>12} {:>8}\n", "phase", "ms/step", "share"));
+            let steps = r.steps().max(1) as f64;
+            let step_span = *r.phase_ns.get("step_span_ns").unwrap_or(&0) as f64;
+            for k in &keys {
+                let total = *r.phase_ns.get(*k).unwrap_or(&0) as f64;
+                let share = if step_span > 0.0 { 100.0 * total / step_span } else { 0.0 };
+                out.push_str(&format!(
+                    "{:<16} {:>12.3} {:>7.1}%\n",
+                    k.trim_end_matches("_ns"),
+                    total / steps / 1e6,
+                    share
+                ));
+            }
+        }
+        [a, b] => {
+            out.push_str(&format!(
+                "{:<16} {:>12} {:>12} {:>8}\n",
+                "phase", "A ms/step", "B ms/step", "B/A"
+            ));
+            let (sa, sb) = (a.steps().max(1) as f64, b.steps().max(1) as f64);
+            for k in &keys {
+                let ta = *a.phase_ns.get(*k).unwrap_or(&0) as f64 / sa / 1e6;
+                let tb = *b.phase_ns.get(*k).unwrap_or(&0) as f64 / sb / 1e6;
+                let ratio = if ta > 0.0 { tb / ta } else { f64::NAN };
+                out.push_str(&format!(
+                    "{:<16} {:>12.3} {:>12.3} {:>8.2}\n",
+                    k.trim_end_matches("_ns"),
+                    ta,
+                    tb,
+                    ratio
+                ));
+            }
+        }
+        _ => {}
+    }
+    out
+}
+
+/// Two-run A/B diff: phase table, throughput, loss, anomaly counts.
+pub fn render_diff(a: &RunReport, b: &RunReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("A: {} ({} steps)\n", a.run, a.steps()));
+    out.push_str(&format!("B: {} ({} steps)\n", b.run, b.steps()));
+    out.push_str(&render_phase_table(&[a, b]));
+    let (ma, mb) = (a.mean_step_ns(), b.mean_step_ns());
+    out.push_str(&format!(
+        "mean step: A {:.3} ms | B {:.3} ms | B/A {:.3} ({:+.1}%)\n",
+        ma / 1e6,
+        mb / 1e6,
+        if ma > 0.0 { mb / ma } else { f64::NAN },
+        step_regression_pct(a, b)
+    ));
+    out.push_str(&format!(
+        "tokens/sec: A {:.0} | B {:.0}\n",
+        a.tokens_per_sec, b.tokens_per_sec
+    ));
+    let ((_, la), (_, lb)) = (a.loss_span(), b.loss_span());
+    out.push_str(&format!(
+        "final train loss: A {la:.6} | B {lb:.6} | |diff| {:.3e}\n",
+        final_loss_diff(a, b)
+    ));
+    out.push_str(&format!(
+        "anomalies: A {} | B {}\n",
+        a.anomalies.len(),
+        b.anomalies.len()
+    ));
+    out
+}
+
+/// Mean-step-time regression of B vs A in percent (positive = B
+/// slower). 0 when A recorded no step times.
+pub fn step_regression_pct(a: &RunReport, b: &RunReport) -> f64 {
+    let ma = a.mean_step_ns();
+    if ma <= 0.0 {
+        return 0.0;
+    }
+    (b.mean_step_ns() / ma - 1.0) * 100.0
+}
+
+/// |final train loss A − final train loss B| (NaN-free: NaN on either
+/// side reports as +inf so gates fail loudly).
+pub fn final_loss_diff(a: &RunReport, b: &RunReport) -> f64 {
+    let (la, lb) = (a.loss_span().1, b.loss_span().1);
+    let d = (la - lb).abs();
+    if d.is_nan() {
+        f64::INFINITY
+    } else {
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(lines: &[&str]) -> String {
+        lines.join("\n")
+    }
+
+    const START: &str = r#"{"event":"run_start","run":"r1","scheme":"nvfp4","preset":"tiny","steps":2}"#;
+    const STEP0: &str = r#"{"event":"train_step","step":0,"loss":5.0,"step_ns":2000000,"phases":{"step_span_ns":2000000,"forward_ns":900000,"backward_ns":800000},"health":{"quant.clip_rate.sr.act":0.01},"dynamics":{"dyn.grad_norm.global":1.5},"loss_ewma":5.0}"#;
+    const STEP1: &str = r#"{"event":"train_step","step":1,"loss":4.0,"step_ns":1000000,"phases":{"step_span_ns":1000000,"forward_ns":450000,"backward_ns":400000}}"#;
+    const END: &str = r#"{"event":"run_end","run":"r1","wall_secs":0.003,"tokens_per_sec":1000.0,"final_val_loss":4.5}"#;
+
+    #[test]
+    fn jsonl_validator_pairs_runs_and_numbers_lines() {
+        assert!(validate_jsonl(&trace(&[START, STEP0, END])).is_ok());
+        // empty / whitespace-only streams fail
+        assert!(validate_jsonl("").is_err());
+        assert!(validate_jsonl("\n\n").is_err());
+        // truncated tail line fails with its line number
+        let err = validate_jsonl(&trace(&[START, r#"{"event":"train_st"#]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // unterminated run_start names its own line
+        let err = validate_jsonl(&trace(&[STEP0, START, STEP1]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2") && err.contains("run_start"), "{err}");
+        // orphan run_end likewise
+        let err = validate_jsonl(&trace(&[END])).unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("run_end"), "{err}");
+    }
+
+    #[test]
+    fn report_aggregates_phases_health_and_anomalies() {
+        let anomaly = r#"{"event":"anomaly","step":1,"kind":"loss_spike","metric":"loss","value":40.0,"message":"spike"}"#;
+        let r =
+            RunReport::parse(&trace(&[START, STEP0, anomaly, STEP1, END])).unwrap();
+        assert_eq!(r.run, "r1");
+        assert_eq!(r.scheme, "nvfp4");
+        assert_eq!(r.steps(), 2);
+        assert_eq!(r.losses, vec![5.0, 4.0]);
+        assert_eq!(r.phase_ns["forward_ns"], 1_350_000);
+        assert_eq!(r.health_steps, 1);
+        assert_eq!(r.dynamics_steps, 1);
+        assert_eq!(r.dynamics_last["dyn.grad_norm.global"], 1.5);
+        assert_eq!(r.loss_ewma_last, Some(5.0));
+        assert_eq!(r.anomalies.len(), 1);
+        assert!(r.anomalies[0].contains("loss_spike"));
+        assert_eq!(r.final_val_loss, Some(4.5));
+        assert!((r.mean_step_ns() - 1.5e6).abs() < 1.0);
+        let rendered = r.render();
+        assert!(rendered.contains("forward"), "{rendered}");
+        assert!(rendered.contains("anomalies: 1"), "{rendered}");
+        // a stream with no steps is an error, not an empty report
+        assert!(RunReport::parse(&trace(&[START, END])).is_err());
+    }
+
+    #[test]
+    fn diff_reports_regression_and_loss_gap() {
+        let a = RunReport::parse(&trace(&[START, STEP0, STEP1, END])).unwrap();
+        // B: same losses, 2x slower steps
+        let slow0 = STEP0.replace("2000000", "4000000");
+        let slow1 = STEP1.replace("1000000", "2000000");
+        let b = RunReport::parse(&trace(&[START, &slow0, &slow1, END])).unwrap();
+        assert!((step_regression_pct(&a, &b) - 100.0).abs() < 1e-9);
+        assert!(final_loss_diff(&a, &b) < 1e-12);
+        let d = render_diff(&a, &b);
+        assert!(d.contains("B/A"), "{d}");
+        assert!(d.contains("forward"), "{d}");
+        // a run that never recorded a loss gates as infinite difference
+        let nan0 = STEP0.replace("\"loss\":5.0", "\"loss\":null");
+        let nan1 = STEP1.replace("\"loss\":4.0", "\"loss\":null");
+        let c = RunReport::parse(&trace(&[START, &nan0, &nan1, END])).unwrap();
+        assert!(final_loss_diff(&a, &c).is_infinite());
+    }
+}

@@ -19,9 +19,12 @@
 //! on [`crate::metrics`]: tokens/sec split by prefill/decode, p50/p99
 //! for time-to-first-token and request latency) and the process-global
 //! [`crate::obs`] registry — request-lifecycle spans (queue wait,
-//! prefill vs decode step time, TTFT, end-to-end latency) plus batch
-//! occupancy / KV-fill gauges, exported via Prometheus text or Chrome
-//! traces when `QUARTET2_OBS` enables them.
+//! prefill vs decode step time, TTFT, end-to-end latency; each span
+//! feeds a sharded log-bucket [`crate::obs::Histogram`], so Prometheus
+//! exports carry live p50/p95/p99 for TTFT and request latency, not
+//! just end-of-run totals) plus batch occupancy / queue depth /
+//! KV-fill gauges, exported via Prometheus text or Chrome traces when
+//! `QUARTET2_OBS` enables them.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -305,6 +308,7 @@ impl<'m> Scheduler<'m> {
         crate::obs::count!("serve.steps", 1);
         if crate::obs::counters_on() {
             crate::obs::gauge("serve.batch_occupancy").set(self.active.len() as f64);
+            crate::obs::gauge("serve.queue_depth").set(self.queue.len() as f64);
             let fill: f64 = self
                 .active
                 .iter()

@@ -1,13 +1,24 @@
 //! Sanity-parse the repo-root `BENCH_*.json` perf-trajectory files
-//! that `scripts/bench.sh` publishes (train step, serving, quantizer).
+//! that `scripts/bench.sh` publishes (train step, serving, quantizer,
+//! packed GEMM).
 //!
-//! Skips with a notice when none exist (benches have not been run in
-//! this checkout); once they exist, a corrupt or schema-less file
-//! fails CI (`scripts/ci.sh` runs this test explicitly).
+//! The four manifest files are committed artifacts: a missing one is a
+//! hard failure (a half-run `scripts/bench.sh`, or a rename that
+//! orphaned the manifest), not a skip. A corrupt or schema-less file
+//! also fails (`scripts/ci.sh` runs this test explicitly).
 
 use std::path::Path;
 
 use quartet2::util::json::Json;
+
+/// The files `scripts/bench.sh` publishes at the repo root, one per
+/// bench target. Keep in sync with the `publish` calls there.
+const MANIFEST: [&str; 4] = [
+    "BENCH_train_step.json",
+    "BENCH_serve.json",
+    "BENCH_quantize.json",
+    "BENCH_qgemm.json",
+];
 
 #[test]
 fn bench_jsons_parse_with_expected_schema() {
@@ -15,16 +26,13 @@ fn bench_jsons_parse_with_expected_schema() {
         .parent()
         .expect("crate lives one level under the repo root")
         .to_path_buf();
-    let mut found = 0usize;
-    for entry in std::fs::read_dir(&root).expect("repo root readable") {
-        let path = entry.expect("dir entry").path();
-        let name = match path.file_name().and_then(|n| n.to_str()) {
-            Some(n) => n.to_string(),
-            None => continue,
-        };
-        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
-            continue;
-        }
+    for name in MANIFEST {
+        let path = root.join(name);
+        assert!(
+            path.exists(),
+            "{name} missing at {} — run scripts/bench.sh to regenerate it",
+            root.display()
+        );
         let parsed = Json::parse_file(&path)
             .unwrap_or_else(|e| panic!("{name} does not parse: {e}"));
         let rows = parsed
@@ -37,15 +45,25 @@ fn bench_jsons_parse_with_expected_schema() {
             row.get("name")
                 .and_then(|n| n.as_str().map(str::to_string))
                 .unwrap_or_else(|e| panic!("{name} row {i} missing string name: {e}"));
-            let has_number = matches!(row, Json::Obj(m) if m.values().any(|v| matches!(v, Json::Num(_))));
+            let has_number =
+                matches!(row, Json::Obj(m) if m.values().any(|v| matches!(v, Json::Num(_))));
             assert!(has_number, "{name} row {i} has no numeric field");
         }
-        found += 1;
     }
-    if found == 0 {
-        eprintln!(
-            "bench_json: no BENCH_*.json at {} (run scripts/bench.sh); skipping",
-            root.display()
-        );
+    // any stray BENCH_*.json outside the manifest must still parse —
+    // a renamed target that misses the manifest fails loudly instead
+    // of rotting silently
+    for entry in std::fs::read_dir(&root).expect("repo root readable") {
+        let path = entry.expect("dir entry").path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            assert!(
+                MANIFEST.contains(&name),
+                "{name} is not in the bench manifest — add it to \
+                 tests/bench_json.rs MANIFEST and scripts/bench.sh"
+            );
+        }
     }
 }

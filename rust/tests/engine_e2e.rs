@@ -72,7 +72,7 @@ fn native_training_decreases_smoothed_loss() {
             verbose: false,
             batch: 2,
             seq: 16,
-            trace_out: None,
+            ..Default::default()
         },
     );
     let outcome = trainer.run().unwrap();

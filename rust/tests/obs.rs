@@ -4,13 +4,17 @@
 //! first and restores `set_level(None)` before releasing it, so the
 //! tests compose under the default multi-threaded test harness.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
-use quartet2::coordinator::Backend;
+use quartet2::coordinator::{Backend, Trainer, TrainerOptions};
 use quartet2::engine::{AdamWOptions, NativeBackend};
 use quartet2::hadamard::rademacher_signs;
 use quartet2::kernels::quant::{ms_eden_pack_threads, sr_pack_threads};
 use quartet2::kernels::set_threads;
+use quartet2::obs::anomaly::AnomalyAction;
+use quartet2::obs::report::{self, RunReport};
 use quartet2::obs::{self, ObsLevel};
 use quartet2::serve::ModelConfig;
 use quartet2::util::json::Json;
@@ -39,7 +43,7 @@ fn quant_cfg() -> ModelConfig {
     }
 }
 
-fn run_losses(scheme: &str, steps: usize) -> Vec<f64> {
+fn run_losses(scheme: &str, steps: usize) -> (Vec<f64>, BTreeMap<String, Vec<f32>>) {
     let mut b = NativeBackend::from_config(
         &quant_cfg(),
         scheme,
@@ -51,9 +55,67 @@ fn run_losses(scheme: &str, steps: usize) -> Vec<f64> {
     .unwrap();
     let tokens: Vec<i32> = (0..128).map(|i| (i * 7) % 256).collect();
     let targets: Vec<i32> = (0..128).map(|i| (i * 11 + 3) % 256).collect();
-    (0..steps)
+    let losses = (0..steps)
         .map(|s| b.train_step(s, tokens.clone(), targets.clone()).unwrap())
-        .collect()
+        .collect();
+    let params = b.export_named_tensors().unwrap();
+    (losses, params)
+}
+
+/// Micro model for full-`Trainer` runs (1 layer, dim 16: cheap enough
+/// for debug builds).
+fn micro_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "obs-micro".into(),
+        vocab: 256,
+        dim: 16,
+        n_layers: 1,
+        n_heads: 2,
+        ffn: 16,
+        max_seq: 16,
+        rope_theta: 10000.0,
+    }
+}
+
+/// Run the real `Trainer` loop over the micro model with `--trace-out`
+/// pointed at `trace`, returning the outcome result.
+fn traced_micro_run(
+    steps: usize,
+    seed: u64,
+    trace: &Path,
+    tweak: impl FnOnce(&mut TrainerOptions),
+) -> anyhow::Result<quartet2::coordinator::TrainOutcome> {
+    let backend = NativeBackend::from_config(
+        &micro_cfg(),
+        "f32",
+        2,
+        8,
+        seed,
+        AdamWOptions::default(),
+    )
+    .unwrap();
+    let mut opts = TrainerOptions {
+        preset: "obs-micro".into(),
+        scheme: "f32".into(),
+        steps,
+        seed,
+        eval_every: 0,
+        eval_batches: 0,
+        log_every: 0,
+        verbose: false,
+        batch: 2,
+        seq: 8,
+        trace_out: Some(trace.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    tweak(&mut opts);
+    Trainer::from_backend(Box::new(backend), opts).run()
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("q2_obs_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
 }
 
 #[test]
@@ -158,7 +220,7 @@ fn chrome_trace_exports_valid_json() {
     {
         let _s = obs::span!("test.obs.trace_span");
     }
-    let text = obs::export::chrome_trace_json();
+    let text = obs::export::chrome_trace_json().to_string();
     obs::set_level(None);
     let v = Json::parse(&text).expect("chrome trace must be valid JSON");
     match v.get("traceEvents").unwrap() {
@@ -171,13 +233,296 @@ fn chrome_trace_exports_valid_json() {
 fn off_level_leaves_training_bitwise_unchanged() {
     let _g = level_lock();
     // same seeds, same batches: the only difference is the obs level
+    // (spans implies counters, so the telemetry paths — health
+    // sampling, grad norms, update ratios, act absmax — all run in
+    // the second pass and must not move a single bit)
     obs::set_level(Some(ObsLevel::Off));
-    let off = run_losses("quartet2", 2);
+    let (off, off_params) = run_losses("quartet2", 2);
     obs::set_level(Some(ObsLevel::Spans));
-    let on = run_losses("quartet2", 2);
+    let (on, on_params) = run_losses("quartet2", 2);
     obs::set_level(None);
     assert_eq!(off, on, "observability must never perturb results");
     assert!(off.iter().all(|l| l.is_finite()));
+    // ...and the final parameters agree bitwise, tensor by tensor
+    assert_eq!(off_params.len(), on_params.len());
+    for (name, value) in &off_params {
+        assert_eq!(
+            Some(value),
+            on_params.get(name),
+            "param {name} diverged under observability"
+        );
+    }
+}
+
+#[test]
+fn histogram_merge_across_threads_matches_serial_reference() {
+    // 4 threads x 2000 deterministic values spanning ~40 log2 buckets
+    let vals: Vec<Vec<u64>> = (0..4u64)
+        .map(|t| {
+            (0..2000u64)
+                .map(|i| {
+                    let x = (t * 1_000_003).wrapping_add(i).wrapping_mul(2_654_435_761);
+                    x % (1u64 << (1 + (i % 40)))
+                })
+                .collect()
+        })
+        .collect();
+    let h = obs::histogram("test.obs.hist_merge");
+    std::thread::scope(|s| {
+        for chunk in &vals {
+            s.spawn(move || {
+                for &v in chunk {
+                    h.record(v);
+                }
+            });
+        }
+    });
+    // serial reference: bucket 0 holds 0, bucket i holds bit length i
+    let mut ref_buckets = [0u64; obs::HIST_BUCKETS];
+    let (mut ref_count, mut ref_sum) = (0u64, 0u64);
+    for &v in vals.iter().flatten() {
+        ref_buckets[(64 - v.leading_zeros()) as usize] += 1;
+        ref_count += 1;
+        ref_sum += v;
+    }
+    let snap = h.merged();
+    assert_eq!(snap.count, ref_count, "sharded merge must lose nothing");
+    assert_eq!(snap.sum, ref_sum);
+    for (i, (&got, &want)) in snap.buckets.iter().zip(&ref_buckets).enumerate() {
+        assert_eq!(got, want, "bucket {i}");
+    }
+
+    // the Prometheus exposition carries exact cumulative buckets
+    let text = obs::export::prometheus_text();
+    let base = "quartet2_test_obs_hist_merge";
+    let prefix = format!("{base}_bucket{{le=\"");
+    let mut cum = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(&prefix) {
+            let (_, count) = rest.split_once("\"} ").expect("bucket line shape");
+            cum.push(count.parse::<u64>().unwrap());
+        }
+    }
+    assert!(cum.len() >= 2, "want bucket lines in:\n{text}");
+    assert!(
+        cum.windows(2).all(|w| w[0] <= w[1]),
+        "buckets must be cumulative: {cum:?}"
+    );
+    assert_eq!(*cum.last().unwrap(), snap.count, "+Inf bucket = count");
+    assert!(text.contains(&format!("{base}_count {}", snap.count)));
+    // quantile gauges exported and ordered
+    let q = |tag: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(&format!("{base}_{tag} ")))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .unwrap_or_else(|| panic!("missing {base}_{tag}"))
+            .parse()
+            .unwrap()
+    };
+    assert!(q("p50") <= q("p95") && q("p95") <= q("p99"));
+}
+
+#[test]
+fn gauge_set_is_atomic_under_concurrent_writers() {
+    // two writers race distinct values while a reader spins: an f64
+    // gauge stored as one atomic word can never expose a torn bit mix
+    let g = obs::gauge("test.obs.torn_gauge");
+    g.set(1.0);
+    std::thread::scope(|s| {
+        for v in [1.0f64, 2.0] {
+            s.spawn(move || {
+                for _ in 0..20_000 {
+                    g.set(v);
+                }
+            });
+        }
+        s.spawn(move || {
+            for _ in 0..20_000 {
+                let v = g.get();
+                assert!(v == 1.0 || v == 2.0, "torn f64 gauge read: {v}");
+            }
+        });
+    });
+    let v = g.get();
+    assert!(v == 1.0 || v == 2.0);
+}
+
+#[test]
+fn health_cadence_controls_trace_snapshots() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Counters));
+    // 4 steps: every=1 samples all of them, every=3 samples steps 0, 3
+    for (every, want) in [(1u64, 4usize), (3, 2)] {
+        obs::health::set_health_every(Some(every));
+        let trace = temp_path(&format!("cadence_every{every}.jsonl"));
+        traced_micro_run(4, 11, &trace, |_| {}).unwrap();
+        let text = std::fs::read_to_string(&trace).unwrap();
+        let (mut health, mut dynamics) = (0, 0);
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap();
+            if v.opt("health").is_some() {
+                health += 1;
+            }
+            if v.opt("dynamics").is_some() {
+                dynamics += 1;
+            }
+        }
+        assert_eq!(health, want, "health snapshots at every={every}");
+        assert_eq!(dynamics, want, "dynamics snapshots at every={every}");
+    }
+    obs::health::set_health_every(None);
+    obs::set_level(None);
+}
+
+/// Synthetic backend that returns a scripted loss curve with a NaN
+/// injected at one step — the anomaly-detector tests don't need real
+/// math, just a trainer-visible loss stream.
+struct NanBackend {
+    nan_at: usize,
+}
+
+impl Backend for NanBackend {
+    fn describe(&self) -> String {
+        "nan-injection test backend".into()
+    }
+
+    fn batch_shape(&self) -> (usize, usize) {
+        (2, 8)
+    }
+
+    fn train_step(
+        &mut self,
+        step_idx: usize,
+        _tokens: Vec<i32>,
+        _targets: Vec<i32>,
+    ) -> anyhow::Result<f64> {
+        if step_idx == self.nan_at {
+            Ok(f64::NAN)
+        } else {
+            Ok(4.0 - 0.01 * step_idx as f64)
+        }
+    }
+
+    fn eval_batch(&mut self, _tokens: Vec<i32>, _targets: Vec<i32>) -> anyhow::Result<f64> {
+        Ok(4.0)
+    }
+
+    fn export_named_tensors(&mut self) -> anyhow::Result<BTreeMap<String, Vec<f32>>> {
+        Ok(BTreeMap::new())
+    }
+}
+
+fn nan_run_opts(trace: &Path) -> TrainerOptions {
+    TrainerOptions {
+        preset: "nan-test".into(),
+        scheme: "synthetic".into(),
+        steps: 4,
+        seed: 1,
+        eval_every: 0,
+        eval_batches: 0,
+        log_every: 0,
+        verbose: false,
+        batch: 2,
+        seq: 8,
+        trace_out: Some(trace.to_string_lossy().into_owned()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn nan_loss_under_snapshot_writes_accepted_forensic_bundle() {
+    // pin the level Off so a concurrently raised level can't add
+    // gauge-scan anomalies and change the bundle count
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Off));
+    let trace = temp_path("nan_snapshot.jsonl");
+    let dir = temp_path("nan_bundles");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut opts = nan_run_opts(&trace);
+    opts.on_anomaly = AnomalyAction::Snapshot;
+    opts.anomaly_dir = Some(dir.to_string_lossy().into_owned());
+    let run = Trainer::from_backend(Box::new(NanBackend { nan_at: 2 }), opts).run();
+    obs::set_level(None);
+    run.expect("snapshot policy keeps training");
+
+    // exactly one bundle, accepted by the obs-validate dispatcher,
+    // naming the offending metric
+    let bundles: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .expect("anomaly dir created")
+        .map(|e| e.unwrap().path())
+        .collect();
+    assert_eq!(bundles.len(), 1, "one trip, one bundle: {bundles:?}");
+    report::validate_path(&bundles[0]).expect("forensic bundle must validate");
+    let bundle = Json::parse_file(&bundles[0]).unwrap();
+    assert_eq!(bundle.get("step").unwrap().as_usize().unwrap(), 2);
+    let listed = bundle.get("anomalies").unwrap().as_arr().unwrap();
+    assert_eq!(listed.len(), 1);
+    assert_eq!(listed[0].get("metric").unwrap().as_str().unwrap(), "loss");
+    assert_eq!(
+        listed[0].get("kind").unwrap().as_str().unwrap(),
+        "nonfinite_loss"
+    );
+
+    // the trace stream stays well-formed and carries the anomaly event
+    let text = std::fs::read_to_string(&trace).unwrap();
+    report::validate_jsonl(&text).expect("trace must validate");
+    assert!(text.lines().any(|l| {
+        let v = Json::parse(l).unwrap();
+        v.opt("event").and_then(|e| e.as_str().ok()) == Some("anomaly")
+    }));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn nan_loss_under_halt_stops_the_run() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Off));
+    let trace = temp_path("nan_halt.jsonl");
+    let mut opts = nan_run_opts(&trace);
+    opts.on_anomaly = AnomalyAction::Halt;
+    let run = Trainer::from_backend(Box::new(NanBackend { nan_at: 1 }), opts).run();
+    obs::set_level(None);
+    let err = run.expect_err("halt policy stops the run");
+    assert!(err.to_string().contains("nonfinite_loss"), "{err}");
+    assert!(err.to_string().contains("loss"), "{err}");
+    // the flushed trace ends mid-run: obs-validate must reject it as
+    // truncated (run_start with no run_end)
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let verr = report::validate_jsonl(&text).expect_err("truncated trace rejected");
+    assert!(verr.to_string().contains("run_start"), "{verr}");
+}
+
+#[test]
+fn obs_report_diffs_two_traced_runs() {
+    let _g = level_lock();
+    obs::set_level(Some(ObsLevel::Spans));
+    let ta = temp_path("report_a.jsonl");
+    let tb = temp_path("report_b.jsonl");
+    traced_micro_run(6, 21, &ta, |_| {}).unwrap();
+    traced_micro_run(6, 21, &tb, |_| {}).unwrap();
+    obs::set_level(None);
+    for p in [&ta, &tb] {
+        report::validate_path(p).expect("trace streams validate");
+    }
+    let a = RunReport::parse_file(&ta).unwrap();
+    let b = RunReport::parse_file(&tb).unwrap();
+    assert_eq!(a.steps(), 6);
+    assert_eq!(b.steps(), 6);
+    assert!(
+        a.phase_ns.contains_key("forward_ns"),
+        "spans level records phases: {:?}",
+        a.phase_ns
+    );
+    let single = a.render();
+    assert!(single.contains("forward"), "{single}");
+    let diff = report::render_diff(&a, &b);
+    assert!(diff.contains("B/A"), "{diff}");
+    assert!(diff.contains("forward"), "{diff}");
+    assert!(diff.contains("final train loss"), "{diff}");
+    // same seed, same code: the loss side of the A/B gate is exact
+    let ld = report::final_loss_diff(&a, &b);
+    assert!(ld < 1e-12, "deterministic reruns must agree on loss: {ld}");
+    assert!(report::step_regression_pct(&a, &b).is_finite());
 }
 
 #[test]

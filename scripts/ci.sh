@@ -33,8 +33,9 @@ QUARTET2_THREADS=2 cargo test -q --test quant_parity
 # serial) when every auto-policy kernel sees real worker bands
 QUARTET2_THREADS=2 cargo test -q --test qgemm_packed
 
-# sanity-parse any published perf-trajectory JSONs at the repo root
-# (BENCH_train_step / BENCH_serve / BENCH_quantize; skips if absent)
+# the four repo-root perf-trajectory JSONs (BENCH_train_step /
+# BENCH_serve / BENCH_quantize / BENCH_qgemm) must exist and parse —
+# a missing manifest file fails, it does not skip
 cargo test -q --test bench_json
 
 # benches must at least compile (they are harness-free binaries;
@@ -69,6 +70,25 @@ grep -q '"event": *"train_step"' "$smoke_dir/obs/steps.jsonl" \
     || grep -q '"event":"train_step"' "$smoke_dir/obs/steps.jsonl"
 grep -q 'quartet2_engine_step_count' "$smoke_dir/obs/metrics.prom"
 grep -q 'quartet2_quant_mse_rel_mseden' "$smoke_dir/obs/metrics.prom"
+# span timers now export full latency histograms with quantile gauges
+grep -q 'quartet2_engine_step_seconds_bucket{le="+Inf"}' "$smoke_dir/obs/metrics.prom"
+grep -q 'quartet2_engine_step_seconds_p99' "$smoke_dir/obs/metrics.prom"
+# the bounded trace ring must not have dropped events in a 2-step run
+grep -q '^quartet2_obs_trace_dropped 0$' "$smoke_dir/obs/metrics.prom"
+
+# forensics gate: a second identical traced run, then obs-report diffs
+# the two streams — the loss side must match exactly (deterministic
+# engine), the time side gets a generous same-machine bound
+QUARTET2_THREADS=2 QUARTET2_OBS=spans cargo run --release --bin quartet2 -- \
+    train-native \
+    --preset tiny --scheme quartet2 --steps 2 --batch 2 --seq 64 \
+    --eval-every 0 --log-every 1 --no-export \
+    --results-dir "$smoke_dir/results_obs2" \
+    --trace-out "$smoke_dir/obs/steps2.jsonl"
+cargo run --release --bin quartet2 -- obs-report "$smoke_dir/obs/steps.jsonl"
+cargo run --release --bin quartet2 -- obs-report \
+    "$smoke_dir/obs/steps.jsonl" "$smoke_dir/obs/steps2.jsonl" \
+    --max-step-regression 300 --max-loss-diff 1e-9
 
 # serving smoke with request-lifecycle telemetry: two requests plus a
 # {"cmd": "metrics"} control line through the JSON-lines loop
