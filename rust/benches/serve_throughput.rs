@@ -45,6 +45,7 @@ fn decode_tok_s(model: &PackedModel, n_requests: usize, max_batch: usize) -> f64
                     id: i as u64,
                     prompt,
                     max_new_tokens: NEW_TOKENS,
+                    deadline_ms: None,
                 })
                 .expect("submit");
         }

@@ -19,9 +19,10 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::{Batcher, PrefetchBatcher};
+use crate::engine::checkpoint::{fault, Checkpointer, EngineState, TrainState};
 use crate::metrics::{CurvePoint, LossCurve};
 use crate::obs::{self, export::JsonlSink};
-use crate::util::json;
+use crate::util::json::{self, Json};
 use crate::runtime::executor::{Engine, HostTensor, LoadedArtifact};
 
 /// One training execution backend: owns model/optimizer state and the
@@ -45,6 +46,22 @@ pub trait Backend {
     /// `serve::ModelWeightsF32::from_named_tensors` layout), for
     /// backends that support host-side export.
     fn export_named_tensors(&mut self) -> Result<BTreeMap<String, Vec<f32>>>;
+
+    /// Complete training-state snapshot for crash-safe checkpointing:
+    /// f32 master params plus the AdamW moments and step counter.
+    /// Backends without host-side state access (the stubbed PJRT
+    /// path) error; the [`Trainer`] surfaces that at `--checkpoint-dir`
+    /// time, not mid-run.
+    fn export_train_state(&mut self) -> Result<EngineState> {
+        bail!("this backend does not support checkpoint export")
+    }
+
+    /// Restore a snapshot produced by
+    /// [`export_train_state`](Backend::export_train_state), replacing
+    /// params and optimizer state wholesale.
+    fn import_train_state(&mut self, _state: &EngineState) -> Result<()> {
+        bail!("this backend does not support checkpoint restore")
+    }
 }
 
 /// Options for one training run.
@@ -73,6 +90,26 @@ pub struct TrainerOptions {
     /// `--anomaly-dir`: where `--on-anomaly=snapshot` drops forensic
     /// bundles (default `anomalies/`).
     pub anomaly_dir: Option<String>,
+    /// `--checkpoint-dir`: crash-safe training-state checkpoints
+    /// (`.q2ck`, [`crate::engine::checkpoint`]) land here; `None`
+    /// disables checkpointing.
+    pub checkpoint_dir: Option<String>,
+    /// `--checkpoint-every K`: periodic checkpoint cadence in steps
+    /// (0 = only the initial / final / forced writes).
+    pub checkpoint_every: usize,
+    /// `--keep-last N`: checkpoint retention (0 keeps everything).
+    pub keep_last: usize,
+    /// `--resume-from auto|<path>`: `auto` restores the newest valid
+    /// checkpoint in `--checkpoint-dir` (fresh start when none); an
+    /// explicit path is a hard error if it fails verification.
+    pub resume_from: Option<String>,
+    /// `--stop-after K`: stop gracefully (final checkpoint + clean
+    /// `run_end`) once K steps completed — simulated preemption, the
+    /// in-process half of the resume-equivalence tests.
+    pub stop_after: Option<usize>,
+    /// Cap on `--on-anomaly=rollback` restores before giving up (a
+    /// persistently re-tripping detector must not loop forever).
+    pub max_rollbacks: usize,
 }
 
 impl Default for TrainerOptions {
@@ -91,6 +128,12 @@ impl Default for TrainerOptions {
             trace_out: None,
             on_anomaly: obs::anomaly::AnomalyAction::Log,
             anomaly_dir: None,
+            checkpoint_dir: None,
+            checkpoint_every: 50,
+            keep_last: 3,
+            resume_from: None,
+            stop_after: None,
+            max_rollbacks: 8,
         }
     }
 }
@@ -330,7 +373,60 @@ impl Trainer {
         let mut curve = LossCurve::new(&run_name, &opts.scheme, &opts.preset);
 
         let (batch, seq) = self.backend.batch_shape();
-        let train_feed = PrefetchBatcher::new(Batcher::train(opts.seed, batch, seq), 2);
+
+        // ---- crash safety: checkpointer + resume resolution
+        let ckpt = match &opts.checkpoint_dir {
+            Some(d) => Some(Checkpointer::new(
+                Path::new(d),
+                opts.checkpoint_every,
+                opts.keep_last,
+            )?),
+            None => None,
+        };
+        if opts.on_anomaly == obs::anomaly::AnomalyAction::Rollback && ckpt.is_none() {
+            bail!("--on-anomaly=rollback needs --checkpoint-dir (nothing to roll back to)");
+        }
+        let mut detector = obs::anomaly::AnomalyDetector::new();
+        let mut start_step = 0usize;
+        let mut resumed_from = None;
+        if let Some(spec) = &opts.resume_from {
+            let c = ckpt
+                .as_ref()
+                .ok_or_else(|| anyhow!("--resume-from needs --checkpoint-dir"))?;
+            match c.resolve_resume(spec)? {
+                Some((st, path)) => {
+                    st.validate_run(&opts.preset, &opts.scheme, batch, seq, opts.seed, opts.steps)?;
+                    let run_path = format!("{:?}", crate::engine::gemm_path());
+                    if st.gemm_path != run_path {
+                        eprintln!(
+                            "warning: checkpoint was written under the {} GEMM path, \
+                             this run uses {run_path}",
+                            st.gemm_path
+                        );
+                    }
+                    self.backend
+                        .import_train_state(&st.engine)
+                        .with_context(|| format!("restoring {}", path.display()))?;
+                    detector.restore_state(&st.detector);
+                    start_step = st.step;
+                    obs::count!("ckpt.restores", 1);
+                    eprintln!("resumed from {} at step {start_step}", path.display());
+                    resumed_from = Some(path);
+                }
+                None => eprintln!(
+                    "no valid checkpoint under {} — starting fresh",
+                    c.dir().display()
+                ),
+            }
+        }
+
+        // the data-loader cursor is part of the state: fast-forward
+        // the train stream to exactly where the checkpointed run
+        // stopped (O(1) arithmetic — batches are pure functions of
+        // the step index, like every other per-step random draw)
+        let mut train_src = Batcher::train(opts.seed, batch, seq);
+        train_src.skip_batches(start_step);
+        let train_feed = PrefetchBatcher::new(train_src, 2);
         let mut val_feed = Batcher::val(opts.seed, batch, seq);
 
         // --trace-out sink: one JSONL event per step, with the engine
@@ -361,7 +457,28 @@ impl Trainer {
                 ("batch", json::n(batch as f64)),
                 ("seq", json::n(seq as f64)),
                 ("obs_level", json::s(obs::level().as_str())),
+                ("start_step", json::n(start_step as f64)),
+                ("resumed", Json::Bool(resumed_from.is_some())),
             ]))?;
+            if let Some(p) = &resumed_from {
+                sink.event(&json::obj(vec![
+                    ("event", json::s("resume")),
+                    ("step", json::n(start_step as f64)),
+                    ("path", json::s(&p.display().to_string())),
+                ]))?;
+            }
+        }
+
+        // an initial checkpoint on fresh starts: rollback always has a
+        // restore target, and a kill before the first cadence recovers
+        if let Some(c) = &ckpt {
+            if start_step == 0 {
+                let st = self.train_state(0, &detector)?;
+                let (path, bytes) = c.write(&st)?;
+                if let Some(sink) = sink.as_mut() {
+                    sink.event(&checkpoint_event(0, &path, bytes))?;
+                }
+            }
         }
 
         let t0 = Instant::now();
@@ -372,13 +489,18 @@ impl Trainer {
         // QUARTET2_OBS=off bitwise invariant holds); the gauge scan
         // only on health-sampled steps, right after the engine
         // refreshed the quant/dyn gauges
-        let mut detector = obs::anomaly::AnomalyDetector::new();
         let mut anomaly_total = 0usize;
-        for s in 0..opts.steps {
+        let mut rollbacks = 0usize;
+        let mut executed_steps = 0usize;
+        for s in start_step..opts.steps {
             let b = train_feed.next();
             let ts = Instant::now();
-            let loss = self.step(s, b.tokens, b.targets)?;
+            let mut loss = self.step(s, b.tokens, b.targets)?;
             let step_ns = ts.elapsed().as_nanos() as u64;
+            executed_steps += 1;
+            if fault::nan_loss_at(s) {
+                loss = f64::NAN;
+            }
             let sampled = obs::health::sampled_step(s as u64);
             let mut anomalies = detector.check_loss(s as u64, loss);
             if sampled {
@@ -388,7 +510,17 @@ impl Trainer {
                 let mut fields = vec![
                     ("event", json::s("train_step")),
                     ("step", json::n(s as f64)),
-                    ("loss", json::n(loss)),
+                    // a non-finite loss is not a JSON number; emit it
+                    // as a string so the trace stays parseable (report
+                    // readers skip string losses)
+                    (
+                        "loss",
+                        if loss.is_finite() {
+                            json::n(loss)
+                        } else {
+                            json::s(&format!("{loss}"))
+                        },
+                    ),
                     ("step_ns", json::n(step_ns as f64)),
                 ];
                 let mut phases = Vec::with_capacity(PHASES.len());
@@ -405,6 +537,7 @@ impl Trainer {
                 }
                 sink.event(&json::obj(fields))?;
             }
+            let mut rolled_back = false;
             if !anomalies.is_empty() {
                 anomaly_total += anomalies.len();
                 for a in &anomalies {
@@ -436,10 +569,66 @@ impl Trainer {
                             a.value
                         );
                     }
+                    obs::anomaly::AnomalyAction::Rollback => {
+                        let c = ckpt.as_ref().expect("validated at startup");
+                        rollbacks += 1;
+                        if rollbacks > opts.max_rollbacks {
+                            if let Some(sink) = sink.as_mut() {
+                                sink.flush()?;
+                            }
+                            bail!(
+                                "giving up after {} rollbacks; last anomaly at step {s}: {}",
+                                opts.max_rollbacks,
+                                anomalies[0].message
+                            );
+                        }
+                        let (st, path) = c.latest_valid()?.ok_or_else(|| {
+                            anyhow!(
+                                "rollback tripped at step {s} but no valid checkpoint \
+                                 exists under {}",
+                                c.dir().display()
+                            )
+                        })?;
+                        st.validate_run(
+                            &opts.preset,
+                            &opts.scheme,
+                            batch,
+                            seq,
+                            opts.seed,
+                            opts.steps,
+                        )?;
+                        self.backend
+                            .import_train_state(&st.engine)
+                            .with_context(|| format!("rolling back to {}", path.display()))?;
+                        detector.restore_state(&st.detector);
+                        rolled_back = true;
+                        obs::count!("ckpt.rollbacks", 1);
+                        eprintln!(
+                            "rollback: restored {} (step {}), skipping the offending \
+                             window and continuing at step {}",
+                            path.display(),
+                            st.step,
+                            s + 1
+                        );
+                        if let Some(sink) = sink.as_mut() {
+                            sink.event(&json::obj(vec![
+                                ("event", json::s("rollback")),
+                                ("step", json::n(s as f64)),
+                                ("restored_step", json::n(st.step as f64)),
+                                (
+                                    "skipped_steps",
+                                    json::n((s + 1).saturating_sub(st.step) as f64),
+                                ),
+                            ]))?;
+                        }
+                    }
                 }
             }
             let is_last = s + 1 == opts.steps;
-            let do_eval = should_eval(s, opts.steps, opts.eval_every, opts.eval_batches);
+            // a rolled-back step contributes nothing downstream: its
+            // loss is poison and its parameters were just discarded
+            let do_eval =
+                !rolled_back && should_eval(s, opts.steps, opts.eval_every, opts.eval_batches);
             let val_loss = if do_eval {
                 last_eval = self.evaluate(&mut val_feed, opts.eval_batches)?;
                 Some(last_eval)
@@ -447,7 +636,7 @@ impl Trainer {
                 None
             };
             let log_tick = opts.log_every > 0 && s % opts.log_every == 0;
-            if do_eval || log_tick || is_last {
+            if !rolled_back && (do_eval || log_tick || is_last) {
                 curve.push(CurvePoint {
                     step: s,
                     tokens: (s + 1) * tokens_per_step,
@@ -465,11 +654,50 @@ impl Trainer {
                     }
                 }
             }
+            // graceful preemption: finish step K, write the final
+            // checkpoint below, emit run_end, exit clean
+            let stop_now = opts.stop_after.is_some_and(|k| s + 1 >= k) && !is_last;
+            if let Some(c) = &ckpt {
+                // never checkpoint an anomalous step — a rollback must
+                // land strictly before the poisoned window
+                if anomalies.is_empty() && (c.due(s + 1) || is_last || stop_now) {
+                    // an armed write fault dies inside `write` without
+                    // unwinding: land this step's trace events first,
+                    // the stream is the crash's flight recorder
+                    if fault::write_fault().is_some() {
+                        if let Some(sink) = sink.as_mut() {
+                            sink.flush()?;
+                        }
+                    }
+                    let st = self.train_state(s + 1, &detector)?;
+                    let (path, bytes) = c.write(&st)?;
+                    if let Some(sink) = sink.as_mut() {
+                        sink.event(&checkpoint_event(s + 1, &path, bytes))?;
+                    }
+                }
+            }
+            // per-step durability: a killed process (the fault hook
+            // below, or a real preemption) must leave a complete trace
+            // behind — one small flush per multi-ms training step
+            if let Some(sink) = sink.as_mut() {
+                sink.flush()?;
+            }
+            // fault injection: a hard kill lands *after* any checkpoint
+            // write for this step, like a preemption between steps
+            fault::kill_after_step(s);
+            if stop_now {
+                if opts.verbose {
+                    eprintln!(
+                        "stopping after step {s} (--stop-after); resume with --resume-from auto"
+                    );
+                }
+                break;
+            }
         }
 
         let secs = t0.elapsed().as_secs_f64();
         let tokens_per_sec =
-            crate::metrics::safe_rate((opts.steps * tokens_per_step) as f64, secs);
+            crate::metrics::safe_rate((executed_steps * tokens_per_step) as f64, secs);
         if let Some(sink) = sink.as_mut() {
             sink.event(&json::obj(vec![
                 ("event", json::s("run_end")),
@@ -495,6 +723,41 @@ impl Trainer {
             curve,
         })
     }
+
+    /// Assemble the complete checkpoint payload after `completed`
+    /// steps: run identity, engine state (params + AdamW), the
+    /// anomaly-detector window. The data-loader cursor and LR-schedule
+    /// position both derive from `completed` (the batcher skip and the
+    /// optimizer `t` counter), so the step index carries them.
+    fn train_state(
+        &mut self,
+        completed: usize,
+        detector: &obs::anomaly::AnomalyDetector,
+    ) -> Result<TrainState> {
+        let (batch, seq) = self.backend.batch_shape();
+        Ok(TrainState {
+            step: completed,
+            preset: self.opts.preset.clone(),
+            scheme: self.opts.scheme.clone(),
+            batch,
+            seq,
+            seed: self.opts.seed,
+            total_steps: self.opts.steps,
+            gemm_path: format!("{:?}", crate::engine::gemm_path()),
+            engine: self.backend.export_train_state()?,
+            detector: detector.export_state(),
+        })
+    }
+}
+
+/// One `checkpoint` trace event for the `--trace-out` stream.
+fn checkpoint_event(step: usize, path: &Path, bytes: u64) -> Json {
+    json::obj(vec![
+        ("event", json::s("checkpoint")),
+        ("step", json::n(step as f64)),
+        ("bytes", json::n(bytes as f64)),
+        ("path", json::s(&path.display().to_string())),
+    ])
 }
 
 /// Mean of `n_batches` accumulated losses; errors on zero batches

@@ -83,6 +83,14 @@ impl Batcher {
     pub fn reset(&mut self) {
         self.next_stream %= self.stride;
     }
+
+    /// Fast-forward the cursor as if `n` batches had been consumed —
+    /// the checkpoint/resume data-loader seek. Each batch advances the
+    /// stream id by `batch * stride`, so this is pure arithmetic: no
+    /// corpus synthesis, O(1) regardless of how deep the resume is.
+    pub fn skip_batches(&mut self, n: usize) {
+        self.next_stream += (n * self.batch) as u64 * self.stride;
+    }
 }
 
 /// Background-threaded prefetcher with a bounded queue (depth 2 =
@@ -148,6 +156,21 @@ mod tests {
     fn batches_advance() {
         let mut b = Batcher::train(1, 1, 64);
         assert_ne!(b.next().tokens, b.next().tokens);
+    }
+
+    #[test]
+    fn skip_matches_consuming() {
+        let mut consumed = Batcher::train(7, 3, 32);
+        for _ in 0..5 {
+            consumed.next();
+        }
+        let mut skipped = Batcher::train(7, 3, 32);
+        skipped.skip_batches(5);
+        assert_eq!(skipped.next().tokens, consumed.next().tokens);
+        // and skipping zero is the identity
+        let mut a = Batcher::train(7, 3, 32);
+        a.skip_batches(0);
+        assert_eq!(a.next().tokens, Batcher::train(7, 3, 32).next().tokens);
     }
 
     #[test]

@@ -172,6 +172,46 @@ impl Backend for NativeBackend {
     fn export_named_tensors(&mut self) -> Result<BTreeMap<String, Vec<f32>>> {
         Ok(self.model.export_named_tensors())
     }
+
+    fn export_train_state(&mut self) -> Result<super::checkpoint::EngineState> {
+        let (m, v, t) = self.opt.state();
+        Ok(super::checkpoint::EngineState {
+            opt_t: t,
+            params: self
+                .model
+                .params
+                .iter()
+                .map(|p| (p.name.clone(), p.value.data.to_vec()))
+                .collect(),
+            opt_m: m.to_vec(),
+            opt_v: v.to_vec(),
+        })
+    }
+
+    fn import_train_state(&mut self, st: &super::checkpoint::EngineState) -> Result<()> {
+        anyhow::ensure!(
+            st.params.len() == self.model.params.len(),
+            "checkpoint has {} params, model has {}",
+            st.params.len(),
+            self.model.params.len()
+        );
+        for (p, (name, data)) in self.model.params.iter_mut().zip(&st.params) {
+            anyhow::ensure!(
+                &p.name == name,
+                "checkpoint param {name:?} does not line up with model param {:?}",
+                p.name
+            );
+            anyhow::ensure!(
+                data.len() == p.value.numel(),
+                "checkpoint param {name:?} has {} elements, model expects {}",
+                data.len(),
+                p.value.numel()
+            );
+            let shape = p.value.shape.clone();
+            p.value = super::tensor::Tensor::new(data.clone(), &shape)?;
+        }
+        self.opt.restore(&st.opt_m, &st.opt_v, st.opt_t)
+    }
 }
 
 #[cfg(test)]
@@ -223,6 +263,41 @@ mod tests {
         // eval did not move the parameters
         let l0 = b.train_step(0, tokens, targets).unwrap();
         assert!((l0 - before).abs() < 1e-9, "train loss {l0} vs eval {before}");
+    }
+
+    #[test]
+    fn train_state_roundtrip_resumes_bitwise() {
+        let tokens = vec![1i32, 5, 3, 2];
+        let targets = vec![5i32, 3, 2, 9];
+        let mk = || {
+            NativeBackend::from_config(&micro(), "f32", 1, 4, 7, AdamWOptions::default())
+                .unwrap()
+        };
+        let mut a = mk();
+        for s in 0..2 {
+            a.train_step(s, tokens.clone(), targets.clone()).unwrap();
+        }
+        let snap = a.export_train_state().unwrap();
+        assert_eq!(snap.opt_t, 2);
+        let mut b = mk();
+        b.import_train_state(&snap).unwrap();
+        for s in 2..4 {
+            let la = a.train_step(s, tokens.clone(), targets.clone()).unwrap();
+            let lb = b.train_step(s, tokens.clone(), targets.clone()).unwrap();
+            assert_eq!(la.to_bits(), lb.to_bits(), "step {s}");
+        }
+        let (ta, tb) = (a.export_named_tensors().unwrap(), b.export_named_tensors().unwrap());
+        assert_eq!(ta, tb);
+
+        // a state with a broken param list is rejected
+        let mut bad = snap.clone();
+        bad.params[0].0 = "not_a_param".into();
+        assert!(mk().import_train_state(&bad).is_err());
+        let mut short = snap;
+        short.params.pop();
+        short.opt_m.pop();
+        short.opt_v.pop();
+        assert!(mk().import_train_state(&short).is_err());
     }
 
     #[test]

@@ -1,0 +1,781 @@
+//! Crash-safe training checkpoints: the `.q2ck` container, the
+//! atomic [`Checkpointer`] writer, and the deterministic
+//! fault-injection hooks ([`fault`]) that test it.
+//!
+//! A checkpoint carries the **complete** training state — f32 master
+//! parameters, AdamW moments + step counter, the LR-schedule position
+//! (the optimizer `t` plus `total_steps` in the meta), the run seed
+//! (the per-step quantizer RNG is counter-based, `seed.fold_in(step)`,
+//! so the data-loader cursor and every future random draw are pure
+//! functions of `(seed, step)`), and the active scheme / GEMM path —
+//! which is why `--resume-from auto` continues with a **bitwise
+//! identical** loss trajectory versus the uninterrupted run
+//! (`tests/checkpoint_resume.rs` locks this at two thread counts).
+//!
+//! Container layout (`ckpt_step<N>.q2ck`, little-endian):
+//!
+//! ```text
+//! magic "Q2CK" | version u32 | n_sections u32
+//! per section: name_len u16 | name | payload_len u64 | crc32 u32 | payload
+//! ```
+//!
+//! Sections: `meta` (JSON run metadata + anomaly-detector window),
+//! then `param.<name>` / `adam.m.<name>` / `adam.v.<name>` triples in
+//! model order, each payload a flat f32 LE dump. Every section is
+//! CRC32-guarded ([`crate::util::checksum`]); a torn or bit-flipped
+//! file fails at load with an error naming the broken section, and
+//! [`Checkpointer::latest_valid`] falls back to the newest checkpoint
+//! that still verifies.
+//!
+//! Write protocol (crash-ordering): temp file → `fsync` → `rename`
+//! into place → `LATEST` pointer rewritten (same temp/rename dance)
+//! **last** → retention deletes beyond `--keep-last`. A crash at any
+//! point leaves either the old pointer on an intact old file or the
+//! new pointer on an intact new file — never a live pointer at a
+//! half-written container (and if storage lies, the CRCs catch it).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::obs::anomaly::DetectorState;
+use crate::util::checksum::crc32;
+use crate::util::json::{self, Json};
+
+/// Magic bytes of the `.q2ck` checkpoint container.
+pub const MAGIC: [u8; 4] = *b"Q2CK";
+/// Container format version.
+pub const VERSION: u32 = 1;
+/// Name of the pointer file naming the most recent checkpoint.
+pub const LATEST: &str = "LATEST";
+
+/// What a training [`crate::coordinator::Backend`] checkpoints: the
+/// f32 master parameters and the full optimizer state.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EngineState {
+    /// AdamW step counter `t` (the LR-schedule position).
+    pub opt_t: usize,
+    /// `(name, flat f32 payload)` per parameter, in model order.
+    pub params: Vec<(String, Vec<f32>)>,
+    /// AdamW first moments, aligned with `params`.
+    pub opt_m: Vec<Vec<f32>>,
+    /// AdamW second moments, aligned with `params`.
+    pub opt_v: Vec<Vec<f32>>,
+}
+
+/// One complete checkpoint: run identity + [`EngineState`] + the
+/// trainer's anomaly-detector window.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrainState {
+    /// Completed optimizer steps (resume continues at this step index).
+    pub step: usize,
+    pub preset: String,
+    pub scheme: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub seed: u64,
+    /// The run's `--steps` (the cosine-schedule span; a resume under a
+    /// different value would silently change every future LR).
+    pub total_steps: usize,
+    /// Active GEMM path at save time (informational: `packed` and
+    /// `dequant` are bitwise identical for SR / MS-EDEN).
+    pub gemm_path: String,
+    pub engine: EngineState,
+    pub detector: DetectorState,
+}
+
+fn f32s_to_bytes(x: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * x.len());
+    for v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(section: &str, b: &[u8]) -> Result<Vec<f32>> {
+    ensure!(
+        b.len() % 4 == 0,
+        "checkpoint section {section:?}: {} payload bytes is not a whole number of f32s",
+        b.len()
+    );
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+impl TrainState {
+    fn meta_json(&self) -> Json {
+        json::obj(vec![
+            ("step", json::n(self.step as f64)),
+            ("preset", json::s(&self.preset)),
+            ("scheme", json::s(&self.scheme)),
+            ("batch", json::n(self.batch as f64)),
+            ("seq", json::n(self.seq as f64)),
+            // string, not number: a u64 seed must survive exactly (f64
+            // JSON numbers lose bits past 2^53)
+            ("seed", json::s(&self.seed.to_string())),
+            ("total_steps", json::n(self.total_steps as f64)),
+            ("gemm_path", json::s(&self.gemm_path)),
+            ("opt_t", json::n(self.engine.opt_t as f64)),
+            (
+                "detector",
+                json::obj(vec![
+                    ("n", json::n(self.detector.n as f64)),
+                    ("mean", json::n(self.detector.mean)),
+                    ("var", json::n(self.detector.var)),
+                    ("total", json::n(self.detector.total as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Serialize into the `.q2ck` byte container.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut sections: Vec<(String, Vec<u8>)> =
+            Vec::with_capacity(1 + 3 * self.engine.params.len());
+        sections.push(("meta".into(), self.meta_json().to_string().into_bytes()));
+        for (i, (name, data)) in self.engine.params.iter().enumerate() {
+            sections.push((format!("param.{name}"), f32s_to_bytes(data)));
+            sections.push((format!("adam.m.{name}"), f32s_to_bytes(&self.engine.opt_m[i])));
+            sections.push((format!("adam.v.{name}"), f32s_to_bytes(&self.engine.opt_v[i])));
+        }
+        let payload_total: usize = sections.iter().map(|(n, p)| 14 + n.len() + p.len()).sum();
+        let mut out = Vec::with_capacity(12 + payload_total);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+        for (name, payload) in &sections {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&crc32(payload).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    /// Parse + verify a `.q2ck` byte container. Every section's CRC is
+    /// checked; errors name the offending section, so a torn tail or a
+    /// single flipped bit is reported precisely, not as garbage state.
+    pub fn from_bytes(buf: &[u8]) -> Result<TrainState> {
+        fn take<'a>(buf: &'a [u8], off: &mut usize, n: usize, what: &str) -> Result<&'a [u8]> {
+            let end = off
+                .checked_add(n)
+                .filter(|&e| e <= buf.len())
+                .with_context(|| {
+                    format!(
+                        "truncated checkpoint: {} bytes left, need {n} for {what}",
+                        buf.len() - *off
+                    )
+                })?;
+            let out = &buf[*off..end];
+            *off = end;
+            Ok(out)
+        }
+        let mut off = 0usize;
+        if take(buf, &mut off, 4, "magic")? != &MAGIC[..] {
+            bail!("bad checkpoint magic (not a .q2ck container)");
+        }
+        let version =
+            u32::from_le_bytes(take(buf, &mut off, 4, "version")?.try_into().unwrap());
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (this build reads {VERSION})");
+        }
+        let n_sections =
+            u32::from_le_bytes(take(buf, &mut off, 4, "section count")?.try_into().unwrap())
+                as usize;
+        let mut sections: Vec<(String, Vec<u8>)> = Vec::with_capacity(n_sections);
+        for i in 0..n_sections {
+            let name_len = u16::from_le_bytes(
+                take(buf, &mut off, 2, "section name length")?.try_into().unwrap(),
+            ) as usize;
+            let name = String::from_utf8(
+                take(buf, &mut off, name_len, "section name")?.to_vec(),
+            )
+            .with_context(|| format!("checkpoint section #{i}: name is not UTF-8"))?;
+            let payload_len = u64::from_le_bytes(
+                take(buf, &mut off, 8, &format!("section {name:?} length"))?
+                    .try_into()
+                    .unwrap(),
+            ) as usize;
+            let stored = u32::from_le_bytes(
+                take(buf, &mut off, 4, &format!("section {name:?} checksum"))?
+                    .try_into()
+                    .unwrap(),
+            );
+            let payload =
+                take(buf, &mut off, payload_len, &format!("section {name:?} payload"))?;
+            let computed = crc32(payload);
+            ensure!(
+                stored == computed,
+                "checkpoint section {name:?} (#{i}) checksum mismatch: stored \
+                 {stored:#010x}, computed {computed:#010x} — the container is corrupt"
+            );
+            sections.push((name, payload.to_vec()));
+        }
+        ensure!(
+            off == buf.len(),
+            "trailing bytes in checkpoint container ({} past the last section)",
+            buf.len() - off
+        );
+
+        let mut it = sections.into_iter();
+        let (mname, meta_bytes) =
+            it.next().context("checkpoint has no sections (no meta)")?;
+        ensure!(mname == "meta", "first checkpoint section is {mname:?}, want \"meta\"");
+        let meta = Json::parse(
+            std::str::from_utf8(&meta_bytes).context("meta section is not UTF-8")?,
+        )
+        .context("parsing checkpoint meta JSON")?;
+        let det = meta.get("detector")?;
+        let mut st = TrainState {
+            step: meta.get("step")?.as_usize()?,
+            preset: meta.get("preset")?.as_str()?.to_string(),
+            scheme: meta.get("scheme")?.as_str()?.to_string(),
+            batch: meta.get("batch")?.as_usize()?,
+            seq: meta.get("seq")?.as_usize()?,
+            seed: meta
+                .get("seed")?
+                .as_str()?
+                .parse::<u64>()
+                .context("checkpoint meta seed is not a u64")?,
+            total_steps: meta.get("total_steps")?.as_usize()?,
+            gemm_path: meta.get("gemm_path")?.as_str()?.to_string(),
+            engine: EngineState {
+                opt_t: meta.get("opt_t")?.as_usize()?,
+                ..Default::default()
+            },
+            detector: DetectorState {
+                n: det.get("n")?.as_usize()?,
+                mean: det.get("mean")?.as_f64()?,
+                var: det.get("var")?.as_f64()?,
+                total: det.get("total")?.as_usize()?,
+            },
+        };
+        while let Some((name, payload)) = it.next() {
+            let pname = name.strip_prefix("param.").with_context(|| {
+                format!("unexpected checkpoint section {name:?} (want a param.* triple)")
+            })?;
+            let (m_name, m_payload) = it
+                .next()
+                .with_context(|| format!("param {pname:?} is missing its adam.m section"))?;
+            ensure!(
+                m_name == format!("adam.m.{pname}"),
+                "section after param.{pname} is {m_name:?}, want adam.m.{pname}"
+            );
+            let (v_name, v_payload) = it
+                .next()
+                .with_context(|| format!("param {pname:?} is missing its adam.v section"))?;
+            ensure!(
+                v_name == format!("adam.v.{pname}"),
+                "section after adam.m.{pname} is {v_name:?}, want adam.v.{pname}"
+            );
+            let p = bytes_to_f32s(&name, &payload)?;
+            let m = bytes_to_f32s(&m_name, &m_payload)?;
+            let v = bytes_to_f32s(&v_name, &v_payload)?;
+            ensure!(
+                m.len() == p.len() && v.len() == p.len(),
+                "param {pname:?}: {} elements but moments have {}/{}",
+                p.len(),
+                m.len(),
+                v.len()
+            );
+            st.engine.params.push((pname.to_string(), p));
+            st.engine.opt_m.push(m);
+            st.engine.opt_v.push(v);
+        }
+        Ok(st)
+    }
+
+    /// Refuse to resume into a run whose identity differs from the
+    /// checkpoint's: every mismatch here silently breaks the bitwise
+    /// continuation guarantee, so each is a hard error.
+    pub fn validate_run(
+        &self,
+        preset: &str,
+        scheme: &str,
+        batch: usize,
+        seq: usize,
+        seed: u64,
+        total_steps: usize,
+    ) -> Result<()> {
+        let check = |what: &str, ckpt: &str, run: &str| -> Result<()> {
+            ensure!(
+                ckpt == run,
+                "checkpoint {what} {ckpt:?} does not match the run's {run:?} \
+                 (resume must replay the same configuration)"
+            );
+            Ok(())
+        };
+        check("preset", &self.preset, preset)?;
+        check("scheme", &self.scheme, scheme)?;
+        check("batch", &self.batch.to_string(), &batch.to_string())?;
+        check("seq", &self.seq.to_string(), &seq.to_string())?;
+        check("seed", &self.seed.to_string(), &seed.to_string())?;
+        check(
+            "total_steps",
+            &self.total_steps.to_string(),
+            &total_steps.to_string(),
+        )?;
+        ensure!(
+            self.step <= total_steps,
+            "checkpoint is at step {} but the run only has {total_steps} steps",
+            self.step
+        );
+        Ok(())
+    }
+}
+
+/// Read + verify one checkpoint file.
+pub fn load_file(path: &Path) -> Result<TrainState> {
+    let t0 = Instant::now();
+    let buf =
+        std::fs::read(path).with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let st = TrainState::from_bytes(&buf)
+        .with_context(|| format!("loading checkpoint {}", path.display()))?;
+    crate::obs::record_ns("ckpt.load", t0.elapsed().as_nanos() as u64);
+    Ok(st)
+}
+
+fn file_name(step: usize) -> String {
+    // zero-padded so lexicographic order == step order
+    format!("ckpt_step{step:08}.q2ck")
+}
+
+/// Periodic checkpoint writer over one directory: atomic writes, a
+/// `LATEST` pointer, `--keep-last` retention, and corrupt-fallback
+/// resume resolution.
+pub struct Checkpointer {
+    dir: PathBuf,
+    every: usize,
+    keep_last: usize,
+}
+
+impl Checkpointer {
+    /// `every` is the `--checkpoint-every` cadence (0 = only the
+    /// initial/final/forced writes); `keep_last` 0 keeps everything.
+    pub fn new(dir: &Path, every: usize, keep_last: usize) -> Result<Checkpointer> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(Checkpointer { dir: dir.to_path_buf(), every, keep_last })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether the periodic cadence is due after `completed` steps.
+    pub fn due(&self, completed: usize) -> bool {
+        self.every > 0 && completed > 0 && completed % self.every == 0
+    }
+
+    fn atomic_write(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)
+            .and_then(|()| f.sync_all())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        // best-effort directory fsync so the rename itself is durable
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            d.sync_all().ok();
+        }
+        Ok(())
+    }
+
+    fn point_latest(&self, name: &str) -> Result<()> {
+        self.atomic_write(&self.dir.join(LATEST), name.as_bytes())
+    }
+
+    /// All `ckpt_step*.q2ck` files, ascending by step.
+    pub fn list(&self) -> Result<Vec<PathBuf>> {
+        let mut out: Vec<PathBuf> = std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing checkpoint dir {}", self.dir.display()))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("ckpt_step") && n.ends_with(".q2ck"))
+            })
+            .collect();
+        out.sort();
+        Ok(out)
+    }
+
+    fn enforce_retention(&self) -> Result<()> {
+        if self.keep_last == 0 {
+            return Ok(());
+        }
+        let files = self.list()?;
+        if files.len() > self.keep_last {
+            for old in &files[..files.len() - self.keep_last] {
+                std::fs::remove_file(old)
+                    .with_context(|| format!("pruning old checkpoint {}", old.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write one checkpoint (atomic, pointer last, then retention).
+    /// Returns the final path and container size. This is also where
+    /// the [`fault`] write-corruption hooks live: `torn_write` and
+    /// `flip_byte` damage the file the way a real crash or bit rot
+    /// would, then kill the process so the next resume must recover.
+    pub fn write(&self, st: &TrainState) -> Result<(PathBuf, u64)> {
+        let t0 = Instant::now();
+        let bytes = st.to_bytes();
+        let name = file_name(st.step);
+        let path = self.dir.join(&name);
+        match fault::write_fault() {
+            Some(fault::Fault::TornWrite) => {
+                // a crash mid-write: half the container under the final
+                // name, pointer already moved — the worst ordering
+                let cut = bytes.len() / 2;
+                std::fs::write(&path, &bytes[..cut])
+                    .with_context(|| format!("torn write to {}", path.display()))?;
+                self.point_latest(&name)?;
+                eprintln!(
+                    "QUARTET2_FAULT: torn checkpoint write at step {} -> {} \
+                     ({cut} of {} bytes); exiting 137",
+                    st.step,
+                    path.display(),
+                    bytes.len()
+                );
+                std::process::exit(137);
+            }
+            Some(fault::Fault::FlipByte(off)) => {
+                self.atomic_write(&path, &bytes)?;
+                let mut b = std::fs::read(&path)?;
+                let off = off % b.len();
+                b[off] ^= 0x01;
+                std::fs::write(&path, &b)
+                    .with_context(|| format!("flipping byte in {}", path.display()))?;
+                self.point_latest(&name)?;
+                eprintln!(
+                    "QUARTET2_FAULT: flipped byte {off} of checkpoint {}; exiting 137",
+                    path.display()
+                );
+                std::process::exit(137);
+            }
+            _ => {}
+        }
+        self.atomic_write(&path, &bytes)?;
+        self.point_latest(&name)?;
+        self.enforce_retention()?;
+        crate::obs::count!("ckpt.writes", 1);
+        crate::obs::count!("ckpt.bytes", bytes.len());
+        crate::obs::record_ns("ckpt.write", t0.elapsed().as_nanos() as u64);
+        Ok((path, bytes.len() as u64))
+    }
+
+    /// The newest checkpoint that verifies: follow `LATEST` first,
+    /// then fall back over the remaining files newest-first, warning
+    /// (with the section-level error) about each one that fails.
+    pub fn latest_valid(&self) -> Result<Option<(TrainState, PathBuf)>> {
+        let mut tried: Option<PathBuf> = None;
+        let latest = self.dir.join(LATEST);
+        if let Ok(name) = std::fs::read_to_string(&latest) {
+            let path = self.dir.join(name.trim());
+            match load_file(&path) {
+                Ok(st) => return Ok(Some((st, path))),
+                Err(e) => {
+                    eprintln!(
+                        "warning: LATEST checkpoint {} is unusable: {e:#}; \
+                         falling back to the previous good checkpoint",
+                        path.display()
+                    );
+                    tried = Some(path);
+                }
+            }
+        }
+        for path in self.list()?.into_iter().rev() {
+            if Some(&path) == tried.as_ref() {
+                continue;
+            }
+            match load_file(&path) {
+                Ok(st) => {
+                    // heal the pointer so the next resume goes straight
+                    // to the file that actually verified
+                    if tried.is_some() {
+                        if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+                            self.point_latest(name).ok();
+                        }
+                    }
+                    return Ok(Some((st, path)));
+                }
+                Err(e) => {
+                    eprintln!("warning: skipping corrupt checkpoint {}: {e:#}", path.display());
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Resolve a `--resume-from` spec: `auto` means the newest valid
+    /// checkpoint in the directory (or a fresh start when there is
+    /// none); anything else is an explicit file path and a hard error
+    /// if it does not verify.
+    pub fn resolve_resume(&self, spec: &str) -> Result<Option<(TrainState, PathBuf)>> {
+        if spec == "auto" {
+            return self.latest_valid();
+        }
+        let path = PathBuf::from(spec);
+        let st = load_file(&path)?;
+        Ok(Some((st, path)))
+    }
+}
+
+/// Deterministic fault injection for the crash-safety tests, armed via
+/// `QUARTET2_FAULT` (parsed once per process):
+///
+/// * `kill_at_step:N` — exit 137 (SIGKILL-alike) right after trainer
+///   step `N` finishes, checkpoint included.
+/// * `torn_write` — the next checkpoint write lands half-written under
+///   its final name with `LATEST` already pointing at it, then exit
+///   137: the worst crash ordering the loader must survive.
+/// * `flip_byte:M` — the next checkpoint write completes, then byte
+///   `M % len` of the file is flipped (at-rest bit rot), then exit 137.
+/// * `nan_loss_at_step:N` — the trainer replaces step `N`'s loss with
+///   NaN (drives the `--on-anomaly=rollback` recovery test).
+pub mod fault {
+    use std::sync::OnceLock;
+
+    use anyhow::{bail, Context, Result};
+
+    /// One armed fault (see the module docs for the vocabulary).
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Fault {
+        KillAtStep(usize),
+        TornWrite,
+        FlipByte(usize),
+        NanLossAtStep(usize),
+    }
+
+    /// Parse a `QUARTET2_FAULT` spec.
+    pub fn parse(spec: &str) -> Result<Fault> {
+        let (kind, arg) = match spec.split_once(':') {
+            Some((k, a)) => (k, Some(a)),
+            None => (spec, None),
+        };
+        let num = |what: &str| -> Result<usize> {
+            arg.with_context(|| format!("{kind} needs an argument, e.g. {kind}:{what}"))?
+                .parse::<usize>()
+                .with_context(|| format!("{kind} argument must be a number"))
+        };
+        match kind {
+            "kill_at_step" => Ok(Fault::KillAtStep(num("3")?)),
+            "torn_write" => Ok(Fault::TornWrite),
+            "flip_byte" => Ok(Fault::FlipByte(num("64")?)),
+            "nan_loss_at_step" => Ok(Fault::NanLossAtStep(num("3")?)),
+            other => bail!(
+                "unknown fault {other:?} (want kill_at_step:N | torn_write | \
+                 flip_byte:M | nan_loss_at_step:N)"
+            ),
+        }
+    }
+
+    fn armed() -> Option<Fault> {
+        static FAULT: OnceLock<Option<Fault>> = OnceLock::new();
+        *FAULT.get_or_init(|| match std::env::var("QUARTET2_FAULT") {
+            Ok(spec) if !spec.is_empty() => match parse(&spec) {
+                Ok(f) => {
+                    eprintln!("QUARTET2_FAULT armed: {f:?}");
+                    Some(f)
+                }
+                Err(e) => {
+                    eprintln!("warning: ignoring invalid QUARTET2_FAULT: {e:#}");
+                    None
+                }
+            },
+            _ => None,
+        })
+    }
+
+    /// Trainer-loop hook: die with exit code 137 after step `s` when
+    /// `kill_at_step:s` is armed.
+    pub fn kill_after_step(s: usize) {
+        if armed() == Some(Fault::KillAtStep(s)) {
+            eprintln!("QUARTET2_FAULT: killing process after step {s} (exit 137)");
+            std::process::exit(137);
+        }
+    }
+
+    /// Trainer-loop hook: whether step `s`'s loss should be forced NaN.
+    pub fn nan_loss_at(s: usize) -> bool {
+        armed() == Some(Fault::NanLossAtStep(s))
+    }
+
+    /// Checkpoint-writer hook: the armed write-corruption fault, if any.
+    pub fn write_fault() -> Option<Fault> {
+        match armed() {
+            f @ Some(Fault::TornWrite | Fault::FlipByte(_)) => f,
+            _ => None,
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parse_vocabulary() {
+            assert_eq!(parse("kill_at_step:3").unwrap(), Fault::KillAtStep(3));
+            assert_eq!(parse("torn_write").unwrap(), Fault::TornWrite);
+            assert_eq!(parse("flip_byte:64").unwrap(), Fault::FlipByte(64));
+            assert_eq!(parse("nan_loss_at_step:2").unwrap(), Fault::NanLossAtStep(2));
+            assert!(parse("flip_byte").is_err());
+            assert!(parse("kill_at_step:x").is_err());
+            assert!(parse("segfault").is_err());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state(step: usize) -> TrainState {
+        TrainState {
+            step,
+            preset: "micro".into(),
+            scheme: "quartet2".into(),
+            batch: 2,
+            seq: 64,
+            seed: 0xDEAD_BEEF_0000_0042,
+            total_steps: 12,
+            gemm_path: "Packed".into(),
+            engine: EngineState {
+                opt_t: step,
+                params: vec![
+                    ("embed".into(), vec![1.0, -2.5, f32::MIN_POSITIVE, 3.25e-12]),
+                    ("layer0.wq".into(), vec![0.5; 8]),
+                ],
+                opt_m: vec![vec![0.1, 0.2, 0.3, 0.4], vec![-0.5; 8]],
+                opt_v: vec![vec![1e-9, 2e-9, 3e-9, 4e-9], vec![0.25; 8]],
+            },
+            detector: DetectorState { n: 7, mean: 4.125, var: 0.0625, total: 1 },
+        }
+    }
+
+    #[test]
+    fn container_roundtrip_is_exact() {
+        let st = sample_state(4);
+        let back = TrainState::from_bytes(&st.to_bytes()).unwrap();
+        assert_eq!(back, st);
+    }
+
+    #[test]
+    fn every_flipped_byte_is_detected() {
+        let bytes = sample_state(2).to_bytes();
+        for off in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x01;
+            assert!(
+                TrainState::from_bytes(&bad).is_err(),
+                "flip at byte {off} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_are_detected() {
+        let bytes = sample_state(2).to_bytes();
+        for cut in [1, bytes.len() / 2, bytes.len() - 1] {
+            let e = TrainState::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(
+                format!("{e:#}").contains("truncated"),
+                "cut at {cut}: {e:#}"
+            );
+        }
+        let mut extra = bytes;
+        extra.push(0);
+        assert!(TrainState::from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn corrupt_section_error_names_the_section() {
+        let st = sample_state(2);
+        let mut bytes = st.to_bytes();
+        // flip a byte deep in the tail: inside the last param payload
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x40;
+        let e = format!("{:#}", TrainState::from_bytes(&bytes).unwrap_err());
+        assert!(e.contains("checksum mismatch"), "{e}");
+        assert!(e.contains("adam.v.layer0.wq"), "{e}");
+    }
+
+    #[test]
+    fn validate_run_rejects_mismatches() {
+        let st = sample_state(4);
+        st.validate_run("micro", "quartet2", 2, 64, 0xDEAD_BEEF_0000_0042, 12)
+            .unwrap();
+        assert!(st
+            .validate_run("tiny", "quartet2", 2, 64, 0xDEAD_BEEF_0000_0042, 12)
+            .is_err());
+        assert!(st
+            .validate_run("micro", "sr", 2, 64, 0xDEAD_BEEF_0000_0042, 12)
+            .is_err());
+        assert!(st
+            .validate_run("micro", "quartet2", 4, 64, 0xDEAD_BEEF_0000_0042, 12)
+            .is_err());
+        assert!(st
+            .validate_run("micro", "quartet2", 2, 64, 7, 12)
+            .is_err());
+        // checkpoint past the end of the run
+        assert!(st
+            .validate_run("micro", "quartet2", 2, 64, 0xDEAD_BEEF_0000_0042, 3)
+            .is_err());
+    }
+
+    #[test]
+    fn checkpointer_retention_pointer_and_fallback() {
+        let dir = std::env::temp_dir().join("q2_ckpt_unit_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let c = Checkpointer::new(&dir, 2, 2).unwrap();
+        assert!(!c.due(0));
+        assert!(c.due(2));
+        assert!(!c.due(3));
+        for step in [2, 4, 6] {
+            c.write(&sample_state(step)).unwrap();
+        }
+        // keep_last 2: step-2 file pruned, newest two remain
+        let files = c.list().unwrap();
+        assert_eq!(files.len(), 2);
+        assert!(files[0].ends_with("ckpt_step00000004.q2ck"));
+        let (st, path) = c.latest_valid().unwrap().unwrap();
+        assert_eq!(st.step, 6);
+        assert!(path.ends_with("ckpt_step00000006.q2ck"));
+
+        // corrupt the newest: fallback must land on step 4 and heal
+        // the LATEST pointer
+        let newest = dir.join(file_name(6));
+        let mut b = std::fs::read(&newest).unwrap();
+        let off = b.len() / 2;
+        b[off] ^= 0x10;
+        std::fs::write(&newest, &b).unwrap();
+        let (st, path) = c.latest_valid().unwrap().unwrap();
+        assert_eq!(st.step, 4);
+        assert!(path.ends_with("ckpt_step00000004.q2ck"));
+        let healed = std::fs::read_to_string(dir.join(LATEST)).unwrap();
+        assert_eq!(healed.trim(), file_name(4));
+
+        // resolve_resume: auto falls back, an explicit corrupt path is
+        // a hard error
+        assert_eq!(c.resolve_resume("auto").unwrap().unwrap().0.step, 4);
+        assert!(c.resolve_resume(newest.to_str().unwrap()).is_err());
+
+        // everything corrupt -> None (fresh start), not an error
+        let step4 = dir.join(file_name(4));
+        let mut b = std::fs::read(&step4).unwrap();
+        b[12] ^= 0x01;
+        std::fs::write(&step4, &b).unwrap();
+        assert!(c.latest_valid().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -27,6 +27,12 @@
 //!   causal attention, SwiGLU, cross-entropy) with trainer-compatible
 //!   parameter naming.
 //! * [`optim`] — AdamW over f32 master weights (warmup + cosine).
+//! * [`checkpoint`] — the crash-safe `.q2ck` training-state container
+//!   (per-section CRC32, atomic temp→fsync→rename writes, `LATEST`
+//!   pointer, retention, corrupt-fallback resume) plus the
+//!   `QUARTET2_FAULT` fault-injection hooks; resume replays the run
+//!   bitwise identically because all per-step randomness is
+//!   counter-based.
 //! * [`backend`] — [`backend::NativeBackend`], the
 //!   [`crate::coordinator::Backend`] implementation wiring the engine
 //!   into `coordinator::Trainer`, `quartet2 train-native`, and the
@@ -39,6 +45,7 @@
 //! process, no artifacts.
 
 pub mod backend;
+pub mod checkpoint;
 pub mod layers;
 pub mod ops;
 pub mod optim;
@@ -46,6 +53,7 @@ pub mod tape;
 pub mod tensor;
 
 pub use backend::NativeBackend;
+pub use checkpoint::{Checkpointer, EngineState, TrainState};
 pub use layers::{NativeModel, Param};
 pub use ops::{gemm_path, set_gemm_path, GemmPath, QuantMode};
 pub use optim::{AdamW, AdamWOptions};

@@ -55,7 +55,11 @@ USAGE:
                       [--no-export] [--threads N] [--gemm-path packed|dequant]
                       [--obs off|counters|spans] [--trace-out steps.jsonl]
                       [--chrome-trace trace.json] [--prometheus metrics.prom]
-                      [--on-anomaly log|snapshot|halt] [--anomaly-dir anomalies]
+                      [--on-anomaly log|snapshot|halt|rollback]
+                      [--anomaly-dir anomalies] [--checkpoint-dir ckpts]
+                      [--checkpoint-every 50] [--keep-last 3]
+                      [--resume-from auto|path.q2ck] [--stop-after K]
+                      [--max-rollbacks 8]
                       pure-Rust Quartet II training (MS-EDEN-quantized
                       fwd+bwd matmuls); packs the trained weights into a
                       NVFP4 serving checkpoint on completion. GEMMs run
@@ -73,7 +77,18 @@ USAGE:
                       scale-saturation alarms) does: log and keep
                       training, also dump a forensic bundle (full obs
                       snapshot + recent trace ring) to --anomaly-dir,
-                      or halt the run with an error
+                      halt the run with an error, or roll back to the
+                      last good checkpoint and skip the offending batch
+                      window (rollback needs --checkpoint-dir).
+                      --checkpoint-dir enables crash-safe .q2ck
+                      checkpoints (atomic write, per-section CRC32,
+                      LATEST pointer, --keep-last retention) every
+                      --checkpoint-every steps plus at start/end;
+                      --resume-from auto restores the newest valid one
+                      (bitwise-identical continuation), an explicit
+                      path is a hard error if it fails verification;
+                      --stop-after K exits cleanly after K steps
+                      (simulated preemption)
   quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|train-native|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
@@ -88,11 +103,17 @@ USAGE:
                       [--obs off|counters|spans] [--trace-out steps.jsonl]
                       [--chrome-trace trace.json] [--prometheus metrics.prom]
                       JSON-lines loop on stdin: {\"id\": 1, \"prompt\": \"...\",
-                      \"max_tokens\": 16} per line; completions + a final
-                      stats record are emitted as JSON lines on stdout.
-                      A {\"cmd\": \"metrics\"} line emits a metrics event
-                      carrying the live Prometheus text snapshot;
-                      --prometheus / --chrome-trace also write files at exit
+                      \"max_tokens\": 16, \"deadline_ms\": 500} per line;
+                      completions + a final stats record are emitted as
+                      JSON lines on stdout (a request past its optional
+                      deadline_ms is retired early with status
+                      \"timeout\" and its partial text). A {\"cmd\":
+                      \"metrics\"} line emits a metrics event carrying
+                      the live Prometheus text snapshot; {\"cmd\":
+                      \"drain\"} (or stdin EOF) stops admissions,
+                      finishes in-flight requests, prints final stats
+                      and exits 0; --prometheus / --chrome-trace also
+                      write files at exit
   quartet2 data       [--seed 42] [--batch 4] [--seq 128] [--n 2]
   quartet2 info       [--artifacts-dir artifacts]
   quartet2 obs-validate <file.jsonl|file.prom|trace.json> ...
@@ -259,10 +280,22 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         trace_out: args.opt("trace-out").map(String::from),
         on_anomaly: match args.opt("on-anomaly") {
             None => quartet2::obs::anomaly::AnomalyAction::Log,
-            Some(v) => quartet2::obs::anomaly::AnomalyAction::parse(v)
-                .with_context(|| format!("--on-anomaly wants log|snapshot|halt, got {v:?}"))?,
+            Some(v) => quartet2::obs::anomaly::AnomalyAction::parse(v).with_context(|| {
+                format!("--on-anomaly wants log|snapshot|halt|rollback, got {v:?}")
+            })?,
         },
         anomaly_dir: args.opt("anomaly-dir").map(String::from),
+        checkpoint_dir: args.opt("checkpoint-dir").map(String::from),
+        checkpoint_every: args.usize_or("checkpoint-every", 50)?,
+        keep_last: args.usize_or("keep-last", 3)?,
+        resume_from: args.opt("resume-from").map(String::from),
+        stop_after: match args.opt("stop-after") {
+            None => None,
+            Some(v) => Some(v.parse::<usize>().with_context(|| {
+                format!("--stop-after wants a step count, got {v:?}")
+            })?),
+        },
+        max_rollbacks: args.usize_or("max-rollbacks", 8)?,
     };
     // Scheme/shape validation (incl. the batch*seq quantization-grain
     // requirement) lives in engine::NativeBackend::from_config, which
@@ -399,6 +432,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         id: 0,
         prompt: tok.encode(prompt.as_bytes()),
         max_new_tokens: max_tokens,
+        deadline_ms: None,
     })?;
     let mut done = sched.run_until_idle()?;
     let c = done.pop().context("scheduler returned no completion")?;
@@ -431,10 +465,19 @@ fn parse_request(line: &str, fallback_id: u64, tok: &ByteTokenizer) -> Result<Re
             .context("request `max_tokens` must be a number")?,
         None => 32,
     };
+    let deadline_ms = match v.opt("deadline_ms") {
+        Some(j) => Some(
+            j.as_usize()
+                .context("request `deadline_ms` must be a number of milliseconds")?
+                as u64,
+        ),
+        None => None,
+    };
     Ok(Request {
         id,
         prompt: tok.encode(prompt.as_bytes()),
         max_new_tokens: max_tokens,
+        deadline_ms,
     })
 }
 
@@ -450,6 +493,10 @@ fn completion_json(c: &serve::Completion, tok: &ByteTokenizer) -> Json {
         ("tokens", json::n(c.tokens.len() as f64)),
         ("ttft_ms", json::n(c.ttft_secs * 1e3)),
         ("latency_ms", json::n(c.latency_secs * 1e3)),
+        (
+            "status",
+            json::s(if c.timed_out { "timeout" } else { "ok" }),
+        ),
     ])
 }
 
@@ -482,6 +529,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     });
     let mut next_id = 1u64;
     let mut stdin_open = true;
+    let mut drained = false;
     let emit_error = |e: &anyhow::Error| {
         let err = json::obj(vec![
             ("event", json::s("error")),
@@ -504,7 +552,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         continue;
                     }
                     // control lines: {"cmd": "metrics"} emits the live
-                    // Prometheus snapshot without touching the queue
+                    // Prometheus snapshot without touching the queue;
+                    // {"cmd": "drain"} stops admissions, finishes every
+                    // in-flight request, then exits 0 with final stats
                     if let Ok(v) = Json::parse(line) {
                         if let Some(c) = v.opt("cmd") {
                             match c.as_str() {
@@ -518,8 +568,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
                                     ]);
                                     println!("{}", m.to_string());
                                 }
+                                Ok("drain") => {
+                                    drained = true;
+                                    sched.close();
+                                    stdin_open = false;
+                                    eprintln!(
+                                        "draining: {} in-flight request(s), no new admissions",
+                                        sched.outstanding()
+                                    );
+                                    let d = json::obj(vec![
+                                        ("event", json::s("drain")),
+                                        ("outstanding", json::n(sched.outstanding() as f64)),
+                                    ]);
+                                    println!("{}", d.to_string());
+                                }
                                 _ => emit_error(&anyhow::anyhow!(
-                                    "unknown control line {line:?} (want {{\"cmd\": \"metrics\"}})"
+                                    "unknown control line {line:?} (want {{\"cmd\": \
+                                     \"metrics\"}} or {{\"cmd\": \"drain\"}})"
                                 )),
                             }
                             continue;
@@ -559,7 +624,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         }
     }
-    reader.join().ok();
+    // on a {"cmd": "drain"} the client may keep stdin open; the reader
+    // thread is blocked on it and dies with the process, so only join
+    // when stdin actually reached EOF
+    if !drained {
+        reader.join().ok();
+    }
     let mut stats = match sched.report() {
         Json::Obj(m) => m,
         other => bail!("unexpected stats shape {other:?}"),

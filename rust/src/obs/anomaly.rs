@@ -45,6 +45,10 @@ pub enum AnomalyAction {
     Snapshot,
     /// Stop the run with an error naming the offending metric.
     Halt,
+    /// Restore the last good checkpoint, skip past the offending batch
+    /// window, and keep training (needs `--checkpoint-dir`; see
+    /// [`crate::engine::checkpoint`]).
+    Rollback,
 }
 
 impl AnomalyAction {
@@ -54,6 +58,7 @@ impl AnomalyAction {
             "log" => Some(AnomalyAction::Log),
             "snapshot" => Some(AnomalyAction::Snapshot),
             "halt" => Some(AnomalyAction::Halt),
+            "rollback" => Some(AnomalyAction::Rollback),
             _ => None,
         }
     }
@@ -63,8 +68,25 @@ impl AnomalyAction {
             AnomalyAction::Log => "log",
             AnomalyAction::Snapshot => "snapshot",
             AnomalyAction::Halt => "halt",
+            AnomalyAction::Rollback => "rollback",
         }
     }
+}
+
+/// The detector's EWMA window, as checkpointed by
+/// [`crate::engine::checkpoint`] — restoring it on resume/rollback
+/// keeps spike detection (and the `loss_ewma` trace field) on the
+/// exact trajectory of the uninterrupted run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DetectorState {
+    /// finite-loss samples folded into the window so far
+    pub n: usize,
+    /// EWMA loss mean
+    pub mean: f64,
+    /// EWMA loss variance
+    pub var: f64,
+    /// total anomalies reported so far
+    pub total: usize,
 }
 
 /// One detected anomaly.
@@ -163,6 +185,25 @@ impl AnomalyDetector {
     /// The EWMA loss mean (the trainer's `loss_ewma` trace field).
     pub fn loss_ewma(&self) -> f64 {
         self.mean
+    }
+
+    /// Snapshot the EWMA window for checkpointing.
+    pub fn export_state(&self) -> DetectorState {
+        DetectorState {
+            n: self.n,
+            mean: self.mean,
+            var: self.var,
+            total: self.total,
+        }
+    }
+
+    /// Restore the EWMA window from a checkpoint (thresholds keep
+    /// their configured values; only the streaming state moves).
+    pub fn restore_state(&mut self, st: &DetectorState) {
+        self.n = st.n;
+        self.mean = st.mean;
+        self.var = st.var;
+        self.total = st.total;
     }
 
     /// Feed one training loss. Non-finite losses trip immediately and
@@ -308,8 +349,27 @@ mod tests {
         assert_eq!(AnomalyAction::parse("log"), Some(AnomalyAction::Log));
         assert_eq!(AnomalyAction::parse("snapshot"), Some(AnomalyAction::Snapshot));
         assert_eq!(AnomalyAction::parse("halt"), Some(AnomalyAction::Halt));
+        assert_eq!(AnomalyAction::parse("rollback"), Some(AnomalyAction::Rollback));
         assert_eq!(AnomalyAction::parse("panic"), None);
         assert_eq!(AnomalyAction::Snapshot.as_str(), "snapshot");
+        assert_eq!(AnomalyAction::Rollback.as_str(), "rollback");
+    }
+
+    #[test]
+    fn detector_state_roundtrip_preserves_the_window() {
+        let mut d = AnomalyDetector::new();
+        for s in 0..12 {
+            d.check_loss(s, 4.0 + 0.05 * (s as f64 % 4.0));
+        }
+        let snap = d.export_state();
+        let mut fresh = AnomalyDetector::new();
+        fresh.restore_state(&snap);
+        assert_eq!(fresh.export_state(), snap);
+        // both continue identically, bit for bit
+        let a = format!("{:?}", d.check_loss(12, 4.1));
+        let b = format!("{:?}", fresh.check_loss(12, 4.1));
+        assert_eq!(a, b);
+        assert_eq!(d.loss_ewma().to_bits(), fresh.loss_ewma().to_bits());
     }
 
     #[test]

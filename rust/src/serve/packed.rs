@@ -21,12 +21,14 @@ use anyhow::{bail, Context, Result};
 use crate::formats::fp4::{self, fp4_decode, fp4_encode};
 use crate::formats::fp8::{e4m3_decode, e4m3_encode};
 use crate::formats::{Quantized, ScaleLayout};
+use crate::util::checksum::crc32;
 use crate::GROUP;
 
 /// Magic bytes of the `.nvf4` container.
 pub const MAGIC: [u8; 4] = *b"NVF4";
-/// Container format version.
-pub const VERSION: u32 = 1;
+/// Container format version. v2 adds per-section CRC32s (scales,
+/// codes) after the header; v1 containers (no checksums) still load.
+pub const VERSION: u32 = 2;
 
 /// A bit-packed NVFP4 tensor: `[rows, cols]` row-major, quantization
 /// groups of [`GROUP`] elements along `cols` (the GEMM inner dim).
@@ -145,15 +147,18 @@ impl PackedTensor {
 
     // ------------------------------------------------------------ IO
 
-    /// Serialize into the `.nvf4` byte container.
+    /// Serialize into the `.nvf4` byte container (v2: header, then a
+    /// CRC32 per payload section, then the scales and codes payloads).
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(32 + self.codes.len() + self.scales.len());
+        let mut out = Vec::with_capacity(40 + self.codes.len() + self.scales.len());
         out.extend_from_slice(&MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
         out.extend_from_slice(&(self.rows as u64).to_le_bytes());
         out.extend_from_slice(&(self.cols as u64).to_le_bytes());
         out.push(self.rotated as u8);
         out.extend_from_slice(&self.gscale.to_le_bytes());
+        out.extend_from_slice(&crc32(&self.scales).to_le_bytes());
+        out.extend_from_slice(&crc32(&self.codes).to_le_bytes());
         out.extend_from_slice(&self.scales);
         out.extend_from_slice(&self.codes);
         out
@@ -177,13 +182,22 @@ impl PackedTensor {
             bail!("bad nvf4 magic");
         }
         let version = u32::from_le_bytes(take(buf, &mut off, 4)?.try_into().unwrap());
-        if version != VERSION {
-            bail!("unsupported nvf4 version {version}");
+        if version != 1 && version != VERSION {
+            bail!("unsupported nvf4 version {version} (this build reads 1..={VERSION})");
         }
         let rows = u64::from_le_bytes(take(buf, &mut off, 8)?.try_into().unwrap()) as usize;
         let cols = u64::from_le_bytes(take(buf, &mut off, 8)?.try_into().unwrap()) as usize;
         let rotated = take(buf, &mut off, 1)?[0] != 0;
         let gscale = f32::from_le_bytes(take(buf, &mut off, 4)?.try_into().unwrap());
+        // v1 containers predate the section checksums: load them, but
+        // without integrity verification.
+        let stored_crcs = if version >= 2 {
+            let s = u32::from_le_bytes(take(buf, &mut off, 4)?.try_into().unwrap());
+            let c = u32::from_le_bytes(take(buf, &mut off, 4)?.try_into().unwrap());
+            Some((s, c))
+        } else {
+            None
+        };
         if cols == 0 || cols % GROUP != 0 {
             bail!("nvf4 cols={cols} not a positive multiple of {GROUP}");
         }
@@ -192,6 +206,19 @@ impl PackedTensor {
         let codes = take(buf, &mut off, numel.div_ceil(2))?.to_vec();
         if off != buf.len() {
             bail!("trailing bytes in nvf4 container");
+        }
+        if let Some((want_scales, want_codes)) = stored_crcs {
+            for (section, payload, want) in
+                [("scales", &scales, want_scales), ("codes", &codes, want_codes)]
+            {
+                let got = crc32(payload);
+                if got != want {
+                    bail!(
+                        "nvf4 {section} section checksum mismatch: stored {want:#010x}, \
+                         computed {got:#010x} — the container is corrupt"
+                    );
+                }
+            }
         }
         Ok(PackedTensor {
             rows,
@@ -270,6 +297,53 @@ mod tests {
         let mut extra = bytes;
         extra.push(0);
         assert!(PackedTensor::from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn checksums_name_the_corrupt_section() {
+        let p = sample(4, 32, 9);
+        let bytes = p.to_bytes();
+        // header is 4 magic + 4 version + 8 rows + 8 cols + 1 rotated
+        // + 4 gscale + 8 crcs = 37 bytes; then scales, then codes
+        let scales_at = 37;
+        let codes_at = scales_at + p.scales.len();
+        let mut bad = bytes.clone();
+        bad[scales_at] ^= 0xff;
+        let err = format!("{:#}", PackedTensor::from_bytes(&bad).unwrap_err());
+        assert!(err.contains("scales section checksum"), "{err}");
+        let mut bad = bytes.clone();
+        bad[codes_at + 1] ^= 0x01;
+        let err = format!("{:#}", PackedTensor::from_bytes(&bad).unwrap_err());
+        assert!(err.contains("codes section checksum"), "{err}");
+        // every single-bit flip anywhere in either payload is caught
+        for i in scales_at..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0x10;
+            assert!(PackedTensor::from_bytes(&b).is_err(), "byte {i}");
+        }
+    }
+
+    #[test]
+    fn legacy_v1_container_still_loads() {
+        let p = sample(4, 32, 11);
+        // rebuild the container as a v1 writer would have: same layout
+        // minus the two section CRCs, version field = 1
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&MAGIC);
+        v1.extend_from_slice(&1u32.to_le_bytes());
+        v1.extend_from_slice(&(p.rows as u64).to_le_bytes());
+        v1.extend_from_slice(&(p.cols as u64).to_le_bytes());
+        v1.push(p.rotated as u8);
+        v1.extend_from_slice(&p.gscale.to_le_bytes());
+        v1.extend_from_slice(&p.scales);
+        v1.extend_from_slice(&p.codes);
+        let q = PackedTensor::from_bytes(&v1).unwrap();
+        assert_eq!(p, q);
+        // but a from-the-future version is refused
+        let mut v9 = v1;
+        v9[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let err = format!("{:#}", PackedTensor::from_bytes(&v9).unwrap_err());
+        assert!(err.contains("unsupported nvf4 version 9"), "{err}");
     }
 
     #[test]

@@ -71,6 +71,10 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Optional wall-clock budget from submit time; a request still
+    /// unfinished after this many milliseconds is retired with a
+    /// `timeout` status (whatever was generated so far is returned).
+    pub deadline_ms: Option<u64>,
 }
 
 /// A finished request with its generated tokens and latency stats.
@@ -83,6 +87,9 @@ pub struct Completion {
     pub ttft_secs: f64,
     /// seconds from submit to completion
     pub latency_secs: f64,
+    /// the request blew past its `deadline_ms` and was retired early
+    /// (`tokens` holds the partial generation)
+    pub timed_out: bool,
 }
 
 /// Per-request lifecycle phase (reported by [`Scheduler::snapshot`]).
@@ -101,6 +108,7 @@ struct Active {
     fed: usize,
     generated: Vec<i32>,
     max_new_tokens: usize,
+    deadline_ms: Option<u64>,
     rng: Rng,
     submitted: Instant,
     first_token: Option<Instant>,
@@ -130,6 +138,10 @@ pub struct ServeStats {
     /// wall seconds across all steps
     pub total_secs: f64,
     pub completed: usize,
+    /// requests retired past their `deadline_ms` (not counted in
+    /// `completed`, and excluded from the ttft/latency percentiles so
+    /// the tail stats stay honest)
+    pub timeouts: usize,
     pub ttft: LatencyRecorder,
     pub latency: LatencyRecorder,
 }
@@ -158,6 +170,7 @@ impl ServeStats {
             ("decode_tokens_per_sec", json::n(self.decode_tokens_per_sec())),
             ("total_tokens_per_sec", json::n(self.total_tokens_per_sec())),
             ("completed", json::n(self.completed as f64)),
+            ("timeouts", json::n(self.timeouts as f64)),
             ("ttft", self.ttft.to_json()),
             ("latency", self.latency.to_json()),
         ])
@@ -173,6 +186,8 @@ pub struct Scheduler<'m> {
     queue: VecDeque<(Request, Instant)>,
     active: Vec<Active>,
     stats: ServeStats,
+    /// draining: no new admissions, in-flight requests run to completion
+    closed: bool,
 }
 
 impl<'m> Scheduler<'m> {
@@ -186,11 +201,29 @@ impl<'m> Scheduler<'m> {
             queue: VecDeque::new(),
             active: Vec::new(),
             stats: ServeStats::default(),
+            closed: false,
         })
+    }
+
+    /// Stop admitting new requests (graceful drain). Everything already
+    /// queued or in flight still runs to completion; further
+    /// [`submit`](Scheduler::submit) calls are rejected.
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    /// Whether [`close`](Scheduler::close) has been called.
+    pub fn is_closed(&self) -> bool {
+        self.closed
     }
 
     /// Enqueue a request (admitted into the batch on a later step).
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        ensure!(
+            !self.closed,
+            "scheduler is draining: request {} rejected",
+            req.id
+        );
         ensure!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
         ensure!(
             req.max_new_tokens > 0,
@@ -231,9 +264,77 @@ impl<'m> Scheduler<'m> {
         self.stats.to_json()
     }
 
-    /// Run one engine iteration: admit, coalesce, forward, sample,
-    /// retire. Returns requests that finished this step.
+    /// Retire every request (queued or active) past its `deadline_ms`,
+    /// emitting `timeout` completions carrying whatever was generated.
+    fn expire_deadlines(&mut self) -> Vec<Completion> {
+        fn expired(deadline_ms: Option<u64>, submitted: &Instant) -> bool {
+            deadline_ms.is_some_and(|ms| submitted.elapsed().as_millis() as u64 >= ms)
+        }
+        let mut out = Vec::new();
+        let mut qi = 0;
+        while qi < self.queue.len() {
+            if expired(self.queue[qi].0.deadline_ms, &self.queue[qi].1) {
+                let (req, submitted) = self.queue.remove(qi).expect("index in range");
+                out.push(self.timeout_completion(
+                    req.id,
+                    req.prompt.len(),
+                    Vec::new(),
+                    submitted,
+                    None,
+                ));
+            } else {
+                qi += 1;
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if expired(self.active[i].deadline_ms, &self.active[i].submitted) {
+                let a = self.active.swap_remove(i);
+                out.push(self.timeout_completion(
+                    a.id,
+                    a.prompt.len(),
+                    a.generated,
+                    a.submitted,
+                    a.first_token,
+                ));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    fn timeout_completion(
+        &mut self,
+        id: u64,
+        prompt_len: usize,
+        tokens: Vec<i32>,
+        submitted: Instant,
+        first_token: Option<Instant>,
+    ) -> Completion {
+        let ttft = first_token
+            .map(|t| t.duration_since(submitted).as_secs_f64())
+            .unwrap_or_default();
+        let latency = submitted.elapsed().as_secs_f64();
+        self.stats.timeouts += 1;
+        crate::obs::count!("serve.request.timeout", 1);
+        eprintln!("request {id}: deadline exceeded after {:.0} ms", latency * 1e3);
+        Completion {
+            id,
+            prompt_len,
+            tokens,
+            ttft_secs: ttft,
+            latency_secs: latency,
+            timed_out: true,
+        }
+    }
+
+    /// Run one engine iteration: expire deadlines, admit, coalesce,
+    /// forward, sample, retire. Returns requests that finished this
+    /// step (timed-out ones included, flagged via
+    /// [`Completion::timed_out`]).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let mut done = self.expire_deadlines();
         // ---- admit from the queue into free slots
         while self.active.len() < self.opts.max_batch {
             let Some((req, submitted)) = self.queue.pop_front() else {
@@ -252,12 +353,13 @@ impl<'m> Scheduler<'m> {
                 fed: 0,
                 generated: Vec::new(),
                 max_new_tokens: req.max_new_tokens,
+                deadline_ms: req.deadline_ms,
                 submitted,
                 first_token: None,
             });
         }
         if self.active.is_empty() {
-            return Ok(Vec::new());
+            return Ok(done);
         }
 
         // ---- coalesce the micro-batch: a prompt chunk per prefilling
@@ -319,7 +421,6 @@ impl<'m> Scheduler<'m> {
         }
         let mut n_decode = 0usize;
         let mut n_prefill = 0usize;
-        let mut done = Vec::new();
         let temperature = self.opts.temperature;
         for (i, (a, fed_tokens)) in self.active.iter_mut().zip(&feeds).enumerate() {
             let was_prefill = a.fed < a.prompt.len();
@@ -377,6 +478,7 @@ impl<'m> Scheduler<'m> {
                     tokens: a.generated,
                     ttft_secs: ttft,
                     latency_secs: latency,
+                    timed_out: false,
                 });
             } else {
                 i += 1;
@@ -460,6 +562,7 @@ mod tests {
             id: 1,
             prompt: vec![72, 101, 108, 108, 111],
             max_new_tokens: 6,
+            deadline_ms: None,
         })
         .unwrap();
         let done = s.run_until_idle().unwrap();
@@ -482,6 +585,7 @@ mod tests {
                 id: i,
                 prompt: vec![10 + i as i32, 20, 30],
                 max_new_tokens: 5,
+                deadline_ms: None,
             })
             .collect();
 
@@ -517,6 +621,7 @@ mod tests {
                 id: i,
                 prompt: vec![1, 2],
                 max_new_tokens: 3,
+                deadline_ms: None,
             })
             .unwrap();
         }
@@ -547,6 +652,7 @@ mod tests {
             id: 9,
             prompt: prompt.clone(),
             max_new_tokens: 2,
+            deadline_ms: None,
         })
         .unwrap();
         // 19 tokens at chunk 4 -> 5 prefill steps before the first token
@@ -577,6 +683,7 @@ mod tests {
                 id: 5,
                 prompt: vec![100],
                 max_new_tokens: 8,
+                deadline_ms: None,
             })
             .unwrap();
             s.run_until_idle().unwrap().remove(0).tokens
@@ -589,14 +696,91 @@ mod tests {
         let m = tiny_model();
         let mut s = Scheduler::new(&m, opts()).unwrap();
         assert!(s
-            .submit(Request { id: 0, prompt: vec![], max_new_tokens: 1 })
+            .submit(Request { id: 0, prompt: vec![], max_new_tokens: 1, deadline_ms: None })
             .is_err());
         assert!(s
-            .submit(Request { id: 0, prompt: vec![300], max_new_tokens: 1 })
+            .submit(Request { id: 0, prompt: vec![300], max_new_tokens: 1, deadline_ms: None })
             .is_err());
         assert!(s
-            .submit(Request { id: 0, prompt: vec![1], max_new_tokens: 0 })
+            .submit(Request { id: 0, prompt: vec![1], max_new_tokens: 0, deadline_ms: None })
             .is_err());
+    }
+
+    #[test]
+    fn close_drains_in_flight_and_rejects_new() {
+        let m = tiny_model();
+        let mut s = Scheduler::new(&m, opts()).unwrap();
+        s.submit(Request {
+            id: 1,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            deadline_ms: None,
+        })
+        .unwrap();
+        s.step().unwrap();
+        s.close();
+        assert!(s.is_closed());
+        // draining: new work is rejected, in-flight work still finishes
+        let e = s
+            .submit(Request {
+                id: 2,
+                prompt: vec![4],
+                max_new_tokens: 1,
+                deadline_ms: None,
+            })
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("draining"), "{e:#}");
+        let done = s.run_until_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert!(!done[0].timed_out);
+        assert_eq!(s.stats().completed, 1);
+        assert_eq!(s.outstanding(), 0);
+    }
+
+    #[test]
+    fn deadline_zero_times_out_immediately() {
+        let m = tiny_model();
+        let mut s = Scheduler::new(&m, opts()).unwrap();
+        // deadline_ms 0 has already expired at the first step; the
+        // normal request riding along is untouched
+        s.submit(Request {
+            id: 7,
+            prompt: vec![1, 2],
+            max_new_tokens: 3,
+            deadline_ms: Some(0),
+        })
+        .unwrap();
+        s.submit(Request {
+            id: 8,
+            prompt: vec![3, 4],
+            max_new_tokens: 2,
+            deadline_ms: None,
+        })
+        .unwrap();
+        let mut done = s.run_until_idle().unwrap();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 2);
+        assert!(done[0].timed_out, "request 7 should have timed out");
+        assert_eq!(done[0].id, 7);
+        assert!(done[0].tokens.is_empty());
+        assert!(!done[1].timed_out);
+        assert_eq!(done[1].tokens.len(), 2);
+        assert_eq!(s.stats().timeouts, 1);
+        assert_eq!(s.stats().completed, 1);
+        // a generous deadline does not trip
+        let mut s = Scheduler::new(&m, opts()).unwrap();
+        s.submit(Request {
+            id: 9,
+            prompt: vec![5],
+            max_new_tokens: 2,
+            deadline_ms: Some(60_000),
+        })
+        .unwrap();
+        let done = s.run_until_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert!(!done[0].timed_out);
+        assert_eq!(s.stats().timeouts, 0);
     }
 
     #[test]

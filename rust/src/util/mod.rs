@@ -4,8 +4,10 @@
 //! dependency closure vendored, so this module provides the small,
 //! well-bounded utilities a production crate would normally pull from
 //! crates.io: a seeded RNG ([`rng`]), a JSON parser/writer ([`json`]),
-//! and a CLI argument parser ([`cli`]).
+//! a CLI argument parser ([`cli`]), and the CRC32 used by the
+//! checkpoint / `.nvf4` container integrity checks ([`checksum`]).
 
+pub mod checksum;
 pub mod cli;
 pub mod json;
 pub mod rng;

@@ -1,0 +1,449 @@
+//! Crash-safety tests for the `.q2ck` checkpoint subsystem: a stopped
+//! or killed run resumed with `--resume-from auto` must replay the
+//! exact loss trajectory of an uninterrupted run — bitwise, not
+//! approximately — and torn / bit-flipped checkpoints must be detected
+//! at the section level and skipped in favor of the previous good one.
+//!
+//! The in-process tests drive `Trainer` directly; the fault-injection
+//! tests run the real `quartet2 train-native` binary as a subprocess
+//! with `QUARTET2_FAULT` armed (the process genuinely dies with exit
+//! code 137, like a preemption).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use quartet2::coordinator::{Trainer, TrainerOptions};
+use quartet2::engine::{AdamWOptions, NativeBackend};
+use quartet2::serve::ModelConfig;
+use quartet2::util::json::Json;
+
+// ------------------------------------------------------- in-process
+
+/// Micro config: cheap enough for debug-build training tests (byte
+/// vocab for the Batcher stream; dims too small to quantize).
+fn micro_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "ckpt_micro".into(),
+        vocab: 256,
+        dim: 32,
+        n_layers: 1,
+        n_heads: 2,
+        ffn: 32,
+        max_seq: 32,
+        rope_theta: 10000.0,
+    }
+}
+
+fn micro_opts(ckpt_dir: &Path) -> TrainerOptions {
+    TrainerOptions {
+        preset: "ckpt_micro".into(),
+        scheme: "f32".into(),
+        steps: 6,
+        seed: 13,
+        eval_every: 3,
+        eval_batches: 1,
+        log_every: 1,
+        verbose: false,
+        batch: 2,
+        seq: 8,
+        checkpoint_dir: Some(ckpt_dir.display().to_string()),
+        checkpoint_every: 2,
+        ..Default::default()
+    }
+}
+
+fn micro_trainer(opts: TrainerOptions) -> Trainer {
+    let backend = NativeBackend::from_config(
+        &micro_cfg(),
+        "f32",
+        opts.batch,
+        opts.seq,
+        opts.seed,
+        AdamWOptions::default(),
+    )
+    .unwrap();
+    Trainer::from_backend(Box::new(backend), opts)
+}
+
+type CurveBits = Vec<(usize, u64, Option<u64>)>;
+
+fn curve_bits(points: &[quartet2::metrics::CurvePoint]) -> CurveBits {
+    points
+        .iter()
+        .map(|p| (p.step, p.train_loss.to_bits(), p.val_loss.map(f64::to_bits)))
+        .collect()
+}
+
+fn param_bits(named: &BTreeMap<String, Vec<f32>>) -> BTreeMap<String, Vec<u32>> {
+    named
+        .iter()
+        .map(|(k, v)| (k.clone(), v.iter().map(|x| x.to_bits()).collect()))
+        .collect()
+}
+
+#[test]
+fn stop_and_resume_is_bitwise_identical() {
+    let tmp = std::env::temp_dir().join("q2_ckres_inproc");
+    std::fs::remove_dir_all(&tmp).ok();
+    let (dir_a, dir_b) = (tmp.join("a"), tmp.join("b"));
+
+    // reference: 6 uninterrupted steps
+    let mut ta = micro_trainer(micro_opts(&dir_a));
+    let out_a = ta.run().unwrap();
+    let params_a = ta.export_named_tensors().unwrap();
+
+    // preempted after step 2 (--stop-after 3), then resumed to the end
+    let mut opts = micro_opts(&dir_b);
+    opts.stop_after = Some(3);
+    let mut tb1 = micro_trainer(opts);
+    let out_b1 = tb1.run().unwrap();
+    assert!(
+        out_b1.curve.points.iter().all(|p| p.step < 3),
+        "stopped run logged past the stop point"
+    );
+
+    let mut opts = micro_opts(&dir_b);
+    opts.resume_from = Some("auto".into());
+    let mut tb2 = micro_trainer(opts);
+    let out_b2 = tb2.run().unwrap();
+    let params_b = tb2.export_named_tensors().unwrap();
+    assert!(
+        out_b2.curve.points.iter().all(|p| p.step >= 3),
+        "resumed run re-logged pre-resume steps"
+    );
+
+    // the stitched (stopped + resumed) loss stream equals the
+    // uninterrupted one bit-for-bit, eval points included
+    let mut stitched = curve_bits(&out_b1.curve.points);
+    stitched.extend(curve_bits(&out_b2.curve.points));
+    assert_eq!(stitched, curve_bits(&out_a.curve.points));
+
+    // and the final master weights agree exactly
+    assert_eq!(param_bits(&params_a), param_bits(&params_b));
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn rollback_without_checkpoint_dir_is_rejected() {
+    let tmp = std::env::temp_dir().join("q2_ckres_nodir");
+    let mut opts = micro_opts(&tmp);
+    opts.checkpoint_dir = None;
+    opts.on_anomaly = quartet2::obs::anomaly::AnomalyAction::Rollback;
+    let err = micro_trainer(opts).run().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("--checkpoint-dir"),
+        "unhelpful error: {err:#}"
+    );
+}
+
+#[test]
+fn resume_rejects_mismatched_run_identity() {
+    let tmp = std::env::temp_dir().join("q2_ckres_mismatch");
+    std::fs::remove_dir_all(&tmp).ok();
+    let mut opts = micro_opts(&tmp);
+    opts.stop_after = Some(2);
+    micro_trainer(opts).run().unwrap();
+    // resuming under a different seed is a config error, not silent drift
+    let mut opts = micro_opts(&tmp);
+    opts.seed = 14;
+    opts.resume_from = Some("auto".into());
+    let err = micro_trainer(opts).run().unwrap_err();
+    assert!(format!("{err:#}").contains("seed"), "{err:#}");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+// ---------------------------------------------- subprocess (faults)
+
+fn quartet2_bin(args: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_quartet2"));
+    c.args(args);
+    for (k, v) in envs {
+        c.env(k, v);
+    }
+    c.output().expect("spawning quartet2")
+}
+
+fn expect_ok(out: &Output) {
+    assert!(
+        out.status.success(),
+        "quartet2 failed ({:?}):\n--- stdout\n{}\n--- stderr\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+/// Scratch layout for one subprocess scenario.
+struct Scratch {
+    root: PathBuf,
+}
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let root = std::env::temp_dir().join(format!("q2_ckres_{tag}"));
+        std::fs::remove_dir_all(&root).ok();
+        std::fs::create_dir_all(&root).unwrap();
+        Scratch { root }
+    }
+
+    fn p(&self, name: &str) -> String {
+        self.root.join(name).display().to_string()
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.root).ok();
+    }
+}
+
+/// `train-native` argument vector shared by the fault scenarios:
+/// 4 steps, checkpoint every step, no eval, traced.
+fn train_args(s: &Scratch, scheme: &str, ckpt: &str, trace: &str, extra: &[&str]) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "train-native",
+        "--preset",
+        "tiny",
+        "--scheme",
+        scheme,
+        "--steps",
+        "4",
+        "--batch",
+        "2",
+        "--seq",
+        "64",
+        "--seed",
+        "77",
+        "--eval-every",
+        "0",
+        "--log-every",
+        "1",
+        "--checkpoint-every",
+        "1",
+    ]
+    .iter()
+    .map(|x| x.to_string())
+    .collect();
+    v.push("--results-dir".into());
+    v.push(s.p("results"));
+    v.push("--checkpoint-dir".into());
+    v.push(s.p(ckpt));
+    v.push("--trace-out".into());
+    v.push(s.p(trace));
+    v.extend(extra.iter().map(|x| x.to_string()));
+    v
+}
+
+fn as_strs(v: &[String]) -> Vec<&str> {
+    v.iter().map(String::as_str).collect()
+}
+
+/// `(step, loss_bits)` of every `train_step` event in a trace stream.
+/// The trace serializes f64 losses shortest-repr, which round-trips
+/// exactly — so bit equality through the JSONL file is meaningful.
+fn step_losses(path: &str) -> Vec<(usize, u64)> {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).unwrap();
+        if v.opt("event").and_then(|x| x.as_str().ok()) != Some("train_step") {
+            continue;
+        }
+        let step = v.opt("step").and_then(|x| x.as_f64().ok()).unwrap() as usize;
+        // non-finite losses are serialized as strings; skip them here
+        if let Some(l) = v.opt("loss").and_then(|x| x.as_f64().ok()) {
+            out.push((step, l.to_bits()));
+        }
+    }
+    out
+}
+
+fn has_event(path: &str, name: &str) -> bool {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .any(|l| {
+            Json::parse(l)
+                .ok()
+                .and_then(|v| v.opt("event").and_then(|x| x.as_str().ok().map(String::from)))
+                .as_deref()
+                == Some(name)
+        })
+}
+
+/// All regular files of a directory as `name -> bytes`.
+fn dir_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for e in std::fs::read_dir(dir).unwrap() {
+        let e = e.unwrap();
+        if e.file_type().unwrap().is_file() {
+            out.insert(
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(e.path()).unwrap(),
+            );
+        }
+    }
+    assert!(!out.is_empty(), "no files under {}", dir.display());
+    out
+}
+
+/// Kill the run after step 1 (exit 137), resume with `--resume-from
+/// auto`, and require the stitched loss stream and the exported packed
+/// checkpoint to match an uninterrupted reference bitwise. Runs the
+/// full MS-EDEN-quantized scheme — the per-step RNG fold is exactly
+/// what this must reproduce.
+fn kill_resume_scenario(tag: &str, envs: &[(&str, &str)]) {
+    let s = Scratch::new(tag);
+
+    let mut ref_args = train_args(&s, "quartet2", "ck_ref", "ref.jsonl", &[]);
+    ref_args.push("--export-checkpoint".into());
+    ref_args.push(s.p("exp_ref"));
+    expect_ok(&quartet2_bin(&as_strs(&ref_args), envs));
+
+    let kill_args = train_args(&s, "quartet2", "ck_kill", "k1.jsonl", &["--no-export"]);
+    let mut kill_envs = envs.to_vec();
+    kill_envs.push(("QUARTET2_FAULT", "kill_at_step:1"));
+    let out = quartet2_bin(&as_strs(&kill_args), &kill_envs);
+    assert_eq!(out.status.code(), Some(137), "fault kill did not exit 137");
+
+    let mut res_args = train_args(
+        &s,
+        "quartet2",
+        "ck_kill",
+        "k2.jsonl",
+        &["--resume-from", "auto"],
+    );
+    res_args.push("--export-checkpoint".into());
+    res_args.push(s.p("exp_res"));
+    let out = quartet2_bin(&as_strs(&res_args), envs);
+    expect_ok(&out);
+    assert!(
+        stderr_of(&out).contains("resumed from"),
+        "no resume banner:\n{}",
+        stderr_of(&out)
+    );
+
+    let reference = step_losses(&s.p("ref.jsonl"));
+    assert_eq!(reference.len(), 4);
+    let mut stitched = step_losses(&s.p("k1.jsonl"));
+    assert_eq!(stitched.last().map(|&(st, _)| st), Some(1), "killed at 1");
+    stitched.extend(step_losses(&s.p("k2.jsonl")));
+    assert_eq!(stitched, reference, "resumed losses diverge from uninterrupted run");
+
+    // the packed serving exports are byte-identical too
+    assert_eq!(
+        dir_bytes(Path::new(&s.p("exp_ref"))),
+        dir_bytes(Path::new(&s.p("exp_res")))
+    );
+}
+
+#[test]
+fn kill_and_resume_matches_uninterrupted() {
+    kill_resume_scenario("kill", &[]);
+}
+
+#[test]
+fn kill_and_resume_matches_with_two_threads() {
+    // same invariant with the GEMM core pinned to a 2-worker partition:
+    // resume must be bitwise under every threading policy
+    kill_resume_scenario("kill_t2", &[("QUARTET2_THREADS", "2")]);
+}
+
+/// Corrupt the newest checkpoint (`torn_write` or `flip_byte`) after a
+/// clean preemption; the next resume must detect it with a
+/// section-level error, fall back to the previous good checkpoint, and
+/// finish the run.
+fn corrupt_fallback_scenario(tag: &str, fault: &str, expect_msg: &str) {
+    let s = Scratch::new(tag);
+
+    // clean preemption at step 2: checkpoints 0, 1, 2 on disk
+    let args = train_args(&s, "f32", "ck", "t1.jsonl", &["--no-export", "--stop-after", "2"]);
+    expect_ok(&quartet2_bin(&as_strs(&args), &[]));
+
+    // resume once with the write fault armed: the step-3 checkpoint
+    // lands corrupt under its final name with LATEST pointing at it
+    let args = train_args(
+        &s,
+        "f32",
+        "ck",
+        "t2.jsonl",
+        &["--no-export", "--resume-from", "auto"],
+    );
+    let out = quartet2_bin(&as_strs(&args), &[("QUARTET2_FAULT", fault)]);
+    assert_eq!(out.status.code(), Some(137), "write fault did not exit 137");
+
+    // resume again: the corrupt file is named and skipped, the run
+    // restarts from the previous good checkpoint and completes
+    let args = train_args(
+        &s,
+        "f32",
+        "ck",
+        "t3.jsonl",
+        &["--no-export", "--resume-from", "auto"],
+    );
+    let out = quartet2_bin(&as_strs(&args), &[]);
+    expect_ok(&out);
+    let err = stderr_of(&out);
+    assert!(err.contains(expect_msg), "stderr misses {expect_msg:?}:\n{err}");
+    assert!(err.contains("resumed from"), "no fallback resume:\n{err}");
+
+    // the recovered run replays exactly what the faulted run computed
+    // before dying, then finishes step 3
+    let faulted = step_losses(&s.p("t2.jsonl"));
+    let recovered = step_losses(&s.p("t3.jsonl"));
+    assert_eq!(recovered.first(), faulted.first(), "replay of the good window");
+    assert_eq!(recovered.last().map(|&(st, _)| st), Some(3), "run incomplete");
+    assert!(has_event(&s.p("t3.jsonl"), "run_end"));
+}
+
+#[test]
+fn torn_checkpoint_falls_back_to_previous_good() {
+    corrupt_fallback_scenario("torn", "torn_write", "falling back");
+}
+
+#[test]
+fn flipped_byte_checkpoint_is_detected_by_section_checksum() {
+    corrupt_fallback_scenario("flip", "flip_byte:64", "checksum mismatch");
+}
+
+#[test]
+fn nan_loss_rollback_recovers_and_completes() {
+    let s = Scratch::new("nanroll");
+    let args = train_args(
+        &s,
+        "f32",
+        "ck",
+        "nan.jsonl",
+        &["--no-export", "--on-anomaly", "rollback"],
+    );
+    let out = quartet2_bin(&as_strs(&args), &[("QUARTET2_FAULT", "nan_loss_at_step:2")]);
+    expect_ok(&out);
+    assert!(
+        stderr_of(&out).contains("rollback: restored"),
+        "no rollback banner:\n{}",
+        stderr_of(&out)
+    );
+
+    let trace = s.p("nan.jsonl");
+    assert!(has_event(&trace, "rollback"), "rollback event missing");
+    assert!(has_event(&trace, "run_end"), "run did not end cleanly");
+    // the poisoned step is excluded from the numeric loss stream; the
+    // post-rollback step is present and finite
+    let losses = step_losses(&trace);
+    assert!(losses.iter().all(|&(st, _)| st != 2), "NaN step leaked: {losses:?}");
+    assert!(losses.iter().any(|&(st, _)| st == 3), "post-rollback step missing");
+
+    // the whole trace (rollback/checkpoint events included) passes the
+    // structural obs validator
+    let out = quartet2_bin(&["obs-validate", &trace], &[]);
+    expect_ok(&out);
+}

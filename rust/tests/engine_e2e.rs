@@ -176,6 +176,7 @@ fn native_train_exports_and_serves_packed_checkpoint() {
                 id: 1,
                 prompt: vec![84, 104, 101, 32],
                 max_new_tokens: 8,
+                deadline_ms: None,
             })
             .unwrap();
         let done = sched.run_until_idle().unwrap();

@@ -225,6 +225,7 @@ fn generate_end_to_end_from_packed_checkpoint() {
                 id: 1,
                 prompt: tok.encode(b"The quartet"),
                 max_new_tokens: 16,
+                deadline_ms: None,
             })
             .unwrap();
         let done = sched.run_until_idle().unwrap();
@@ -261,9 +262,9 @@ fn coalesced_micro_batches_preserve_outputs() {
     };
     // staggered prompt lengths force prefill/decode mixtures
     let reqs: Vec<Request> = vec![
-        Request { id: 0, prompt: vec![5, 6, 7, 8, 9], max_new_tokens: 4 },
-        Request { id: 1, prompt: vec![100], max_new_tokens: 6 },
-        Request { id: 2, prompt: vec![30, 31, 32], max_new_tokens: 3 },
+        Request { id: 0, prompt: vec![5, 6, 7, 8, 9], max_new_tokens: 4, deadline_ms: None },
+        Request { id: 1, prompt: vec![100], max_new_tokens: 6, deadline_ms: None },
+        Request { id: 2, prompt: vec![30, 31, 32], max_new_tokens: 3, deadline_ms: None },
     ];
     let mut batched = Scheduler::new(&model, opts.clone()).unwrap();
     for r in &reqs {

@@ -33,6 +33,13 @@ QUARTET2_THREADS=2 cargo test -q --test quant_parity
 # serial) when every auto-policy kernel sees real worker bands
 QUARTET2_THREADS=2 cargo test -q --test qgemm_packed
 
+# checkpoint/resume equivalence under the pinned 2-worker policy: the
+# kill -> resume and corrupt-fallback scenarios rerun with threaded
+# GEMMs (the env propagates into the spawned quartet2 subprocesses),
+# locking bitwise resume at a second thread count beyond the default
+# `cargo test` pass above
+QUARTET2_THREADS=2 cargo test -q --test checkpoint_resume
+
 # the four repo-root perf-trajectory JSONs (BENCH_train_step /
 # BENCH_serve / BENCH_quantize / BENCH_qgemm) must exist and parse —
 # a missing manifest file fails, it does not skip
@@ -90,18 +97,58 @@ cargo run --release --bin quartet2 -- obs-report \
     "$smoke_dir/obs/steps.jsonl" "$smoke_dir/obs/steps2.jsonl" \
     --max-step-regression 300 --max-loss-diff 1e-9
 
-# serving smoke with request-lifecycle telemetry: two requests plus a
-# {"cmd": "metrics"} control line through the JSON-lines loop
+# serving smoke with request-lifecycle telemetry: requests (one with a
+# generous per-request deadline), a {"cmd": "metrics"} control line,
+# and a graceful {"cmd": "drain"} shutdown through the JSON-lines loop
 printf '%s\n' \
     '{"id": 1, "prompt": "Hello", "max_tokens": 4}' \
     '{"cmd": "metrics"}' \
     '{"id": 2, "prompt": "World", "max_tokens": 4}' \
+    '{"id": 3, "prompt": "Hi", "max_tokens": 2, "deadline_ms": 60000}' \
+    '{"cmd": "drain"}' \
   | QUARTET2_THREADS=2 QUARTET2_OBS=spans cargo run --release --bin quartet2 -- \
     serve --preset tiny --checkpoint "$smoke_dir/ckpt" \
     --trace-out "$smoke_dir/obs/serve.jsonl" \
     --prometheus "$smoke_dir/obs/serve.prom" \
     > "$smoke_dir/obs/serve_out.jsonl"
 grep -q 'quartet2_serve_completed' "$smoke_dir/obs/serve.prom"
+# the drain acknowledgment and per-request status field are emitted
+grep -q '"event":"drain"' "$smoke_dir/obs/serve_out.jsonl"
+grep -q '"status":"ok"' "$smoke_dir/obs/serve_out.jsonl"
+
+# fault-tolerance smoke: kill the traced run after step 1 (the armed
+# fault exits 137 like a preemption), resume from the checkpoint, and
+# structurally validate the resumed stream (the killed stream has an
+# unmatched run_start by construction, so only the resumed one goes
+# through obs-validate)
+ft="$smoke_dir/ft"
+train_ft() { # trace-name, extra args...
+    local trace="$1"; shift
+    QUARTET2_THREADS=2 cargo run --release --bin quartet2 -- train-native \
+        --preset tiny --scheme quartet2 --steps 3 --batch 2 --seq 64 \
+        --eval-every 0 --log-every 1 --no-export \
+        --results-dir "$ft/results" \
+        --checkpoint-dir "$ft/ckpt" --checkpoint-every 1 \
+        --trace-out "$ft/$trace" "$@"
+}
+rc=0
+QUARTET2_FAULT=kill_at_step:1 train_ft killed.jsonl || rc=$?
+[[ "$rc" == 137 ]]
+train_ft resumed.jsonl --resume-from auto 2> "$ft/resume_err.txt"
+grep -q 'resumed from' "$ft/resume_err.txt"
+grep -q '"event":"resume"' "$ft/resumed.jsonl"
+
+# corrupt-checkpoint smoke: flip one byte inside the newest .q2ck (the
+# meta section is ASCII JSON, so 0x01 is always a change), then resume
+# again — the loader must name the corrupt section and fall back to
+# the previous good checkpoint instead of restoring garbage
+latest_ck="$ft/ckpt/$(cat "$ft/ckpt/LATEST")"
+printf '\x01' | dd of="$latest_ck" bs=1 seek=100 count=1 conv=notrunc status=none
+train_ft recovered.jsonl --resume-from auto 2> "$ft/recover_err.txt"
+grep -q 'checksum mismatch' "$ft/recover_err.txt"
+grep -q 'resumed from' "$ft/recover_err.txt"
+cargo run --release --bin quartet2 -- obs-validate \
+    "$ft/resumed.jsonl" "$ft/recovered.jsonl"
 
 cargo run --release --bin quartet2 -- obs-validate \
     "$smoke_dir/obs/steps.jsonl" \
