@@ -1,0 +1,174 @@
+//! Bench: distributed gradient-exchange cost — the supervisor-side
+//! economics of one `train-dist` step at 2 and 4 workers, f32 vs the
+//! quantized wire codecs (MS-EDEN / SR).
+//!
+//! One simulated exchange is exactly what `dist::supervisor` does per
+//! step, minus the pipes: every rank encodes its gradient shard
+//! (`DIR_UP`), the supervisor decodes all of them and reduces in fixed
+//! rank order with weights `1/world`, re-encodes the reduced gradient
+//! (`DIR_DOWN`), and every rank decodes it. The gradients are real —
+//! one `NativeBackend::grad_step` on the tiny preset — so the
+//! parameter-size mix (big grain-aligned matrices + small raw-f32
+//! norm vectors) matches production.
+//!
+//! Reported per `(mode, world)`: wall time per exchange, raw vs wire
+//! bytes, and the compression ratio (the run_end `compression` field
+//! of a real `train-dist` run measures the same quantity). Results
+//! land in `results/dist_exchange.json`; `scripts/bench.sh` copies
+//! that to `BENCH_dist.json` at the repo root for cross-PR tracking.
+
+use quartet2::bench::header;
+use quartet2::data::Batcher;
+use quartet2::dist::wire::{GradCodec, DIR_DOWN, DIR_UP};
+use quartet2::dist::CommMode;
+use quartet2::engine::{AdamWOptions, NativeBackend};
+use quartet2::serve::preset;
+use quartet2::util::json::{self, Json};
+
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+
+fn median_secs(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+/// One full exchange; returns `(raw_bytes, wire_bytes)` (both
+/// directions, all ranks — the supervisor's per-step accounting).
+fn exchange(
+    codec: &GradCodec,
+    world: usize,
+    grads: &[Option<Vec<f32>>],
+) -> (u64, u64) {
+    let step = 5u64;
+    let (mut raw, mut wire) = (0u64, 0u64);
+    // worker side: every rank quantizes its shard independently
+    let payloads: Vec<Vec<u8>> = (0..world)
+        .map(|r| {
+            let (p, rb) = codec.encode(step, DIR_UP, r as u32, grads).expect("encode up");
+            raw += rb;
+            wire += p.len() as u64;
+            p
+        })
+        .collect();
+    // supervisor side: decode + fixed-order weighted reduce
+    let w = 1.0f32 / world as f32;
+    let mut acc: Option<Vec<Option<Vec<f32>>>> = None;
+    for (r, p) in payloads.iter().enumerate() {
+        let (g, _) = codec.decode(step, DIR_UP, r as u32, p).expect("decode up");
+        if acc.is_none() {
+            acc = Some(
+                g.into_iter()
+                    .map(|g| g.map(|v| v.into_iter().map(|x| w * x).collect()))
+                    .collect(),
+            );
+            continue;
+        }
+        let accv = acc.as_mut().expect("just checked");
+        for (a, g) in accv.iter_mut().zip(&g) {
+            if let (Some(a), Some(g)) = (a, g) {
+                for (x, &y) in a.iter_mut().zip(g) {
+                    *x += w * y;
+                }
+            }
+        }
+    }
+    let reduced = acc.expect("world >= 1");
+    // broadcast: one encode, every rank decodes
+    let (down, rb) = codec.encode(step, DIR_DOWN, 0, &reduced).expect("encode down");
+    raw += rb * world as u64;
+    wire += down.len() as u64 * world as u64;
+    for _ in 0..world {
+        codec.decode(step, DIR_DOWN, 0, &down).expect("decode down");
+    }
+    (raw, wire)
+}
+
+fn main() {
+    header("Distributed exchange: f32 vs MS-EDEN / SR wire codecs");
+
+    // real tiny-preset gradients: the parameter-size mix is the point
+    let cfg = preset("tiny").expect("preset");
+    let mut backend = NativeBackend::from_config(
+        &cfg,
+        "f32",
+        BATCH,
+        SEQ,
+        7,
+        AdamWOptions::default(),
+    )
+    .expect("backend");
+    let batcher = Batcher::train(9, BATCH, SEQ);
+    let b = batcher.shard_at(0, 0, BATCH);
+    let (_, grads) = backend
+        .grad_step(0, b.batch, &b.tokens, &b.targets)
+        .expect("grad step");
+    let n_elems: usize = grads.iter().flatten().map(Vec::len).sum();
+    println!(
+        "tiny preset, {} gradient elements ({:.1} MiB raw per direction)\n",
+        n_elems,
+        n_elems as f64 * 4.0 / (1 << 20) as f64
+    );
+    println!(
+        "{:<8} {:>6} {:>14} {:>12} {:>12} {:>12} {:>9}",
+        "mode", "world", "ms/exchange", "raw MiB", "wire MiB", "compression", "vs f32"
+    );
+
+    let mut rows = Vec::new();
+    for world in [2usize, 4] {
+        let mut f32_secs = f64::NAN;
+        for mode in [CommMode::F32, CommMode::MsEden, CommMode::Sr] {
+            let codec = GradCodec { mode, seed: 7 };
+            let (raw, wire) = exchange(&codec, world, &grads);
+            let secs = median_secs(3, || {
+                exchange(&codec, world, &grads);
+            });
+            if mode == CommMode::F32 {
+                f32_secs = secs;
+            }
+            let compression = raw as f64 / wire as f64;
+            println!(
+                "{:<8} {:>6} {:>14.2} {:>12.2} {:>12.2} {:>11.2}x {:>8.2}x",
+                mode.as_str(),
+                world,
+                secs * 1e3,
+                raw as f64 / (1 << 20) as f64,
+                wire as f64 / (1 << 20) as f64,
+                compression,
+                f32_secs / secs
+            );
+            rows.push(json::obj(vec![
+                ("name", json::s("dist_exchange")),
+                ("mode", json::s(mode.as_str())),
+                ("world", json::n(world as f64)),
+                ("secs_per_exchange", json::n(secs)),
+                ("raw_bytes", json::n(raw as f64)),
+                ("wire_bytes", json::n(wire as f64)),
+                ("compression", json::n(compression)),
+                ("time_vs_f32", json::n(secs / f32_secs)),
+            ]));
+            if mode == CommMode::MsEden && compression < 5.0 {
+                println!(
+                    "WARNING: MS-EDEN exchange below the 5x compression target \
+                     ({compression:.2}x)"
+                );
+            }
+        }
+    }
+
+    let results = std::path::Path::new("results");
+    std::fs::create_dir_all(results).expect("results dir");
+    std::fs::write(
+        results.join("dist_exchange.json"),
+        Json::Arr(rows).to_string(),
+    )
+    .expect("write results");
+    println!("\nresults -> results/dist_exchange.json");
+}

@@ -91,6 +91,58 @@ impl Batcher {
     pub fn skip_batches(&mut self, n: usize) {
         self.next_stream += (n * self.batch) as u64 * self.stride;
     }
+
+    /// Train/val phase of this batcher (0 = train, 1 = val): the stream
+    /// id of row 0 of step 0. Invariant under `next()` because the
+    /// cursor only ever advances in multiples of `stride`.
+    fn base(&self) -> u64 {
+        self.next_stream % self.stride
+    }
+
+    /// Generate rows `[lo, hi)` of the global batch for step `step`,
+    /// independent of any cursor state: row `j` of step `s` is always
+    /// stream `base + (s·batch + j)·stride`, exactly the id the
+    /// consuming `next()` sequence would assign it. This is what makes
+    /// data-parallel sharding elastic — any rank's slice of any step is
+    /// a pure function of `(seed, step, lo, hi)`, so the *global* batch
+    /// content is invariant to how many workers split it.
+    pub fn shard_at(&self, step: u64, lo: usize, hi: usize) -> Batch {
+        assert!(lo <= hi && hi <= self.batch, "shard [{lo}, {hi}) out of batch {}", self.batch);
+        let rows = hi - lo;
+        let mut tokens = Vec::with_capacity(rows * self.seq);
+        let mut targets = Vec::with_capacity(rows * self.seq);
+        for j in lo..hi {
+            let stream = self.base() + (step * self.batch as u64 + j as u64) * self.stride;
+            let bytes = self.corpus.generate(stream, self.seq + 1);
+            let toks = self.tokenizer.encode(&bytes);
+            tokens.extend_from_slice(&toks[..self.seq]);
+            targets.extend_from_slice(&toks[1..self.seq + 1]);
+        }
+        Batch {
+            tokens,
+            targets,
+            batch: rows,
+            seq: self.seq,
+        }
+    }
+
+    /// The full global batch for step `step` as a pure function of the
+    /// step index (`shard_at` over all rows). Bitwise identical to what
+    /// the consuming `next()` sequence yields as its `step`-th batch.
+    pub fn batch_at(&self, step: u64) -> Batch {
+        self.shard_at(step, 0, self.batch)
+    }
+}
+
+/// Row range `[lo, hi)` of a `batch`-row global batch owned by `rank`
+/// of `world`: the balanced contiguous partition
+/// `lo = ⌊rank·batch/world⌋`, `hi = ⌊(rank+1)·batch/world⌋`. Exact —
+/// ranges tile the batch with no gaps or overlap for any world size —
+/// and monotone in rank, so the supervisor's fixed-rank-order reduce
+/// visits rows in global row order.
+pub fn shard_range(batch: usize, rank: usize, world: usize) -> (usize, usize) {
+    assert!(world > 0 && rank < world, "rank {rank} out of world {world}");
+    (rank * batch / world, (rank + 1) * batch / world)
 }
 
 /// Background-threaded prefetcher with a bounded queue (depth 2 =
@@ -180,6 +232,56 @@ mod tests {
         b.next();
         b.reset();
         assert_eq!(b.next().tokens, first.tokens);
+    }
+
+    #[test]
+    fn batch_at_matches_consuming() {
+        let mut consumed = Batcher::train(7, 3, 32);
+        let pure = Batcher::train(7, 3, 32);
+        for step in 0..4u64 {
+            assert_eq!(pure.batch_at(step).tokens, consumed.next().tokens, "step {step}");
+        }
+        // val streams shard the same way off their own base
+        let mut vc = Batcher::val(7, 2, 32);
+        let vp = Batcher::val(7, 2, 32);
+        assert_eq!(vp.batch_at(0).tokens, vc.next().tokens);
+        // and batch_at ignores any cursor motion on the same instance
+        let mut moved = Batcher::train(7, 3, 32);
+        moved.next();
+        moved.skip_batches(3);
+        assert_eq!(moved.batch_at(1).tokens, Batcher::train(7, 3, 32).batch_at(1).tokens);
+    }
+
+    #[test]
+    fn shards_tile_the_global_batch_for_any_world() {
+        let b = Batcher::train(11, 6, 16);
+        let global = b.batch_at(3);
+        for world in 1..=6 {
+            let mut tokens = Vec::new();
+            let mut targets = Vec::new();
+            let mut prev_hi = 0usize;
+            for rank in 0..world {
+                let (lo, hi) = shard_range(6, rank, world);
+                assert_eq!(lo, prev_hi, "world {world} rank {rank} gap/overlap");
+                prev_hi = hi;
+                let shard = b.shard_at(3, lo, hi);
+                assert_eq!(shard.batch, hi - lo);
+                tokens.extend_from_slice(&shard.tokens);
+                targets.extend_from_slice(&shard.targets);
+            }
+            assert_eq!(prev_hi, 6, "world {world} does not cover the batch");
+            // global batch content is invariant to world size, bitwise
+            assert_eq!(tokens, global.tokens, "world {world}");
+            assert_eq!(targets, global.targets, "world {world}");
+        }
+        // uneven splits stay balanced within one row
+        for world in 1..=6 {
+            for rank in 0..world {
+                let (lo, hi) = shard_range(6, rank, world);
+                let rows = hi - lo;
+                assert!(rows >= 6 / world && rows <= 6 / world + 1);
+            }
+        }
     }
 
     #[test]

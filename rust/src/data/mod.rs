@@ -11,6 +11,6 @@ pub mod batcher;
 pub mod synthetic;
 pub mod tokenizer;
 
-pub use batcher::{Batch, Batcher, PrefetchBatcher};
+pub use batcher::{shard_range, Batch, Batcher, PrefetchBatcher};
 pub use synthetic::SyntheticCorpus;
 pub use tokenizer::ByteTokenizer;

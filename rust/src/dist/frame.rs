@@ -1,0 +1,160 @@
+//! Length-prefixed, CRC32-guarded frames — the supervisor <-> worker
+//! transport of the elastic data-parallel layer.
+//!
+//! Every message travels as one frame over an OS pipe:
+//!
+//! ```text
+//! [len: u32 LE] [crc32(payload): u32 LE] [payload: len bytes]
+//! ```
+//!
+//! The payload is a [`super::wire::Msg`] encoding (type byte +
+//! body). The CRC turns a corrupted pipe write into a *named* error at
+//! the receiver instead of a silent wrong reduce: the supervisor's
+//! per-worker reader surfaces it as `corrupt frame from rank R`, which
+//! the recovery path treats like any other worker death (kill, roll
+//! back, respawn).
+//!
+//! Clean EOF *between* frames reads as `Ok(None)` (the peer closed the
+//! pipe deliberately, or died between messages); EOF *inside* a frame
+//! is a truncation error. Writes are flushed per frame — both sides
+//! block on framed reads, so an unflushed buffer would deadlock the
+//! step barrier.
+
+use std::io::{ErrorKind, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::checksum::crc32;
+
+/// Upper bound on one frame's payload. Restore/State frames carry a
+/// whole `.q2ck` training state, so this is generous; anything larger
+/// is a corrupted length prefix, not a real message.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// Write one frame (length, checksum, payload) and flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    write_frame_corrupting(w, payload, None)
+}
+
+/// [`write_frame`] with an optional fault-injection hook: when
+/// `corrupt_at` is `Some(off)`, the byte at `off % len` is flipped
+/// *after* the CRC was computed over the pristine payload — exactly
+/// the torn-pipe scenario the receiver-side checksum must catch
+/// (`QUARTET2_FAULT=corrupt_frame:R`).
+pub fn write_frame_corrupting(
+    w: &mut impl Write,
+    payload: &[u8],
+    corrupt_at: Option<usize>,
+) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame payload of {} bytes exceeds MAX_FRAME", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    match corrupt_at {
+        Some(off) if !payload.is_empty() => {
+            let mut tampered = payload.to_vec();
+            tampered[off % payload.len()] ^= 0x01;
+            w.write_all(&tampered)?;
+        }
+        _ => w.write_all(payload)?,
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on clean EOF at a frame boundary;
+/// truncation mid-frame, an oversized length prefix, and a checksum
+/// mismatch are all errors (the caller treats them as peer death).
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 8];
+    // the first byte decides between clean EOF and a real header
+    match read_byte(r)? {
+        None => return Ok(None),
+        Some(b) => header[0] = b,
+    }
+    r.read_exact(&mut header[1..])
+        .context("truncated frame header")?;
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap()) as usize;
+    let stored_crc = u32::from_le_bytes(header[4..].try_into().unwrap());
+    if len > MAX_FRAME {
+        bail!("frame length prefix {len} exceeds MAX_FRAME (corrupted header?)");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("truncated frame payload (wanted {len} bytes)"))?;
+    let computed = crc32(&payload);
+    if computed != stored_crc {
+        bail!(
+            "frame checksum mismatch (stored {stored_crc:#010x}, computed {computed:#010x})"
+        );
+    }
+    Ok(Some(payload))
+}
+
+/// One byte, or `None` on EOF; retries `Interrupted`.
+fn read_byte(r: &mut impl Read) -> Result<Option<u8>> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[0xAB; 1000]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), vec![0xAB; 1000]);
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_caught() {
+        // the satellite guarantee: one flipped payload byte is *always*
+        // a named checksum error, never a silently different payload
+        let payload: Vec<u8> = (0u16..300).map(|i| (i % 251) as u8).collect();
+        for off in 0..payload.len() {
+            let mut buf = Vec::new();
+            write_frame_corrupting(&mut buf, &payload, Some(off)).unwrap();
+            let err = read_frame(&mut &buf[..]).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("checksum mismatch"),
+                "flip at {off} not caught: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+        // cut inside the header and inside the payload
+        for cut in [3, 6, 10] {
+            let err = read_frame(&mut &buf[..cut]).unwrap_err();
+            assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("MAX_FRAME"), "{err:#}");
+    }
+}

@@ -1,0 +1,37 @@
+//! Elastic data-parallel training: supervised worker subprocesses,
+//! MS-EDEN quantized gradient exchange, and crash-only recovery.
+//!
+//! Layering (bottom up):
+//!
+//! * [`frame`] — length-prefixed, CRC32-guarded frames over OS pipes;
+//!   a flipped byte is a *named* receiver-side error, never a silent
+//!   wrong reduce.
+//! * [`wire`] — the supervisor <-> worker message vocabulary and the
+//!   [`wire::GradCodec`]: gradient shards travel as raw f32 (the
+//!   bitwise parity seam), MS-EDEN (the paper's unbiased estimator as
+//!   a wire format, ~7x smaller), or SR, selected by
+//!   `QUARTET2_DIST_COMM`. Quantizer randomness is derived
+//!   counter-style from `(seed, step, direction, rank, param)` on
+//!   both ends, so replays after rollback requantize bit-identically.
+//! * [`worker`] — the `dist-worker` loop: a pure message responder
+//!   holding the full replicated training state.
+//! * [`supervisor`] — the `train-dist` loop: deterministic batch
+//!   sharding over the live ranks, fixed-order weighted reduce,
+//!   collective checkpointing, and the single crash-only recovery
+//!   path (rollback + budgeted respawn + re-shard) that every failure
+//!   mode funnels into.
+//!
+//! The same batch *content* is consumed at every world size (sharding
+//! is pure arithmetic over the step-indexed global batch), at world
+//! size 1 the f32 exchange is bitwise identical to `train-native`,
+//! and a faulted run that recovers reproduces its unfaulted twin
+//! bit-for-bit under f32 comm.
+
+pub mod frame;
+pub mod supervisor;
+pub mod wire;
+pub mod worker;
+
+pub use supervisor::{run_supervisor, DistOptions};
+pub use wire::{CommMode, GradCodec, Msg};
+pub use worker::{run_worker, WorkerOptions};

@@ -1,0 +1,963 @@
+//! The `quartet2 train-dist` supervisor: elastic, crash-only
+//! data-parallel training over worker subprocesses.
+//!
+//! # Shape of a step
+//!
+//! The supervisor spawns `--workers` copies of its own binary running
+//! `dist-worker`, owning each worker's stdin/stdout pipe pair. One
+//! training step is a synchronous exchange:
+//!
+//! 1. shard the *global* batch `0..batch` over the live ranks in rank
+//!    order ([`shard_range`] — pure arithmetic over `(step, rank,
+//!    world)`, so the union of shards is the same batch content at
+//!    every world size);
+//! 2. send each live rank `Step{step, lo, hi}`;
+//! 3. collect one `Grad` per rank (quantized under
+//!    `QUARTET2_DIST_COMM`), bounded by `--step-deadline-ms`;
+//! 4. dequantize and reduce in **fixed rank order** with weights
+//!    `rows/batch` (at world size 1 the weight is exactly `1.0`, so
+//!    the f32 path is a bitwise identity with `train-native`);
+//! 5. broadcast the reduced gradient back as one `Update` frame.
+//!
+//! # Crash-only recovery
+//!
+//! Every failure mode funnels into one path. A worker death — EOF on
+//! its pipe, a corrupt frame (CRC mismatch), or a missed step deadline
+//! (straggler, killed) — triggers: roll **all** survivors back to the
+//! last collective checkpoint (`Restore`), respawn the dead rank under
+//! a bounded-exponential-backoff budget (`--respawn-budget`; respawns
+//! always run clean — injected faults arm the initial spawn only), and
+//! replay from the restored step. A rank whose budget is exhausted is
+//! dropped for good and the batch is re-sharded over the smaller
+//! world; when no rank is left the run fails loudly.
+//!
+//! An initial collective checkpoint is written before step 0 so the
+//! rollback path always has a target. Periodic checkpoints fetch the
+//! full training state from the lowest live rank (`Fetch`/`State`) —
+//! ranks are state-replicas (same seeded init, same reduced updates),
+//! so any one of them can serve it.
+//!
+//! # Telemetry
+//!
+//! `dist.*` counters/gauges/spans (exchange bytes raw vs wire,
+//! compression ratio, reduce/exchange walltime, heartbeat misses,
+//! deaths, respawns, rollbacks, world size) plus `--trace-out` events
+//! (`run_start`, `train_step` with an `exchange` object,
+//! `worker_death`, `rollback`, `respawn`, `checkpoint`, `run_end`)
+//! that `obs-report` parses like any single-process run.
+
+use std::io::BufReader;
+use std::path::Path;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::data::shard_range;
+use crate::engine::checkpoint::{fault, Checkpointer, TrainState};
+use crate::obs::{self, export::JsonlSink};
+use crate::util::json::{self, Json};
+
+use super::frame;
+use super::wire::{CommMode, GradCodec, Msg, DIR_DOWN, DIR_UP};
+
+/// A worker with no frame traffic *and* no heartbeat for this long is
+/// flagged as a heartbeat miss (telemetry only; the step deadline is
+/// the enforcement mechanism). 4x the worker cadence, so a busy but
+/// healthy rank never trips it.
+const HB_MISS_AFTER: Duration = Duration::from_millis(1000);
+
+/// First respawn backoff; doubles per attempt on the same rank, capped
+/// at `<< 4` (50, 100, 200, 400, then 800ms flat).
+const RESPAWN_BACKOFF_MS: u64 = 50;
+
+/// `quartet2 train-dist` configuration (the CLI fills this in).
+#[derive(Clone, Debug)]
+pub struct DistOptions {
+    pub preset: String,
+    pub scheme: String,
+    /// Global batch rows per step — sharded over the live ranks.
+    pub batch: usize,
+    pub seq: usize,
+    pub seed: u64,
+    pub steps: usize,
+    /// Initial world size (>= 1; must not exceed `batch`).
+    pub workers: usize,
+    /// Gradient-exchange compression (`QUARTET2_DIST_COMM`).
+    pub comm: CommMode,
+    /// Kill a rank that misses this step deadline (straggler control).
+    pub step_deadline_ms: u64,
+    /// Respawns allowed per rank before it is dropped for good.
+    pub respawn_budget: usize,
+    pub checkpoint_dir: String,
+    pub checkpoint_every: usize,
+    pub keep_last: usize,
+    pub resume_from: Option<String>,
+    pub export_dir: Option<String>,
+    pub no_export: bool,
+    pub trace_out: Option<String>,
+    pub log_every: usize,
+}
+
+impl Default for DistOptions {
+    fn default() -> DistOptions {
+        DistOptions {
+            preset: "tiny".into(),
+            scheme: "quartet2".into(),
+            batch: 8,
+            seq: 128,
+            seed: 0,
+            steps: 100,
+            workers: 2,
+            comm: CommMode::F32,
+            step_deadline_ms: 60_000,
+            respawn_budget: 3,
+            checkpoint_dir: "checkpoints/dist".into(),
+            checkpoint_every: 0,
+            keep_last: 3,
+            resume_from: None,
+            export_dir: None,
+            no_export: false,
+            trace_out: None,
+            log_every: 10,
+        }
+    }
+}
+
+/// What a per-worker reader thread reports upward.
+enum Event {
+    Msg(Msg),
+    /// Clean EOF: the worker exited (or was killed).
+    Eof,
+    /// Corrupt frame / undecodable message — the pipe is poisoned.
+    Failed(String),
+}
+
+/// (rank, spawn generation, event). The generation filters events from
+/// dead incarnations of a respawned rank.
+type Ev = (usize, u64, Event);
+
+struct Slot {
+    child: Child,
+    stdin: ChildStdin,
+    gen: u64,
+    last_seen: Instant,
+    hb_flagged: bool,
+}
+
+/// Drain one worker incarnation's stdout into the shared event
+/// channel. Exactly one terminal event (`Eof` or `Failed`) ends it.
+fn reader_loop(rank: usize, gen: u64, stdout: ChildStdout, tx: Sender<Ev>) {
+    let mut r = BufReader::new(stdout);
+    loop {
+        match frame::read_frame(&mut r) {
+            Ok(Some(payload)) => match Msg::decode(&payload) {
+                Ok(m) => {
+                    if tx.send((rank, gen, Event::Msg(m))).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((
+                        rank,
+                        gen,
+                        Event::Failed(format!("corrupt frame from rank {rank}: {e:#}")),
+                    ));
+                    return;
+                }
+            },
+            Ok(None) => {
+                let _ = tx.send((rank, gen, Event::Eof));
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send((
+                    rank,
+                    gen,
+                    Event::Failed(format!("corrupt frame from rank {rank}: {e:#}")),
+                ));
+                return;
+            }
+        }
+    }
+}
+
+struct Supervisor<'a> {
+    opts: &'a DistOptions,
+    slots: Vec<Option<Slot>>,
+    /// Respawns consumed per rank (persists across incarnations).
+    respawns: Vec<usize>,
+    /// Whether a rank's *initial* spawn happened (fault arming is
+    /// initial-spawn-only, so respawns always run clean).
+    spawned_once: Vec<bool>,
+    next_gen: u64,
+    tx: Sender<Ev>,
+    /// Rank-targeted fault translated from `QUARTET2_FAULT`.
+    fault_spec: Option<(usize, String)>,
+    deaths: u64,
+    respawned: u64,
+    rollbacks: u64,
+    hb_misses: u64,
+}
+
+impl Supervisor<'_> {
+    /// Spawn (or respawn) one rank's worker subprocess and its reader
+    /// thread. Workers inherit the environment (`QUARTET2_THREADS`,
+    /// `QUARTET2_GEMM_PATH`, `QUARTET2_DIST_COMM`, ...) except the
+    /// fault variables, which are scrubbed and re-armed only as the
+    /// targeted rank's private one-shot `QUARTET2_DIST_FAULT`.
+    fn spawn(&mut self, rank: usize) -> Result<()> {
+        let exe = std::env::current_exe().context("locating the quartet2 binary")?;
+        let o = self.opts;
+        let mut cmd = Command::new(exe);
+        cmd.arg("dist-worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--preset")
+            .arg(&o.preset)
+            .arg("--scheme")
+            .arg(&o.scheme)
+            .arg("--batch")
+            .arg(o.batch.to_string())
+            .arg("--seq")
+            .arg(o.seq.to_string())
+            .arg("--seed")
+            .arg(o.seed.to_string())
+            .arg("--steps")
+            .arg(o.steps.to_string())
+            .arg("--comm")
+            .arg(o.comm.as_str())
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .env_remove("QUARTET2_FAULT")
+            .env_remove("QUARTET2_DIST_FAULT");
+        if let Some((target, spec)) = &self.fault_spec {
+            if *target == rank && !self.spawned_once[rank] {
+                cmd.env("QUARTET2_DIST_FAULT", spec);
+            }
+        }
+        self.spawned_once[rank] = true;
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawning dist worker rank {rank}"))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        self.next_gen += 1;
+        let gen = self.next_gen;
+        let tx = self.tx.clone();
+        std::thread::spawn(move || reader_loop(rank, gen, stdout, tx));
+        self.slots[rank] = Some(Slot {
+            child,
+            stdin,
+            gen,
+            last_seen: Instant::now(),
+            hb_flagged: false,
+        });
+        Ok(())
+    }
+
+    fn live_ranks(&self) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&r| self.slots[r].is_some())
+            .collect()
+    }
+
+    /// Whether `(rank, gen)` names the current incarnation (events
+    /// from reaped or superseded incarnations are dropped).
+    fn is_current(&self, rank: usize, gen: u64) -> bool {
+        self.slots[rank].as_ref().is_some_and(|s| s.gen == gen)
+    }
+
+    fn note_alive(&mut self, rank: usize) {
+        if let Some(s) = self.slots[rank].as_mut() {
+            s.last_seen = Instant::now();
+            s.hb_flagged = false;
+        }
+    }
+
+    /// Flag (once per silence) workers that stopped heartbeating.
+    fn scan_heartbeats(&mut self) {
+        let now = Instant::now();
+        for (r, slot) in self.slots.iter_mut().enumerate() {
+            let Some(slot) = slot else { continue };
+            if !slot.hb_flagged && now.duration_since(slot.last_seen) > HB_MISS_AFTER {
+                slot.hb_flagged = true;
+                self.hb_misses += 1;
+                obs::count!("dist.heartbeat.miss", 1);
+                eprintln!(
+                    "warning: no heartbeat from rank {r} for {}ms",
+                    HB_MISS_AFTER.as_millis()
+                );
+            }
+        }
+    }
+
+    /// Write one pre-encoded frame to a rank; an `Err` is a death
+    /// signal (broken pipe — Rust ignores SIGPIPE, so it surfaces
+    /// here), not a hard failure.
+    fn send_frame(&mut self, rank: usize, frame_bytes: &[u8]) -> std::result::Result<(), String> {
+        let Some(slot) = self.slots[rank].as_mut() else {
+            return Err(format!("rank {rank} is not live"));
+        };
+        frame::write_frame(&mut slot.stdin, frame_bytes)
+            .map_err(|e| format!("write to rank {rank} failed: {e:#}"))
+    }
+
+    fn send(&mut self, rank: usize, msg: &Msg) -> std::result::Result<(), String> {
+        self.send_frame(rank, &msg.encode())
+    }
+
+    /// Kill + wait one rank's worker, freeing the slot. Idempotent.
+    fn reap(&mut self, rank: usize) {
+        if let Some(mut slot) = self.slots[rank].take() {
+            slot.child.kill().ok();
+            slot.child.wait().ok();
+        }
+    }
+
+    /// Fetch the full training state as of `completed` steps from the
+    /// lowest live rank (pipe ordering guarantees every update sent
+    /// before the `Fetch` has been applied when the answer arrives).
+    fn fetch_state(&mut self, rx: &Receiver<Ev>, completed: usize) -> Result<TrainState> {
+        let rank = *self
+            .live_ranks()
+            .first()
+            .ok_or_else(|| anyhow!("no live workers to checkpoint from"))?;
+        self.send(rank, &Msg::Fetch { step: completed as u64 })
+            .map_err(|e| anyhow!("requesting state from rank {rank}: {e}"))?;
+        let deadline =
+            Instant::now() + Duration::from_millis(self.opts.step_deadline_ms.max(10_000));
+        loop {
+            let now = Instant::now();
+            ensure!(
+                now < deadline,
+                "rank {rank} did not answer the step-{completed} state fetch in time"
+            );
+            let ev = rx.recv_timeout(deadline - now);
+            match ev {
+                Ok((r, gen, ev)) => {
+                    if !self.is_current(r, gen) {
+                        continue;
+                    }
+                    match ev {
+                        Event::Msg(Msg::State { state }) if r == rank => {
+                            let st = TrainState::from_bytes(&state)
+                                .context("parsing fetched worker state")?;
+                            ensure!(
+                                st.step == completed,
+                                "rank {rank} answered a state for step {} (wanted {completed})",
+                                st.step
+                            );
+                            return Ok(st);
+                        }
+                        Event::Msg(_) => self.note_alive(r),
+                        Event::Eof => bail!("rank {r} died during the state fetch"),
+                        Event::Failed(desc) => bail!("{desc} (during the state fetch)"),
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("all worker readers disconnected")
+                }
+            }
+        }
+    }
+
+    /// The crash-only recovery path: every failure in `failed` —
+    /// death, corrupt frame, missed deadline — ends here. Reap the
+    /// dead, roll every survivor back to the last collective
+    /// checkpoint, respawn under budget (clean; exponential backoff),
+    /// and return the step to replay from.
+    fn recover(
+        &mut self,
+        s: usize,
+        failed: &[(usize, String)],
+        ckpt: &Checkpointer,
+        sink: &mut Option<JsonlSink>,
+    ) -> Result<usize> {
+        for (r, reason) in failed {
+            eprintln!("worker death: rank {r} at step {s}: {reason}");
+            obs::count!("dist.worker_death", 1);
+            self.deaths += 1;
+            self.reap(*r);
+            if let Some(sink) = sink.as_mut() {
+                sink.event(&json::obj(vec![
+                    ("event", json::s("worker_death")),
+                    ("step", json::n(s as f64)),
+                    ("rank", json::n(*r as f64)),
+                    ("reason", json::s(reason)),
+                ]))?;
+            }
+        }
+
+        // the rollback anchor: the last collective checkpoint
+        let (st, path) = ckpt.latest_valid()?.ok_or_else(|| {
+            anyhow!(
+                "worker death at step {s} but no valid checkpoint under {} to roll back to",
+                ckpt.dir().display()
+            )
+        })?;
+        let restored = st.step;
+        obs::count!("dist.rollback", 1);
+        self.rollbacks += 1;
+        eprintln!(
+            "rollback: restoring {} (step {restored}) on every live rank, replaying from there",
+            path.display()
+        );
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&json::obj(vec![
+                ("event", json::s("rollback")),
+                ("step", json::n(s as f64)),
+                ("restored_step", json::n(restored as f64)),
+                ("replayed_steps", json::n(s.saturating_sub(restored) as f64)),
+            ]))?;
+        }
+
+        // respawn the dead (clean env) while they still have budget
+        for (r, _) in failed {
+            let r = *r;
+            if self.respawns[r] >= self.opts.respawn_budget {
+                eprintln!(
+                    "rank {r}: respawn budget ({}) exhausted — dropping the rank and \
+                     re-sharding over a smaller world",
+                    self.opts.respawn_budget
+                );
+                continue;
+            }
+            let attempt = self.respawns[r];
+            self.respawns[r] += 1;
+            let backoff = Duration::from_millis(RESPAWN_BACKOFF_MS << attempt.min(4));
+            std::thread::sleep(backoff);
+            self.spawn(r)?;
+            obs::count!("dist.respawn", 1);
+            self.respawned += 1;
+            eprintln!(
+                "respawned rank {r} (attempt {} of {}, after {}ms backoff)",
+                attempt + 1,
+                self.opts.respawn_budget,
+                backoff.as_millis()
+            );
+            if let Some(sink) = sink.as_mut() {
+                sink.event(&json::obj(vec![
+                    ("event", json::s("respawn")),
+                    ("rank", json::n(r as f64)),
+                    ("step", json::n(restored as f64)),
+                    ("attempt", json::n((attempt + 1) as f64)),
+                ]))?;
+            }
+        }
+        if let Some(sink) = sink.as_mut() {
+            sink.flush()?;
+        }
+
+        // restore *every* live rank (survivors may have applied
+        // updates past the checkpoint, respawns are fresh-initialized;
+        // after this they are state-replicas again)
+        let bytes = st.to_bytes();
+        let restore = Msg::Restore { state: bytes }.encode();
+        for r in self.live_ranks() {
+            self.send_frame(r, &restore)
+                .map_err(|e| anyhow!("restoring rank {r} after rollback: {e}"))?;
+        }
+        Ok(restored)
+    }
+}
+
+/// Run an elastic data-parallel training session. See the module docs.
+pub fn run_supervisor(opts: &DistOptions) -> Result<()> {
+    ensure!(opts.workers >= 1, "--workers must be at least 1");
+    ensure!(
+        opts.workers <= opts.batch,
+        "--workers ({}) cannot exceed --batch ({}): every rank needs at least one row",
+        opts.workers,
+        opts.batch
+    );
+    ensure!(opts.steps >= 1, "--steps must be at least 1");
+
+    let ckpt = Checkpointer::new(
+        Path::new(&opts.checkpoint_dir),
+        opts.checkpoint_every,
+        opts.keep_last,
+    )?;
+    let codec = GradCodec { mode: opts.comm, seed: opts.seed };
+
+    // translate a rank-targeted QUARTET2_FAULT into a private one-shot
+    // env for the targeted rank's initial spawn (workers never see the
+    // raw variable — see Supervisor::spawn)
+    let fault_spec: Option<(usize, String)> = fault::dist_fault().and_then(|f| {
+        let spec = std::env::var("QUARTET2_FAULT").ok()?;
+        let rank = match f {
+            fault::Fault::KillRank { rank, .. }
+            | fault::Fault::StallRank { rank, .. }
+            | fault::Fault::CorruptFrame { rank } => rank,
+            _ => return None,
+        };
+        Some((rank, spec))
+    });
+    if let Some((rank, spec)) = &fault_spec {
+        if *rank >= opts.workers {
+            eprintln!(
+                "warning: QUARTET2_FAULT {spec:?} targets rank {rank}, but only {} \
+                 workers exist — the fault will never fire",
+                opts.workers
+            );
+        }
+    }
+
+    let (tx, rx) = mpsc::channel::<Ev>();
+    let mut sup = Supervisor {
+        opts,
+        slots: (0..opts.workers).map(|_| None).collect(),
+        respawns: vec![0; opts.workers],
+        spawned_once: vec![false; opts.workers],
+        next_gen: 0,
+        tx,
+        fault_spec,
+        deaths: 0,
+        respawned: 0,
+        rollbacks: 0,
+        hb_misses: 0,
+    };
+    for r in 0..opts.workers {
+        sup.spawn(r)?;
+    }
+
+    // resume, or anchor the rollback path with an initial checkpoint
+    let mut s = 0usize;
+    let mut resumed_from = None;
+    if let Some(spec) = &opts.resume_from {
+        match ckpt.resolve_resume(spec)? {
+            Some((st, path)) => {
+                st.validate_run(
+                    &opts.preset,
+                    &opts.scheme,
+                    opts.batch,
+                    opts.seq,
+                    opts.seed,
+                    opts.steps,
+                )?;
+                s = st.step;
+                let restore = Msg::Restore { state: st.to_bytes() }.encode();
+                for r in sup.live_ranks() {
+                    sup.send_frame(r, &restore)
+                        .map_err(|e| anyhow!("restoring rank {r} on resume: {e}"))?;
+                }
+                // re-anchor rollback inside *our* checkpoint dir (the
+                // resume source may live elsewhere)
+                ckpt.write(&st)?;
+                eprintln!("resumed from {} at step {s}", path.display());
+                resumed_from = Some(path);
+            }
+            None => eprintln!(
+                "no valid checkpoint under {} — starting fresh",
+                ckpt.dir().display()
+            ),
+        }
+    }
+
+    let mut sink = match &opts.trace_out {
+        Some(p) => Some(JsonlSink::create(Path::new(p))?),
+        None => None,
+    };
+    let run_name = format!(
+        "{}_{}_dist{}_{}_steps{}_seed{}",
+        opts.preset,
+        opts.scheme,
+        opts.workers,
+        opts.comm.as_str(),
+        opts.steps,
+        opts.seed
+    );
+    if let Some(sink) = sink.as_mut() {
+        sink.event(&json::obj(vec![
+            ("event", json::s("run_start")),
+            ("run", json::s(&run_name)),
+            ("scheme", json::s(&opts.scheme)),
+            ("preset", json::s(&opts.preset)),
+            ("steps", json::n(opts.steps as f64)),
+            ("batch", json::n(opts.batch as f64)),
+            ("seq", json::n(opts.seq as f64)),
+            ("world", json::n(opts.workers as f64)),
+            ("comm", json::s(opts.comm.as_str())),
+            ("obs_level", json::s(obs::level().as_str())),
+            ("start_step", json::n(s as f64)),
+        ]))?;
+        if let Some(p) = &resumed_from {
+            sink.event(&json::obj(vec![
+                ("event", json::s("resume")),
+                ("step", json::n(s as f64)),
+                ("path", json::s(&p.display().to_string())),
+            ]))?;
+        }
+        sink.flush()?;
+    }
+
+    if s == 0 {
+        // initial collective checkpoint: rollback always has a target
+        let st = sup.fetch_state(&rx, 0)?;
+        let (path, bytes) = ckpt.write(&st)?;
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&checkpoint_event(0, &path, bytes))?;
+            sink.flush()?;
+        }
+    }
+
+    let grain = match opts.scheme.as_str() {
+        "f32" => 0,
+        "sr" => crate::GROUP,
+        _ => crate::ROT_BLOCK,
+    };
+    let t0 = Instant::now();
+    let mut executed = 0u64;
+    let mut last_loss = f64::NAN;
+    let (mut raw_total, mut wire_total) = (0u64, 0u64);
+    let mut last_world = 0usize;
+
+    while s < opts.steps {
+        let live = sup.live_ranks();
+        ensure!(
+            !live.is_empty(),
+            "no live workers remain at step {s} (all respawn budgets exhausted)"
+        );
+        if live.len() != last_world {
+            obs::gauge("dist.world_size").set(live.len() as f64);
+            if grain > 0 {
+                for (i, &r) in live.iter().enumerate() {
+                    let (lo, hi) = shard_range(opts.batch, i, live.len());
+                    let toks = (hi - lo) * opts.seq;
+                    if toks % grain != 0 {
+                        eprintln!(
+                            "warning: rank {r}'s shard ({} rows x {} seq = {toks} tokens) \
+                             is not a multiple of the scheme's {grain}-token grain; its \
+                             matmuls fall back to f32",
+                            hi - lo,
+                            opts.seq
+                        );
+                    }
+                }
+            }
+            last_world = live.len();
+        }
+
+        // 1-2: shard the global batch over the live set, in rank order
+        let shards: Vec<(usize, usize, usize)> = live
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| {
+                let (lo, hi) = shard_range(opts.batch, i, live.len());
+                (r, lo, hi)
+            })
+            .collect();
+        let t_step = Instant::now();
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        for &(r, lo, hi) in &shards {
+            let step = Msg::Step { step: s as u64, lo: lo as u32, hi: hi as u32 };
+            if let Err(e) = sup.send(r, &step) {
+                failed.push((r, e));
+                break;
+            }
+        }
+
+        // 3: collect one gradient shard per live rank, under deadline
+        let mut got: Vec<Option<(u32, f64, Vec<u8>)>> = vec![None; opts.workers];
+        let deadline = Instant::now() + Duration::from_millis(opts.step_deadline_ms);
+        while failed.is_empty() && shards.iter().any(|&(r, _, _)| got[r].is_none()) {
+            let now = Instant::now();
+            if now >= deadline {
+                for &(r, _, _) in &shards {
+                    if got[r].is_none() {
+                        sup.reap(r);
+                        failed.push((
+                            r,
+                            format!(
+                                "missed the {}ms step deadline (straggler, killed)",
+                                opts.step_deadline_ms
+                            ),
+                        ));
+                    }
+                }
+                break;
+            }
+            let ev = rx.recv_timeout(deadline - now);
+            match ev {
+                Ok((r, gen, ev)) => {
+                    if !sup.is_current(r, gen) {
+                        continue;
+                    }
+                    match ev {
+                        Event::Msg(Msg::Grad { step, rank, lo, rows, loss, params }) => {
+                            sup.note_alive(r);
+                            // accept only this step's shard under the
+                            // *current* assignment; a stale replay
+                            // (identical state, identical shard) is
+                            // bitwise equal, so acceptance is safe
+                            let assigned = shards.iter().find(|&&(sr, _, _)| sr == r);
+                            if step == s as u64
+                                && rank as usize == r
+                                && assigned.is_some_and(|&(_, alo, ahi)| {
+                                    lo as usize == alo && rows as usize == ahi - alo
+                                })
+                                && got[r].is_none()
+                            {
+                                got[r] = Some((rows, loss, params));
+                            }
+                        }
+                        Event::Msg(Msg::Hello { .. } | Msg::Heartbeat { .. }) => {
+                            sup.note_alive(r)
+                        }
+                        Event::Msg(_) => {} // stale State from an aborted fetch
+                        Event::Eof => {
+                            sup.reap(r);
+                            failed.push((r, "worker exited (EOF on its pipe)".into()));
+                        }
+                        Event::Failed(desc) => {
+                            sup.reap(r);
+                            failed.push((r, desc));
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("all worker readers disconnected")
+                }
+            }
+            sup.scan_heartbeats();
+        }
+        if !failed.is_empty() {
+            s = sup.recover(s, &failed, &ckpt, &mut sink)?;
+            continue;
+        }
+        let exchange_ns = t_step.elapsed().as_nanos() as u64;
+        obs::record_ns("dist.exchange", exchange_ns);
+
+        // 4: dequantize + reduce in fixed rank order (bitwise
+        // reproducible for a given world size; at world 1 the single
+        // weight is exactly 1.0, a bitwise identity)
+        let t_reduce = Instant::now();
+        let mut acc: Option<Vec<Option<Vec<f32>>>> = None;
+        let mut loss_total = 0.0f64;
+        let (mut raw_up, mut wire_up) = (0u64, 0u64);
+        for &(r, lo, hi) in &shards {
+            let (rows, loss, params) = got[r].take().expect("collected above");
+            ensure!(
+                rows as usize == hi - lo,
+                "rank {r} sent {rows} rows for shard {lo}..{hi}"
+            );
+            wire_up += params.len() as u64;
+            let (grads, raw) = codec
+                .decode(s as u64, DIR_UP, r as u32, &params)
+                .with_context(|| format!("decoding rank {r}'s step-{s} gradient shard"))?;
+            raw_up += raw;
+            let w = rows as f32 / opts.batch as f32;
+            loss_total += (rows as f64 / opts.batch as f64) * loss;
+            if acc.is_none() {
+                acc = Some(
+                    grads
+                        .into_iter()
+                        .map(|g| g.map(|v| v.into_iter().map(|x| w * x).collect()))
+                        .collect(),
+                );
+                continue;
+            }
+            let accv = acc.as_mut().expect("just checked");
+            ensure!(
+                accv.len() == grads.len(),
+                "rank {r}: parameter count mismatch in the reduce"
+            );
+            for (i, (a, g)) in accv.iter_mut().zip(&grads).enumerate() {
+                match (a, g) {
+                    (Some(a), Some(g)) => {
+                        ensure!(
+                            a.len() == g.len(),
+                            "rank {r} param {i}: length mismatch in the reduce"
+                        );
+                        for (x, &y) in a.iter_mut().zip(g) {
+                            *x += w * y;
+                        }
+                    }
+                    (None, None) => {}
+                    _ => bail!(
+                        "rank {r} param {i}: gradient structure mismatch in the reduce"
+                    ),
+                }
+            }
+        }
+        let reduced = acc.expect("at least one live rank");
+        obs::record_ns("dist.reduce", t_reduce.elapsed().as_nanos() as u64);
+
+        // 5: broadcast the reduced gradient (quantized downward too)
+        let (update, raw_down) = codec.encode(s as u64, DIR_DOWN, 0, &reduced)?;
+        let wire_down = update.len() as u64 * shards.len() as u64;
+        let raw_down = raw_down * shards.len() as u64;
+        let update_frame = Msg::Update { step: s as u64, params: update }.encode();
+        for &(r, _, _) in &shards {
+            if let Err(e) = sup.send_frame(r, &update_frame) {
+                failed.push((r, e));
+            }
+        }
+        if !failed.is_empty() {
+            // a partial broadcast leaves ranks divergent; the rollback
+            // path restores every survivor, so consistency returns
+            s = sup.recover(s, &failed, &ckpt, &mut sink)?;
+            continue;
+        }
+
+        let raw_step = raw_up + raw_down;
+        let wire_step = wire_up + wire_down;
+        raw_total += raw_step;
+        wire_total += wire_step;
+        obs::count!("dist.steps", 1);
+        obs::count!("dist.exchange.bytes.raw", raw_step);
+        obs::count!("dist.exchange.bytes.wire", wire_step);
+        obs::gauge("dist.exchange.compression")
+            .set(raw_total as f64 / wire_total.max(1) as f64);
+        last_loss = loss_total;
+        executed += 1;
+
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&json::obj(vec![
+                ("event", json::s("train_step")),
+                ("step", json::n(s as f64)),
+                (
+                    "loss",
+                    if loss_total.is_finite() {
+                        json::n(loss_total)
+                    } else {
+                        json::s(&format!("{loss_total}"))
+                    },
+                ),
+                ("step_ns", json::n(t_step.elapsed().as_nanos() as f64)),
+                (
+                    "exchange",
+                    json::obj(vec![
+                        ("world", json::n(shards.len() as f64)),
+                        ("raw_bytes", json::n(raw_step as f64)),
+                        ("wire_bytes", json::n(wire_step as f64)),
+                        ("exchange_ns", json::n(exchange_ns as f64)),
+                    ]),
+                ),
+            ]))?;
+        }
+        if opts.log_every > 0 && s % opts.log_every == 0 {
+            println!(
+                "step {s:>5}  train {loss_total:.4}  world {}  comm {}",
+                shards.len(),
+                opts.comm.as_str()
+            );
+        }
+
+        let completed = s + 1;
+        if ckpt.due(completed) || completed == opts.steps {
+            let st = sup.fetch_state(&rx, completed)?;
+            let (path, bytes) = ckpt.write(&st)?;
+            if let Some(sink) = sink.as_mut() {
+                sink.event(&checkpoint_event(completed, &path, bytes))?;
+            }
+        }
+        if let Some(sink) = sink.as_mut() {
+            sink.flush()?;
+        }
+        s += 1;
+    }
+
+    let secs = t0.elapsed().as_secs_f64();
+    let tokens_per_sec =
+        crate::metrics::safe_rate((executed * (opts.batch * opts.seq) as u64) as f64, secs);
+    let world_now = sup.live_ranks().len();
+    if let Some(sink) = sink.as_mut() {
+        sink.event(&json::obj(vec![
+            ("event", json::s("run_end")),
+            ("run", json::s(&run_name)),
+            ("wall_secs", json::n(secs)),
+            ("tokens_per_sec", json::n(tokens_per_sec)),
+            ("final_val_loss", Json::Null),
+            ("world", json::n(world_now as f64)),
+            ("exchange_raw_bytes", json::n(raw_total as f64)),
+            ("exchange_wire_bytes", json::n(wire_total as f64)),
+            (
+                "compression",
+                json::n(raw_total as f64 / wire_total.max(1) as f64),
+            ),
+            ("worker_deaths", json::n(sup.deaths as f64)),
+            ("respawns", json::n(sup.respawned as f64)),
+            ("rollbacks", json::n(sup.rollbacks as f64)),
+            ("heartbeat_misses", json::n(sup.hb_misses as f64)),
+        ]))?;
+        sink.flush()?;
+    }
+    println!(
+        "train-dist done: {} steps, final world {world_now}, last train loss {last_loss:.4}, \
+         exchange {:.1}x compression ({} raw / {} wire bytes), {} deaths / {} respawns / {} \
+         rollbacks",
+        opts.steps,
+        raw_total as f64 / wire_total.max(1) as f64,
+        raw_total,
+        wire_total,
+        sup.deaths,
+        sup.respawned,
+        sup.rollbacks
+    );
+
+    // final export through the lowest live rank (replicated state, so
+    // any rank's answer is the collective answer)
+    if !opts.no_export {
+        let dir = opts
+            .export_dir
+            .clone()
+            .unwrap_or_else(|| format!("checkpoints/serve_{}_dist", opts.preset));
+        let rank = *sup
+            .live_ranks()
+            .first()
+            .ok_or_else(|| anyhow!("no live workers left for the final export"))?;
+        sup.send(rank, &Msg::Export { dir: dir.clone() })
+            .map_err(|e| anyhow!("requesting the final export from rank {rank}: {e}"))?;
+        let deadline =
+            Instant::now() + Duration::from_millis(opts.step_deadline_ms.max(60_000));
+        loop {
+            let now = Instant::now();
+            ensure!(now < deadline, "rank {rank} did not finish the export in time");
+            match rx.recv_timeout(deadline - now) {
+                Ok((r, gen, Event::Msg(Msg::Done { bytes })))
+                    if sup.is_current(r, gen) && r == rank =>
+                {
+                    println!("packed trained weights -> {dir:?} ({bytes} packed bytes)");
+                    break;
+                }
+                Ok((r, gen, Event::Eof | Event::Failed(_)))
+                    if sup.is_current(r, gen) && r == rank =>
+                {
+                    bail!("rank {rank} died during the final export")
+                }
+                Ok(_) => {}
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("all worker readers disconnected")
+                }
+            }
+        }
+    }
+
+    // clean shutdown: Shutdown frame, close stdin, reap
+    for r in sup.live_ranks() {
+        sup.send(r, &Msg::Shutdown).ok();
+    }
+    for slot in sup.slots.iter_mut() {
+        if let Some(mut sl) = slot.take() {
+            drop(sl.stdin);
+            sl.child.wait().ok();
+        }
+    }
+    Ok(())
+}
+
+/// One `checkpoint` trace event (same schema as the trainer's).
+fn checkpoint_event(step: usize, path: &Path, bytes: u64) -> Json {
+    json::obj(vec![
+        ("event", json::s("checkpoint")),
+        ("step", json::n(step as f64)),
+        ("bytes", json::n(bytes as f64)),
+        ("path", json::s(&path.display().to_string())),
+    ])
+}

@@ -1,0 +1,225 @@
+//! The `quartet2 dist-worker` loop: one rank of an elastic
+//! data-parallel run, driven entirely by framed messages on
+//! stdin/stdout (the supervisor owns both pipe ends).
+//!
+//! The worker is a pure message responder — it holds the full
+//! replicated training state (every rank initializes from the same
+//! seed and applies the same reduced updates, so states stay
+//! bit-identical across ranks) and reacts to whatever the supervisor
+//! sends, in any order:
+//!
+//! * `Restore` — import a `.q2ck` training state (rollback, resume,
+//!   or post-respawn catch-up); empty bytes are a fresh-start no-op.
+//! * `Step{step, lo, hi}` — materialize batch rows `lo..hi` of the
+//!   *global* step-indexed batch (pure arithmetic, so the shard is
+//!   identical no matter which world size or respawn count produced
+//!   it), run the forward/backward, and answer with the quantized
+//!   gradient shard.
+//! * `Update` — decode the reduced gradient and apply the optimizer
+//!   step.
+//! * `Fetch` / `Export` / `Shutdown` — checkpoint state upload, final
+//!   serving-checkpoint export (rank 0), clean exit.
+//!
+//! A detached heartbeat thread shares the stdout mutex and emits a
+//! `Heartbeat` frame every [`HEARTBEAT_EVERY`]; the supervisor uses
+//! silence as a straggler signal. Crash-only philosophy: any local
+//! error just kills the process — the supervisor detects EOF and runs
+//! the rollback/respawn path; nothing here tries to limp along.
+//!
+//! Fault injection: the supervisor translates a rank-targeted
+//! `QUARTET2_FAULT` (`kill_rank` / `stall_rank` / `corrupt_frame`)
+//! into the private `QUARTET2_DIST_FAULT` env of the targeted rank's
+//! *initial* spawn only, so respawned workers always run clean.
+
+use std::io::Stdout;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Backend;
+use crate::data::Batcher;
+use crate::engine::checkpoint::{fault, TrainState};
+use crate::engine::NativeBackend;
+use crate::serve::{self, ModelWeightsF32, PackedModel};
+
+use super::frame;
+use super::wire::{CommMode, GradCodec, Msg, DIR_DOWN, DIR_UP};
+
+/// Heartbeat cadence. The supervisor's miss threshold is a multiple
+/// of this, so a healthy worker under load never looks dead.
+pub const HEARTBEAT_EVERY: Duration = Duration::from_millis(250);
+
+/// How long a `stall_rank` fault sleeps — far past any reasonable
+/// `--step-deadline-ms`, so the supervisor's straggler kill fires.
+const STALL_SLEEP: Duration = Duration::from_secs(3600);
+
+/// One worker's identity and run configuration (mirrors the
+/// supervisor's own flags; every rank sees the *global* batch size).
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    pub preset: String,
+    pub scheme: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub seed: u64,
+    pub steps: usize,
+    pub rank: usize,
+    pub comm: CommMode,
+}
+
+/// A panicked heartbeat thread must not wedge the worker: recover the
+/// guard from a poisoned stdout mutex instead of propagating.
+fn lock_stdout(out: &Mutex<Stdout>) -> MutexGuard<'_, Stdout> {
+    out.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn send(out: &Mutex<Stdout>, msg: &Msg) -> Result<()> {
+    let frame_bytes = msg.encode();
+    let mut w = lock_stdout(out);
+    frame::write_frame(&mut *w, &frame_bytes)
+}
+
+/// Run the worker loop until `Shutdown` or supervisor EOF.
+pub fn run_worker(opts: &WorkerOptions) -> Result<()> {
+    let mut backend = NativeBackend::new(
+        &opts.preset,
+        &opts.scheme,
+        opts.batch,
+        opts.seq,
+        opts.seed,
+        opts.steps,
+    )?;
+    let batcher = Batcher::train(opts.seed, opts.batch, opts.seq);
+    let codec = GradCodec { mode: opts.comm, seed: opts.seed };
+    let rank = opts.rank as u32;
+
+    // the one-shot injected fault, armed only on the initial spawn of
+    // the targeted rank (see the module docs)
+    let armed = std::env::var("QUARTET2_DIST_FAULT")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(|s| fault::parse(&s).context("QUARTET2_DIST_FAULT"))
+        .transpose()?;
+    let mut corrupt_next_grad =
+        matches!(armed, Some(fault::Fault::CorruptFrame { rank: r }) if r == opts.rank);
+
+    let out = Arc::new(Mutex::new(std::io::stdout()));
+    {
+        // heartbeat thread: detached on purpose — it dies with the
+        // process (Shutdown / EOF / crash), and a failed write means
+        // the supervisor is gone, so it just stops
+        let out = Arc::clone(&out);
+        std::thread::spawn(move || {
+            let mut seq = 0u64;
+            loop {
+                std::thread::sleep(HEARTBEAT_EVERY);
+                seq += 1;
+                let beat = Msg::Heartbeat { rank, seq }.encode();
+                let mut w = lock_stdout(&out);
+                if frame::write_frame(&mut *w, &beat).is_err() {
+                    return;
+                }
+            }
+        });
+    }
+    send(&out, &Msg::Hello { rank })?;
+
+    let mut stdin = std::io::stdin().lock();
+    while let Some(payload) = frame::read_frame(&mut stdin)? {
+        match Msg::decode(&payload)? {
+            Msg::Restore { state } => {
+                if !state.is_empty() {
+                    let st = TrainState::from_bytes(&state)?;
+                    st.validate_run(
+                        &opts.preset,
+                        &opts.scheme,
+                        opts.batch,
+                        opts.seq,
+                        opts.seed,
+                        opts.steps,
+                    )?;
+                    backend.import_train_state(&st.engine)?;
+                }
+            }
+            Msg::Step { step, lo, hi } => {
+                match armed {
+                    Some(fault::Fault::KillRank { rank: r, step: s })
+                        if r == opts.rank && s == step as usize =>
+                    {
+                        eprintln!(
+                            "QUARTET2_DIST_FAULT: rank {r} dying mid-exchange at \
+                             step {s} (exit 137)"
+                        );
+                        std::process::exit(137);
+                    }
+                    Some(fault::Fault::StallRank { rank: r, step: s })
+                        if r == opts.rank && s == step as usize =>
+                    {
+                        eprintln!(
+                            "QUARTET2_DIST_FAULT: rank {r} stalling at step {s} \
+                             (straggler; waiting for the supervisor's deadline kill)"
+                        );
+                        std::thread::sleep(STALL_SLEEP);
+                    }
+                    _ => {}
+                }
+                let shard = batcher.shard_at(step, lo as usize, hi as usize);
+                let (loss, grads) =
+                    backend.grad_step(step as usize, shard.batch, &shard.tokens, &shard.targets)?;
+                let (params, _raw) = codec.encode(step, DIR_UP, rank, &grads)?;
+                let msg =
+                    Msg::Grad { step, rank, lo, rows: shard.batch as u32, loss, params };
+                let frame_bytes = msg.encode();
+                // corrupt_frame: flip one byte of the first gradient
+                // frame after its CRC was computed, then disarm
+                let corrupt_at = if corrupt_next_grad {
+                    corrupt_next_grad = false;
+                    eprintln!(
+                        "QUARTET2_DIST_FAULT: rank {rank} corrupting one byte of \
+                         its step-{step} gradient frame"
+                    );
+                    Some(frame_bytes.len() / 2)
+                } else {
+                    None
+                };
+                let mut w = lock_stdout(&out);
+                frame::write_frame_corrupting(&mut *w, &frame_bytes, corrupt_at)?;
+            }
+            Msg::Update { step, params } => {
+                let (grads, _raw) = codec.decode(step, DIR_DOWN, 0, &params)?;
+                backend.apply_grads(&grads)?;
+            }
+            Msg::Fetch { step } => {
+                let st = TrainState {
+                    step: step as usize,
+                    preset: opts.preset.clone(),
+                    scheme: opts.scheme.clone(),
+                    batch: opts.batch,
+                    seq: opts.seq,
+                    seed: opts.seed,
+                    total_steps: opts.steps,
+                    gemm_path: format!("{:?}", crate::engine::gemm_path()),
+                    engine: backend.export_train_state()?,
+                    // the dist loop runs no per-worker anomaly detector;
+                    // a default window restores clean
+                    detector: Default::default(),
+                };
+                send(&out, &Msg::State { state: st.to_bytes() })?;
+            }
+            Msg::Export { dir } => {
+                let named = backend.export_named_tensors()?;
+                let cfg = serve::preset(&opts.preset)?;
+                let weights = ModelWeightsF32::from_named_tensors(&cfg, &named)
+                    .context("converting trained state to serving weights")?;
+                let model = PackedModel::pack(&weights, true, opts.seed ^ 0x5e7e)?;
+                model.save(std::path::Path::new(&dir))?;
+                send(&out, &Msg::Done { bytes: model.packed_bytes() as u64 })?;
+            }
+            Msg::Shutdown => return Ok(()),
+            other => bail!("worker rank {rank}: unexpected message {other:?}"),
+        }
+    }
+    // supervisor EOF: it died or dropped us; crash-only — just exit
+    Ok(())
+}

@@ -99,6 +99,56 @@ impl NativeBackend {
     pub fn to_weights(&self) -> Result<ModelWeightsF32> {
         self.model.to_weights()
     }
+
+    /// Forward + backward over a (possibly sharded) batch of `rows`
+    /// rows — [`Backend::train_step`] minus the optimizer update.
+    /// Returns the shard loss and per-parameter flat gradients in
+    /// model parameter order (`None` = untouched by the loss).
+    ///
+    /// This is the data-parallel worker's half-step: the same
+    /// counter-based RNG fold and graph build as `train_step` (the
+    /// per-step quantizer stream depends only on `(seed, step)`), so a
+    /// single worker over the full batch computes bit-identical
+    /// gradients to the single-process path. The optimizer half lives
+    /// in [`NativeBackend::apply_grads`], fed with the supervisor's
+    /// reduced gradient.
+    pub fn grad_step(
+        &mut self,
+        step_idx: usize,
+        rows: usize,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f64, Vec<Option<Vec<f32>>>)> {
+        crate::obs::health::set_step(step_idx as u64);
+        let _step = crate::obs::span!("engine.step");
+        let rng = Rng::seed_from(self.seed ^ 0x7121_7e72).fold_in(step_idx as u64 + 1);
+        let (tape, loss_id, pids) = {
+            let _s = crate::obs::span!("engine.forward");
+            self.model.loss_graph(tokens, targets, rows, self.seq, &rng)?
+        };
+        let loss = tape.value(loss_id).item() as f64;
+        let grads = {
+            let _s = crate::obs::span!("engine.backward");
+            tape.backward(loss_id)?
+        };
+        let aligned = AdamW::align(&grads, &pids);
+        Ok((
+            loss,
+            aligned.iter().map(|g| g.map(|t| t.data.to_vec())).collect(),
+        ))
+    }
+
+    /// Apply externally reduced flat gradients — the optimizer half of
+    /// [`NativeBackend::grad_step`]. Routed through the same
+    /// [`AdamW::step_flat`] core as `train_step`'s update, so applying
+    /// a gradient here is bit-identical to having computed it in
+    /// process.
+    pub fn apply_grads(&mut self, grads: &[Option<Vec<f32>>]) -> Result<()> {
+        let flat: Vec<Option<&[f32]>> =
+            grads.iter().map(|g| g.as_deref()).collect();
+        let _s = crate::obs::span!("engine.optimizer");
+        self.opt.step_flat(&mut self.model.params, &flat)
+    }
 }
 
 impl Backend for NativeBackend {
@@ -298,6 +348,44 @@ mod tests {
         short.opt_m.pop();
         short.opt_v.pop();
         assert!(mk().import_train_state(&short).is_err());
+    }
+
+    #[test]
+    fn grad_step_plus_apply_matches_train_step_bitwise() {
+        // the data-parallel split of a step (forward/backward, then an
+        // externally applied reduced gradient) must reproduce the
+        // fused train_step exactly — this is the world_size=1
+        // `train-dist` ≡ `train-native` invariant at the engine level
+        let tokens = vec![1i32, 5, 3, 2, 7, 0, 2, 1];
+        let targets = vec![5i32, 3, 2, 9, 0, 2, 1, 4];
+        let mk = || {
+            NativeBackend::from_config(&micro(), "f32", 2, 4, 7, AdamWOptions::default())
+                .unwrap()
+        };
+        let mut fused = mk();
+        let mut split = mk();
+        for s in 0..3 {
+            let lf = fused.train_step(s, tokens.clone(), targets.clone()).unwrap();
+            let (ls, grads) = split.grad_step(s, 2, &tokens, &targets).unwrap();
+            assert_eq!(lf.to_bits(), ls.to_bits(), "loss at step {s}");
+            // weight 1.0 reduce is the identity on the bits
+            let reduced: Vec<Option<Vec<f32>>> = grads
+                .iter()
+                .map(|g| g.as_ref().map(|v| v.iter().map(|&x| 1.0f32 * x).collect()))
+                .collect();
+            split.apply_grads(&reduced).unwrap();
+        }
+        assert_eq!(
+            fused.export_named_tensors().unwrap(),
+            split.export_named_tensors().unwrap()
+        );
+        let (sf, ss) = (
+            fused.export_train_state().unwrap(),
+            split.export_train_state().unwrap(),
+        );
+        assert_eq!(sf.opt_t, ss.opt_t);
+        assert_eq!(sf.opt_m, ss.opt_m);
+        assert_eq!(sf.opt_v, ss.opt_v);
     }
 
     #[test]

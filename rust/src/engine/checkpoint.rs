@@ -413,11 +413,24 @@ impl Checkpointer {
             return Ok(());
         }
         let files = self.list()?;
-        if files.len() > self.keep_last {
-            for old in &files[..files.len() - self.keep_last] {
-                std::fs::remove_file(old)
-                    .with_context(|| format!("pruning old checkpoint {}", old.display()))?;
+        if files.len() <= self.keep_last {
+            return Ok(());
+        }
+        // Never prune the file `LATEST` points at. After a rollback
+        // the step counter rewinds, so the newest checkpoint *by
+        // write time* can sort below already-written higher-step
+        // files; counting prunes purely by name order would delete
+        // the pointer's target and the next resume would fall back to
+        // a stale checkpoint from the abandoned future.
+        let latest = std::fs::read_to_string(self.dir.join(LATEST))
+            .ok()
+            .map(|n| self.dir.join(n.trim()));
+        for old in &files[..files.len() - self.keep_last] {
+            if Some(old) == latest.as_ref() {
+                continue;
             }
+            std::fs::remove_file(old)
+                .with_context(|| format!("pruning old checkpoint {}", old.display()))?;
         }
         Ok(())
     }
@@ -543,6 +556,20 @@ impl Checkpointer {
 ///   `M % len` of the file is flipped (at-rest bit rot), then exit 137.
 /// * `nan_loss_at_step:N` — the trainer replaces step `N`'s loss with
 ///   NaN (drives the `--on-anomaly=rollback` recovery test).
+///
+/// Rank-targeted distributed faults, consumed by the `train-dist`
+/// supervisor (which arms the selected worker subprocess; the fault
+/// fires once, on the initial spawn only — respawned workers run
+/// clean, so recovery is observable):
+///
+/// * `kill_rank:R@step:N` — worker rank `R` exits 137 in the middle of
+///   step `N`'s gradient exchange (before sending its gradient).
+/// * `stall_rank:R@step:N` — worker rank `R` hangs at step `N` (a
+///   straggler); the supervisor's step deadline must fire and treat it
+///   as a death.
+/// * `corrupt_frame:R` — worker rank `R` flips one payload byte of its
+///   next gradient frame after the CRC is computed; the supervisor
+///   must detect `corrupt frame from rank R`, never reduce the bytes.
 pub mod fault {
     use std::sync::OnceLock;
 
@@ -555,6 +582,9 @@ pub mod fault {
         TornWrite,
         FlipByte(usize),
         NanLossAtStep(usize),
+        KillRank { rank: usize, step: usize },
+        StallRank { rank: usize, step: usize },
+        CorruptFrame { rank: usize },
     }
 
     /// Parse a `QUARTET2_FAULT` spec.
@@ -568,14 +598,36 @@ pub mod fault {
                 .parse::<usize>()
                 .with_context(|| format!("{kind} argument must be a number"))
         };
+        let rank_step = || -> Result<(usize, usize)> {
+            let a = arg.with_context(|| {
+                format!("{kind} needs an argument, e.g. {kind}:1@step:3")
+            })?;
+            let (r, s) = a.split_once("@step:").with_context(|| {
+                format!("{kind} argument must look like R@step:N, got {a:?}")
+            })?;
+            Ok((
+                r.parse::<usize>().with_context(|| format!("{kind} rank must be a number"))?,
+                s.parse::<usize>().with_context(|| format!("{kind} step must be a number"))?,
+            ))
+        };
         match kind {
             "kill_at_step" => Ok(Fault::KillAtStep(num("3")?)),
             "torn_write" => Ok(Fault::TornWrite),
             "flip_byte" => Ok(Fault::FlipByte(num("64")?)),
             "nan_loss_at_step" => Ok(Fault::NanLossAtStep(num("3")?)),
+            "kill_rank" => {
+                let (rank, step) = rank_step()?;
+                Ok(Fault::KillRank { rank, step })
+            }
+            "stall_rank" => {
+                let (rank, step) = rank_step()?;
+                Ok(Fault::StallRank { rank, step })
+            }
+            "corrupt_frame" => Ok(Fault::CorruptFrame { rank: num("1")? }),
             other => bail!(
                 "unknown fault {other:?} (want kill_at_step:N | torn_write | \
-                 flip_byte:M | nan_loss_at_step:N)"
+                 flip_byte:M | nan_loss_at_step:N | kill_rank:R@step:N | \
+                 stall_rank:R@step:N | corrupt_frame:R)"
             ),
         }
     }
@@ -619,6 +671,20 @@ pub mod fault {
         }
     }
 
+    /// Supervisor hook: the armed rank-targeted distributed fault, if
+    /// any. The supervisor translates it into a private one-shot env
+    /// for the targeted worker's initial spawn (`QUARTET2_FAULT`
+    /// itself is scrubbed from worker environments so process-level
+    /// faults never fire inside every rank at once).
+    pub fn dist_fault() -> Option<Fault> {
+        match armed() {
+            f @ Some(
+                Fault::KillRank { .. } | Fault::StallRank { .. } | Fault::CorruptFrame { .. },
+            ) => f,
+            _ => None,
+        }
+    }
+
     #[cfg(test)]
     mod tests {
         use super::*;
@@ -629,8 +695,19 @@ pub mod fault {
             assert_eq!(parse("torn_write").unwrap(), Fault::TornWrite);
             assert_eq!(parse("flip_byte:64").unwrap(), Fault::FlipByte(64));
             assert_eq!(parse("nan_loss_at_step:2").unwrap(), Fault::NanLossAtStep(2));
+            assert_eq!(
+                parse("kill_rank:1@step:3").unwrap(),
+                Fault::KillRank { rank: 1, step: 3 }
+            );
+            assert_eq!(
+                parse("stall_rank:0@step:2").unwrap(),
+                Fault::StallRank { rank: 0, step: 2 }
+            );
+            assert_eq!(parse("corrupt_frame:1").unwrap(), Fault::CorruptFrame { rank: 1 });
             assert!(parse("flip_byte").is_err());
             assert!(parse("kill_at_step:x").is_err());
+            assert!(parse("kill_rank:1").is_err());
+            assert!(parse("stall_rank:@step:2").is_err());
             assert!(parse("segfault").is_err());
         }
     }
@@ -776,6 +853,34 @@ mod tests {
         b[12] ^= 0x01;
         std::fs::write(&step4, &b).unwrap();
         assert!(c.latest_valid().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_never_prunes_the_latest_target_after_rollback() {
+        // A rollback rewinds the step counter, so the newest write can
+        // sort *below* files from the abandoned future. Count-based
+        // pruning alone would delete the very checkpoint LATEST points
+        // at; resume would then silently fall back to future state.
+        let dir = std::env::temp_dir().join("q2_ckpt_rollback_retention_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let c = Checkpointer::new(&dir, 1, 1).unwrap();
+        c.write(&sample_state(7)).unwrap();
+        c.write(&sample_state(8)).unwrap();
+        // rollback happened: the run rewound and re-checkpoints step 5
+        c.write(&sample_state(5)).unwrap();
+        let latest = std::fs::read_to_string(dir.join(LATEST)).unwrap();
+        assert_eq!(latest.trim(), file_name(5));
+        // the pointer's target survived pruning...
+        assert!(dir.join(file_name(5)).exists(), "LATEST target was pruned");
+        // ...and resume resolution lands on the rolled-back state, not
+        // a file from the abandoned future
+        let (st, path) = c.latest_valid().unwrap().unwrap();
+        assert_eq!(st.step, 5);
+        assert!(path.ends_with(file_name(5)));
+        // retention still prunes the rest down to keep_last + target
+        let files = c.list().unwrap();
+        assert!(files.len() <= 2, "retention stopped pruning: {files:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -83,6 +83,16 @@ impl AdamW {
     /// One optimizer step. `grads[i]` pairs with `params[i]`; a `None`
     /// gradient (parameter untouched by the loss) is skipped.
     pub fn step(&mut self, params: &mut [Param], grads: &[Option<&super::tensor::Tensor>]) -> Result<()> {
+        let flat: Vec<Option<&[f32]>> = grads.iter().map(|g| g.map(|t| &t.data[..])).collect();
+        self.step_flat(params, &flat)
+    }
+
+    /// The update core behind [`AdamW::step`], over plain f32 slices:
+    /// the data-parallel supervisor's reduced gradients arrive as flat
+    /// shards off the wire, and routing both the single-process and
+    /// distributed paths through this one body is what keeps a
+    /// `world_size=1` `train-dist` run bit-identical to `train-native`.
+    pub fn step_flat(&mut self, params: &mut [Param], grads: &[Option<&[f32]>]) -> Result<()> {
         ensure!(
             params.len() == self.m.len() && grads.len() == params.len(),
             "optimizer state for {} params, got {} params / {} grads",
@@ -105,10 +115,10 @@ impl AdamW {
         {
             let Some(g) = g else { continue };
             ensure!(
-                g.numel() == p.value.numel(),
+                g.len() == p.value.numel(),
                 "grad for {} has {} elems, param has {}",
                 p.name,
-                g.numel(),
+                g.len(),
                 p.value.numel()
             );
             let wd = if Self::decays(&p.name) { o.weight_decay } else { 0.0 };
@@ -121,8 +131,8 @@ impl AdamW {
                 // accumulation for the update-to-weight ratio gauge
                 let mut upd_sq = 0.0f64;
                 let mut w_sq = 0.0f64;
-                for i in 0..g.numel() {
-                    let gi = g.data[i];
+                for i in 0..g.len() {
+                    let gi = g[i];
                     m[i] = o.beta1 * m[i] + (1.0 - o.beta1) * gi;
                     v[i] = o.beta2 * v[i] + (1.0 - o.beta2) * gi * gi;
                     let mhat = m[i] / bc1;
@@ -136,8 +146,8 @@ impl AdamW {
                 crate::obs::gauge(&format!("dyn.update_ratio.{}", p.name))
                     .set(upd_sq.sqrt() / w_sq.sqrt().max(1e-30));
             } else {
-                for i in 0..g.numel() {
-                    let gi = g.data[i];
+                for i in 0..g.len() {
+                    let gi = g[i];
                     m[i] = o.beta1 * m[i] + (1.0 - o.beta1) * gi;
                     v[i] = o.beta2 * v[i] + (1.0 - o.beta2) * gi * gi;
                     let mhat = m[i] / bc1;

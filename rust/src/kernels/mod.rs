@@ -56,6 +56,7 @@ pub use qgemm::{
     qgemm_fp, qgemm_fp_reference, qgemm_fp_threads, qgemm_pp,
     qgemm_pp_reference, qgemm_pp_threads, PackedOp, FP4_PAIR_LUT,
 };
+pub use quant::{ms_eden_pack_grad, sr_pack_grad, unpack_grad_into};
 pub use scratch::{take_bytes_uninit, take_uninit, take_zeroed, Scratch, ScratchBytes};
 pub use threads::{
     pinned_threads, set_threads, threads_for, threads_for_quant,

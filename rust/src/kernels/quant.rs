@@ -60,7 +60,7 @@
 use anyhow::{bail, Result};
 
 use crate::formats::fp4::{fp4_encode, rtn_fp4_code, sr_fp4_fast, FP4_CODE_LUT, FP4_MAX};
-use crate::formats::fp8::{e4m3_encode, rtn_e4m3_fast, rtn_e8m3, sr_e4m3_fast};
+use crate::formats::fp8::{e4m3_decode, e4m3_encode, rtn_e4m3_fast, rtn_e8m3, sr_e4m3_fast};
 use crate::formats::{safe_div, FP8_MAX, RTN_CLIP_SCALE, RTN_SCALE_CAP, SR_BUDGET};
 use crate::hadamard;
 use crate::util::rng::Rng;
@@ -613,6 +613,86 @@ pub fn sr_pack(
     sr_pack_threads(x, rows, cols, sr, codes, scales, threads)
 }
 
+// ------------------------------------- gradient-shard comm entry
+
+/// Quantize a flat gradient shard straight to the MS-EDEN packed wire
+/// format (the `QUARTET2_DIST_COMM=ms_eden` gradient-exchange codec).
+/// The shard is reshaped as `n/128` rows of one rotation block each —
+/// group indexing is position-based on both ends of the pipe, so any
+/// shard length maps identically regardless of the parameter's true
+/// shape, while row banding keeps the pack parallel (and, per the
+/// crate's parity discipline, bitwise invariant to the worker count).
+/// `x` is rotated in place (the sender keeps it only as scratch);
+/// decode with [`unpack_grad_into`] then [`crate::hadamard::rht_inv`]
+/// to recover the unbiased f32 estimate. Requires a positive multiple
+/// of [`ROT_BLOCK`] elements (the wire layer carries any remainder as
+/// a raw f32 tail). Naive (non-post-hoc) variant, matching the
+/// engine's training-side packs. Returns the global scale.
+pub fn ms_eden_pack_grad(
+    x: &mut [f32],
+    signs: &[f32],
+    sr: &Rng,
+    codes: &mut [u8],
+    scales: &mut [u8],
+) -> Result<f32> {
+    let n = x.len();
+    if n == 0 || n % ROT_BLOCK != 0 {
+        bail!("gradient shard length {n} not a positive multiple of {ROT_BLOCK}");
+    }
+    let rows = n / ROT_BLOCK;
+    let threads = threads_for_quant(n, rows);
+    ms_eden_pack_threads(x, rows, ROT_BLOCK, false, signs, sr, codes, scales, threads)
+}
+
+/// [`ms_eden_pack_grad`]'s unrotated sibling for
+/// `QUARTET2_DIST_COMM=sr`: flat Q_SR shard pack (`x` read-only — SR
+/// has no rotation pass). Requires a positive multiple of [`GROUP`]
+/// elements. Returns the global scale.
+pub fn sr_pack_grad(
+    x: &[f32],
+    sr: &Rng,
+    codes: &mut [u8],
+    scales: &mut [u8],
+) -> Result<f32> {
+    let n = x.len();
+    if n == 0 || n % GROUP != 0 {
+        bail!("gradient shard length {n} not a positive multiple of {GROUP}");
+    }
+    let rows = n / GROUP;
+    let threads = threads_for_quant(n, rows);
+    sr_pack_threads(x, rows, GROUP, sr, codes, scales, threads)
+}
+
+/// Decode a packed gradient shard back to f32 — the receive side of
+/// the quantized gradient exchange. Exactly the packed-GEMM decode
+/// arithmetic ([`super::qgemm`]'s panel decode, nibble LUT form): per
+/// 16-element group `s = e4m3_decode(scale_byte) * gscale`, per code
+/// `FP4_CODE_LUT[code] * s` — so the wire round-trip reproduces the
+/// corresponding fused estimate **bit for bit** (MS-EDEN shards come
+/// back in rotated space; apply [`crate::hadamard::rht_inv`] to
+/// finish the unbiased estimate).
+pub fn unpack_grad_into(
+    codes: &[u8],
+    scales: &[u8],
+    gscale: f32,
+    out: &mut [f32],
+) -> Result<()> {
+    let n = out.len();
+    if n % GROUP != 0 {
+        bail!("output length {n} not a multiple of {GROUP}");
+    }
+    check_pack_bufs(n, codes, scales)?;
+    for (g, (out_g, &sbyte)) in out.chunks_exact_mut(GROUP).zip(scales).enumerate() {
+        let s = e4m3_decode(sbyte) * gscale;
+        let cb = &codes[g * (GROUP / 2)..(g + 1) * (GROUP / 2)];
+        for (pair, &byte) in out_g.chunks_exact_mut(2).zip(cb) {
+            pair[0] = FP4_CODE_LUT[(byte & 0xF) as usize] * s;
+            pair[1] = FP4_CODE_LUT[(byte >> 4) as usize] * s;
+        }
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------- RTN pack entry
 
 /// One group of the fused deterministic-RTN pack pass: evaluate the
@@ -975,6 +1055,46 @@ mod tests {
             &mut [0u8; ROT_BLOCK - 1], &mut vec![0u8; 2 * ROT_BLOCK / GROUP],
         )
         .is_err());
+    }
+
+    #[test]
+    fn grad_pack_wire_roundtrip_matches_estimates_bitwise() {
+        let mut seed_rng = Rng::seed_from(41);
+        let n = 3 * ROT_BLOCK;
+        let x: Vec<f32> = seed_rng.normal_vec(n);
+        let signs = crate::hadamard::rademacher_signs(&mut seed_rng);
+        let sr = Rng::seed_from(91).fold_in(7);
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        // MS-EDEN: packed wire decode == fused estimate, in rotated space
+        let mut staged = x.clone();
+        let (mut codes, mut scales) = (vec![0u8; n / 2], vec![0u8; n / GROUP]);
+        let g = ms_eden_pack_grad(&mut staged, &signs, &sr, &mut codes, &mut scales).unwrap();
+        let mut est = x.clone();
+        ms_eden_estimate(&mut est, n / ROT_BLOCK, ROT_BLOCK, &signs, &sr).unwrap();
+        let mut wire = vec![0.0f32; n];
+        unpack_grad_into(&codes, &scales, g, &mut wire).unwrap();
+        assert_eq!(bits(&wire), bits(&est));
+        // un-rotating recovers an estimate close to the original shard
+        crate::hadamard::rht_inv(&mut wire, &signs).unwrap();
+        let mse: f64 = wire
+            .iter()
+            .zip(&x)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!(mse < 0.1, "wire round-trip mse {mse}");
+        // SR: same contract, no rotation
+        let (mut codes, mut scales) = (vec![0u8; n / 2], vec![0u8; n / GROUP]);
+        let g = sr_pack_grad(&x, &sr, &mut codes, &mut scales).unwrap();
+        let mut est = x.clone();
+        sr_estimate(&mut est, n / GROUP, GROUP, &sr).unwrap();
+        unpack_grad_into(&codes, &scales, g, &mut wire).unwrap();
+        assert_eq!(bits(&wire), bits(&est));
+        // misaligned shards and mis-sized buffers are rejected
+        let mut short = vec![0.0f32; 100];
+        assert!(ms_eden_pack_grad(&mut short, &signs, &sr, &mut [0; 50], &mut [0; 7]).is_err());
+        assert!(sr_pack_grad(&[0.0; 10], &sr, &mut [0; 5], &mut [0; 1]).is_err());
+        assert!(unpack_grad_into(&[0; 5], &[0; 1], 1.0, &mut [0.0; 10]).is_err());
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod engine;
 pub mod experiments;
 pub mod formats;

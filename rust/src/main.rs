@@ -4,6 +4,10 @@
 //!   train        train one (preset, scheme) via the PJRT artifacts
 //!   train-native train one (preset, scheme) on the native Rust engine
 //!                (no XLA; exports a packed serving checkpoint)
+//!   train-dist   elastic data-parallel training: N supervised worker
+//!                subprocesses, quantized gradient exchange, crash-only
+//!                rollback/respawn recovery
+//!   dist-worker  one train-dist rank (internal; spawned by train-dist)
 //!   experiment   regenerate a paper table/figure (fig1..fig10, table1..7)
 //!   perfmodel    print the analytical Blackwell model report
 //!   generate     one-shot decode from a packed NVFP4 checkpoint
@@ -89,6 +93,46 @@ USAGE:
                       path is a hard error if it fails verification;
                       --stop-after K exits cleanly after K steps
                       (simulated preemption)
+  quartet2 train-dist [--workers 2] [--preset tiny]
+                      [--scheme quartet2|sr|nvidia_square|f32] [--steps 100]
+                      [--batch 4] [--seq 64] [--seed 42]
+                      [--comm f32|ms_eden|sr] [--step-deadline-ms 60000]
+                      [--respawn-budget 3] [--checkpoint-dir checkpoints/dist_<preset>]
+                      [--checkpoint-every 25] [--keep-last 3]
+                      [--resume-from auto|path.q2ck]
+                      [--export-checkpoint checkpoints/serve_<preset>_dist]
+                      [--no-export] [--threads N] [--gemm-path packed|dequant]
+                      [--obs off|counters|spans] [--trace-out steps.jsonl]
+                      [--chrome-trace trace.json] [--prometheus metrics.prom]
+                      [--log-every 10]
+                      elastic data-parallel training over --workers
+                      subprocesses of this binary. Each step shards the
+                      global batch over the live ranks (same batch
+                      content at every world size), collects one
+                      quantized gradient shard per rank over
+                      CRC32-framed pipes, reduces in fixed rank order,
+                      and broadcasts the update. --comm (or
+                      QUARTET2_DIST_COMM) picks the exchange codec: f32
+                      is the bitwise parity seam (world size 1
+                      reproduces train-native exactly), ms_eden ships
+                      the paper's unbiased estimator as a ~7x-smaller
+                      wire format, sr is the stochastic-rounding
+                      baseline. Worker death (exit, EOF, corrupt
+                      frame) and stragglers past --step-deadline-ms
+                      funnel into one crash-only path: roll every
+                      survivor back to the last collective checkpoint,
+                      respawn the dead rank (clean, exponential
+                      backoff) while its --respawn-budget lasts, else
+                      drop it and re-shard over the smaller world.
+                      QUARTET2_FAULT=kill_rank:R@step:N |
+                      stall_rank:R@step:N | corrupt_frame:R injects
+                      rank-targeted faults (initial spawn only; the
+                      supervisor scrubs fault env vars from workers).
+                      dist.* counters/gauges surface exchange bytes
+                      (raw vs wire), compression, deaths, respawns,
+                      rollbacks; --trace-out streams the same event
+                      schema as train-native plus worker_death /
+                      respawn / rollback events
   quartet2 experiment <fig1|fig2|fig4|fig5|fig9|table1|table2|table5|table7|fig6|fig10|serving|train-native|all-numeric>
                       [--preset tiny] [--steps 150] [--seed 42] [--resume]
   quartet2 perfmodel  (= experiment all-numeric)
@@ -147,6 +191,8 @@ fn real_main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("train-native") => cmd_train_native(&args),
+        Some("train-dist") => cmd_train_dist(&args),
+        Some("dist-worker") => cmd_dist_worker(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("perfmodel") => {
             let env = numeric_env(&args)?;
@@ -336,6 +382,75 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         dir.display()
     );
     Ok(())
+}
+
+/// Resolve `--comm` (falling back to `QUARTET2_DIST_COMM`, then f32).
+fn comm_mode(args: &Args) -> Result<quartet2::dist::CommMode> {
+    match args.opt("comm") {
+        Some(v) => quartet2::dist::CommMode::parse(v),
+        None => quartet2::dist::CommMode::from_env(),
+    }
+}
+
+/// Elastic data-parallel training: spawn `--workers` copies of this
+/// binary as `dist-worker` ranks and run the supervisor loop
+/// (deterministic sharding, quantized exchange, crash-only recovery).
+fn cmd_train_dist(args: &Args) -> Result<()> {
+    apply_obs_flag(args)?;
+    // workers inherit their kernel policy through the environment, so
+    // translate the flags into env vars before the first spawn
+    if let Some(t) = args.opt("threads") {
+        t.parse::<usize>()
+            .with_context(|| format!("--threads must be a number, got {t:?}"))?;
+        std::env::set_var("QUARTET2_THREADS", t);
+    }
+    if let Some(p) = args.opt("gemm-path") {
+        match p {
+            "packed" | "dequant" => std::env::set_var("QUARTET2_GEMM_PATH", p),
+            other => bail!("--gemm-path must be packed or dequant, got {other:?}"),
+        }
+    }
+    let preset = args.get_or("preset", "tiny").to_string();
+    let default_ckpt = format!("checkpoints/dist_{preset}");
+    let opts = quartet2::dist::DistOptions {
+        preset,
+        scheme: args.get_or("scheme", "quartet2").to_string(),
+        batch: args.usize_or("batch", 4)?,
+        seq: args.usize_or("seq", 64)?,
+        seed: args.u64_or("seed", 42)?,
+        steps: args.usize_or("steps", 100)?,
+        workers: args.usize_or("workers", 2)?,
+        comm: comm_mode(args)?,
+        step_deadline_ms: args.u64_or("step-deadline-ms", 60_000)?,
+        respawn_budget: args.usize_or("respawn-budget", 3)?,
+        checkpoint_dir: args.get_or("checkpoint-dir", &default_ckpt).to_string(),
+        checkpoint_every: args.usize_or("checkpoint-every", 25)?,
+        keep_last: args.usize_or("keep-last", 3)?,
+        resume_from: args.opt("resume-from").map(String::from),
+        export_dir: args.opt("export-checkpoint").map(String::from),
+        no_export: args.flag("no-export"),
+        trace_out: args.opt("trace-out").map(String::from),
+        log_every: args.usize_or("log-every", 10)?,
+    };
+    quartet2::dist::run_supervisor(&opts)?;
+    write_obs_exports(args)?;
+    Ok(())
+}
+
+/// One `train-dist` rank (internal). Reads framed messages on stdin,
+/// answers on stdout; stderr is inherited from the supervisor.
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    let opts = quartet2::dist::WorkerOptions {
+        preset: args.get_or("preset", "tiny").to_string(),
+        scheme: args.get_or("scheme", "quartet2").to_string(),
+        batch: args.usize_or("batch", 4)?,
+        seq: args.usize_or("seq", 64)?,
+        seed: args.u64_or("seed", 42)?,
+        steps: args.usize_or("steps", 100)?,
+        rank: args.usize_or("rank", 0)?,
+        comm: comm_mode(args)?,
+    };
+    quartet2::dist::run_worker(&opts)
 }
 
 struct OwnedEnv {

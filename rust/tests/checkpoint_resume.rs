@@ -415,6 +415,82 @@ fn flipped_byte_checkpoint_is_detected_by_section_checksum() {
     corrupt_fallback_scenario("flip", "flip_byte:64", "checksum mismatch");
 }
 
+/// Retention regression: after a rollback (here: an explicit resume
+/// from an *older* checkpoint) the step counter rewinds, so the next
+/// checkpoint written sorts *below* already-written higher-step files.
+/// A purely name-ordered prune would then delete the very file
+/// `LATEST` points at, and the following `--resume-from auto` would
+/// silently fall back to a stale checkpoint from the abandoned future.
+/// `enforce_retention` must never prune the `LATEST` target.
+#[test]
+fn retention_never_prunes_the_latest_target_after_rollback() {
+    let s = Scratch::new("retention");
+
+    // run A: stop after 3 completed steps — checkpoints 1, 2, 3 on
+    // disk, LATEST -> 3
+    let args = train_args(&s, "f32", "ck", "a.jsonl", &["--no-export", "--stop-after", "3"]);
+    expect_ok(&quartet2_bin(&as_strs(&args), &[]));
+    let ck = PathBuf::from(s.p("ck"));
+    assert!(ck.join("ckpt_step00000003.q2ck").exists());
+
+    // run B: roll back to the step-1 checkpoint explicitly, run one
+    // step, and checkpoint it under aggressive retention. The step-2
+    // checkpoint it writes is the newest *by write time* but not by
+    // name (step 3 still exists) — the prune must spare it.
+    let old = ck.join("ckpt_step00000001.q2ck");
+    let args = train_args(
+        &s,
+        "f32",
+        "ck",
+        "b.jsonl",
+        &["--no-export", "--stop-after", "2", "--keep-last", "1"],
+    );
+    let mut args = args;
+    args.push("--resume-from".into());
+    args.push(old.display().to_string());
+    let out = quartet2_bin(&as_strs(&args), &[]);
+    expect_ok(&out);
+    assert!(
+        stderr_of(&out).contains("resumed from"),
+        "no resume banner:\n{}",
+        stderr_of(&out)
+    );
+
+    // the pointer's target survived the prune
+    let latest = std::fs::read_to_string(ck.join("LATEST")).unwrap();
+    let target = ck.join(latest.trim());
+    assert!(
+        target.exists(),
+        "LATEST points at pruned checkpoint {}",
+        target.display()
+    );
+    assert!(
+        ck.join("ckpt_step00000002.q2ck").exists(),
+        "rollback-lineage checkpoint was pruned"
+    );
+
+    // run C: `auto` must land on the rollback lineage (step 2), not
+    // the abandoned step-3 future, and finish the run
+    let args = train_args(&s, "f32", "ck", "c.jsonl", &["--no-export", "--resume-from", "auto"]);
+    let out = quartet2_bin(&as_strs(&args), &[]);
+    expect_ok(&out);
+    assert!(
+        stderr_of(&out).contains("ckpt_step00000002"),
+        "auto-resume skipped the rollback lineage:\n{}",
+        stderr_of(&out)
+    );
+    assert!(has_event(&s.p("c.jsonl"), "run_end"));
+
+    // the rewound lineage replays run A's trajectory bitwise: B's
+    // step 1 and C's step 2 equal A's
+    let a: BTreeMap<usize, u64> = step_losses(&s.p("a.jsonl")).into_iter().collect();
+    let b: BTreeMap<usize, u64> = step_losses(&s.p("b.jsonl")).into_iter().collect();
+    let c: BTreeMap<usize, u64> = step_losses(&s.p("c.jsonl")).into_iter().collect();
+    assert_eq!(b.get(&1), a.get(&1), "replayed step 1 diverged");
+    assert_eq!(c.get(&2), a.get(&2), "replayed step 2 diverged");
+    assert_eq!(c.keys().max(), Some(&3), "run C did not finish");
+}
+
 #[test]
 fn nan_loss_rollback_recovers_and_completes() {
     let s = Scratch::new("nanroll");

@@ -1,0 +1,173 @@
+//! Properties of the distributed gradient exchange that the training
+//! math depends on:
+//!
+//! * the quantized wire codecs (`ms_eden`, `sr`) are **unbiased** —
+//!   averaged over many independent exchange seeds, the decoded
+//!   gradient converges to the f32 original (the Quartet II estimator
+//!   property, now as a wire format);
+//! * the packed payloads actually compress (>= 5x vs raw f32 for
+//!   grain-aligned parameters);
+//! * one flipped byte anywhere in a framed `Grad` message is always a
+//!   receiver-side error, never a silently different gradient.
+//!
+//! Hand-rolled property loops (no external property-testing crate —
+//! the container pins the dependency set).
+
+use quartet2::dist::wire::{GradCodec, Msg, DIR_UP};
+use quartet2::dist::{frame, CommMode};
+use quartet2::util::rng::Rng;
+use quartet2::ROT_BLOCK;
+
+/// A deterministic "gradient": one grain-aligned block plus a ragged
+/// f32 tail, unit-scale values (what a normalized LM gradient looks
+/// like after clipping).
+fn demo_grad(n: usize) -> Vec<f32> {
+    Rng::seed_from(0x9e37).normal_vec(n)
+}
+
+/// Mean decoded gradient over `trials` independent exchange seeds.
+fn mean_decoded(mode: CommMode, g: &[f32], trials: u64) -> Vec<f64> {
+    let grads = vec![Some(g.to_vec())];
+    let mut sum = vec![0f64; g.len()];
+    for seed in 0..trials {
+        let codec = GradCodec { mode, seed };
+        let (payload, _raw) = codec.encode(3, DIR_UP, 1, &grads).unwrap();
+        let (decoded, _raw) = codec.decode(3, DIR_UP, 1, &payload).unwrap();
+        let d = decoded[0].as_ref().unwrap();
+        assert_eq!(d.len(), g.len());
+        for (s, &x) in sum.iter_mut().zip(d) {
+            *s += x as f64;
+        }
+    }
+    sum.iter().map(|s| s / trials as f64).collect()
+}
+
+fn assert_unbiased(mode: CommMode) {
+    let g = demo_grad(4 * ROT_BLOCK + 9);
+    let trials = 400;
+    let mean = mean_decoded(mode, &g, trials);
+
+    // a single exchange is genuinely lossy (otherwise "unbiased" would
+    // be vacuous): some element must move
+    let codec = GradCodec { mode, seed: 7 };
+    let grads = vec![Some(g.clone())];
+    let (payload, _) = codec.encode(0, DIR_UP, 0, &grads).unwrap();
+    let (one, _) = codec.decode(0, DIR_UP, 0, &payload).unwrap();
+    let one = one[0].as_ref().unwrap();
+    assert!(
+        g.iter().zip(one).any(|(&a, &b)| a.to_bits() != b.to_bits()),
+        "{mode:?} decode was an identity — not a quantized exchange"
+    );
+
+    // ...but the mean over seeds converges to the original. The
+    // quantization noise per element is O(0.1) at unit scale, so the
+    // standard error at 400 trials is ~0.005; the bounds below leave
+    // an order of magnitude of slack while still catching any real
+    // bias (a biased rounding mode sits ~0.05+ off).
+    let dev: Vec<f64> = mean
+        .iter()
+        .zip(&g)
+        .map(|(m, &x)| (m - x as f64).abs())
+        .collect();
+    let mean_dev = dev.iter().sum::<f64>() / dev.len() as f64;
+    let max_dev = dev.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        mean_dev < 0.03,
+        "{mode:?} exchange looks biased: mean |E[decoded] - g| = {mean_dev:.4}"
+    );
+    assert!(
+        max_dev < 0.3,
+        "{mode:?} exchange has a biased element: max dev {max_dev:.4}"
+    );
+
+    // the raw f32 tail (len % ROT_BLOCK) must be exact in every mode
+    let aligned = 4 * ROT_BLOCK;
+    for (i, (&m, &x)) in mean.iter().zip(&g).enumerate().skip(aligned) {
+        assert_eq!(m, x as f64, "tail element {i} not exact");
+    }
+}
+
+#[test]
+fn ms_eden_exchange_is_unbiased_over_seeds() {
+    assert_unbiased(CommMode::MsEden);
+}
+
+#[test]
+fn sr_exchange_is_unbiased_over_seeds() {
+    assert_unbiased(CommMode::Sr);
+}
+
+#[test]
+fn f32_mode_is_exact_and_quantized_modes_compress_5x() {
+    let g = demo_grad(32 * ROT_BLOCK); // 4096 elements, grain-aligned
+    let grads = vec![Some(g.clone())];
+    let raw_bytes = (g.len() * 4) as f64;
+
+    let codec = GradCodec { mode: CommMode::F32, seed: 1 };
+    let (payload, raw) = codec.encode(0, DIR_UP, 0, &grads).unwrap();
+    assert_eq!(raw, g.len() as u64 * 4);
+    let (decoded, _) = codec.decode(0, DIR_UP, 0, &payload).unwrap();
+    let d = decoded[0].as_ref().unwrap();
+    assert!(
+        g.iter().zip(d).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "f32 comm must be a bitwise identity"
+    );
+
+    for mode in [CommMode::MsEden, CommMode::Sr] {
+        let codec = GradCodec { mode, seed: 1 };
+        let (payload, raw) = codec.encode(0, DIR_UP, 0, &grads).unwrap();
+        assert_eq!(raw, g.len() as u64 * 4);
+        let ratio = raw_bytes / payload.len() as f64;
+        assert!(
+            ratio >= 5.0,
+            "{mode:?} payload is {} bytes for {} raw — only {ratio:.2}x",
+            payload.len(),
+            raw_bytes
+        );
+    }
+}
+
+#[test]
+fn every_flipped_byte_of_a_grad_frame_is_detected() {
+    // a realistic Grad message, framed the way a worker sends it
+    let g = demo_grad(2 * ROT_BLOCK + 5);
+    let codec = GradCodec { mode: CommMode::MsEden, seed: 9 };
+    let (params, _) = codec.encode(1, DIR_UP, 1, &[Some(g)]).unwrap();
+    let msg = Msg::Grad { step: 1, rank: 1, lo: 1, rows: 1, loss: 2.25, params };
+    let mut buf = Vec::new();
+    frame::write_frame(&mut buf, &msg.encode()).unwrap();
+
+    // flipping any single byte — length prefix, stored CRC, or payload
+    // — must surface as a read error (truncation, oversized length, or
+    // checksum mismatch), never as an Ok frame with different bytes
+    for off in 0..buf.len() {
+        let mut bad = buf.clone();
+        bad[off] ^= 0x01;
+        assert!(
+            frame::read_frame(&mut &bad[..]).is_err(),
+            "flip at byte {off} of {} was not detected",
+            buf.len()
+        );
+    }
+
+    // the pristine frame still round-trips (the loop above didn't pass
+    // vacuously)
+    let payload = frame::read_frame(&mut &buf[..]).unwrap().unwrap();
+    assert_eq!(Msg::decode(&payload).unwrap(), msg);
+}
+
+#[test]
+fn worker_style_corruption_hook_is_caught_at_any_offset() {
+    // the fault injection the `corrupt_frame:R` worker uses: CRC over
+    // the pristine payload, one byte flipped afterwards
+    let payload: Vec<u8> = Msg::Step { step: 9, lo: 0, hi: 4 }.encode();
+    for off in 0..payload.len() * 2 {
+        let mut buf = Vec::new();
+        frame::write_frame_corrupting(&mut buf, &payload, Some(off)).unwrap();
+        let err = frame::read_frame(&mut &buf[..]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum mismatch"),
+            "offset {off}: {err:#}"
+        );
+    }
+}

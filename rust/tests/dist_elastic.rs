@@ -1,0 +1,394 @@
+//! End-to-end tests of the elastic data-parallel layer, driving the
+//! real `quartet2 train-dist` binary (which spawns real `dist-worker`
+//! subprocesses over real pipes):
+//!
+//! * world size 1 under f32 comm reproduces `train-native` **bitwise**
+//!   — per-step losses and the exported packed serving checkpoint;
+//! * a rank killed mid-run (`kill_rank`) triggers the crash-only path
+//!   (worker_death -> rollback -> respawn) and the finished run's
+//!   exports match an uninterrupted same-world run bit-for-bit;
+//! * a stalled rank (`stall_rank`) is killed by the step deadline and
+//!   the run still completes;
+//! * a corrupted gradient frame (`corrupt_frame`) is surfaced as a
+//!   *named* `corrupt frame from rank R` error and recovered, never
+//!   reduced;
+//! * the MS-EDEN exchange reports >= 5x wire compression end to end.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use quartet2::util::json::Json;
+
+fn quartet2_bin(args: &[&str], envs: &[(&str, &str)]) -> Output {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_quartet2"));
+    c.args(args);
+    for (k, v) in envs {
+        c.env(k, v);
+    }
+    c.output().expect("spawning quartet2")
+}
+
+fn expect_ok(out: &Output) {
+    assert!(
+        out.status.success(),
+        "quartet2 failed ({:?}):\n--- stdout\n{}\n--- stderr\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+struct Scratch {
+    root: PathBuf,
+}
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let root = std::env::temp_dir().join(format!("q2_dist_{tag}"));
+        std::fs::remove_dir_all(&root).ok();
+        std::fs::create_dir_all(&root).unwrap();
+        Scratch { root }
+    }
+
+    fn p(&self, name: &str) -> String {
+        self.root.join(name).display().to_string()
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.root).ok();
+    }
+}
+
+fn as_strs(v: &[String]) -> Vec<&str> {
+    v.iter().map(String::as_str).collect()
+}
+
+/// Shared `train-dist` argument vector: tiny/f32 shape identical to
+/// the checkpoint tests (2 global rows x 64 seq), checkpoint every
+/// step so the rollback anchor is always the failing step.
+fn dist_args(
+    s: &Scratch,
+    workers: &str,
+    comm: &str,
+    steps: &str,
+    ckpt: &str,
+    trace: &str,
+    extra: &[&str],
+) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "train-dist",
+        "--preset",
+        "tiny",
+        "--scheme",
+        "f32",
+        "--workers",
+        workers,
+        "--comm",
+        comm,
+        "--steps",
+        steps,
+        "--batch",
+        "2",
+        "--seq",
+        "64",
+        "--seed",
+        "77",
+        "--log-every",
+        "1",
+        "--checkpoint-every",
+        "1",
+    ]
+    .iter()
+    .map(|x| x.to_string())
+    .collect();
+    v.push("--checkpoint-dir".into());
+    v.push(s.p(ckpt));
+    v.push("--trace-out".into());
+    v.push(s.p(trace));
+    v.extend(extra.iter().map(|x| x.to_string()));
+    v
+}
+
+/// `(step, loss_bits)` of every `train_step` event, in stream order.
+fn step_losses(path: &str) -> Vec<(usize, u64)> {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {path}: {e}"));
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).unwrap();
+        if v.opt("event").and_then(|x| x.as_str().ok()) != Some("train_step") {
+            continue;
+        }
+        let step = v.opt("step").and_then(|x| x.as_f64().ok()).unwrap() as usize;
+        if let Some(l) = v.opt("loss").and_then(|x| x.as_f64().ok()) {
+            out.push((step, l.to_bits()));
+        }
+    }
+    out
+}
+
+/// Last-written loss bits per step (replays overwrite earlier tries).
+fn final_loss_by_step(path: &str) -> BTreeMap<usize, u64> {
+    step_losses(path).into_iter().collect()
+}
+
+fn has_event(path: &str, name: &str) -> bool {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .any(|l| {
+            Json::parse(l)
+                .ok()
+                .and_then(|v| v.opt("event").and_then(|x| x.as_str().ok().map(String::from)))
+                .as_deref()
+                == Some(name)
+        })
+}
+
+/// A numeric field of the trace's `run_end` event.
+fn run_end_field(path: &str, key: &str) -> f64 {
+    let text = std::fs::read_to_string(path).unwrap();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = Json::parse(line).unwrap();
+        if v.opt("event").and_then(|x| x.as_str().ok()) == Some("run_end") {
+            return v
+                .opt(key)
+                .and_then(|x| x.as_f64().ok())
+                .unwrap_or_else(|| panic!("run_end has no numeric {key:?} in {path}"));
+        }
+    }
+    panic!("no run_end event in {path}");
+}
+
+/// All regular files of a directory as `name -> bytes`.
+fn dir_bytes(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    let mut out = BTreeMap::new();
+    for e in std::fs::read_dir(dir).unwrap() {
+        let e = e.unwrap();
+        if e.file_type().unwrap().is_file() {
+            out.insert(
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(e.path()).unwrap(),
+            );
+        }
+    }
+    assert!(!out.is_empty(), "no files under {}", dir.display());
+    out
+}
+
+/// The tentpole parity seam: at world size 1 under f32 comm the whole
+/// exchange (encode -> reduce with weight exactly 1.0 -> decode ->
+/// apply) is a bitwise identity, so `train-dist --workers 1` must
+/// reproduce `train-native` exactly — per-step losses and the packed
+/// serving export.
+#[test]
+fn world1_f32_matches_train_native_bitwise() {
+    let s = Scratch::new("w1");
+
+    let native: Vec<String> = [
+        "train-native",
+        "--preset",
+        "tiny",
+        "--scheme",
+        "f32",
+        "--steps",
+        "4",
+        "--batch",
+        "2",
+        "--seq",
+        "64",
+        "--seed",
+        "77",
+        "--eval-every",
+        "0",
+        "--log-every",
+        "1",
+    ]
+    .iter()
+    .map(|x| x.to_string())
+    .collect();
+    let mut native = native;
+    native.push("--results-dir".into());
+    native.push(s.p("results"));
+    native.push("--trace-out".into());
+    native.push(s.p("native.jsonl"));
+    native.push("--export-checkpoint".into());
+    native.push(s.p("exp_native"));
+    expect_ok(&quartet2_bin(&as_strs(&native), &[]));
+
+    let mut dist = dist_args(&s, "1", "f32", "4", "ck_d", "dist.jsonl", &[]);
+    dist.push("--export-checkpoint".into());
+    dist.push(s.p("exp_dist"));
+    let out = quartet2_bin(&as_strs(&dist), &[]);
+    expect_ok(&out);
+
+    let native_losses = step_losses(&s.p("native.jsonl"));
+    let dist_losses = step_losses(&s.p("dist.jsonl"));
+    assert_eq!(native_losses.len(), 4);
+    assert_eq!(
+        dist_losses, native_losses,
+        "world-1 f32 train-dist diverged from train-native"
+    );
+    assert_eq!(
+        dir_bytes(Path::new(&s.p("exp_native"))),
+        dir_bytes(Path::new(&s.p("exp_dist"))),
+        "packed exports differ"
+    );
+
+    // the dist trace passes the structural obs validator (run_start /
+    // run_end pairing with the dist event vocabulary in between)
+    expect_ok(&quartet2_bin(&["obs-validate", &s.p("dist.jsonl")], &[]));
+}
+
+/// Kill rank 1 mid-exchange; the supervisor must detect the death,
+/// roll every survivor back to the last collective checkpoint, respawn
+/// the rank (clean), finish the run, and end up **bitwise identical**
+/// to an uninterrupted run of the same world size.
+fn kill_rank_scenario(tag: &str, envs: &[(&str, &str)]) {
+    let s = Scratch::new(tag);
+
+    let mut clean = dist_args(&s, "2", "f32", "4", "ck_c", "clean.jsonl", &[]);
+    clean.push("--export-checkpoint".into());
+    clean.push(s.p("exp_clean"));
+    expect_ok(&quartet2_bin(&as_strs(&clean), envs));
+
+    let mut faulted = dist_args(&s, "2", "f32", "4", "ck_f", "fault.jsonl", &[]);
+    faulted.push("--export-checkpoint".into());
+    faulted.push(s.p("exp_fault"));
+    let mut fault_envs = envs.to_vec();
+    fault_envs.push(("QUARTET2_FAULT", "kill_rank:1@step:2"));
+    let out = quartet2_bin(&as_strs(&faulted), &fault_envs);
+    expect_ok(&out);
+
+    let err = stderr_of(&out);
+    assert!(err.contains("worker death"), "no death banner:\n{err}");
+    assert!(err.contains("rollback"), "no rollback banner:\n{err}");
+    assert!(err.contains("respawned rank 1"), "no respawn banner:\n{err}");
+
+    let trace = s.p("fault.jsonl");
+    for ev in ["worker_death", "rollback", "respawn", "run_end"] {
+        assert!(has_event(&trace, ev), "{ev} event missing from {trace}");
+    }
+    assert!(
+        !has_event(&s.p("clean.jsonl"), "worker_death"),
+        "clean run reported a death"
+    );
+
+    // the recovered run's final loss per step equals the uninterrupted
+    // run's, bit for bit (f32 comm, same world size, same sharding)
+    let clean_losses = final_loss_by_step(&s.p("clean.jsonl"));
+    let fault_losses = final_loss_by_step(&trace);
+    assert_eq!(clean_losses.len(), 4);
+    assert_eq!(fault_losses, clean_losses, "recovered run diverged");
+
+    // and the packed exports are byte-identical
+    assert_eq!(
+        dir_bytes(Path::new(&s.p("exp_clean"))),
+        dir_bytes(Path::new(&s.p("exp_fault")))
+    );
+}
+
+#[test]
+fn kill_rank_recovers_and_matches_clean_run() {
+    kill_rank_scenario("kill", &[]);
+}
+
+#[test]
+fn kill_rank_recovers_with_two_threads() {
+    // the same invariant with the GEMM core pinned to a 2-worker
+    // partition inside every rank (workers inherit the env)
+    kill_rank_scenario("kill_t2", &[("QUARTET2_THREADS", "2")]);
+}
+
+/// A stalled rank must not hang the run: the step deadline fires, the
+/// straggler is killed like any other death, and the run completes.
+#[test]
+fn stall_rank_deadline_fires_and_run_completes() {
+    let s = Scratch::new("stall");
+    let args = dist_args(
+        &s,
+        "2",
+        "f32",
+        "3",
+        "ck",
+        "stall.jsonl",
+        &["--no-export", "--step-deadline-ms", "4000"],
+    );
+    let out = quartet2_bin(&as_strs(&args), &[("QUARTET2_FAULT", "stall_rank:0@step:1")]);
+    expect_ok(&out);
+    let err = stderr_of(&out);
+    assert!(
+        err.contains("deadline"),
+        "no straggler-deadline banner:\n{err}"
+    );
+    let trace = s.p("stall.jsonl");
+    for ev in ["worker_death", "rollback", "respawn", "run_end"] {
+        assert!(has_event(&trace, ev), "{ev} event missing");
+    }
+    // the run genuinely finished all 3 steps after the recovery
+    assert_eq!(final_loss_by_step(&trace).len(), 3);
+}
+
+/// A flipped byte in a gradient frame must surface as a *named*
+/// `corrupt frame from rank R` error and take the recovery path — the
+/// corrupted bytes are never reduced into the model.
+#[test]
+fn corrupt_frame_is_named_and_recovered() {
+    let s = Scratch::new("corrupt");
+    let args = dist_args(&s, "2", "f32", "2", "ck", "corrupt.jsonl", &["--no-export"]);
+    let out = quartet2_bin(&as_strs(&args), &[("QUARTET2_FAULT", "corrupt_frame:1")]);
+    expect_ok(&out);
+    let err = stderr_of(&out);
+    assert!(
+        err.contains("corrupt frame from rank 1"),
+        "corruption not named:\n{err}"
+    );
+    assert!(
+        err.contains("checksum mismatch"),
+        "no CRC diagnosis:\n{err}"
+    );
+    let trace = s.p("corrupt.jsonl");
+    for ev in ["worker_death", "rollback", "respawn", "run_end"] {
+        assert!(has_event(&trace, ev), "{ev} event missing");
+    }
+    assert_eq!(final_loss_by_step(&trace).len(), 2);
+}
+
+/// The headline exchange economics: MS-EDEN comm must report >= 5x
+/// compression over raw f32 in the run_end totals (the tiny preset's
+/// parameters are almost entirely 128-grain-aligned, so the packed
+/// sections dominate the wire bytes).
+#[test]
+fn ms_eden_comm_compresses_at_least_5x() {
+    let s = Scratch::new("mseden");
+    let args = dist_args(&s, "2", "ms_eden", "2", "ck", "ms.jsonl", &["--no-export"]);
+    expect_ok(&quartet2_bin(&as_strs(&args), &[]));
+    let trace = s.p("ms.jsonl");
+    let compression = run_end_field(&trace, "compression");
+    let raw = run_end_field(&trace, "exchange_raw_bytes");
+    let wire = run_end_field(&trace, "exchange_wire_bytes");
+    assert!(
+        compression >= 5.0,
+        "ms_eden exchange only {compression:.2}x ({raw} raw / {wire} wire)"
+    );
+    assert!(raw > wire * 5.0);
+
+    // the f32 twin sits near 1x — the gauge measures real wire traffic
+    let args = dist_args(&s, "2", "f32", "2", "ck32", "f32.jsonl", &["--no-export"]);
+    expect_ok(&quartet2_bin(&as_strs(&args), &[]));
+    let f32_compression = run_end_field(&s.p("f32.jsonl"), "compression");
+    assert!(
+        f32_compression < 1.2,
+        "f32 comm reported {f32_compression:.2}x compression"
+    );
+}

@@ -150,6 +150,40 @@ grep -q 'resumed from' "$ft/recover_err.txt"
 cargo run --release --bin quartet2 -- obs-validate \
     "$ft/resumed.jsonl" "$ft/recovered.jsonl"
 
+# elastic data-parallel smoke: a clean 2-worker train-dist run under
+# f32 comm, then a twin with a worker killed mid-exchange — the
+# supervisor must detect the death, roll back to the last collective
+# checkpoint, respawn the rank, and finish with a clean run_end; the
+# obs-report diff gates the recovered loss stream against the clean
+# run bitwise (loss only: replayed steps distort mean step time, so no
+# --max-step-regression here)
+dist="$smoke_dir/dist"
+train_dist() { # trace-name, ckpt-subdir, extra args...
+    local trace="$1" ck="$2"; shift 2
+    QUARTET2_THREADS=2 cargo run --release --bin quartet2 -- train-dist \
+        --preset tiny --scheme f32 --workers 2 --comm f32 \
+        --steps 3 --batch 2 --seq 64 --log-every 1 --no-export \
+        --checkpoint-dir "$dist/$ck" --checkpoint-every 1 \
+        --trace-out "$dist/$trace" "$@"
+}
+train_dist clean.jsonl ck_clean
+QUARTET2_FAULT=kill_rank:1@step:1 train_dist faulted.jsonl ck_fault \
+    2> "$dist/fault_err.txt"
+grep -q 'worker death' "$dist/fault_err.txt"
+grep -q 'respawned rank 1' "$dist/fault_err.txt"
+grep -q '"event":"worker_death"' "$dist/faulted.jsonl"
+grep -q '"event":"rollback"' "$dist/faulted.jsonl"
+grep -q '"event":"respawn"' "$dist/faulted.jsonl"
+cargo run --release --bin quartet2 -- obs-validate \
+    "$dist/clean.jsonl" "$dist/faulted.jsonl"
+cargo run --release --bin quartet2 -- obs-report \
+    "$dist/clean.jsonl" "$dist/faulted.jsonl" --max-loss-diff 0
+
+# the dist test suite proper (W=1 bitwise parity vs train-native,
+# kill/stall/corrupt recovery, MS-EDEN compression) under the same
+# pinned 2-worker GEMM policy
+QUARTET2_THREADS=2 cargo test -q --test dist_elastic --test dist_comm
+
 cargo run --release --bin quartet2 -- obs-validate \
     "$smoke_dir/obs/steps.jsonl" \
     "$smoke_dir/obs/metrics.prom" \
