@@ -1,0 +1,204 @@
+//! Bench: serving-router economics end to end — requests/sec and
+//! client-observed p50/p99 latency through the full HTTP front-end +
+//! admission queue + subprocess-worker path, in three regimes:
+//!
+//! * `steady`   — 2 workers, concurrent load, no faults;
+//! * `failover` — the same load with worker 0 killed mid-stream of its
+//!   first request (`kill_serve_worker` fault), so the tail includes
+//!   failover re-dispatch latency;
+//! * `overload` — 1 worker at ~2x admission capacity, reporting the
+//!   shed rate (structured 503s) alongside the survivors' latency.
+//!
+//! Results land in `results/router.json`; `scripts/bench.sh` copies
+//! that to `BENCH_router.json` at the repo root for cross-PR tracking.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use quartet2::bench::header;
+use quartet2::engine::checkpoint::fault::Fault;
+use quartet2::router::{self, RouterOptions};
+use quartet2::serve::{self, PackedModel, SchedulerOptions};
+use quartet2::util::json::{self, Json};
+
+const MAX_TOKENS: usize = 8;
+
+fn pack_checkpoint(root: &std::path::Path) -> String {
+    let dir = root.join("ckpt");
+    if !PackedModel::exists(&dir) {
+        let cfg = serve::preset("tiny").expect("preset");
+        let weights = serve::ModelWeightsF32::init(&cfg, 7).expect("weights");
+        let model = PackedModel::pack(&weights, true, 7 ^ 0x5e7e).expect("pack");
+        model.save(&dir).expect("save");
+    }
+    dir.display().to_string()
+}
+
+fn opts(checkpoint: &str, workers: usize) -> RouterOptions {
+    let mut sched = SchedulerOptions::default();
+    sched.kv_capacity = 128;
+    sched.temperature = 0.9;
+    sched.seed = 42;
+    RouterOptions {
+        workers,
+        addr: "127.0.0.1:0".into(),
+        checkpoint: checkpoint.to_string(),
+        sched,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_quartet2"))),
+        ..RouterOptions::default()
+    }
+}
+
+fn post(addr: SocketAddr, body: &str) -> (u16, f64) {
+    let t0 = Instant::now();
+    let mut c = TcpStream::connect(addr).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(120))).expect("timeout");
+    let raw = format!(
+        "POST /v1/completions HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    c.write_all(raw.as_bytes()).expect("write");
+    let mut buf = Vec::new();
+    let _ = c.read_to_end(&mut buf);
+    let resp = String::from_utf8_lossy(&buf);
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    (status, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+struct LoadResult {
+    wall_secs: f64,
+    ok_ms: Vec<f64>,
+    ok: usize,
+    shed: usize,
+    failed: usize,
+}
+
+/// Fire `threads x per_thread` requests and bucket the outcomes.
+fn drive(addr: SocketAddr, threads: usize, per_thread: usize) -> LoadResult {
+    let body = format!(r#"{{"prompt": "bench prompt", "max_tokens": {MAX_TOKENS}}}"#);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let body = body.clone();
+            std::thread::spawn(move || {
+                (0..per_thread).map(|_| post(addr, &body)).collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let mut r = LoadResult { wall_secs: 0.0, ok_ms: Vec::new(), ok: 0, shed: 0, failed: 0 };
+    for h in handles {
+        for (status, ms) in h.join().expect("client thread") {
+            match status {
+                200 => {
+                    r.ok += 1;
+                    r.ok_ms.push(ms);
+                }
+                503 => r.shed += 1,
+                _ => r.failed += 1,
+            }
+        }
+    }
+    r.wall_secs = t0.elapsed().as_secs_f64();
+    r.ok_ms.sort_by(f64::total_cmp);
+    r
+}
+
+fn pct(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn scenario(
+    name: &str,
+    checkpoint: &str,
+    workers: usize,
+    fault: Option<Fault>,
+    shape: impl FnOnce(&mut RouterOptions),
+    threads: usize,
+    per_thread: usize,
+) -> Json {
+    let mut o = opts(checkpoint, workers);
+    o.fault = fault;
+    shape(&mut o);
+    let handle = router::start(o).expect("router start");
+    let addr = handle.addr();
+    let r = drive(addr, threads, per_thread);
+    handle.begin_drain();
+    handle.wait().expect("router drain");
+    let total = threads * per_thread;
+    let rps = r.ok as f64 / r.wall_secs.max(1e-9);
+    let (p50, p99) = (pct(&r.ok_ms, 0.50), pct(&r.ok_ms, 0.99));
+    println!(
+        "{name:<10} {total:>5} reqs  {:>6} ok  {:>4} shed  {:>3} failed  {rps:>8.1} req/s  \
+         p50 {p50:>7.1} ms  p99 {p99:>7.1} ms",
+        r.ok, r.shed, r.failed
+    );
+    json::obj(vec![
+        ("name", json::s("router")),
+        ("scenario", json::s(name)),
+        ("workers", json::n(workers as f64)),
+        ("requests", json::n(total as f64)),
+        ("ok", json::n(r.ok as f64)),
+        ("shed", json::n(r.shed as f64)),
+        ("failed", json::n(r.failed as f64)),
+        ("shed_rate", json::n(r.shed as f64 / total as f64)),
+        ("requests_per_sec", json::n(rps)),
+        ("p50_ms", json::n(p50)),
+        ("p99_ms", json::n(p99)),
+    ])
+}
+
+fn main() {
+    header("Serving router: throughput, failover tail, shed rate");
+
+    let scratch = std::env::temp_dir().join("q2_router_bench");
+    std::fs::remove_dir_all(&scratch).ok();
+    std::fs::create_dir_all(&scratch).expect("scratch dir");
+    let ckpt = pack_checkpoint(&scratch);
+
+    let rows = vec![
+        // steady state: 2 workers, moderate concurrency
+        scenario("steady", &ckpt, 2, None, |_| {}, 6, 4),
+        // same load with worker 0 killed mid-stream of its first
+        // request: the p99 absorbs failover re-dispatch
+        scenario(
+            "failover",
+            &ckpt,
+            2,
+            Some(Fault::KillServeWorker { worker: 0, req: 1 }),
+            |_| {},
+            6,
+            4,
+        ),
+        // ~2x overload against one worker with a tight admission
+        // queue: the headline number is the shed rate
+        scenario(
+            "overload",
+            &ckpt,
+            1,
+            None,
+            |o| {
+                o.queue_max = 4;
+                o.worker_inflight_max = 4;
+            },
+            16,
+            1,
+        ),
+    ];
+
+    let results = std::path::Path::new("results");
+    std::fs::create_dir_all(results).expect("results dir");
+    std::fs::write(results.join("router.json"), Json::Arr(rows).to_string())
+        .expect("write results");
+    println!("\nresults -> results/router.json");
+    std::fs::remove_dir_all(&scratch).ok();
+}

@@ -617,10 +617,45 @@ pub fn run_supervisor(opts: &DistOptions) -> Result<()> {
 
     while s < opts.steps {
         let live = sup.live_ranks();
-        ensure!(
-            !live.is_empty(),
-            "no live workers remain at step {s} (all respawn budgets exhausted)"
-        );
+        if live.is_empty() {
+            // every rank exhausted its respawn budget: end the run
+            // cleanly rather than leaving a torn trace. The last
+            // collective checkpoint is the final state — re-verify it,
+            // record it, emit a `run_end` carrying the reason, then
+            // exit non-zero so callers see the failure.
+            let anchor = ckpt.latest_valid()?;
+            if let Some(sink) = sink.as_mut() {
+                if let Some((st, path)) = &anchor {
+                    let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                    sink.event(&checkpoint_event(st.step, path, bytes))?;
+                }
+                sink.event(&json::obj(vec![
+                    ("event", json::s("run_end")),
+                    ("run", json::s(&run_name)),
+                    ("reason", json::s("budget_exhausted")),
+                    ("wall_secs", json::n(t0.elapsed().as_secs_f64())),
+                    ("completed_steps", json::n(s as f64)),
+                    ("world", json::n(0.0)),
+                    ("worker_deaths", json::n(sup.deaths as f64)),
+                    ("respawns", json::n(sup.respawned as f64)),
+                    ("rollbacks", json::n(sup.rollbacks as f64)),
+                ]))?;
+                sink.flush()?;
+            }
+            match &anchor {
+                Some((st, path)) => eprintln!(
+                    "train-dist aborted at step {s}: all respawn budgets exhausted; final \
+                     collective checkpoint is {} (step {})",
+                    path.display(),
+                    st.step
+                ),
+                None => eprintln!(
+                    "train-dist aborted at step {s}: all respawn budgets exhausted and no \
+                     valid checkpoint was ever written"
+                ),
+            }
+            bail!("no live workers remain at step {s} (all respawn budgets exhausted)");
+        }
         if live.len() != last_world {
             obs::gauge("dist.world_size").set(live.len() as f64);
             if grain > 0 {

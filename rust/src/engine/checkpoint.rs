@@ -570,6 +570,23 @@ impl Checkpointer {
 /// * `corrupt_frame:R` — worker rank `R` flips one payload byte of its
 ///   next gradient frame after the CRC is computed; the supervisor
 ///   must detect `corrupt frame from rank R`, never reduce the bytes.
+///
+/// Serving faults, consumed by the `router` front-end (the router arms
+/// the selected serve-worker subprocess via a private one-shot env on
+/// its initial spawn, exactly like the dist supervisor; respawned
+/// workers run clean):
+///
+/// * `kill_serve_worker:R@req:N` — serve-worker `R` exits 137 right
+///   after streaming the first token of the `N`th request it accepted
+///   (1-based): a mid-stream death, so the affected client gets a
+///   structured partial-response error and everything queued or
+///   unstarted on that worker fails over.
+/// * `stall_serve_worker:R` — serve-worker `R` hangs on its next
+///   dispatched request without heartbeating; the router's
+///   heartbeat-silence deadline must kill and respawn it.
+/// * `drop_conn:R` — the HTTP front-end abruptly severs accepted
+///   connection number `R` (1-based) mid-response; the router must
+///   absorb the dead client without wedging a worker.
 pub mod fault {
     use std::sync::OnceLock;
 
@@ -585,6 +602,9 @@ pub mod fault {
         KillRank { rank: usize, step: usize },
         StallRank { rank: usize, step: usize },
         CorruptFrame { rank: usize },
+        KillServeWorker { worker: usize, req: usize },
+        StallServeWorker { worker: usize },
+        DropConn { conn: usize },
     }
 
     /// Parse a `QUARTET2_FAULT` spec.
@@ -624,10 +644,29 @@ pub mod fault {
                 Ok(Fault::StallRank { rank, step })
             }
             "corrupt_frame" => Ok(Fault::CorruptFrame { rank: num("1")? }),
+            "kill_serve_worker" => {
+                let a = arg.with_context(|| {
+                    format!("{kind} needs an argument, e.g. {kind}:1@req:3")
+                })?;
+                let (w, n) = a.split_once("@req:").with_context(|| {
+                    format!("{kind} argument must look like R@req:N, got {a:?}")
+                })?;
+                Ok(Fault::KillServeWorker {
+                    worker: w
+                        .parse::<usize>()
+                        .with_context(|| format!("{kind} worker must be a number"))?,
+                    req: n
+                        .parse::<usize>()
+                        .with_context(|| format!("{kind} request number must be a number"))?,
+                })
+            }
+            "stall_serve_worker" => Ok(Fault::StallServeWorker { worker: num("1")? }),
+            "drop_conn" => Ok(Fault::DropConn { conn: num("1")? }),
             other => bail!(
                 "unknown fault {other:?} (want kill_at_step:N | torn_write | \
                  flip_byte:M | nan_loss_at_step:N | kill_rank:R@step:N | \
-                 stall_rank:R@step:N | corrupt_frame:R)"
+                 stall_rank:R@step:N | corrupt_frame:R | \
+                 kill_serve_worker:R@req:N | stall_serve_worker:R | drop_conn:R)"
             ),
         }
     }
@@ -685,6 +724,22 @@ pub mod fault {
         }
     }
 
+    /// Router hook: the armed serving fault, if any. Worker-targeted
+    /// serving faults travel to the selected serve-worker via a
+    /// private one-shot env on its initial spawn (mirroring
+    /// [`dist_fault`]); `drop_conn` fires inside the router's own HTTP
+    /// front-end.
+    pub fn serve_fault() -> Option<Fault> {
+        match armed() {
+            f @ Some(
+                Fault::KillServeWorker { .. }
+                | Fault::StallServeWorker { .. }
+                | Fault::DropConn { .. },
+            ) => f,
+            _ => None,
+        }
+    }
+
     #[cfg(test)]
     mod tests {
         use super::*;
@@ -704,10 +759,22 @@ pub mod fault {
                 Fault::StallRank { rank: 0, step: 2 }
             );
             assert_eq!(parse("corrupt_frame:1").unwrap(), Fault::CorruptFrame { rank: 1 });
+            assert_eq!(
+                parse("kill_serve_worker:1@req:3").unwrap(),
+                Fault::KillServeWorker { worker: 1, req: 3 }
+            );
+            assert_eq!(
+                parse("stall_serve_worker:0").unwrap(),
+                Fault::StallServeWorker { worker: 0 }
+            );
+            assert_eq!(parse("drop_conn:2").unwrap(), Fault::DropConn { conn: 2 });
             assert!(parse("flip_byte").is_err());
             assert!(parse("kill_at_step:x").is_err());
             assert!(parse("kill_rank:1").is_err());
             assert!(parse("stall_rank:@step:2").is_err());
+            assert!(parse("kill_serve_worker:1").is_err());
+            assert!(parse("kill_serve_worker:1@req:x").is_err());
+            assert!(parse("stall_serve_worker").is_err());
             assert!(parse("segfault").is_err());
         }
     }

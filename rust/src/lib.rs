@@ -58,8 +58,10 @@ pub mod hadamard;
 #[deny(warnings)]
 pub mod kernels;
 pub mod metrics;
+pub mod net;
 pub mod obs;
 pub mod perfmodel;
+pub mod router;
 pub mod runtime;
 pub mod serve;
 pub mod testing;

@@ -12,6 +12,10 @@
 //!   perfmodel    print the analytical Blackwell model report
 //!   generate     one-shot decode from a packed NVFP4 checkpoint
 //!   serve        continuous-batching JSON-lines request loop (stdin)
+//!   router       overload-safe HTTP serving over a self-healing fleet
+//!                of serve-worker subprocesses (admission control,
+//!                load shedding, failover, circuit breakers)
+//!   serve-worker one router fleet member (internal; spawned by router)
 //!   data         inspect the synthetic corpus / batcher
 //!   info         list available artifacts and their contracts
 //!   obs-validate check emitted observability artifacts (JSONL traces,
@@ -158,6 +162,42 @@ USAGE:
                       finishes in-flight requests, prints final stats
                       and exits 0; --prometheus / --chrome-trace also
                       write files at exit
+  quartet2 router     [--workers 2] [--port 8080] [--addr HOST:PORT]
+                      [--preset tiny] [--checkpoint ...] [--max-batch 8]
+                      [--prefill-chunk 32] [--kv-capacity 256]
+                      [--temperature 0] [--seed 42] [--queue-max 64]
+                      [--queue-deadline-ms 10000] [--default-deadline-ms 60000]
+                      [--worker-inflight 16] [--retry-max 2]
+                      [--respawn-budget 3] [--stall-ms 2000]
+                      [--breaker-trip 3] [--breaker-probe-ms 500]
+                      [--obs off|counters|spans] [--trace-out router.jsonl]
+                      [--chrome-trace trace.json] [--prometheus metrics.prom]
+                      overload-safe HTTP serving over --workers
+                      serve-worker subprocesses. POST /v1/completions
+                      {\"prompt\": ..., \"max_tokens\": 32,
+                      [\"deadline_ms\": N,] [\"stream\": true,]
+                      [\"id\": \"...\"]} returns JSON (or an SSE token
+                      stream); GET /healthz, GET /metrics (Prometheus
+                      text), POST /drain. Admission is a bounded queue:
+                      past --queue-max, past the queue-wait deadline, or
+                      dead-on-arrival deadlines shed with a structured
+                      503 + Retry-After. A dead worker's undispatched
+                      requests fail over (exponential backoff, bounded
+                      by --retry-max); in-flight streams terminate with
+                      a structured partial-response error, never a
+                      hang. Per-worker circuit breaker + heartbeat
+                      stall-kill + crash-only respawn under
+                      --respawn-budget; SIGTERM or POST /drain drains
+                      the fleet gracefully. QUARTET2_FAULT=
+                      kill_serve_worker:R@req:N | stall_serve_worker:R
+                      | drop_conn:R injects serving faults (initial
+                      spawn only; workers run clean on respawn)
+  quartet2 serve-worker --worker N --checkpoint DIR [--max-batch 8]
+                      [--prefill-chunk 32] [--kv-capacity 256]
+                      [--temperature 0] [--seed 42]
+                      one router fleet member: framed protocol on
+                      stdin/stdout (spawned by `quartet2 router`; not
+                      for interactive use)
   quartet2 data       [--seed 42] [--batch 4] [--seq 128] [--n 2]
   quartet2 info       [--artifacts-dir artifacts]
   quartet2 obs-validate <file.jsonl|file.prom|trace.json> ...
@@ -200,6 +240,8 @@ fn real_main() -> Result<()> {
         }
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("router") => cmd_router(&args),
+        Some("serve-worker") => cmd_serve_worker(&args),
         Some("data") => cmd_data(&args),
         Some("info") => cmd_info(&args),
         Some("obs-validate") => cmd_obs_validate(&args),
@@ -610,7 +652,13 @@ fn completion_json(c: &serve::Completion, tok: &ByteTokenizer) -> Json {
         ("latency_ms", json::n(c.latency_secs * 1e3)),
         (
             "status",
-            json::s(if c.timed_out { "timeout" } else { "ok" }),
+            json::s(if c.shed {
+                "shed"
+            } else if c.timed_out {
+                "timeout"
+            } else {
+                "ok"
+            }),
         ),
     ])
 }
@@ -648,6 +696,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let emit_error = |e: &anyhow::Error| {
         let err = json::obj(vec![
             ("event", json::s("error")),
+            ("status", json::s("error")),
             ("error", json::s(&format!("{e:#}"))),
         ]);
         println!("{}", err.to_string());
@@ -705,13 +754,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             continue;
                         }
                     }
-                    match parse_request(line, next_id, &tok)
-                        .and_then(|req| {
+                    match parse_request(line, next_id, &tok) {
+                        Ok(req) => {
                             next_id = next_id.max(req.id) + 1;
-                            sched.submit(req)
-                        }) {
-                        Ok(()) => {}
-                        Err(e) => emit_error(&e),
+                            if let Err(e) = sched.submit(req) {
+                                emit_error(&e);
+                            }
+                        }
+                        Err(e) => {
+                            // a malformed line gets a structured error
+                            // reply and the loop keeps serving
+                            quartet2::obs::count!("serve.request.malformed", 1);
+                            emit_error(&e);
+                        }
                     }
                 }
                 Err(std::sync::mpsc::TryRecvError::Empty) => break,
@@ -756,6 +811,93 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     write_obs_exports(args)?;
     Ok(())
+}
+
+/// Forward `SIGTERM`/`SIGINT` into a graceful router drain. The
+/// handler itself only flips an atomic (async-signal-safe); a watcher
+/// thread turns the flip into `begin_drain`.
+#[cfg(unix)]
+fn install_signal_drain(core: std::sync::Arc<quartet2::router::RouterCore>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static TERM: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term);
+        signal(SIGINT, on_term);
+    }
+    std::thread::spawn(move || loop {
+        if TERM.load(Ordering::SeqCst) {
+            eprintln!("router: signal received; draining");
+            core.begin_drain();
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    });
+}
+
+fn cmd_router(args: &Args) -> Result<()> {
+    apply_obs_flag(args)?;
+    // pack a fresh checkpoint if needed so every worker loads the same
+    // weights; the router process itself never runs inference
+    let (model, dir) = load_or_init_model(args)?;
+    let sched = scheduler_options(args, &model)?;
+    drop(model);
+    let addr = match args.opt("addr") {
+        Some(a) => a.to_string(),
+        None => format!("127.0.0.1:{}", args.usize_or("port", 8080)?),
+    };
+    let defaults = quartet2::router::RouterOptions::default();
+    let opts = quartet2::router::RouterOptions {
+        workers: args.usize_or("workers", defaults.workers)?,
+        addr,
+        checkpoint: dir.to_string_lossy().into_owned(),
+        sched,
+        queue_max: args.usize_or("queue-max", defaults.queue_max)?,
+        queue_deadline_ms: args.u64_or("queue-deadline-ms", defaults.queue_deadline_ms)?,
+        default_deadline_ms: args.u64_or("default-deadline-ms", defaults.default_deadline_ms)?,
+        worker_inflight_max: args.usize_or("worker-inflight", defaults.worker_inflight_max)?,
+        retry_max: args.usize_or("retry-max", defaults.retry_max as usize)? as u32,
+        respawn_budget: args.usize_or("respawn-budget", defaults.respawn_budget)?,
+        stall_ms: args.u64_or("stall-ms", defaults.stall_ms)?,
+        breaker_trip: args.usize_or("breaker-trip", defaults.breaker_trip as usize)? as u32,
+        breaker_probe_ms: args.u64_or("breaker-probe-ms", defaults.breaker_probe_ms)?,
+        trace_out: args.opt("trace-out").map(String::from),
+        worker_bin: None,
+        fault: quartet2::engine::checkpoint::fault::serve_fault(),
+    };
+    let handle = quartet2::router::start(opts)?;
+    #[cfg(unix)]
+    install_signal_drain(handle.core());
+    handle.wait()?;
+    write_obs_exports(args)?;
+    Ok(())
+}
+
+fn cmd_serve_worker(args: &Args) -> Result<()> {
+    apply_obs_flag(args)?;
+    let defaults = SchedulerOptions::default();
+    let opts = quartet2::router::ServeWorkerOptions {
+        worker: args.usize_or("worker", 0)?,
+        checkpoint: args
+            .opt("checkpoint")
+            .context("serve-worker requires --checkpoint")?
+            .to_string(),
+        sched: SchedulerOptions {
+            max_batch: args.usize_or("max-batch", defaults.max_batch)?,
+            prefill_chunk: args.usize_or("prefill-chunk", defaults.prefill_chunk)?,
+            kv_capacity: args.usize_or("kv-capacity", defaults.kv_capacity)?,
+            temperature: args.f64_or("temperature", 0.0)? as f32,
+            seed: args.u64_or("seed", 42)?,
+        },
+    };
+    quartet2::router::run_serve_worker(&opts)
 }
 
 fn cmd_data(args: &Args) -> Result<()> {

@@ -1,0 +1,318 @@
+//! Hand-rolled HTTP/1.1 on std: request parsing, fixed-length JSON
+//! responses, and chunked/SSE streaming — the whole wire surface the
+//! router front-end needs, with no dependencies.
+//!
+//! Scope is deliberately narrow: one request per connection
+//! (`Connection: close` on every response), `Content-Length` bodies
+//! only on the way in, chunked transfer encoding only on the way out
+//! (for SSE token streams). Parsing and writing are generic over
+//! `BufRead`/`Write` so the unit tests drive them with in-memory
+//! buffers instead of sockets.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// Cap on the request line + headers (a client streaming an unbounded
+/// header would otherwise pin memory).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Cap on a `Content-Length` body.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// One parsed HTTP request. Header names are lowercased at parse time
+/// (HTTP headers are case-insensitive); values keep their bytes.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn body_json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("request body is not UTF-8")?;
+        Json::parse(text).context("parsing request body as JSON")
+    }
+}
+
+/// Read one line (through `\n`), bounding the bytes consumed so far by
+/// [`MAX_HEAD_BYTES`]. Returns the line without its `\r\n`/`\n`.
+fn read_line<R: BufRead>(r: &mut R, consumed: &mut usize) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r.read_until(b'\n', &mut buf).context("reading HTTP line")?;
+    if n == 0 {
+        return Ok(None); // clean EOF
+    }
+    *consumed += n;
+    ensure!(
+        *consumed <= MAX_HEAD_BYTES,
+        "HTTP head exceeds {MAX_HEAD_BYTES} bytes"
+    );
+    while buf.last() == Some(&b'\n') || buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    let line = String::from_utf8(buf).context("HTTP head is not UTF-8")?;
+    Ok(Some(line))
+}
+
+/// Parse one request off the stream. `Ok(None)` means the peer closed
+/// the connection cleanly before sending anything.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>> {
+    let mut consumed = 0usize;
+    let Some(line) = read_line(r, &mut consumed)? else {
+        return Ok(None);
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if parts.next().is_none() => (m, p, v),
+        _ => bail!("malformed request line {line:?}"),
+    };
+    ensure!(
+        version == "HTTP/1.1" || version == "HTTP/1.0",
+        "unsupported HTTP version {version:?}"
+    );
+    let mut headers = BTreeMap::new();
+    loop {
+        let hline = read_line(r, &mut consumed)?
+            .context("connection closed mid-headers")?;
+        if hline.is_empty() {
+            break;
+        }
+        let (name, value) = hline
+            .split_once(':')
+            .with_context(|| format!("malformed header line {hline:?}"))?;
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    let body = match headers.get("content-length") {
+        None => Vec::new(),
+        Some(v) => {
+            let len: usize = v
+                .parse()
+                .with_context(|| format!("malformed Content-Length {v:?}"))?;
+            ensure!(len <= MAX_BODY_BYTES, "body of {len} bytes exceeds {MAX_BODY_BYTES}");
+            let mut body = vec![0u8; len];
+            r.read_exact(&mut body).context("reading request body")?;
+            body
+        }
+    };
+    Ok(Some(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
+}
+
+/// Reason phrase for the handful of statuses the router emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (and flush). Every response
+/// carries `Connection: close`: one request per connection keeps the
+/// front-end stateless and the parser single-shot.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, status_text(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: close\r\n")?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush().context("flushing HTTP response")
+}
+
+/// Write a JSON response.
+pub fn write_json<W: Write>(w: &mut W, status: u16, body: &Json) -> Result<()> {
+    write_json_headers(w, status, &[], body)
+}
+
+/// Write a JSON response with extra headers (e.g. `Retry-After` on a
+/// load-shedding 503).
+pub fn write_json_headers<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    body: &Json,
+) -> Result<()> {
+    write_response(
+        w,
+        status,
+        "application/json",
+        extra_headers,
+        body.to_string().as_bytes(),
+    )
+}
+
+/// One chunk of a chunked-transfer-encoded body.
+fn write_chunk<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    write!(w, "{:x}\r\n", payload.len())?;
+    w.write_all(payload)?;
+    w.write_all(b"\r\n")?;
+    Ok(())
+}
+
+/// A Server-Sent-Events stream over chunked transfer encoding: each
+/// [`event`](SseStream::event) goes out (and flushes) as one chunk the
+/// moment it is produced, so clients see tokens as they are sampled.
+pub struct SseStream<W: Write> {
+    w: W,
+    finished: bool,
+}
+
+impl<W: Write> SseStream<W> {
+    /// Write the response head and return the live stream.
+    pub fn start(mut w: W) -> Result<SseStream<W>> {
+        write!(w, "HTTP/1.1 200 OK\r\n")?;
+        write!(w, "Content-Type: text/event-stream\r\n")?;
+        write!(w, "Transfer-Encoding: chunked\r\n")?;
+        write!(w, "Cache-Control: no-store\r\n")?;
+        write!(w, "Connection: close\r\n\r\n")?;
+        w.flush().context("flushing SSE head")?;
+        Ok(SseStream { w, finished: false })
+    }
+
+    /// Emit one `event:`/`data:` record.
+    pub fn event(&mut self, name: &str, data: &Json) -> Result<()> {
+        let payload = format!("event: {name}\ndata: {}\n\n", data.to_string());
+        write_chunk(&mut self.w, payload.as_bytes())?;
+        self.w.flush().context("flushing SSE event")
+    }
+
+    /// Terminate the chunked body cleanly. A stream dropped without
+    /// `finish` leaves the encoding unterminated, which clients
+    /// correctly treat as a truncated response — that only happens on
+    /// a transport error, never on a structured router outcome.
+    pub fn finish(mut self) -> Result<()> {
+        self.finished = true;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush().context("flushing SSE terminator")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<HttpRequest>> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"a\": 1}\n",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"{\"a\": 1}\n");
+        assert_eq!(req.body_json().unwrap().get("a").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /healthz HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn eof_before_request_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_lines_are_errors() {
+        assert!(parse("BOGUS\r\n\r\n").is_err());
+        assert!(parse("GET /x HTTP/3.0\r\n\r\n").is_err());
+        assert!(parse("GET /x HTTP/1.1\r\nNoColonHere\r\n\r\n").is_err());
+        assert!(parse("GET /x HTTP/1.1\r\nContent-Length: froot\r\n\r\n").is_err());
+        // headers cut off mid-stream
+        assert!(parse("GET /x HTTP/1.1\r\nHost: y\r\n").is_err());
+    }
+
+    #[test]
+    fn oversized_head_and_body_are_rejected() {
+        let huge = format!("GET /x HTTP/1.1\r\nPad: {}\r\n\r\n", "y".repeat(MAX_HEAD_BYTES));
+        assert!(parse(&huge).is_err());
+        let big_body = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(parse(&big_body).is_err());
+    }
+
+    #[test]
+    fn response_has_length_and_close() {
+        let mut out = Vec::new();
+        write_json_headers(
+            &mut out,
+            503,
+            &[("Retry-After", "1".to_string())],
+            &crate::util::json::obj(vec![("status", crate::util::json::s("error"))]),
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert!(text.contains(&format!("Content-Length: {}\r\n", body.len())));
+    }
+
+    #[test]
+    fn sse_stream_is_chunked_and_terminated() {
+        let mut out = Vec::new();
+        {
+            let mut s = SseStream::start(&mut out).unwrap();
+            s.event("token", &crate::util::json::obj(vec![(
+                "text",
+                crate::util::json::s("hi"),
+            )]))
+            .unwrap();
+            s.finish().unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(text.contains("event: token\ndata: {\"text\": \"hi\"}\n\n"));
+        // the event chunk carries its hex length, and the body ends
+        // with the zero-chunk terminator
+        let payload = "event: token\ndata: {\"text\": \"hi\"}\n\n";
+        assert!(text.contains(&format!("{:x}\r\n{payload}\r\n", payload.len())), "{text}");
+        assert!(text.ends_with("0\r\n\r\n"));
+    }
+}

@@ -1,0 +1,148 @@
+//! Dependency-free network front-end: a `std::net::TcpListener`
+//! accept loop ([`Server`]) plus the HTTP/1.1 + SSE wire layer
+//! ([`http`]).
+//!
+//! The server is deliberately dumb — accept, number the connection,
+//! hand it to the router's handler on a fresh thread. All serving
+//! policy (admission control, shedding, failover) lives in
+//! [`crate::router`]; all protocol bytes live in [`http`]. Connection
+//! numbering is 1-based and deterministic under sequential clients,
+//! which is what lets the `drop_conn:R` fault (see
+//! [`crate::engine::checkpoint::fault`]) sever an exact connection in
+//! CI drills.
+//!
+//! Telemetry: `net.conn.accepted` counts accepted connections,
+//! `net.conn.dropped` counts fault-severed ones, and the router layers
+//! `net.request.malformed` on top for unparseable HTTP.
+
+pub mod http;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// One accepted connection: the stream plus its 1-based accept number
+/// (the `drop_conn:R` fault target).
+pub struct Conn {
+    pub stream: TcpStream,
+    pub id: u64,
+}
+
+/// Stop handle for a running [`Server`] (cloneable across threads).
+#[derive(Clone)]
+pub struct ServerStop {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl ServerStop {
+    /// Ask the accept loop to exit. The loop is usually parked inside
+    /// `accept()`, so a throwaway self-connection nudges it awake; the
+    /// loop sees the flag before handling that connection.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// Blocking accept loop over a bound listener.
+pub struct Server {
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind (port 0 picks an ephemeral port; read it back via
+    /// [`local_addr`](Server::local_addr)).
+    pub fn bind(addr: &str) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding HTTP listener on {addr}"))?;
+        Ok(Server { listener, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading bound listener address")
+    }
+
+    pub fn stopper(&self) -> Result<ServerStop> {
+        Ok(ServerStop { addr: self.local_addr()?, stop: self.stop.clone() })
+    }
+
+    /// Accept until [`ServerStop::stop`]: each connection gets a
+    /// 1-based id and its own handler thread (one request per
+    /// connection, so threads are short-lived). A failed accept is
+    /// logged and skipped — a bad peer must not take the listener
+    /// down.
+    pub fn run<H>(self, handler: H)
+    where
+        H: Fn(Conn) + Send + Sync + 'static,
+    {
+        let handler = Arc::new(handler);
+        let mut next_id = 0u64;
+        for incoming in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match incoming {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("net: accept failed: {e}");
+                    continue;
+                }
+            };
+            next_id += 1;
+            let id = next_id;
+            crate::obs::count!("net.conn.accepted", 1);
+            let h = handler.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("net-conn-{id}"))
+                .spawn(move || h(Conn { stream, id }));
+            if let Err(e) = spawned {
+                eprintln!("net: dropping connection {id}: thread spawn failed: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+
+    #[test]
+    fn serves_connections_and_stops() {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap();
+        let stopper = server.stopper().unwrap();
+        let t = std::thread::spawn(move || {
+            server.run(|mut conn| {
+                let mut buf = [0u8; 1];
+                let _ = conn.stream.read_exact(&mut buf);
+                // echo the accept number back so the test can see ids
+                let _ = write!(conn.stream, "conn {}", conn.id);
+            });
+        });
+        for expect in 1..=2u64 {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.write_all(b"x").unwrap();
+            let mut got = String::new();
+            c.read_to_string(&mut got).unwrap();
+            assert_eq!(got, format!("conn {expect}"));
+        }
+        stopper.stop();
+        t.join().unwrap();
+        // stopped: new connections are refused or go unanswered
+        assert!(
+            TcpStream::connect(addr).is_err()
+                || TcpStream::connect(addr)
+                    .and_then(|mut c| {
+                        let mut s = String::new();
+                        c.read_to_string(&mut s).map(|_| s)
+                    })
+                    .map(|s| s.is_empty())
+                    .unwrap_or(true)
+        );
+    }
+}

@@ -1,0 +1,1518 @@
+//! Overload-safe serving router: an HTTP front-end (via [`crate::net`])
+//! over a supervised fleet of `serve-worker` subprocesses.
+//!
+//! The router is the robustness layer of the serving stack. Every
+//! request passes through explicit admission control before it can
+//! touch a model:
+//!
+//! * **Admission + shedding** — a bounded queue; when it is full, when
+//!   the fleet is draining, or when a request's deadline is already
+//!   dead on arrival, the client gets a structured `503` with
+//!   `Retry-After` instead of silently queueing forever. Queued
+//!   requests whose deadline (or the router's queue-wait deadline)
+//!   expires are shed *before* dispatch — they never burn prefill.
+//! * **Dispatch** — least-loaded across live workers, capped per-worker
+//!   in-flight, gated by a per-worker circuit breaker
+//!   (consecutive-failure trip → timed probe → close).
+//! * **Failover** — a worker death requeues its not-yet-streaming
+//!   requests at the front with exponential backoff (bounded retries);
+//!   requests already streaming terminate with a structured
+//!   partial-response error. Accepted requests always terminate —
+//!   worst case a `router_timeout` at deadline + grace, never a hang.
+//! * **Crash-only supervision** — heartbeat-silence kills stalled
+//!   workers; dead workers respawn under a bounded budget with
+//!   exponential backoff; a worker that exhausts its budget is dropped
+//!   from the fleet.
+//! * **Drain** — `SIGTERM` or `POST /drain` stops admissions, lets
+//!   in-flight work finish, shuts the fleet down, and ends the run
+//!   trace cleanly.
+//!
+//! Determinism: the router assigns request ids; the worker scheduler
+//! folds the rid into its seed, so a failover re-dispatch of the same
+//! rid regenerates the identical tokens on any worker.
+//!
+//! Fault injection (`QUARTET2_FAULT`, resolved once at CLI startup and
+//! passed in as [`RouterOptions::fault`] so tests stay hermetic):
+//! `kill_serve_worker:R@req:N`, `stall_serve_worker:R`, `drop_conn:R`.
+
+pub mod proto;
+pub mod worker;
+
+pub use worker::{run_serve_worker, ServeWorkerOptions};
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufReader, Write as _};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::dist::frame;
+use crate::engine::checkpoint::fault;
+use crate::net::{self, http};
+use crate::obs::{self, export::JsonlSink};
+use crate::serve::{PackedModel, SchedulerOptions};
+use crate::util::json::{self, Json};
+
+use proto::{WMsg, STATUS_OK, STATUS_SHED};
+
+/// Router event-loop tick: the cadence of stall detection, queue
+/// expiry, dispatch, and respawn checks when no worker traffic wakes
+/// the loop sooner.
+const TICK: Duration = Duration::from_millis(20);
+
+/// Base respawn backoff; doubles per consecutive respawn (capped).
+const RESPAWN_BACKOFF_MS: u64 = 50;
+
+/// Base failover re-dispatch backoff; doubles per attempt (capped).
+const FAILOVER_BACKOFF_MS: u64 = 10;
+
+/// Extra slack past a request's deadline before the front-end gives up
+/// waiting for a terminal event and emits `router_timeout`. Generous on
+/// purpose: it only bounds pathological cases (it is the "never hang"
+/// backstop), while normal timeouts are handled by the worker/queue
+/// deadline machinery well before it fires.
+const TERMINAL_GRACE: Duration = Duration::from_secs(30);
+
+/// Full router configuration (CLI flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct RouterOptions {
+    /// Fleet size (must be >= 1).
+    pub workers: usize,
+    /// HTTP bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Packed serving checkpoint directory (must exist).
+    pub checkpoint: String,
+    /// Per-worker scheduler configuration (shared by the whole fleet —
+    /// identical config + seed is what makes failover deterministic).
+    pub sched: SchedulerOptions,
+    /// Admission queue capacity; beyond it requests are shed with 503.
+    pub queue_max: usize,
+    /// Max time a request may wait in the queue before being shed.
+    pub queue_deadline_ms: u64,
+    /// Deadline applied to requests that do not carry their own.
+    pub default_deadline_ms: u64,
+    /// Max in-flight requests dispatched to one worker.
+    pub worker_inflight_max: usize,
+    /// Max failover re-dispatches per request.
+    pub retry_max: u32,
+    /// Max respawns per worker slot before it is dropped.
+    pub respawn_budget: usize,
+    /// Heartbeat silence after which a worker is declared stalled and
+    /// killed (must comfortably exceed [`worker::HEARTBEAT_EVERY`]).
+    pub stall_ms: u64,
+    /// Consecutive failures that trip a worker's circuit breaker.
+    pub breaker_trip: u32,
+    /// How long a tripped breaker stays open before one probe dispatch.
+    pub breaker_probe_ms: u64,
+    /// JSONL run-trace path (`run_start`/`worker_death`/.../`run_end`).
+    pub trace_out: Option<String>,
+    /// Worker binary override. Tests must set this to
+    /// `env!("CARGO_BIN_EXE_quartet2")` — `current_exe()` inside a test
+    /// is the *test* binary, not `quartet2`.
+    pub worker_bin: Option<PathBuf>,
+    /// Injected fault, resolved by the caller (the CLI uses
+    /// [`fault::serve_fault`]; tests pass variants directly so the
+    /// process-global `QUARTET2_FAULT` OnceLock never leaks between
+    /// tests).
+    pub fault: Option<fault::Fault>,
+}
+
+impl Default for RouterOptions {
+    fn default() -> Self {
+        RouterOptions {
+            workers: 2,
+            addr: "127.0.0.1:0".to_string(),
+            checkpoint: String::new(),
+            sched: SchedulerOptions::default(),
+            queue_max: 64,
+            queue_deadline_ms: 10_000,
+            default_deadline_ms: 60_000,
+            worker_inflight_max: 16,
+            retry_max: 2,
+            respawn_budget: 3,
+            stall_ms: 2_000,
+            breaker_trip: 3,
+            breaker_probe_ms: 500,
+            trace_out: None,
+            worker_bin: None,
+            fault: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// circuit breaker
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Per-worker circuit breaker: `breaker_trip` consecutive failures
+/// open it; after `breaker_probe_ms` one probe dispatch is allowed
+/// (half-open); the probe's outcome closes or re-opens it.
+///
+/// Eligibility checks use the *pure* [`Breaker::would_allow`];
+/// [`Breaker::on_dispatch`] (which consumes the Open→HalfOpen
+/// transition) runs only on the worker actually chosen — otherwise
+/// scanning candidates during least-loaded selection would burn probe
+/// slots without dispatching anything.
+#[derive(Debug)]
+struct Breaker {
+    state: BreakerState,
+    fails: u32,
+    trip: u32,
+    probe: Duration,
+    open_until: Instant,
+}
+
+impl Breaker {
+    fn new(trip: u32, probe_ms: u64, now: Instant) -> Breaker {
+        Breaker {
+            state: BreakerState::Closed,
+            fails: 0,
+            trip: trip.max(1),
+            probe: Duration::from_millis(probe_ms),
+            open_until: now,
+        }
+    }
+
+    /// Would a dispatch be allowed right now? (No side effects.)
+    fn would_allow(&self, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => now >= self.open_until,
+            // a probe is already in flight; wait for its verdict
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    /// Record that a dispatch is happening (call only on the chosen
+    /// worker, after `would_allow` said yes).
+    fn on_dispatch(&mut self, now: Instant) {
+        if self.state == BreakerState::Open && now >= self.open_until {
+            self.state = BreakerState::HalfOpen;
+            obs::count!("router.breaker.probe", 1);
+        }
+    }
+
+    fn on_success(&mut self) {
+        if self.state != BreakerState::Closed {
+            obs::count!("router.breaker.close", 1);
+        }
+        self.state = BreakerState::Closed;
+        self.fails = 0;
+    }
+
+    fn on_failure(&mut self, now: Instant) {
+        self.fails += 1;
+        match self.state {
+            BreakerState::Closed if self.fails >= self.trip => {
+                self.state = BreakerState::Open;
+                self.open_until = now + self.probe;
+                obs::count!("router.breaker.trip", 1);
+            }
+            BreakerState::HalfOpen => {
+                // failed probe: straight back to open
+                self.state = BreakerState::Open;
+                self.open_until = now + self.probe;
+                obs::count!("router.breaker.trip", 1);
+            }
+            BreakerState::Open => self.open_until = now + self.probe,
+            BreakerState::Closed => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request plumbing
+
+/// Per-request event stream, delivered to the front-end connection
+/// thread that admitted the request.
+pub enum ReqEv {
+    /// One sampled token's bytes.
+    Token(Vec<u8>),
+    /// Terminal success/timeout/shed record from a worker.
+    Done {
+        status: u8,
+        text: Vec<u8>,
+        prompt_len: u32,
+        ttft_ms: f64,
+        latency_ms: f64,
+        failovers: u32,
+    },
+    /// The worker refused the request at submit time.
+    Rejected { error: String },
+    /// Shed by the router before ever reaching a worker.
+    Shed { code: &'static str, error: String },
+    /// Terminal failure after admission (mid-stream worker death or
+    /// exhausted failover retries); `partial` counts tokens already
+    /// streamed.
+    Failed { error: String, partial: usize },
+}
+
+/// One admitted-but-not-yet-dispatched request.
+struct Pending {
+    rid: u64,
+    prompt: Vec<u8>,
+    max_tokens: u32,
+    /// Absolute completion deadline.
+    deadline: Instant,
+    /// When the request was admitted (queue-wait + latency clock).
+    enqueued: Instant,
+    /// Failover re-dispatches so far.
+    attempts: u32,
+    /// Backoff gate: not dispatched before this instant.
+    not_before: Instant,
+    tx: mpsc::Sender<ReqEv>,
+}
+
+/// One dispatched request, resident on a worker (the owning slot
+/// tracks the rid in its `rids` list).
+struct InFlight {
+    pending: Pending,
+    /// Tokens already streamed to the client (>0 blocks failover —
+    /// replaying would duplicate output the client already has).
+    streamed: usize,
+}
+
+struct Wproc {
+    child: Child,
+    stdin: ChildStdin,
+}
+
+/// One fleet slot: the live subprocess (if any) plus its supervision
+/// state. Slots are fixed; processes come and go inside them.
+struct WorkerSlot {
+    proc: Option<Wproc>,
+    /// Incarnation number; stale reader-thread events are filtered by
+    /// comparing against it.
+    gen: u64,
+    last_seen: Instant,
+    /// rids currently dispatched to this incarnation.
+    rids: Vec<u64>,
+    respawns: usize,
+    spawned_once: bool,
+    /// When a pending respawn becomes due.
+    respawn_at: Option<Instant>,
+    /// Respawn budget exhausted; slot is permanently out.
+    dropped: bool,
+    breaker: Breaker,
+    hb_active: u32,
+    hb_queued: u32,
+}
+
+enum Event {
+    Msg(WMsg),
+    Eof,
+    Failed(String),
+}
+
+enum Input {
+    /// (worker slot, incarnation, event) from a reader thread.
+    Worker((usize, u64, Event)),
+    /// Nudge the loop (new admission, drain request).
+    Wake,
+}
+
+#[derive(Default)]
+struct Totals {
+    admitted: u64,
+    completed: u64,
+    shed: u64,
+    timeouts: u64,
+    failovers: u64,
+    errors: u64,
+    deaths: u64,
+    respawns: u64,
+}
+
+struct State {
+    queue: VecDeque<Pending>,
+    inflight: HashMap<u64, InFlight>,
+    workers: Vec<WorkerSlot>,
+    draining: bool,
+    /// Drain fully completed; the event loop exits on seeing this.
+    drained: bool,
+    next_rid: u64,
+    next_gen: u64,
+    totals: Totals,
+}
+
+/// The shared router core: options + state + the event-loop sender.
+pub struct RouterCore {
+    opts: RouterOptions,
+    state: Mutex<State>,
+    tx: Mutex<mpsc::Sender<Input>>,
+    started: Instant,
+}
+
+/// Outcome of [`RouterCore::submit`].
+pub enum SubmitOutcome {
+    /// Admitted: consume `rx` until a terminal [`ReqEv`].
+    Admitted { rid: u64, rx: mpsc::Receiver<ReqEv>, deadline: Instant },
+    /// Shed with a structured reason; surface as 503 + `Retry-After`.
+    Shed { code: &'static str, error: String, retry_after_secs: u64 },
+    /// Malformed request (empty prompt, zero budget); surface as 400.
+    Invalid { error: String },
+}
+
+/// Handle to a running router: address, drain trigger, and the join
+/// point for the event loop.
+pub struct RouterHandle {
+    core: Arc<RouterCore>,
+    addr: SocketAddr,
+    stopper: net::ServerStop,
+    router_thread: std::thread::JoinHandle<Result<()>>,
+}
+
+impl RouterHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn core(&self) -> Arc<RouterCore> {
+        self.core.clone()
+    }
+
+    /// Stop admissions and wind the fleet down (idempotent).
+    pub fn begin_drain(&self) {
+        self.core.begin_drain();
+    }
+
+    /// Block until drain completes, then stop the HTTP listener.
+    pub fn wait(self) -> Result<()> {
+        let result = match self.router_thread.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("router event loop panicked"),
+        };
+        self.stopper.stop();
+        result
+    }
+}
+
+/// Spawn the fleet, bind the HTTP front-end, and start the event loop.
+pub fn start(opts: RouterOptions) -> Result<RouterHandle> {
+    ensure!(opts.workers > 0, "router needs at least one worker");
+    ensure!(
+        PackedModel::exists(std::path::Path::new(&opts.checkpoint)),
+        "no packed checkpoint at {:?} (run `quartet2 pack` or `quartet2 router` \
+         with a fresh --checkpoint dir to create one)",
+        opts.checkpoint
+    );
+
+    let mut sink = match &opts.trace_out {
+        Some(p) => Some(JsonlSink::create(std::path::Path::new(p))?),
+        None => None,
+    };
+    if let Some(sink) = sink.as_mut() {
+        sink.event(&json::obj(vec![
+            ("event", json::s("run_start")),
+            ("kind", json::s("router")),
+            ("workers", json::n(opts.workers as f64)),
+            ("queue_max", json::n(opts.queue_max as f64)),
+            ("respawn_budget", json::n(opts.respawn_budget as f64)),
+        ]))?;
+        sink.flush()?;
+    }
+
+    let server = net::Server::bind(&opts.addr)?;
+    let addr = server.local_addr()?;
+    let stopper = server.stopper()?;
+
+    let (tx, rx) = mpsc::channel::<Input>();
+    let now = Instant::now();
+    let workers = (0..opts.workers)
+        .map(|_| WorkerSlot {
+            proc: None,
+            gen: 0,
+            last_seen: now,
+            rids: Vec::new(),
+            respawns: 0,
+            spawned_once: false,
+            respawn_at: None,
+            dropped: false,
+            breaker: Breaker::new(opts.breaker_trip, opts.breaker_probe_ms, now),
+            hb_active: 0,
+            hb_queued: 0,
+        })
+        .collect();
+    let core = Arc::new(RouterCore {
+        opts,
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            inflight: HashMap::new(),
+            workers,
+            draining: false,
+            drained: false,
+            next_rid: 1,
+            next_gen: 0,
+            totals: Totals::default(),
+        }),
+        tx: Mutex::new(tx),
+        started: now,
+    });
+
+    {
+        let mut st = core.st();
+        for w in 0..core.opts.workers {
+            core.spawn_worker(&mut st, w)
+                .with_context(|| format!("spawning initial worker {w}"))?;
+        }
+    }
+
+    let loop_core = core.clone();
+    let router_thread = std::thread::Builder::new()
+        .name("router".to_string())
+        .spawn(move || loop_core.run(rx, sink))
+        .context("spawning router event loop")?;
+
+    let conn_core = core.clone();
+    std::thread::Builder::new()
+        .name("router-accept".to_string())
+        .spawn(move || {
+            server.run(move |conn| handle_conn(&conn_core, conn));
+        })
+        .context("spawning router accept loop")?;
+
+    eprintln!(
+        "router: listening on {addr} with {} worker(s)",
+        core.opts.workers
+    );
+    Ok(RouterHandle { core, addr, stopper, router_thread })
+}
+
+impl RouterCore {
+    /// Lock the state, recovering from a poisoned mutex (a panicked
+    /// connection thread must not wedge supervision).
+    fn st(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn tx(&self) -> mpsc::Sender<Input> {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    // -- admission ---------------------------------------------------------
+
+    /// Admit, shed, or reject one request. The caller owns the
+    /// returned receiver; the event loop owns everything else.
+    pub fn submit(
+        &self,
+        prompt: Vec<u8>,
+        max_tokens: u32,
+        deadline_ms: Option<u64>,
+    ) -> SubmitOutcome {
+        if prompt.is_empty() {
+            return SubmitOutcome::Invalid { error: "empty prompt".to_string() };
+        }
+        if max_tokens == 0 {
+            return SubmitOutcome::Invalid { error: "max_tokens must be >= 1".to_string() };
+        }
+        let mut st = self.st();
+        if st.draining || st.drained {
+            return self.shed_at_admission(
+                &mut st,
+                "draining",
+                "router is draining; not accepting new requests".to_string(),
+                5,
+            );
+        }
+        if st.workers.iter().all(|w| w.dropped) {
+            return self.shed_at_admission(
+                &mut st,
+                "no_workers",
+                "all workers exhausted their respawn budget".to_string(),
+                5,
+            );
+        }
+        if deadline_ms == Some(0) {
+            // dead on arrival: shed before admission, never queued
+            return self.shed_at_admission(
+                &mut st,
+                "expired_deadline",
+                "deadline_ms expired before admission".to_string(),
+                0,
+            );
+        }
+        if st.queue.len() >= self.opts.queue_max {
+            return self.shed_at_admission(
+                &mut st,
+                "overloaded",
+                format!("admission queue full ({} waiting)", st.queue.len()),
+                1,
+            );
+        }
+        let rid = st.next_rid;
+        st.next_rid += 1;
+        st.totals.admitted += 1;
+        obs::count!("router.request.admitted", 1);
+        let now = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let deadline =
+            now + Duration::from_millis(deadline_ms.unwrap_or(self.opts.default_deadline_ms));
+        st.queue.push_back(Pending {
+            rid,
+            prompt,
+            max_tokens,
+            deadline,
+            enqueued: now,
+            attempts: 0,
+            not_before: now,
+            tx,
+        });
+        drop(st);
+        let _ = self.tx().send(Input::Wake);
+        SubmitOutcome::Admitted { rid, rx, deadline }
+    }
+
+    fn shed_at_admission(
+        &self,
+        st: &mut State,
+        code: &'static str,
+        error: String,
+        retry_after_secs: u64,
+    ) -> SubmitOutcome {
+        st.totals.shed += 1;
+        obs::count!("router.request.shed", 1);
+        SubmitOutcome::Shed { code, error, retry_after_secs }
+    }
+
+    /// Shed one already-queued request (expired deadline, queue-wait
+    /// deadline, fleet collapse).
+    fn shed_queued(&self, st: &mut State, p: Pending, code: &'static str, error: String) {
+        st.totals.shed += 1;
+        obs::count!("router.request.shed", 1);
+        obs::record_ns("router.latency.shed", p.enqueued.elapsed().as_nanos() as u64);
+        eprintln!("router: shedding request {} ({code}): {error}", p.rid);
+        let _ = p.tx.send(ReqEv::Shed { code, error });
+    }
+
+    /// Stop admissions; the event loop finishes in-flight work and
+    /// shuts the fleet down.
+    pub fn begin_drain(&self) {
+        let mut st = self.st();
+        if !st.draining {
+            st.draining = true;
+            eprintln!("router: drain requested");
+        }
+        drop(st);
+        let _ = self.tx().send(Input::Wake);
+    }
+
+    /// `/healthz` payload.
+    pub fn health_json(&self) -> Json {
+        let st = self.st();
+        let live = st.workers.iter().filter(|w| w.proc.is_some()).count();
+        let status = if st.draining || st.drained {
+            "draining"
+        } else if st.workers.iter().all(|w| w.dropped) {
+            "down"
+        } else {
+            "ok"
+        };
+        let workers = st
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(w, s)| {
+                json::obj(vec![
+                    ("worker", json::n(w as f64)),
+                    ("live", Json::Bool(s.proc.is_some())),
+                    ("dropped", Json::Bool(s.dropped)),
+                    ("inflight", json::n(s.rids.len() as f64)),
+                    ("active", json::n(s.hb_active as f64)),
+                    ("queued", json::n(s.hb_queued as f64)),
+                    ("respawns", json::n(s.respawns as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("status", json::s(status)),
+            ("workers_live", json::n(live as f64)),
+            ("workers_total", json::n(st.workers.len() as f64)),
+            ("queue_depth", json::n(st.queue.len() as f64)),
+            ("inflight", json::n(st.inflight.len() as f64)),
+            ("draining", Json::Bool(st.draining)),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
+
+    // -- fleet supervision -------------------------------------------------
+
+    /// Spawn (or respawn) the subprocess for slot `w`.
+    fn spawn_worker(self: &Arc<Self>, st: &mut State, w: usize) -> Result<()> {
+        let exe = match &self.opts.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe().context("resolving quartet2 binary path")?,
+        };
+        let s = &self.opts.sched;
+        let mut cmd = Command::new(&exe);
+        cmd.arg("serve-worker")
+            .arg("--worker")
+            .arg(w.to_string())
+            .arg("--checkpoint")
+            .arg(&self.opts.checkpoint)
+            .arg("--max-batch")
+            .arg(s.max_batch.to_string())
+            .arg("--prefill-chunk")
+            .arg(s.prefill_chunk.to_string())
+            .arg("--kv-capacity")
+            .arg(s.kv_capacity.to_string())
+            .arg("--temperature")
+            .arg(s.temperature.to_string())
+            .arg("--seed")
+            .arg(s.seed.to_string())
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            // workers never inherit the router's fault spec wholesale —
+            // targeted faults are re-armed explicitly below
+            .env_remove("QUARTET2_FAULT")
+            .env_remove("QUARTET2_SERVE_FAULT");
+        let slot = &mut st.workers[w];
+        if !slot.spawned_once {
+            // arm worker-targeted faults on the initial spawn only, so
+            // a respawned worker always runs clean
+            match self.opts.fault {
+                Some(fault::Fault::KillServeWorker { worker, req }) if worker == w => {
+                    cmd.env("QUARTET2_SERVE_FAULT", format!("kill_serve_worker:{worker}@req:{req}"));
+                }
+                Some(fault::Fault::StallServeWorker { worker }) if worker == w => {
+                    cmd.env("QUARTET2_SERVE_FAULT", format!("stall_serve_worker:{worker}"));
+                }
+                _ => {}
+            }
+        }
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawning serve-worker {w} from {exe:?}"))?;
+        let stdin = child.stdin.take().context("taking serve-worker stdin")?;
+        let stdout = child.stdout.take().context("taking serve-worker stdout")?;
+
+        st.next_gen += 1;
+        let gen = st.next_gen;
+        let tx = self.tx();
+        std::thread::Builder::new()
+            .name(format!("router-reader-{w}"))
+            .spawn(move || reader_loop(w, gen, stdout, tx))
+            .context("spawning worker reader thread")?;
+
+        let slot = &mut st.workers[w];
+        slot.proc = Some(Wproc { child, stdin });
+        slot.gen = gen;
+        slot.last_seen = Instant::now();
+        slot.rids.clear();
+        slot.spawned_once = true;
+        slot.respawn_at = None;
+        slot.hb_active = 0;
+        slot.hb_queued = 0;
+        Ok(())
+    }
+
+    /// A worker incarnation ended (EOF, transport failure, stall kill,
+    /// write failure): reap it, fail over its requests, schedule its
+    /// respawn.
+    fn worker_down(&self, st: &mut State, w: usize, reason: &str, sink: &mut Option<JsonlSink>) {
+        let now = Instant::now();
+        let slot = &mut st.workers[w];
+        if let Some(mut proc) = slot.proc.take() {
+            let _ = proc.child.kill();
+            let _ = proc.child.wait();
+        }
+        st.totals.deaths += 1;
+        obs::count!("router.worker_death", 1);
+        eprintln!("router: worker {w} death: {reason}");
+        if let Some(sink) = sink.as_mut() {
+            let _ = sink.event(&json::obj(vec![
+                ("event", json::s("worker_death")),
+                ("worker", json::n(w as f64)),
+                ("reason", json::s(reason)),
+            ]));
+        }
+        let slot = &mut st.workers[w];
+        slot.breaker.on_failure(now);
+        slot.hb_active = 0;
+        slot.hb_queued = 0;
+        let orphans = std::mem::take(&mut slot.rids);
+
+        for rid in orphans {
+            let Some(inf) = st.inflight.remove(&rid) else { continue };
+            let mut p = inf.pending;
+            if inf.streamed == 0 && p.attempts < self.opts.retry_max {
+                // safe to replay: nothing reached the client yet, and
+                // the rid-seeded RNG regenerates identical tokens
+                p.attempts += 1;
+                p.not_before = now
+                    + Duration::from_millis(
+                        FAILOVER_BACKOFF_MS << (p.attempts - 1).min(4),
+                    );
+                st.totals.failovers += 1;
+                obs::count!("router.request.failover", 1);
+                st.queue.push_front(p);
+            } else {
+                let error = if inf.streamed > 0 {
+                    format!(
+                        "worker {w} died mid-stream after {} token(s): {reason}",
+                        inf.streamed
+                    )
+                } else {
+                    format!(
+                        "request exhausted its {} failover retries (last worker {w}: {reason})",
+                        self.opts.retry_max
+                    )
+                };
+                st.totals.errors += 1;
+                obs::count!("router.request.error", 1);
+                obs::record_ns("router.latency.error", p.enqueued.elapsed().as_nanos() as u64);
+                let _ = p.tx.send(ReqEv::Failed { error, partial: inf.streamed });
+            }
+        }
+
+        let slot = &mut st.workers[w];
+        if slot.respawns < self.opts.respawn_budget {
+            let backoff = RESPAWN_BACKOFF_MS << slot.respawns.min(4);
+            slot.respawn_at = Some(now + Duration::from_millis(backoff));
+        } else {
+            slot.dropped = true;
+            eprintln!(
+                "router: worker {w} dropped (respawn budget {} exhausted)",
+                self.opts.respawn_budget
+            );
+        }
+    }
+
+    // -- event loop --------------------------------------------------------
+
+    fn run(self: Arc<Self>, rx: mpsc::Receiver<Input>, mut sink: Option<JsonlSink>) -> Result<()> {
+        loop {
+            match rx.recv_timeout(TICK) {
+                Ok(input) => {
+                    self.handle_input(input, &mut sink);
+                    // drain whatever else queued up behind it
+                    while let Ok(more) = rx.try_recv() {
+                        self.handle_input(more, &mut sink);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            self.tick(&mut sink);
+            if self.st().drained {
+                break;
+            }
+        }
+
+        let st = self.st();
+        if let Some(sink) = sink.as_mut() {
+            sink.event(&json::obj(vec![
+                ("event", json::s("run_end")),
+                ("wall_secs", json::n(self.started.elapsed().as_secs_f64())),
+                ("admitted", json::n(st.totals.admitted as f64)),
+                ("completed", json::n(st.totals.completed as f64)),
+                ("shed", json::n(st.totals.shed as f64)),
+                ("timeouts", json::n(st.totals.timeouts as f64)),
+                ("failovers", json::n(st.totals.failovers as f64)),
+                ("errors", json::n(st.totals.errors as f64)),
+                ("worker_deaths", json::n(st.totals.deaths as f64)),
+                ("respawns", json::n(st.totals.respawns as f64)),
+            ]))?;
+            sink.flush()?;
+        }
+        eprintln!(
+            "router: drained after {:.1}s: {} admitted, {} completed, {} shed, {} timeouts, \
+             {} failovers, {} errors, {} worker deaths, {} respawns",
+            self.started.elapsed().as_secs_f64(),
+            st.totals.admitted,
+            st.totals.completed,
+            st.totals.shed,
+            st.totals.timeouts,
+            st.totals.failovers,
+            st.totals.errors,
+            st.totals.deaths,
+            st.totals.respawns,
+        );
+        Ok(())
+    }
+
+    fn handle_input(&self, input: Input, sink: &mut Option<JsonlSink>) {
+        let (w, gen, ev) = match input {
+            Input::Wake => return,
+            Input::Worker(t) => t,
+        };
+        let mut st = self.st();
+        let slot = &st.workers[w];
+        // stale incarnation: a reader thread of an already-reaped
+        // process; its events are history
+        if slot.proc.is_none() || slot.gen != gen {
+            return;
+        }
+        match ev {
+            Event::Msg(msg) => self.on_msg(&mut st, w, msg),
+            Event::Eof => self.worker_down(&mut st, w, "stdout closed (process exit)", sink),
+            Event::Failed(e) => {
+                let reason = format!("transport error: {e}");
+                self.worker_down(&mut st, w, &reason, sink);
+            }
+        }
+    }
+
+    fn on_msg(&self, st: &mut State, w: usize, msg: WMsg) {
+        st.workers[w].last_seen = Instant::now();
+        match msg {
+            WMsg::Hello { .. } => {}
+            WMsg::Heartbeat { active, queued, .. } => {
+                st.workers[w].hb_active = active;
+                st.workers[w].hb_queued = queued;
+            }
+            WMsg::Token { rid, text } => {
+                if let Some(inf) = st.inflight.get_mut(&rid) {
+                    inf.streamed += 1;
+                    let _ = inf.pending.tx.send(ReqEv::Token(text));
+                }
+            }
+            WMsg::Done { rid, status, prompt_len, ttft_ms, latency_ms, text } => {
+                let Some(inf) = st.inflight.remove(&rid) else { return };
+                st.workers[w].rids.retain(|&r| r != rid);
+                st.workers[w].breaker.on_success();
+                let p = inf.pending;
+                let wall_ns = p.enqueued.elapsed().as_nanos() as u64;
+                if status == STATUS_OK {
+                    st.totals.completed += 1;
+                    obs::count!("router.request.completed", 1);
+                    if p.attempts == 0 {
+                        obs::record_ns("router.latency.ok", wall_ns);
+                    } else {
+                        obs::record_ns("router.latency.failover", wall_ns);
+                    }
+                } else {
+                    // worker-side timeout or worker-side queue shed —
+                    // either way the deadline ran out after admission
+                    st.totals.timeouts += 1;
+                    obs::count!("router.request.timeout", 1);
+                    obs::record_ns("router.latency.timeout", wall_ns);
+                }
+                let _ = p.tx.send(ReqEv::Done {
+                    status,
+                    text,
+                    prompt_len,
+                    ttft_ms,
+                    latency_ms,
+                    failovers: p.attempts,
+                });
+            }
+            WMsg::Reject { rid, error } => {
+                let Some(inf) = st.inflight.remove(&rid) else { return };
+                st.workers[w].rids.retain(|&r| r != rid);
+                st.totals.errors += 1;
+                obs::count!("router.request.error", 1);
+                obs::record_ns(
+                    "router.latency.error",
+                    inf.pending.enqueued.elapsed().as_nanos() as u64,
+                );
+                let _ = inf.pending.tx.send(ReqEv::Rejected { error });
+            }
+            WMsg::Submit { .. } | WMsg::Drain | WMsg::Shutdown => {
+                eprintln!("router: unexpected router-bound message from worker {w}");
+            }
+        }
+    }
+
+    fn tick(self: &Arc<Self>, sink: &mut Option<JsonlSink>) {
+        let mut st = self.st();
+        let now = Instant::now();
+
+        // 1) stall detection: a live worker gone heartbeat-silent is
+        //    killed here; worker_down runs the normal failover path
+        let stall = Duration::from_millis(self.opts.stall_ms);
+        let stalled: Vec<usize> = st
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.proc.is_some() && now.duration_since(s.last_seen) > stall)
+            .map(|(w, _)| w)
+            .collect();
+        for w in stalled {
+            obs::count!("router.heartbeat.miss", 1);
+            let reason = format!("no heartbeat for {} ms (stalled; killed)", self.opts.stall_ms);
+            self.worker_down(&mut st, w, &reason, sink);
+        }
+
+        // 2) queue expiry: shed at dequeue-scan time, before dispatch
+        let queue_wait = Duration::from_millis(self.opts.queue_deadline_ms);
+        let mut i = 0;
+        while i < st.queue.len() {
+            let p = &st.queue[i];
+            if now >= p.deadline {
+                let p = st.queue.remove(i).unwrap();
+                let waited = p.enqueued.elapsed().as_millis();
+                self.shed_queued(
+                    &mut st,
+                    p,
+                    "expired_deadline",
+                    format!("deadline expired after {waited} ms in queue"),
+                );
+            } else if now.duration_since(p.enqueued) > queue_wait {
+                let p = st.queue.remove(i).unwrap();
+                self.shed_queued(
+                    &mut st,
+                    p,
+                    "queue_deadline",
+                    format!(
+                        "queued longer than the router's {} ms queue-wait deadline",
+                        self.opts.queue_deadline_ms
+                    ),
+                );
+            } else {
+                i += 1;
+            }
+        }
+
+        // 3) dispatch: least-loaded live worker with breaker headroom
+        loop {
+            let Some(pos) = st.queue.iter().position(|p| p.not_before <= now) else { break };
+            let target = st
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| {
+                    s.proc.is_some()
+                        && s.rids.len() < self.opts.worker_inflight_max
+                        && s.breaker.would_allow(now)
+                })
+                .min_by_key(|(w, s)| (s.rids.len(), *w))
+                .map(|(w, _)| w);
+            let Some(w) = target else { break };
+            let p = st.queue.remove(pos).unwrap();
+            let remaining_ms =
+                p.deadline.saturating_duration_since(now).as_millis().max(1) as u64;
+            let msg = WMsg::Submit {
+                rid: p.rid,
+                prompt: p.prompt.clone(),
+                max_tokens: p.max_tokens,
+                deadline_ms: remaining_ms,
+            };
+            let rid = p.rid;
+            let wrote = {
+                let slot = &mut st.workers[w];
+                let stdin = &mut slot.proc.as_mut().expect("live worker").stdin;
+                frame::write_frame(stdin, &msg.encode())
+            };
+            match wrote {
+                Ok(()) => {
+                    let slot = &mut st.workers[w];
+                    slot.breaker.on_dispatch(now);
+                    slot.rids.push(rid);
+                    obs::count!("router.request.dispatched", 1);
+                    st.inflight.insert(rid, InFlight { pending: p, streamed: 0 });
+                }
+                Err(e) => {
+                    // the pipe is dead: requeue this request unharmed
+                    // and run the death path for the worker
+                    st.queue.push_front(p);
+                    let reason = format!("stdin write failed: {e:#}");
+                    self.worker_down(&mut st, w, &reason, sink);
+                }
+            }
+        }
+
+        // 4) drain completion: queue and in-flight are empty, so shut
+        //    the fleet down and let the event loop exit
+        if st.draining && !st.drained && st.queue.is_empty() && st.inflight.is_empty() {
+            for w in 0..st.workers.len() {
+                let slot = &mut st.workers[w];
+                let Some(mut proc) = slot.proc.take() else { continue };
+                let _ = frame::write_frame(&mut proc.stdin, &WMsg::Shutdown.encode());
+                let _ = proc.stdin.flush();
+                // bounded reap: a wedged worker must not block drain
+                let reap_by = Instant::now() + Duration::from_millis(500);
+                loop {
+                    match proc.child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < reap_by => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        _ => {
+                            let _ = proc.child.kill();
+                            let _ = proc.child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            if let Some(sink) = sink.as_mut() {
+                let _ = sink.event(&json::obj(vec![("event", json::s("drain"))]));
+                let _ = sink.flush();
+            }
+            st.drained = true;
+        }
+
+        // 5) respawns that have come due
+        for w in 0..st.workers.len() {
+            let slot = &st.workers[w];
+            if slot.proc.is_some() || slot.dropped {
+                continue;
+            }
+            let Some(due) = slot.respawn_at else { continue };
+            if now < due {
+                continue;
+            }
+            let slot = &mut st.workers[w];
+            slot.respawns += 1;
+            st.totals.respawns += 1;
+            let attempt = st.workers[w].respawns;
+            match self.spawn_worker(&mut st, w) {
+                Ok(()) => {
+                    obs::count!("router.worker_respawn", 1);
+                    eprintln!(
+                        "router: respawned worker {w} (attempt {attempt}/{})",
+                        self.opts.respawn_budget
+                    );
+                    if let Some(sink) = sink.as_mut() {
+                        let _ = sink.event(&json::obj(vec![
+                            ("event", json::s("respawn")),
+                            ("worker", json::n(w as f64)),
+                            ("attempt", json::n(attempt as f64)),
+                        ]));
+                    }
+                }
+                Err(e) => {
+                    eprintln!("router: respawn of worker {w} failed: {e:#}");
+                    let slot = &mut st.workers[w];
+                    if slot.respawns < self.opts.respawn_budget {
+                        slot.respawn_at =
+                            Some(now + Duration::from_millis(RESPAWN_BACKOFF_MS << slot.respawns.min(4)));
+                    } else {
+                        slot.dropped = true;
+                    }
+                }
+            }
+        }
+
+        // 6) occupancy gauges
+        if obs::counters_on() {
+            obs::gauge("router.queue_depth").set(st.queue.len() as f64);
+            obs::gauge("router.inflight").set(st.inflight.len() as f64);
+            let live = st.workers.iter().filter(|s| s.proc.is_some()).count();
+            obs::gauge("router.workers_live").set(live as f64);
+        }
+
+        // 7) total fleet collapse: nothing will ever serve the queue
+        if st.workers.iter().all(|s| s.dropped) && !st.queue.is_empty() {
+            while let Some(p) = st.queue.pop_front() {
+                self.shed_queued(
+                    &mut st,
+                    p,
+                    "no_workers",
+                    "all workers exhausted their respawn budget".to_string(),
+                );
+            }
+        }
+    }
+}
+
+fn reader_loop(
+    w: usize,
+    gen: u64,
+    stdout: std::process::ChildStdout,
+    tx: mpsc::Sender<Input>,
+) {
+    let mut r = BufReader::new(stdout);
+    loop {
+        let ev = match frame::read_frame(&mut r) {
+            Ok(Some(payload)) => match WMsg::decode(&payload) {
+                Ok(m) => Event::Msg(m),
+                Err(e) => Event::Failed(format!("undecodable frame: {e:#}")),
+            },
+            Ok(None) => Event::Eof,
+            Err(e) => Event::Failed(format!("{e:#}")),
+        };
+        let terminal = !matches!(ev, Event::Msg(_));
+        if tx.send(Input::Worker((w, gen, ev))).is_err() || terminal {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP front-end
+
+fn error_json(code: &str, error: &str) -> Json {
+    json::obj(vec![
+        ("status", json::s("error")),
+        ("code", json::s(code)),
+        ("error", json::s(error)),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn done_json(
+    client_id: Option<String>,
+    rid: u64,
+    status: u8,
+    text: &[u8],
+    prompt_len: u32,
+    ttft_ms: f64,
+    latency_ms: f64,
+    failovers: u32,
+) -> Json {
+    let status_s = match status {
+        STATUS_OK => "ok",
+        STATUS_SHED => "shed",
+        _ => "timeout",
+    };
+    json::obj(vec![
+        ("status", json::s(status_s)),
+        ("id", json::s(&client_id.unwrap_or_else(|| rid.to_string()))),
+        ("rid", json::n(rid as f64)),
+        ("prompt_len", json::n(prompt_len as f64)),
+        ("text", json::s(&String::from_utf8_lossy(text))),
+        ("tokens", json::n(text.len() as f64)),
+        ("ttft_ms", json::n(ttft_ms)),
+        ("latency_ms", json::n(latency_ms)),
+        ("failovers", json::n(failovers as f64)),
+    ])
+}
+
+/// Parsed `/v1/completions` request body.
+struct CompletionReq {
+    id: Option<String>,
+    prompt: Vec<u8>,
+    max_tokens: u32,
+    deadline_ms: Option<u64>,
+    stream: bool,
+}
+
+fn parse_completion(body: &Json) -> Result<CompletionReq> {
+    let prompt = body.get("prompt")?.as_str()?.as_bytes().to_vec();
+    let max_tokens = match body.opt("max_tokens") {
+        Some(v) => v.as_usize()? as u32,
+        None => 32,
+    };
+    let deadline_ms = match body.opt("deadline_ms") {
+        Some(v) => Some(v.as_usize()? as u64),
+        None => None,
+    };
+    let stream = match body.opt("stream") {
+        Some(Json::Bool(b)) => *b,
+        Some(other) => anyhow::bail!("stream must be a boolean, got {other:?}"),
+        None => false,
+    };
+    let id = match body.opt("id") {
+        Some(v) => Some(v.as_str()?.to_string()),
+        None => None,
+    };
+    Ok(CompletionReq { id, prompt, max_tokens, deadline_ms, stream })
+}
+
+/// Serve one accepted connection (one request, `Connection: close`).
+pub fn handle_conn(core: &Arc<RouterCore>, mut conn: net::Conn) {
+    let drop_target = matches!(
+        core.opts.fault,
+        Some(fault::Fault::DropConn { conn: c }) if c as u64 == conn.id
+    );
+    let reader = match conn.stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("net: connection {}: clone failed: {e}", conn.id);
+            return;
+        }
+    };
+    let mut r = BufReader::new(reader);
+    let req = match http::read_request(&mut r) {
+        Ok(Some(req)) => req,
+        Ok(None) => return, // peer connected and left
+        Err(e) => {
+            obs::count!("net.request.malformed", 1);
+            let body = error_json("malformed_request", &format!("{e:#}"));
+            let _ = http::write_json(&mut conn.stream, 400, &body);
+            return;
+        }
+    };
+    let result = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http::write_json(&mut conn.stream, 200, &core.health_json()),
+        ("GET", "/metrics") => http::write_response(
+            &mut conn.stream,
+            200,
+            "text/plain; version=0.0.4",
+            &[],
+            obs::export::prometheus_text().as_bytes(),
+        ),
+        ("POST", "/drain") => {
+            core.begin_drain();
+            http::write_json(
+                &mut conn.stream,
+                200,
+                &json::obj(vec![("status", json::s("ok")), ("draining", Json::Bool(true))]),
+            )
+        }
+        ("POST", "/v1/completions") => handle_completion(core, &req, &mut conn, drop_target),
+        _ => http::write_json(
+            &mut conn.stream,
+            404,
+            &error_json("not_found", &format!("no route for {} {}", req.method, req.path)),
+        ),
+    };
+    if let Err(e) = result {
+        eprintln!("net: connection {}: {e:#}", conn.id);
+    }
+}
+
+fn handle_completion(
+    core: &Arc<RouterCore>,
+    req: &http::HttpRequest,
+    conn: &mut net::Conn,
+    drop_target: bool,
+) -> Result<()> {
+    let parsed = req.body_json().and_then(|body| parse_completion(&body));
+    let creq = match parsed {
+        Ok(c) => c,
+        Err(e) => {
+            obs::count!("net.request.malformed", 1);
+            return http::write_json(
+                &mut conn.stream,
+                400,
+                &error_json("malformed_request", &format!("{e:#}")),
+            );
+        }
+    };
+    match core.submit(creq.prompt, creq.max_tokens, creq.deadline_ms) {
+        SubmitOutcome::Invalid { error } => {
+            http::write_json(&mut conn.stream, 400, &error_json("invalid_request", &error))
+        }
+        SubmitOutcome::Shed { code, error, retry_after_secs } => http::write_json_headers(
+            &mut conn.stream,
+            503,
+            &[("Retry-After", retry_after_secs.max(1).to_string())],
+            &error_json(code, &error),
+        ),
+        SubmitOutcome::Admitted { rid, rx, deadline } => {
+            let hard_by = deadline + TERMINAL_GRACE;
+            if creq.stream {
+                stream_response(conn, creq.id, rid, rx, hard_by, drop_target)
+            } else {
+                unary_response(conn, creq.id, rid, rx, hard_by, drop_target)
+            }
+        }
+    }
+}
+
+/// SSE path: forward tokens as they arrive, then one terminal event.
+/// The stream writes to a clone of the connection so the original
+/// stays available for the `drop_conn` fault's hard shutdown.
+fn stream_response(
+    conn: &mut net::Conn,
+    client_id: Option<String>,
+    rid: u64,
+    rx: mpsc::Receiver<ReqEv>,
+    hard_by: Instant,
+    drop_target: bool,
+) -> Result<()> {
+    let mut sse = http::SseStream::start(conn.stream.try_clone()?)?;
+    let id_s = client_id.clone().unwrap_or_else(|| rid.to_string());
+    let mut streamed = 0usize;
+    loop {
+        let budget = hard_by.saturating_duration_since(Instant::now());
+        let ev = match rx.recv_timeout(budget) {
+            Ok(ev) => ev,
+            Err(_) => {
+                // no terminal event by deadline + grace: close with a
+                // structured error rather than hanging the client
+                obs::count!("router.request.abandoned", 1);
+                let _ = sse.event(
+                    "error",
+                    &error_json("router_timeout", "no terminal event by deadline + grace"),
+                );
+                return sse.finish();
+            }
+        };
+        match ev {
+            ReqEv::Token(text) => {
+                streamed += 1;
+                let data = json::obj(vec![
+                    ("id", json::s(&id_s)),
+                    ("text", json::s(&String::from_utf8_lossy(&text))),
+                ]);
+                if sse.event("token", &data).is_err() {
+                    return Ok(()); // client went away
+                }
+                if drop_target && streamed == 1 {
+                    obs::count!("net.conn.dropped", 1);
+                    eprintln!(
+                        "QUARTET2_FAULT: dropping connection {} mid-stream of request {rid}",
+                        conn.id
+                    );
+                    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+                    return Ok(());
+                }
+            }
+            ReqEv::Done { status, text, prompt_len, ttft_ms, latency_ms, failovers } => {
+                let body = done_json(
+                    client_id, rid, status, &text, prompt_len, ttft_ms, latency_ms, failovers,
+                );
+                let _ = sse.event("done", &body);
+                return sse.finish();
+            }
+            ReqEv::Shed { code, error } => {
+                let _ = sse.event("error", &error_json(code, &error));
+                return sse.finish();
+            }
+            ReqEv::Rejected { error } => {
+                let _ = sse.event("error", &error_json("rejected", &error));
+                return sse.finish();
+            }
+            ReqEv::Failed { error, partial } => {
+                let mut body = error_json("worker_failure", &error);
+                if let Json::Obj(m) = &mut body {
+                    m.insert("partial_tokens".to_string(), json::n(partial as f64));
+                }
+                let _ = sse.event("error", &body);
+                return sse.finish();
+            }
+        }
+    }
+}
+
+/// Unary path: wait for the terminal event, then one JSON response.
+fn unary_response(
+    conn: &mut net::Conn,
+    client_id: Option<String>,
+    rid: u64,
+    rx: mpsc::Receiver<ReqEv>,
+    hard_by: Instant,
+    drop_target: bool,
+) -> Result<()> {
+    let mut partial = 0usize;
+    loop {
+        let budget = hard_by.saturating_duration_since(Instant::now());
+        let ev = match rx.recv_timeout(budget) {
+            Ok(ev) => ev,
+            Err(_) => {
+                obs::count!("router.request.abandoned", 1);
+                return http::write_json(
+                    &mut conn.stream,
+                    502,
+                    &error_json("router_timeout", "no terminal event by deadline + grace"),
+                );
+            }
+        };
+        match ev {
+            ReqEv::Token(_) => partial += 1,
+            ReqEv::Done { status, text, prompt_len, ttft_ms, latency_ms, failovers } => {
+                if drop_target {
+                    obs::count!("net.conn.dropped", 1);
+                    eprintln!(
+                        "QUARTET2_FAULT: dropping connection {} before response to request {rid}",
+                        conn.id
+                    );
+                    let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+                    return Ok(());
+                }
+                let body = done_json(
+                    client_id, rid, status, &text, prompt_len, ttft_ms, latency_ms, failovers,
+                );
+                return http::write_json(&mut conn.stream, 200, &body);
+            }
+            ReqEv::Shed { code, error } => {
+                return http::write_json_headers(
+                    &mut conn.stream,
+                    503,
+                    &[("Retry-After", "1".to_string())],
+                    &error_json(code, &error),
+                );
+            }
+            ReqEv::Rejected { error } => {
+                return http::write_json(&mut conn.stream, 400, &error_json("rejected", &error));
+            }
+            ReqEv::Failed { error, partial: p } => {
+                let mut body = error_json("worker_failure", &error);
+                if let Json::Obj(m) = &mut body {
+                    m.insert("partial_tokens".to_string(), json::n(p.max(partial) as f64));
+                }
+                return http::write_json(&mut conn.stream, 502, &body);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(now: Instant) -> Breaker {
+        Breaker::new(2, 100, now)
+    }
+
+    #[test]
+    fn breaker_trips_probes_and_closes() {
+        let t0 = Instant::now();
+        let mut b = mk(t0);
+        assert!(b.would_allow(t0));
+        b.on_failure(t0);
+        assert!(b.would_allow(t0), "one failure below the trip threshold");
+        b.on_failure(t0);
+        assert_eq!(b.state, BreakerState::Open);
+        assert!(!b.would_allow(t0), "freshly open refuses dispatch");
+        let later = t0 + Duration::from_millis(150);
+        assert!(b.would_allow(later), "past the probe window");
+        b.on_dispatch(later);
+        assert_eq!(b.state, BreakerState::HalfOpen);
+        assert!(!b.would_allow(later), "only one probe at a time");
+        b.on_success();
+        assert_eq!(b.state, BreakerState::Closed);
+        assert_eq!(b.fails, 0);
+        assert!(b.would_allow(later));
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens() {
+        let t0 = Instant::now();
+        let mut b = mk(t0);
+        b.on_failure(t0);
+        b.on_failure(t0);
+        let later = t0 + Duration::from_millis(150);
+        b.on_dispatch(later);
+        assert_eq!(b.state, BreakerState::HalfOpen);
+        b.on_failure(later);
+        assert_eq!(b.state, BreakerState::Open);
+        assert!(!b.would_allow(later));
+        assert!(b.would_allow(later + Duration::from_millis(150)));
+    }
+
+    #[test]
+    fn selection_scan_never_consumes_probe() {
+        let t0 = Instant::now();
+        let mut b = mk(t0);
+        b.on_failure(t0);
+        b.on_failure(t0);
+        let later = t0 + Duration::from_millis(150);
+        // would_allow is pure: asking many times must not transition
+        for _ in 0..5 {
+            assert!(b.would_allow(later));
+        }
+        assert_eq!(b.state, BreakerState::Open);
+    }
+
+    #[test]
+    fn error_and_done_json_shapes() {
+        let e = error_json("overloaded", "queue full");
+        assert_eq!(e.get("status").unwrap().as_str().unwrap(), "error");
+        assert_eq!(e.get("code").unwrap().as_str().unwrap(), "overloaded");
+        let d = done_json(Some("req-1".into()), 7, STATUS_OK, b"hi", 3, 1.0, 2.0, 1);
+        assert_eq!(d.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(d.get("id").unwrap().as_str().unwrap(), "req-1");
+        assert_eq!(d.get("rid").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(d.get("text").unwrap().as_str().unwrap(), "hi");
+        assert_eq!(d.get("failovers").unwrap().as_usize().unwrap(), 1);
+        let anon = done_json(None, 9, STATUS_SHED, b"", 1, 0.0, 0.0, 0);
+        assert_eq!(anon.get("status").unwrap().as_str().unwrap(), "shed");
+        assert_eq!(anon.get("id").unwrap().as_str().unwrap(), "9");
+    }
+}

@@ -1,0 +1,301 @@
+//! The router <-> serve-worker message vocabulary.
+//!
+//! Every [`WMsg`] encodes to `[type: u8][body]` (little-endian fields,
+//! length-prefixed byte strings) and travels inside one
+//! [`crate::dist::frame`] CRC-framed frame over the worker's
+//! stdin/stdout — the same transport the train-dist supervisor uses,
+//! so torn and corrupt frames are detected at the seam, never decoded.
+//!
+//! The request-level protocol:
+//!
+//! ```text
+//! worker  Hello{worker}                          once, after spawn
+//! router  Submit{rid, prompt, max_tokens,        dispatch one request
+//!         deadline_ms}
+//! worker  Token{rid, text}                       one per sampled token
+//! worker  Done{rid, status, prompt_len,          terminal, with the
+//!         ttft_ms, latency_ms, text}             full generation
+//! worker  Reject{rid, error}                     submit-time refusal
+//! worker  Heartbeat{worker, active, queued}      every ~250ms: alive +
+//!                                                backpressure signal
+//! router  Drain                                  finish in-flight, exit
+//! router  Shutdown                               exit now
+//! ```
+//!
+//! `rid` is the router-assigned request id; it seeds the worker
+//! scheduler's per-request RNG stream, so a failover re-dispatch of
+//! the same `rid` (on any worker holding the same checkpoint and seed)
+//! regenerates the identical tokens.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// `Done.status`: the request completed normally.
+pub const STATUS_OK: u8 = 0;
+/// `Done.status`: `deadline_ms` expired after admission (partial text).
+pub const STATUS_TIMEOUT: u8 = 1;
+/// `Done.status`: shed before prefill (deadline expired while queued).
+pub const STATUS_SHED: u8 = 2;
+
+const T_HELLO: u8 = 1;
+const T_SUBMIT: u8 = 2;
+const T_TOKEN: u8 = 3;
+const T_DONE: u8 = 4;
+const T_REJECT: u8 = 5;
+const T_HEARTBEAT: u8 = 6;
+const T_DRAIN: u8 = 7;
+const T_SHUTDOWN: u8 = 8;
+
+/// One router<->worker message (see the module docs for the exchange
+/// order).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WMsg {
+    Hello { worker: u32 },
+    /// Dispatch request `rid`: `prompt` is raw bytes (byte tokenizer),
+    /// `deadline_ms` is the remaining budget at dispatch (0 = none).
+    Submit { rid: u64, prompt: Vec<u8>, max_tokens: u32, deadline_ms: u64 },
+    /// One sampled token's bytes, streamed as it is produced.
+    Token { rid: u64, text: Vec<u8> },
+    /// Terminal per-request record (`status` is one of the `STATUS_*`
+    /// constants; `text` is the full generation so non-streaming
+    /// clients need no reassembly).
+    Done { rid: u64, status: u8, prompt_len: u32, ttft_ms: f64, latency_ms: f64, text: Vec<u8> },
+    Reject { rid: u64, error: String },
+    /// Liveness + load: `active` in the micro-batch, `queued` waiting.
+    Heartbeat { worker: u32, active: u32, queued: u32 },
+    Drain,
+    Shutdown,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// Bounds-checked little-endian reader over one message payload.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!("message truncated at byte {} (wanted {n} more)", self.off)
+            })?;
+        let s = &self.buf[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn len_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.bytes(n)?.to_vec())
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.off == self.buf.len(),
+            "{} trailing bytes after message body",
+            self.buf.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+impl WMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            WMsg::Hello { worker } => {
+                out.push(T_HELLO);
+                put_u32(&mut out, *worker);
+            }
+            WMsg::Submit { rid, prompt, max_tokens, deadline_ms } => {
+                out.push(T_SUBMIT);
+                put_u64(&mut out, *rid);
+                put_u32(&mut out, *max_tokens);
+                put_u64(&mut out, *deadline_ms);
+                put_bytes(&mut out, prompt);
+            }
+            WMsg::Token { rid, text } => {
+                out.push(T_TOKEN);
+                put_u64(&mut out, *rid);
+                put_bytes(&mut out, text);
+            }
+            WMsg::Done { rid, status, prompt_len, ttft_ms, latency_ms, text } => {
+                out.push(T_DONE);
+                put_u64(&mut out, *rid);
+                out.push(*status);
+                put_u32(&mut out, *prompt_len);
+                put_f64(&mut out, *ttft_ms);
+                put_f64(&mut out, *latency_ms);
+                put_bytes(&mut out, text);
+            }
+            WMsg::Reject { rid, error } => {
+                out.push(T_REJECT);
+                put_u64(&mut out, *rid);
+                put_bytes(&mut out, error.as_bytes());
+            }
+            WMsg::Heartbeat { worker, active, queued } => {
+                out.push(T_HEARTBEAT);
+                put_u32(&mut out, *worker);
+                put_u32(&mut out, *active);
+                put_u32(&mut out, *queued);
+            }
+            WMsg::Drain => out.push(T_DRAIN),
+            WMsg::Shutdown => out.push(T_SHUTDOWN),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WMsg> {
+        let mut c = Cur::new(buf);
+        let msg = match c.u8()? {
+            T_HELLO => WMsg::Hello { worker: c.u32()? },
+            T_SUBMIT => {
+                let rid = c.u64()?;
+                let max_tokens = c.u32()?;
+                let deadline_ms = c.u64()?;
+                let prompt = c.len_bytes()?;
+                WMsg::Submit { rid, prompt, max_tokens, deadline_ms }
+            }
+            T_TOKEN => {
+                let rid = c.u64()?;
+                let text = c.len_bytes()?;
+                WMsg::Token { rid, text }
+            }
+            T_DONE => {
+                let rid = c.u64()?;
+                let status = c.u8()?;
+                ensure!(
+                    status <= STATUS_SHED,
+                    "unknown Done status {status} for request {rid}"
+                );
+                let prompt_len = c.u32()?;
+                let ttft_ms = c.f64()?;
+                let latency_ms = c.f64()?;
+                let text = c.len_bytes()?;
+                WMsg::Done { rid, status, prompt_len, ttft_ms, latency_ms, text }
+            }
+            T_REJECT => {
+                let rid = c.u64()?;
+                let error = String::from_utf8_lossy(&c.len_bytes()?).into_owned();
+                WMsg::Reject { rid, error }
+            }
+            T_HEARTBEAT => WMsg::Heartbeat {
+                worker: c.u32()?,
+                active: c.u32()?,
+                queued: c.u32()?,
+            },
+            T_DRAIN => WMsg::Drain,
+            T_SHUTDOWN => WMsg::Shutdown,
+            other => bail!("unknown router message type {other}"),
+        };
+        c.finish()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: WMsg) {
+        let enc = m.encode();
+        assert_eq!(WMsg::decode(&enc).unwrap(), m, "roundtrip of {m:?}");
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(WMsg::Hello { worker: 3 });
+        roundtrip(WMsg::Submit {
+            rid: 42,
+            prompt: b"Hello, router".to_vec(),
+            max_tokens: 16,
+            deadline_ms: 1500,
+        });
+        roundtrip(WMsg::Submit { rid: 1, prompt: vec![0, 255, 128], max_tokens: 1, deadline_ms: 0 });
+        roundtrip(WMsg::Token { rid: 42, text: b"x".to_vec() });
+        roundtrip(WMsg::Done {
+            rid: 42,
+            status: STATUS_TIMEOUT,
+            prompt_len: 13,
+            ttft_ms: 1.25,
+            latency_ms: 99.5,
+            text: b"partial".to_vec(),
+        });
+        roundtrip(WMsg::Reject { rid: 7, error: "empty prompt".into() });
+        roundtrip(WMsg::Heartbeat { worker: 1, active: 4, queued: 9 });
+        roundtrip(WMsg::Drain);
+        roundtrip(WMsg::Shutdown);
+    }
+
+    #[test]
+    fn truncation_and_trailing_bytes_fail() {
+        let enc = WMsg::Submit {
+            rid: 5,
+            prompt: b"abc".to_vec(),
+            max_tokens: 8,
+            deadline_ms: 0,
+        }
+        .encode();
+        for cut in 0..enc.len() {
+            assert!(WMsg::decode(&enc[..cut]).is_err(), "cut at {cut} decoded");
+        }
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(WMsg::decode(&padded).is_err(), "trailing byte decoded");
+        assert!(WMsg::decode(&[99]).is_err(), "unknown type decoded");
+    }
+
+    #[test]
+    fn bad_done_status_fails() {
+        let mut enc = WMsg::Done {
+            rid: 1,
+            status: STATUS_OK,
+            prompt_len: 1,
+            ttft_ms: 0.0,
+            latency_ms: 0.0,
+            text: Vec::new(),
+        }
+        .encode();
+        enc[9] = 7; // status byte sits right after the u64 rid
+        assert!(WMsg::decode(&enc).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! The `quartet2 serve-worker` loop: one inference worker of the
+//! router fleet, driven entirely by framed [`WMsg`] messages on
+//! stdin/stdout (the router owns both pipe ends).
+//!
+//! The worker wraps one continuous-batching [`Scheduler`] around the
+//! packed NVFP4 checkpoint and reacts to whatever the router sends:
+//! `Submit` enqueues a request (the router-assigned `rid` seeds the
+//! per-request RNG stream, so a failover re-dispatch regenerates
+//! identical tokens), `Drain` stops admissions and exits once
+//! in-flight work finishes, `Shutdown` exits now. Between messages it
+//! steps the scheduler, streaming every sampled token as a `Token`
+//! frame and each terminal outcome as a `Done` frame.
+//!
+//! Heartbeats are deliberately emitted from the *main* loop (every
+//! [`HEARTBEAT_EVERY`]), not a detached thread: a worker wedged inside
+//! a request (the `stall_serve_worker` fault, a pathological forward)
+//! stops heartbeating, which is exactly the signal the router's
+//! heartbeat-silence deadline needs to kill and respawn it. Crash-only
+//! philosophy throughout — any local error kills the process and the
+//! router runs its failover path; nothing here limps along.
+//!
+//! Fault injection: the router translates a worker-targeted
+//! `QUARTET2_FAULT` (`kill_serve_worker:R@req:N` /
+//! `stall_serve_worker:R`) into the private `QUARTET2_SERVE_FAULT`
+//! env of the targeted worker's *initial* spawn only, so respawned
+//! workers always run clean.
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::data::ByteTokenizer;
+use crate::dist::frame;
+use crate::engine::checkpoint::fault;
+use crate::serve::{PackedModel, Request, Scheduler, SchedulerOptions};
+
+use super::proto::{WMsg, STATUS_OK, STATUS_SHED, STATUS_TIMEOUT};
+
+/// Heartbeat cadence. The router's silence threshold is a multiple of
+/// this, so a healthy worker under load never looks dead.
+pub const HEARTBEAT_EVERY: Duration = Duration::from_millis(250);
+
+/// How long a `stall_serve_worker` fault sleeps — far past any
+/// heartbeat-silence deadline, so the router's stall kill fires.
+const STALL_SLEEP: Duration = Duration::from_secs(3600);
+
+/// How long an idle worker blocks waiting for work before emitting the
+/// next heartbeat check.
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// One serve-worker's identity and scheduler configuration (mirrors
+/// the router's own flags).
+#[derive(Clone, Debug)]
+pub struct ServeWorkerOptions {
+    /// This worker's 0-based slot in the fleet.
+    pub worker: usize,
+    /// Packed serving checkpoint directory (must already exist; the
+    /// router packs a fresh one before spawning the fleet).
+    pub checkpoint: String,
+    pub sched: SchedulerOptions,
+}
+
+fn send(out: &mut std::io::Stdout, msg: &WMsg) -> Result<()> {
+    frame::write_frame(out, &msg.encode())
+}
+
+/// Run the worker loop until `Shutdown`, drain completion, or router
+/// EOF.
+pub fn run_serve_worker(opts: &ServeWorkerOptions) -> Result<()> {
+    let model = PackedModel::load(Path::new(&opts.checkpoint))
+        .with_context(|| format!("loading serving checkpoint {:?}", opts.checkpoint))?;
+    let mut sched = Scheduler::new(&model, opts.sched.clone())?;
+    let tok = ByteTokenizer;
+
+    // the one-shot injected fault, armed only on the initial spawn of
+    // the targeted worker (see the module docs)
+    let armed = std::env::var("QUARTET2_SERVE_FAULT")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(|s| fault::parse(&s).context("QUARTET2_SERVE_FAULT"))
+        .transpose()?;
+    let stall_on_submit = matches!(
+        armed,
+        Some(fault::Fault::StallServeWorker { worker }) if worker == opts.worker
+    );
+    let kill_at_accept = match armed {
+        Some(fault::Fault::KillServeWorker { worker, req }) if worker == opts.worker => Some(req),
+        _ => None,
+    };
+
+    // stdin reader thread: frames decode off the main loop so the
+    // engine keeps stepping while the pipe sits idle. `None` on the
+    // channel means EOF or a transport error — either way the router
+    // side is gone or poisoned, and crash-only means we just exit.
+    let (tx, rx) = mpsc::channel::<Option<WMsg>>();
+    std::thread::spawn(move || {
+        let mut stdin = std::io::stdin().lock();
+        loop {
+            let item = match frame::read_frame(&mut stdin) {
+                Ok(Some(payload)) => match WMsg::decode(&payload) {
+                    Ok(m) => Some(m),
+                    Err(e) => {
+                        eprintln!("serve-worker: undecodable frame: {e:#}");
+                        None
+                    }
+                },
+                Ok(None) => None,
+                Err(e) => {
+                    eprintln!("serve-worker: transport error: {e:#}");
+                    None
+                }
+            };
+            let stop = item.is_none();
+            if tx.send(item).is_err() || stop {
+                return;
+            }
+        }
+    });
+
+    let mut out = std::io::stdout();
+    send(&mut out, &WMsg::Hello { worker: opts.worker as u32 })?;
+    let mut accepted = 0usize;
+    let mut kill_rid: Option<u64> = None;
+    let mut draining = false;
+    let mut last_beat = Instant::now();
+    loop {
+        // ---- ingest everything the router sent; block only when idle
+        loop {
+            let idle = sched.outstanding() == 0;
+            let item = if idle {
+                match rx.recv_timeout(IDLE_POLL) {
+                    Ok(m) => m,
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => None,
+                }
+            };
+            match item {
+                // EOF / transport error: the router died or closed us;
+                // crash-only exit (the router's reader sees our EOF)
+                None => return Ok(()),
+                Some(WMsg::Submit { rid, prompt, max_tokens, deadline_ms }) => {
+                    accepted += 1;
+                    if stall_on_submit {
+                        eprintln!(
+                            "QUARTET2_SERVE_FAULT: worker {} stalling on request {rid}",
+                            opts.worker
+                        );
+                        std::thread::sleep(STALL_SLEEP);
+                    }
+                    if kill_at_accept == Some(accepted) {
+                        kill_rid = Some(rid);
+                    }
+                    let req = Request {
+                        id: rid,
+                        prompt: tok.encode(&prompt),
+                        max_new_tokens: max_tokens as usize,
+                        deadline_ms: (deadline_ms > 0).then_some(deadline_ms),
+                    };
+                    if let Err(e) = sched.submit(req) {
+                        send(&mut out, &WMsg::Reject { rid, error: format!("{e:#}") })?;
+                    }
+                }
+                Some(WMsg::Drain) => {
+                    draining = true;
+                    sched.close();
+                }
+                Some(WMsg::Shutdown) => return Ok(()),
+                Some(other) => eprintln!("serve-worker: unexpected message {other:?}"),
+            }
+        }
+
+        // ---- heartbeat from the main loop: carries the live
+        // backpressure signal, and stops the moment the loop wedges
+        if last_beat.elapsed() >= HEARTBEAT_EVERY {
+            last_beat = Instant::now();
+            send(
+                &mut out,
+                &WMsg::Heartbeat {
+                    worker: opts.worker as u32,
+                    active: sched.active_len() as u32,
+                    queued: sched.queued_len() as u32,
+                },
+            )?;
+        }
+
+        // ---- step the engine, streaming tokens as they are sampled
+        if sched.outstanding() > 0 {
+            let done = sched.step()?;
+            for (rid, tok_id) in sched.take_emitted() {
+                send(&mut out, &WMsg::Token { rid, text: tok.decode(&[tok_id]) })?;
+                if kill_rid == Some(rid) {
+                    // mid-stream death: the first token of the targeted
+                    // request is already flushed downstream, so the
+                    // client observes a truly partial response
+                    eprintln!(
+                        "QUARTET2_SERVE_FAULT: worker {} exiting 137 mid-stream of request {rid}",
+                        opts.worker
+                    );
+                    std::process::exit(137);
+                }
+            }
+            for c in done {
+                let status = if c.shed {
+                    STATUS_SHED
+                } else if c.timed_out {
+                    STATUS_TIMEOUT
+                } else {
+                    STATUS_OK
+                };
+                send(
+                    &mut out,
+                    &WMsg::Done {
+                        rid: c.id,
+                        status,
+                        prompt_len: c.prompt_len as u32,
+                        ttft_ms: c.ttft_secs * 1e3,
+                        latency_ms: c.latency_secs * 1e3,
+                        text: tok.decode(&c.tokens),
+                    },
+                )?;
+            }
+        } else if draining {
+            // drained dry: exit cleanly (the router reaps us)
+            return Ok(());
+        }
+    }
+}

@@ -90,6 +90,10 @@ pub struct Completion {
     /// the request blew past its `deadline_ms` and was retired early
     /// (`tokens` holds the partial generation)
     pub timed_out: bool,
+    /// the deadline expired while the request was still queued: it was
+    /// shed at dequeue time without running prefill (no model work was
+    /// spent on it; `tokens` is empty and `timed_out` is also set)
+    pub shed: bool,
 }
 
 /// Per-request lifecycle phase (reported by [`Scheduler::snapshot`]).
@@ -138,10 +142,14 @@ pub struct ServeStats {
     /// wall seconds across all steps
     pub total_secs: f64,
     pub completed: usize,
-    /// requests retired past their `deadline_ms` (not counted in
-    /// `completed`, and excluded from the ttft/latency percentiles so
-    /// the tail stats stay honest)
+    /// requests retired past their `deadline_ms` after admission (not
+    /// counted in `completed`, and excluded from the ttft/latency
+    /// percentiles so the tail stats stay honest)
     pub timeouts: usize,
+    /// requests whose deadline expired while still queued, shed at
+    /// dequeue time without running prefill (excluded from the
+    /// ttft/latency percentiles like `timeouts`)
+    pub shed: usize,
     pub ttft: LatencyRecorder,
     pub latency: LatencyRecorder,
 }
@@ -171,6 +179,7 @@ impl ServeStats {
             ("total_tokens_per_sec", json::n(self.total_tokens_per_sec())),
             ("completed", json::n(self.completed as f64)),
             ("timeouts", json::n(self.timeouts as f64)),
+            ("shed", json::n(self.shed as f64)),
             ("ttft", self.ttft.to_json()),
             ("latency", self.latency.to_json()),
         ])
@@ -186,6 +195,11 @@ pub struct Scheduler<'m> {
     queue: VecDeque<(Request, Instant)>,
     active: Vec<Active>,
     stats: ServeStats,
+    /// tokens sampled by the most recent [`Scheduler::step`] as
+    /// `(request id, token)` pairs, for streaming consumers (cleared at
+    /// the start of every step so non-streaming callers never
+    /// accumulate)
+    emitted: Vec<(u64, i32)>,
     /// draining: no new admissions, in-flight requests run to completion
     closed: bool,
 }
@@ -201,6 +215,7 @@ impl<'m> Scheduler<'m> {
             queue: VecDeque::new(),
             active: Vec::new(),
             stats: ServeStats::default(),
+            emitted: Vec::new(),
             closed: false,
         })
     }
@@ -246,6 +261,25 @@ impl<'m> Scheduler<'m> {
         self.queue.len() + self.active.len()
     }
 
+    /// Requests waiting in the admission queue (the serve-worker
+    /// backpressure signal, reported upstream in heartbeats).
+    pub fn queued_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests resident in the micro-batch.
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Drain the `(request id, token)` pairs sampled by the most recent
+    /// [`Scheduler::step`], in batch order — at most one token per
+    /// active request. Streaming front-ends call this after every step
+    /// to forward tokens as they are produced.
+    pub fn take_emitted(&mut self) -> Vec<(u64, i32)> {
+        std::mem::take(&mut self.emitted)
+    }
+
     /// `(id, phase)` of every outstanding request, queue order last.
     pub fn snapshot(&self) -> Vec<(u64, Phase)> {
         self.active
@@ -264,24 +298,16 @@ impl<'m> Scheduler<'m> {
         self.stats.to_json()
     }
 
-    /// Retire every request (queued or active) past its `deadline_ms`,
-    /// emitting `timeout` completions carrying whatever was generated.
+    /// Retire every request (queued or active) past its `deadline_ms`:
+    /// queued ones are shed without running prefill, active ones emit
+    /// `timeout` completions carrying whatever was generated.
     fn expire_deadlines(&mut self) -> Vec<Completion> {
-        fn expired(deadline_ms: Option<u64>, submitted: &Instant) -> bool {
-            deadline_ms.is_some_and(|ms| submitted.elapsed().as_millis() as u64 >= ms)
-        }
         let mut out = Vec::new();
         let mut qi = 0;
         while qi < self.queue.len() {
             if expired(self.queue[qi].0.deadline_ms, &self.queue[qi].1) {
                 let (req, submitted) = self.queue.remove(qi).expect("index in range");
-                out.push(self.timeout_completion(
-                    req.id,
-                    req.prompt.len(),
-                    Vec::new(),
-                    submitted,
-                    None,
-                ));
+                out.push(self.shed_completion(req.id, req.prompt.len(), submitted));
             } else {
                 qi += 1;
             }
@@ -302,6 +328,29 @@ impl<'m> Scheduler<'m> {
             }
         }
         out
+    }
+
+    /// Retire a still-queued request whose deadline expired before any
+    /// model work was spent on it. Shed requests are excluded from the
+    /// ttft/latency percentiles (like timeouts) so the tail stats stay
+    /// honest.
+    fn shed_completion(&mut self, id: u64, prompt_len: usize, submitted: Instant) -> Completion {
+        let latency = submitted.elapsed().as_secs_f64();
+        self.stats.shed += 1;
+        crate::obs::count!("serve.request.shed", 1);
+        eprintln!(
+            "request {id}: deadline expired after {:.0} ms while queued (shed before prefill)",
+            latency * 1e3
+        );
+        Completion {
+            id,
+            prompt_len,
+            tokens: Vec::new(),
+            ttft_secs: 0.0,
+            latency_secs: latency,
+            timed_out: true,
+            shed: true,
+        }
     }
 
     fn timeout_completion(
@@ -326,6 +375,7 @@ impl<'m> Scheduler<'m> {
             ttft_secs: ttft,
             latency_secs: latency,
             timed_out: true,
+            shed: false,
         }
     }
 
@@ -334,12 +384,21 @@ impl<'m> Scheduler<'m> {
     /// step (timed-out ones included, flagged via
     /// [`Completion::timed_out`]).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        self.emitted.clear();
         let mut done = self.expire_deadlines();
         // ---- admit from the queue into free slots
         while self.active.len() < self.opts.max_batch {
             let Some((req, submitted)) = self.queue.pop_front() else {
                 break;
             };
+            // dequeue-time deadline check: a request that expired while
+            // queued is shed here, before any KV allocation or prefill
+            // work is spent on it
+            if expired(req.deadline_ms, &submitted) {
+                let shed = self.shed_completion(req.id, req.prompt.len(), submitted);
+                done.push(shed);
+                continue;
+            }
             // queue wait = submit -> admission into the batch
             crate::obs::record_ns("serve.queue_wait", submitted.elapsed().as_nanos() as u64);
             let cache = self
@@ -438,6 +497,7 @@ impl<'m> Scheduler<'m> {
                     a.first_token = Some(Instant::now());
                 }
                 a.generated.push(tok);
+                self.emitted.push((a.id, tok));
             }
         }
         // Throughput accounting: only pure-decode steps contribute to
@@ -479,6 +539,7 @@ impl<'m> Scheduler<'m> {
                     ttft_secs: ttft,
                     latency_secs: latency,
                     timed_out: false,
+                    shed: false,
                 });
             } else {
                 i += 1;
@@ -496,6 +557,11 @@ impl<'m> Scheduler<'m> {
         }
         Ok(all)
     }
+}
+
+/// Whether a `deadline_ms` budget measured from `submitted` has run out.
+fn expired(deadline_ms: Option<u64>, submitted: &Instant) -> bool {
+    deadline_ms.is_some_and(|ms| submitted.elapsed().as_millis() as u64 >= ms)
 }
 
 /// Sample a token from logits: greedy argmax at `temperature <= 0`,
@@ -739,11 +805,12 @@ mod tests {
     }
 
     #[test]
-    fn deadline_zero_times_out_immediately() {
+    fn deadline_zero_is_shed_before_prefill() {
         let m = tiny_model();
         let mut s = Scheduler::new(&m, opts()).unwrap();
-        // deadline_ms 0 has already expired at the first step; the
-        // normal request riding along is untouched
+        // deadline_ms 0 has already expired while queued, so it is shed
+        // at dequeue time without running prefill; the normal request
+        // riding along is untouched
         s.submit(Request {
             id: 7,
             prompt: vec![1, 2],
@@ -761,13 +828,20 @@ mod tests {
         let mut done = s.run_until_idle().unwrap();
         done.sort_by_key(|c| c.id);
         assert_eq!(done.len(), 2);
-        assert!(done[0].timed_out, "request 7 should have timed out");
+        assert!(done[0].shed, "request 7 should have been shed");
+        assert!(done[0].timed_out);
         assert_eq!(done[0].id, 7);
         assert!(done[0].tokens.is_empty());
-        assert!(!done[1].timed_out);
+        assert!(!done[1].timed_out && !done[1].shed);
         assert_eq!(done[1].tokens.len(), 2);
-        assert_eq!(s.stats().timeouts, 1);
+        assert_eq!(s.stats().shed, 1);
+        assert_eq!(s.stats().timeouts, 0);
         assert_eq!(s.stats().completed, 1);
+        // only request 8's prompt ever reached the model, and the shed
+        // request stays out of the latency percentiles
+        assert_eq!(s.stats().prefill_tokens, 2);
+        assert_eq!(s.stats().latency.count(), 1);
+        assert_eq!(s.stats().ttft.count(), 1);
         // a generous deadline does not trip
         let mut s = Scheduler::new(&m, opts()).unwrap();
         s.submit(Request {
@@ -781,6 +855,40 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert!(!done[0].timed_out);
         assert_eq!(s.stats().timeouts, 0);
+        assert_eq!(s.stats().shed, 0);
+    }
+
+    #[test]
+    fn emitted_stream_matches_completions() {
+        // take_emitted after every step reconstructs each request's
+        // token sequence exactly (the worker streaming path relies on
+        // this), and a skipped take never accumulates across steps
+        let m = tiny_model();
+        let mut s = Scheduler::new(&m, opts()).unwrap();
+        for i in 0..3u64 {
+            s.submit(Request {
+                id: i,
+                prompt: vec![10 + i as i32, 20],
+                max_new_tokens: 4,
+                deadline_ms: None,
+            })
+            .unwrap();
+        }
+        let mut streamed: std::collections::BTreeMap<u64, Vec<i32>> = Default::default();
+        let mut done = Vec::new();
+        while s.outstanding() > 0 {
+            done.extend(s.step().unwrap());
+            let em = s.take_emitted();
+            assert!(em.len() <= 3, "at most one token per active request");
+            for (id, tok) in em {
+                streamed.entry(id).or_default().push(tok);
+            }
+            assert!(s.take_emitted().is_empty(), "second take drains nothing");
+        }
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(streamed[&c.id], c.tokens, "request {}", c.id);
+        }
     }
 
     #[test]

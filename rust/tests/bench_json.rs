@@ -1,8 +1,8 @@
 //! Sanity-parse the repo-root `BENCH_*.json` perf-trajectory files
 //! that `scripts/bench.sh` publishes (train step, serving, quantizer,
-//! packed GEMM, distributed exchange).
+//! packed GEMM, distributed exchange, serving router).
 //!
-//! The five manifest files are committed artifacts: a missing one is a
+//! The six manifest files are committed artifacts: a missing one is a
 //! hard failure (a half-run `scripts/bench.sh`, or a rename that
 //! orphaned the manifest), not a skip. A corrupt or schema-less file
 //! also fails (`scripts/ci.sh` runs this test explicitly).
@@ -13,12 +13,13 @@ use quartet2::util::json::Json;
 
 /// The files `scripts/bench.sh` publishes at the repo root, one per
 /// bench target. Keep in sync with the `publish` calls there.
-const MANIFEST: [&str; 5] = [
+const MANIFEST: [&str; 6] = [
     "BENCH_train_step.json",
     "BENCH_serve.json",
     "BENCH_quantize.json",
     "BENCH_qgemm.json",
     "BENCH_dist.json",
+    "BENCH_router.json",
 ];
 
 #[test]

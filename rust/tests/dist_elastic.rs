@@ -392,3 +392,68 @@ fn ms_eden_comm_compresses_at_least_5x() {
         "f32 comm reported {f32_compression:.2}x compression"
     );
 }
+
+/// A string field of the trace's `run_end` event.
+fn run_end_str(path: &str, key: &str) -> String {
+    let text = std::fs::read_to_string(path).unwrap();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let v = Json::parse(line).unwrap();
+        if v.opt("event").and_then(|x| x.as_str().ok()) == Some("run_end") {
+            return v
+                .opt(key)
+                .and_then(|x| x.as_str().ok().map(String::from))
+                .unwrap_or_else(|| panic!("run_end has no string {key:?} in {path}"));
+        }
+    }
+    panic!("no run_end event in {path}");
+}
+
+/// Respawn-budget exhaustion is a *clean* failure mode: with a budget
+/// of 0, the first death drops the rank, the supervisor records the
+/// final collective checkpoint, emits a `run_end` with reason
+/// `budget_exhausted`, and exits non-zero — no torn trace, no hang.
+#[test]
+fn respawn_budget_exhaustion_ends_run_cleanly() {
+    let s = Scratch::new("budget");
+    let args = dist_args(
+        &s,
+        "1",
+        "f32",
+        "3",
+        "ck",
+        "budget.jsonl",
+        &["--no-export", "--respawn-budget", "0"],
+    );
+    let out = quartet2_bin(&as_strs(&args), &[("QUARTET2_FAULT", "kill_rank:0@step:1")]);
+    assert!(
+        !out.status.success(),
+        "budget exhaustion must exit non-zero:\n{}",
+        stderr_of(&out)
+    );
+    let err = stderr_of(&out);
+    assert!(err.contains("worker death"), "no death banner:\n{err}");
+    assert!(
+        err.contains("respawn budget (0) exhausted"),
+        "no budget banner:\n{err}"
+    );
+    assert!(
+        err.contains("all respawn budgets exhausted"),
+        "no final diagnosis:\n{err}"
+    );
+
+    let trace = s.p("budget.jsonl");
+    for ev in ["run_start", "worker_death", "checkpoint", "run_end"] {
+        assert!(has_event(&trace, ev), "{ev} event missing from {trace}");
+    }
+    assert_eq!(run_end_str(&trace, "reason"), "budget_exhausted");
+    // step 0 completed before the step-1 death, so the final anchor
+    // checkpoint exists on disk and run_end reports the progress
+    assert_eq!(run_end_field(&trace, "completed_steps") as usize, 1);
+    assert!(
+        std::fs::read_to_string(Path::new(&s.p("ck")).join("LATEST")).is_ok(),
+        "no LATEST checkpoint pointer under {}",
+        s.p("ck")
+    );
+    // the trace stays well-formed: every run_start paired with run_end
+    expect_ok(&quartet2_bin(&["obs-validate", &trace], &[]));
+}

@@ -1,0 +1,548 @@
+//! End-to-end tests of the overload-safe serving router: an in-process
+//! `router::start` fronting real `quartet2 serve-worker` subprocesses
+//! (spawned from `CARGO_BIN_EXE_quartet2`), driven by raw HTTP/1.1
+//! clients over real sockets.
+//!
+//! The deterministic fault drill at the center (`worker_death_drill_*`)
+//! is the PR's acceptance gate: 2 workers under concurrent load, one
+//! killed mid-stream via the injected `kill_serve_worker` fault — every
+//! accepted request terminates (failover or structured partial-response
+//! error, never a hang), the dead worker respawns within budget, the
+//! metrics show exactly one death, and the failed-over generations are
+//! bitwise identical to a clean single-worker run of the same seeded
+//! requests.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use quartet2::engine::checkpoint::fault::Fault;
+use quartet2::obs::{self, ObsLevel};
+use quartet2::router::{self, RouterOptions};
+use quartet2::serve::{self, PackedModel};
+use quartet2::util::json::Json;
+
+/// Serializes tests that mutate the process-global obs level.
+fn level_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+struct Scratch {
+    root: PathBuf,
+}
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let root = std::env::temp_dir().join(format!("q2_router_{tag}"));
+        std::fs::remove_dir_all(&root).ok();
+        std::fs::create_dir_all(&root).unwrap();
+        Scratch { root }
+    }
+
+    fn p(&self, name: &str) -> String {
+        self.root.join(name).display().to_string()
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.root).ok();
+    }
+}
+
+/// Pack a fresh tiny checkpoint into the scratch dir (all workers of a
+/// router share it; identical weights + seed are what make failover
+/// re-dispatch deterministic).
+fn pack_checkpoint(s: &Scratch) -> String {
+    let dir = s.root.join("ckpt");
+    if !PackedModel::exists(&dir) {
+        let cfg = serve::preset("tiny").unwrap();
+        let weights = serve::ModelWeightsF32::init(&cfg, 7).unwrap();
+        let model = PackedModel::pack(&weights, true, 7 ^ 0x5e7e).unwrap();
+        model.save(&dir).unwrap();
+    }
+    dir.display().to_string()
+}
+
+/// Router options shared by every test: in-process router, subprocess
+/// workers from the real binary, rid-seeded sampling (temperature > 0
+/// so the determinism assertions are non-trivial).
+fn base_opts(s: &Scratch, workers: usize) -> RouterOptions {
+    let mut sched = quartet2::serve::SchedulerOptions::default();
+    sched.kv_capacity = 128;
+    sched.temperature = 0.9;
+    sched.seed = 42;
+    RouterOptions {
+        workers,
+        addr: "127.0.0.1:0".into(),
+        checkpoint: pack_checkpoint(s),
+        sched,
+        trace_out: Some(s.p("router.jsonl")),
+        // current_exe() inside a test is the *test* binary; spawn the
+        // real CLI explicitly
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_quartet2"))),
+        ..RouterOptions::default()
+    }
+}
+
+// -- raw HTTP client --------------------------------------------------------
+
+fn http_raw(addr: SocketAddr, raw: &[u8]) -> String {
+    let mut c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    c.write_all(raw).unwrap();
+    let mut buf = Vec::new();
+    let _ = c.read_to_end(&mut buf); // EOF (Connection: close) or cut
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+fn post_json(addr: SocketAddr, path: &str, body: &str) -> String {
+    http_raw(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )
+}
+
+fn get(addr: SocketAddr, path: &str) -> String {
+    http_raw(addr, format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {resp:?}"))
+        .parse()
+        .unwrap()
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+fn body_json(resp: &str) -> Json {
+    Json::parse(body_of(resp).trim())
+        .unwrap_or_else(|e| panic!("unparseable body in {resp:?}: {e:#}"))
+}
+
+fn header_of(resp: &str, name: &str) -> Option<String> {
+    let head = resp.split("\r\n\r\n").next()?;
+    for line in head.lines().skip(1) {
+        let (n, v) = line.split_once(':')?;
+        if n.eq_ignore_ascii_case(name) {
+            return Some(v.trim().to_string());
+        }
+    }
+    None
+}
+
+fn field_str(v: &Json, key: &str) -> String {
+    v.get(key).unwrap().as_str().unwrap().to_string()
+}
+
+fn field_num(v: &Json, key: &str) -> f64 {
+    v.get(key).unwrap().as_f64().unwrap()
+}
+
+/// Poll `/healthz` until `workers_live` reaches `want` (respawn races
+/// the assertions otherwise).
+fn wait_workers_live(addr: SocketAddr, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let h = body_json(&get(addr, "/healthz"));
+        if field_num(&h, "workers_live") as usize >= want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "workers_live never reached {want}: {h:?}"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn obs_validate(path: &str) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_quartet2"))
+        .args(["obs-validate", path])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "obs-validate rejected {path}:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+// -- tests ------------------------------------------------------------------
+
+#[test]
+fn completion_and_health_roundtrip() {
+    let s = Scratch::new("basic");
+    let handle = router::start(base_opts(&s, 1)).unwrap();
+    let addr = handle.addr();
+
+    let h = body_json(&get(addr, "/healthz"));
+    assert_eq!(field_str(&h, "status"), "ok");
+    assert_eq!(field_num(&h, "workers_live") as usize, 1);
+
+    let resp = post_json(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "Hello, router", "max_tokens": 8, "id": "req-a"}"#,
+    );
+    assert_eq!(status_of(&resp), 200, "{resp}");
+    let v = body_json(&resp);
+    assert_eq!(field_str(&v, "status"), "ok");
+    assert_eq!(field_str(&v, "id"), "req-a");
+    assert!(field_num(&v, "tokens") >= 1.0);
+    assert!(field_num(&v, "ttft_ms") >= 0.0);
+    assert!(field_num(&v, "latency_ms") >= field_num(&v, "ttft_ms"));
+
+    let resp = get(addr, "/nope");
+    assert_eq!(status_of(&resp), 404);
+    assert_eq!(field_str(&body_json(&resp), "code"), "not_found");
+
+    handle.begin_drain();
+    handle.wait().unwrap();
+    obs_validate(&s.p("router.jsonl"));
+}
+
+#[test]
+fn sse_stream_delivers_tokens_then_done() {
+    let s = Scratch::new("sse");
+    let handle = router::start(base_opts(&s, 1)).unwrap();
+    let addr = handle.addr();
+
+    let resp = post_json(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "stream me", "max_tokens": 6, "stream": true, "id": "sse-1"}"#,
+    );
+    assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+    assert!(resp.contains("Content-Type: text/event-stream"), "{resp}");
+    assert!(resp.contains("Transfer-Encoding: chunked"), "{resp}");
+    assert!(resp.ends_with("0\r\n\r\n"), "chunked body unterminated:\n{resp}");
+
+    let token_events = resp.matches("event: token\n").count();
+    let done_lines: Vec<&str> = resp
+        .lines()
+        .skip_while(|l| !l.starts_with("event: done"))
+        .filter(|l| l.starts_with("data: "))
+        .collect();
+    assert_eq!(done_lines.len(), 1, "want exactly one done event:\n{resp}");
+    let done = Json::parse(done_lines[0].trim_start_matches("data: ").trim()).unwrap();
+    assert_eq!(field_str(&done, "status"), "ok");
+    assert_eq!(field_str(&done, "id"), "sse-1");
+    // byte tokenizer: one token event per generated token
+    assert_eq!(token_events as f64, field_num(&done, "tokens"), "{resp}");
+
+    handle.begin_drain();
+    handle.wait().unwrap();
+}
+
+#[test]
+fn overload_sheds_with_structured_503() {
+    let s = Scratch::new("shed");
+    let mut opts = base_opts(&s, 1);
+    opts.queue_max = 1;
+    opts.worker_inflight_max = 1;
+    let handle = router::start(opts).unwrap();
+    let addr = handle.addr();
+
+    // dead on arrival: shed before admission, not queued
+    let resp = post_json(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "late", "max_tokens": 4, "deadline_ms": 0}"#,
+    );
+    assert_eq!(status_of(&resp), 503, "{resp}");
+    assert_eq!(field_str(&body_json(&resp), "code"), "expired_deadline");
+    assert!(header_of(&resp, "Retry-After").is_some(), "{resp}");
+
+    // 2x+ overload: 1 in flight + 1 queued means most of a concurrent
+    // burst must shed with a structured 503, while admitted requests
+    // still complete
+    let threads: Vec<_> = (0..10)
+        .map(|_| {
+            std::thread::spawn(move || {
+                post_json(
+                    addr,
+                    "/v1/completions",
+                    r#"{"prompt": "burst", "max_tokens": 24}"#,
+                )
+            })
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for t in threads {
+        let resp = t.join().unwrap();
+        match status_of(&resp) {
+            200 => ok += 1,
+            503 => {
+                shed += 1;
+                let v = body_json(&resp);
+                assert_eq!(field_str(&v, "status"), "error");
+                assert_eq!(field_str(&v, "code"), "overloaded", "{resp}");
+                assert!(header_of(&resp, "Retry-After").is_some(), "no Retry-After:\n{resp}");
+            }
+            other => panic!("unexpected status {other}:\n{resp}"),
+        }
+    }
+    assert!(ok >= 1, "no request completed under overload");
+    assert!(shed >= 1, "nothing shed at 10 concurrent / capacity 2");
+
+    handle.begin_drain();
+    handle.wait().unwrap();
+}
+
+/// The acceptance drill: 2 workers, worker 0 killed mid-stream of its
+/// first request, 6 concurrent clients. Every request terminates; the
+/// mid-stream one fails with a structured partial-response error; the
+/// rest complete (failing over where needed); the dead worker
+/// respawns; the metrics and run trace record it all. Then the same 6
+/// seeded requests re-run on a clean single-worker router must produce
+/// byte-identical generations rid-for-rid.
+fn worker_death_drill(tag: &str) {
+    let _lk = level_lock();
+    obs::set_level(Some(ObsLevel::Counters));
+    let deaths0 = obs::counter("router.worker_death").get();
+    let respawns0 = obs::counter("router.worker_respawn").get();
+
+    let s = Scratch::new(tag);
+    let mut opts = base_opts(&s, 2);
+    opts.fault = Some(Fault::KillServeWorker { worker: 0, req: 1 });
+    let handle = router::start(opts).unwrap();
+    let addr = handle.addr();
+    wait_workers_live(addr, 2);
+
+    let threads: Vec<_> = (0..6)
+        .map(|_| {
+            std::thread::spawn(move || {
+                post_json(
+                    addr,
+                    "/v1/completions",
+                    r#"{"prompt": "drill prompt", "max_tokens": 10, "stream": true}"#,
+                )
+            })
+        })
+        .collect();
+    let mut completions: Vec<(u64, String)> = Vec::new();
+    let mut failures = 0usize;
+    for t in threads {
+        // join() returning at all is the no-hang assertion: every
+        // accepted request reached a terminal event
+        let resp = t.join().unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        let mut done: Option<Json> = None;
+        let mut error: Option<Json> = None;
+        let mut lines = resp.lines().peekable();
+        while let Some(l) = lines.next() {
+            if l == "event: done" || l == "event: error" {
+                let data = lines.next().unwrap_or("");
+                let v = Json::parse(data.trim_start_matches("data: ").trim()).unwrap();
+                if l == "event: done" {
+                    done = Some(v);
+                } else {
+                    error = Some(v);
+                }
+            }
+        }
+        match (done, error) {
+            (Some(v), None) => {
+                assert_eq!(field_str(&v, "status"), "ok");
+                completions.push((field_num(&v, "rid") as u64, field_str(&v, "text")));
+            }
+            (None, Some(v)) => {
+                failures += 1;
+                assert_eq!(field_str(&v, "code"), "worker_failure", "{v:?}");
+                assert!(
+                    field_num(&v, "partial_tokens") >= 1.0,
+                    "mid-stream death must report its partial output: {v:?}"
+                );
+            }
+            other => panic!("stream ended without exactly one terminal event: {other:?}\n{resp}"),
+        }
+    }
+    assert_eq!(failures, 1, "exactly the mid-stream request fails");
+    assert_eq!(completions.len(), 5, "everything else completes");
+
+    // the dead worker respawned within budget
+    wait_workers_live(addr, 2);
+    assert_eq!(
+        obs::counter("router.worker_death").get() - deaths0,
+        1,
+        "exactly one worker death"
+    );
+    assert_eq!(
+        obs::counter("router.worker_respawn").get() - respawns0,
+        1,
+        "exactly one respawn"
+    );
+    let metrics = get(addr, "/metrics");
+    assert_eq!(status_of(&metrics), 200);
+    assert!(
+        body_of(&metrics).contains("quartet2_router_worker_death"),
+        "worker_death missing from /metrics:\n{metrics}"
+    );
+
+    handle.begin_drain();
+    handle.wait().unwrap();
+    obs::set_level(None);
+    drop(_lk);
+    obs_validate(&s.p("router.jsonl"));
+
+    // determinism: a clean 1-worker router re-running the same seeded
+    // requests (same rids 1..=6, same checkpoint, same sampling seed)
+    // regenerates the drill's surviving outputs byte-for-byte
+    let clean = router::start(base_opts(&s, 1)).unwrap();
+    let caddr = clean.addr();
+    let mut clean_by_rid = std::collections::BTreeMap::new();
+    for _ in 0..6 {
+        let resp = post_json(
+            caddr,
+            "/v1/completions",
+            r#"{"prompt": "drill prompt", "max_tokens": 10}"#,
+        );
+        assert_eq!(status_of(&resp), 200, "{resp}");
+        let v = body_json(&resp);
+        clean_by_rid.insert(field_num(&v, "rid") as u64, field_str(&v, "text"));
+    }
+    clean.begin_drain();
+    clean.wait().unwrap();
+    for (rid, text) in &completions {
+        assert_eq!(
+            Some(text.as_str()),
+            clean_by_rid.get(rid).map(String::as_str),
+            "rid {rid}: failover output diverged from the clean run"
+        );
+    }
+}
+
+#[test]
+fn worker_death_drill_fails_over_deterministically() {
+    worker_death_drill("drill");
+}
+
+#[test]
+fn stalled_worker_is_killed_and_request_fails_over() {
+    let s = Scratch::new("stall");
+    let mut opts = base_opts(&s, 1);
+    opts.fault = Some(Fault::StallServeWorker { worker: 0 });
+    opts.stall_ms = 700;
+    let handle = router::start(opts).unwrap();
+    let addr = handle.addr();
+
+    // the stalled worker stops heartbeating, gets killed, the request
+    // (never streamed) fails over to the clean respawn and completes
+    let resp = post_json(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "wake up", "max_tokens": 4}"#,
+    );
+    assert_eq!(status_of(&resp), 200, "{resp}");
+    let v = body_json(&resp);
+    assert_eq!(field_str(&v, "status"), "ok");
+    assert!(
+        field_num(&v, "failovers") >= 1.0,
+        "stall recovery must count as a failover: {v:?}"
+    );
+
+    handle.begin_drain();
+    handle.wait().unwrap();
+}
+
+#[test]
+fn drop_conn_fault_severs_exactly_that_connection() {
+    let s = Scratch::new("drop");
+    let mut opts = base_opts(&s, 1);
+    opts.fault = Some(Fault::DropConn { conn: 1 });
+    let handle = router::start(opts).unwrap();
+    let addr = handle.addr();
+
+    // connection 1: the response is withheld and the socket is shut
+    // down — the client sees EOF, not a hang and not a valid response
+    let resp = post_json(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "doomed", "max_tokens": 4}"#,
+    );
+    assert!(
+        !resp.contains("\"status\": \"ok\""),
+        "dropped connection still got a full response:\n{resp}"
+    );
+
+    // connection 2 is untouched
+    let resp = post_json(
+        addr,
+        "/v1/completions",
+        r#"{"prompt": "survivor", "max_tokens": 4}"#,
+    );
+    assert_eq!(status_of(&resp), 200, "{resp}");
+    assert_eq!(field_str(&body_json(&resp), "status"), "ok");
+
+    handle.begin_drain();
+    handle.wait().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_400_and_server_survives() {
+    let s = Scratch::new("malformed");
+    let handle = router::start(base_opts(&s, 1)).unwrap();
+    let addr = handle.addr();
+
+    // garbage request line
+    let resp = http_raw(addr, b"BOGUS\r\n\r\n");
+    assert_eq!(status_of(&resp), 400, "{resp}");
+    assert_eq!(field_str(&body_json(&resp), "code"), "malformed_request");
+
+    // unparseable JSON body
+    let resp = post_json(addr, "/v1/completions", "{nope");
+    assert_eq!(status_of(&resp), 400, "{resp}");
+    assert_eq!(field_str(&body_json(&resp), "code"), "malformed_request");
+
+    // missing prompt
+    let resp = post_json(addr, "/v1/completions", r#"{"max_tokens": 4}"#);
+    assert_eq!(status_of(&resp), 400, "{resp}");
+
+    // empty prompt is structurally valid JSON but an invalid request
+    let resp = post_json(addr, "/v1/completions", r#"{"prompt": ""}"#);
+    assert_eq!(status_of(&resp), 400, "{resp}");
+    assert_eq!(field_str(&body_json(&resp), "code"), "invalid_request");
+
+    // the server kept serving through all of it
+    let resp = post_json(addr, "/v1/completions", r#"{"prompt": "fine", "max_tokens": 4}"#);
+    assert_eq!(status_of(&resp), 200, "{resp}");
+
+    handle.begin_drain();
+    handle.wait().unwrap();
+}
+
+#[test]
+fn drain_rejects_new_work_and_completes() {
+    let s = Scratch::new("drain");
+    let handle = router::start(base_opts(&s, 1)).unwrap();
+    let addr = handle.addr();
+
+    let resp = post_json(addr, "/drain", "");
+    assert_eq!(status_of(&resp), 200, "{resp}");
+
+    let resp = post_json(addr, "/v1/completions", r#"{"prompt": "too late", "max_tokens": 4}"#);
+    assert_eq!(status_of(&resp), 503, "{resp}");
+    assert_eq!(field_str(&body_json(&resp), "code"), "draining");
+    assert!(header_of(&resp, "Retry-After").is_some());
+
+    let h = body_json(&get(addr, "/healthz"));
+    assert_eq!(field_str(&h, "status"), "draining");
+
+    handle.wait().unwrap();
+    obs_validate(&s.p("router.jsonl"));
+}

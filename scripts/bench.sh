@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # Perf trajectory, machine-readable across PRs: run the training-step,
-# serving, quantizer, packed-GEMM, and distributed-exchange benches and
-# publish their JSON at the repo root as BENCH_train_step.json /
-# BENCH_serve.json / BENCH_quantize.json / BENCH_qgemm.json /
-# BENCH_dist.json.
+# serving, quantizer, packed-GEMM, distributed-exchange, and serving-
+# router benches and publish their JSON at the repo root as
+# BENCH_train_step.json / BENCH_serve.json / BENCH_quantize.json /
+# BENCH_qgemm.json / BENCH_dist.json / BENCH_router.json.
 #
 # BENCH_train_step.json also carries a `train_step_phase_breakdown`
 # record (per-phase ns/step from the obs span timers: forward /
@@ -27,10 +27,12 @@ cargo bench --bench serve_throughput
 cargo bench --bench quantize
 cargo bench --bench qgemm_packed
 cargo bench --bench dist_exchange
+cargo bench --bench router
 
 cp results/train_step.json "$repo_root/BENCH_train_step.json"
 cp results/serve_throughput.json "$repo_root/BENCH_serve.json"
 cp results/quantize.json "$repo_root/BENCH_quantize.json"
 cp results/qgemm_packed.json "$repo_root/BENCH_qgemm.json"
 cp results/dist_exchange.json "$repo_root/BENCH_dist.json"
-echo "bench: wrote BENCH_train_step.json + BENCH_serve.json + BENCH_quantize.json + BENCH_qgemm.json + BENCH_dist.json"
+cp results/router.json "$repo_root/BENCH_router.json"
+echo "bench: wrote BENCH_train_step.json + BENCH_serve.json + BENCH_quantize.json + BENCH_qgemm.json + BENCH_dist.json + BENCH_router.json"

@@ -40,9 +40,10 @@ QUARTET2_THREADS=2 cargo test -q --test qgemm_packed
 # `cargo test` pass above
 QUARTET2_THREADS=2 cargo test -q --test checkpoint_resume
 
-# the four repo-root perf-trajectory JSONs (BENCH_train_step /
-# BENCH_serve / BENCH_quantize / BENCH_qgemm) must exist and parse —
-# a missing manifest file fails, it does not skip
+# the six repo-root perf-trajectory JSONs (BENCH_train_step /
+# BENCH_serve / BENCH_quantize / BENCH_qgemm / BENCH_dist /
+# BENCH_router) must exist and parse — a missing manifest file fails,
+# it does not skip
 cargo test -q --test bench_json
 
 # benches must at least compile (they are harness-free binaries;
@@ -183,6 +184,21 @@ cargo run --release --bin quartet2 -- obs-report \
 # kill/stall/corrupt recovery, MS-EDEN compression) under the same
 # pinned 2-worker GEMM policy
 QUARTET2_THREADS=2 cargo test -q --test dist_elastic --test dist_comm
+
+# serving-router drill: the router suite boots real HTTP routers over
+# 2 subprocess workers and asserts the whole robustness contract —
+# kill_serve_worker mid-stream with zero hangs (in-flight stream gets
+# a structured partial-response error, queued work fails over and the
+# re-run is bitwise identical to a clean router), structured 503s +
+# Retry-After under overload, exactly one worker_death + one respawn
+# in the counters and in the /metrics Prometheus text, stall
+# detection, per-connection drop_conn isolation, malformed-request
+# 400s, graceful drain, and obs-validate over every router trace.
+# Runs twice: default threading, then the pinned 2-worker GEMM policy
+# (the env propagates into the spawned serve-worker subprocesses), so
+# the failover determinism claim holds at both thread counts.
+cargo test -q --test router
+QUARTET2_THREADS=2 cargo test -q --test router
 
 cargo run --release --bin quartet2 -- obs-validate \
     "$smoke_dir/obs/steps.jsonl" \
